@@ -1,0 +1,91 @@
+//! Fig. 11: accuracy and activation sparsity as a function of (a) the
+//! DynaTran pruning threshold tau, and (b) the top-k keep fraction —
+//! on the trained synthetic-sentiment model through the PJRT runtime.
+//!
+//! (The paper uses BERT-Base on SST-2; we use the BERT-Tiny-shaped
+//! encoder on the synthetic sentiment task — see DESIGN.md
+//! §Substitutions.  The curve *shapes* — flat accuracy with rising
+//! sparsity, then a cliff; monotone sparsity in tau — are the
+//! reproduced claims.)
+//!
+//! Run with: `cargo bench --bench fig11_threshold_sweep`
+
+use acceltran::coordinator::{self, trainer};
+use acceltran::nlp::sentiment::SentimentTask;
+use acceltran::runtime::Runtime;
+use acceltran::util::json::Json;
+use acceltran::util::table::Table;
+
+fn main() {
+    println!("== Fig. 11: pruning-knob sweeps ==\n");
+    let mut rt = match Runtime::load_default() {
+        Ok(rt) => rt,
+        Err(e) => {
+            eprintln!("skipping (run `make artifacts`): {e}");
+            return;
+        }
+    };
+    let store = trainer::ensure_trained(
+        &mut rt,
+        std::path::Path::new("reports/trained_params.bin"),
+        200,
+        true,
+    )
+    .expect("training failed");
+    let task = SentimentTask::new(rt.manifest.vocab, rt.manifest.seq, 7);
+    let val = task.dataset(512, 2);
+    let params = store.params_literal();
+
+    // (a) DynaTran: tau from 0 to 0.1 (the paper's range)
+    let taus = [0.0f32, 0.01, 0.02, 0.03, 0.04, 0.05, 0.06, 0.08, 0.10];
+    let dyna = coordinator::sweep_dynatran(&mut rt, &params, &val, &taus, 512)
+        .expect("dynatran sweep");
+    println!("(a) DynaTran threshold sweep:");
+    let mut t = Table::new(["tau", "activation sparsity", "accuracy"]);
+    for p in &dyna.points {
+        t.row([
+            format!("{:.2}", p.knob),
+            format!("{:.3}", p.activation_sparsity),
+            format!("{:.4}", p.accuracy),
+        ]);
+    }
+    t.print();
+
+    // (b) top-k: keep fraction in powers of two (the paper varies k in
+    // powers of two)
+    let keeps = [1.0f32, 0.5, 0.25, 0.125, 0.0625];
+    let topk = coordinator::sweep_topk(&mut rt, &params, &val, &keeps, 512)
+        .expect("topk sweep");
+    println!("\n(b) top-k keep-fraction sweep:");
+    let mut t = Table::new(["keep frac", "net act sparsity", "accuracy"]);
+    for p in &topk.points {
+        t.row([
+            format!("{:.4}", p.knob),
+            format!("{:.3}", p.activation_sparsity),
+            format!("{:.4}", p.accuracy),
+        ]);
+    }
+    t.print();
+
+    // shape checks
+    for w in dyna.points.windows(2) {
+        assert!(
+            w[1].activation_sparsity >= w[0].activation_sparsity - 1e-6,
+            "sparsity must be monotone in tau"
+        );
+    }
+    let base_acc = dyna.points[0].accuracy;
+    let cliff_acc = dyna.points.last().unwrap().accuracy;
+    println!(
+        "\nShape check: baseline accuracy {base_acc:.3}; accuracy at tau=0.1 \
+         {cliff_acc:.3}; max DynaTran sparsity within 1% of peak accuracy: {:.3}",
+        dyna.max_sparsity_within(0.01)
+    );
+    std::fs::create_dir_all("reports").ok();
+    std::fs::write(
+        "reports/fig11_threshold_sweep.json",
+        Json::arr([dyna.to_json(), topk.to_json()]).to_string_pretty(),
+    )
+    .unwrap();
+    println!("wrote reports/fig11_threshold_sweep.json");
+}

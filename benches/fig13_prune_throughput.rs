@@ -1,0 +1,82 @@
+//! Fig. 13: compute cost of DynaTran vs top-k pruning on a CPU.
+//!
+//! The paper measures both methods' pruning throughput on an EPYC CPU and
+//! an A100 GPU for BERT-Tiny and BERT-Mini activation matrices; DynaTran
+//! wins by up to 5.35x (CPU) / 96.38x (GPU) because it is a single
+//! comparison pass while top-k sorts every row (O(N^3) over the model).
+//! Here we reproduce the CPU half on the host (no A100 in this image;
+//! DESIGN.md §Substitutions) over the same matrix shapes.
+//!
+//! Run with: `cargo bench --bench fig13_prune_throughput`
+
+use acceltran::pruning::{dynatran_prune_inplace, topk_prune_rows};
+use acceltran::util::bench::quick;
+use acceltran::util::json::Json;
+use acceltran::util::rng::Rng;
+use acceltran::util::table::Table;
+
+fn main() {
+    println!("== Fig. 13: pruning-method throughput (CPU) ==\n");
+    let mut rng = Rng::new(42);
+    let mut t = Table::new([
+        "model matrices",
+        "DynaTran (matrices/s)",
+        "top-k (matrices/s)",
+        "speedup",
+        "paper speedup (CPU)",
+    ]);
+    let mut report = Vec::new();
+    // (name, rows, cols, k, paper CPU speedup)
+    // attention-score matrices: (batch*heads*seq) x seq
+    let cases = [
+        ("BERT-Tiny  (2*128)x128", 2 * 128usize, 128usize, 16usize, 2.24),
+        ("BERT-Mini  (4*128)x128", 4 * 128, 128, 16, 5.35),
+    ];
+    for (name, rows, cols, k, paper) in cases {
+        let data: Vec<f32> = (0..rows * cols).map(|_| rng.normal()).collect();
+        let tau = 0.5f32;
+        let d = quick(&format!("dynatran {name}"), || {
+            let mut x = data.clone();
+            dynatran_prune_inplace(&mut x, tau);
+            x
+        });
+        let s = quick(&format!("topk {name}"), || {
+            let mut x = data.clone();
+            topk_prune_rows(&mut x, cols, k);
+            x
+        });
+        // subtract the clone cost common to both by measuring it
+        let c = quick("clone", || data.clone());
+        let d_net = (d.median - c.median.min(d.median)).max(std::time::Duration::from_nanos(1));
+        let s_net = (s.median - c.median.min(s.median)).max(std::time::Duration::from_nanos(1));
+        let speedup = s_net.as_secs_f64() / d_net.as_secs_f64();
+        t.row([
+            name.to_string(),
+            format!("{:.0}", 1.0 / d_net.as_secs_f64()),
+            format!("{:.0}", 1.0 / s_net.as_secs_f64()),
+            format!("{speedup:.2}x"),
+            format!("{paper:.2}x"),
+        ]);
+        report.push(Json::obj(vec![
+            ("case", Json::str(name)),
+            ("dynatran_per_s", Json::num(1.0 / d_net.as_secs_f64())),
+            ("topk_per_s", Json::num(1.0 / s_net.as_secs_f64())),
+            ("speedup", Json::num(speedup)),
+            ("paper_speedup", Json::num(paper)),
+        ]));
+    }
+    t.print();
+    println!(
+        "\nShape check: DynaTran's single-pass comparison beats per-row\n\
+         sorting, and the gap widens with matrix count (larger model) —\n\
+         the same trend as the paper's CPU bars.  (The paper's 96x GPU\n\
+         gap comes from top-k's poor parallelization; no GPU here.)"
+    );
+    std::fs::create_dir_all("reports").ok();
+    std::fs::write(
+        "reports/fig13_prune_throughput.json",
+        Json::arr(report).to_string_pretty(),
+    )
+    .unwrap();
+    println!("wrote reports/fig13_prune_throughput.json");
+}

@@ -1,0 +1,123 @@
+//! Fig. 14: accuracy/F1 vs *net* sparsity with and without DynaTran
+//! weight pruning (WP), on (a) the sentiment task (SST-2 proxy) and
+//! (b) the span task (SQuAD proxy, F1 metric).
+//!
+//! Reproduced claim: WP adds only marginal net sparsity (activations
+//! dominate the element count, Fig. 1) at a significant performance
+//! cost — which is why the paper uses movement-pruned models instead of
+//! WP.
+//!
+//! Run with: `cargo bench --bench fig14_weight_pruning`
+
+use acceltran::coordinator::{evaluate_accuracy, trainer};
+use acceltran::nlp::span::SpanTask;
+use acceltran::nlp::sentiment::SentimentTask;
+use acceltran::nlp::Dataset;
+use acceltran::pruning::wp::{net_sparsity, weight_prune_threshold};
+use acceltran::runtime::{ParamStore, Runtime};
+use acceltran::util::json::Json;
+use acceltran::util::table::Table;
+
+fn sweep(
+    rt: &mut Runtime,
+    params: &[f32],
+    val: &Dataset,
+    wp_tau: f32,
+    label: &str,
+    use_f1: bool,
+    report: &mut Vec<Json>,
+    t: &mut Table,
+) {
+    // apply WP at a fixed threshold (the paper's protocol)
+    let mut weights = params.to_vec();
+    let weight_rho = if wp_tau > 0.0 {
+        weight_prune_threshold(&mut weights, wp_tau)
+    } else {
+        0.0
+    };
+    let lit = xla::Literal::vec1(&weights);
+    // activation sparsity swept via DynaTran tau
+    for tau in [0.0f32, 0.02, 0.04, 0.06] {
+        let r = evaluate_accuracy(rt, &lit, val, tau, 384).expect("eval");
+        let act_elems = 3usize; // activations ~3x weights for tiny @ seq64
+        let net = net_sparsity(weight_rho, 1, r.activation_sparsity, act_elems);
+        let metric = if use_f1 { r.f1 } else { r.accuracy };
+        t.row([
+            label.to_string(),
+            format!("{weight_rho:.2}"),
+            format!("{net:.3}"),
+            format!("{metric:.4}"),
+        ]);
+        report.push(Json::obj(vec![
+            ("curve", Json::str(label)),
+            ("weight_sparsity", Json::num(weight_rho)),
+            ("net_sparsity", Json::num(net)),
+            ("metric", Json::num(metric)),
+        ]));
+    }
+}
+
+fn main() {
+    println!("== Fig. 14: weight pruning (WP) effect on net sparsity ==\n");
+    let mut rt = match Runtime::load_default() {
+        Ok(rt) => rt,
+        Err(e) => {
+            eprintln!("skipping (run `make artifacts`): {e}");
+            return;
+        }
+    };
+    let vocab = rt.manifest.vocab;
+    let seq = rt.manifest.seq;
+    let mut report = Vec::new();
+
+    // (a) sentiment (SST-2 proxy) — shared trained checkpoint
+    let store = trainer::ensure_trained(
+        &mut rt,
+        std::path::Path::new("reports/trained_params.bin"),
+        200,
+        true,
+    )
+    .expect("training failed");
+    let sent_val = SentimentTask::new(vocab, seq, 7).dataset(384, 2);
+    println!("(a) sentiment accuracy vs net sparsity:");
+    let mut t = Table::new(["curve", "weight rho", "net sparsity", "accuracy"]);
+    sweep(&mut rt, &store.params, &sent_val, 0.0, "no WP", false, &mut report, &mut t);
+    sweep(&mut rt, &store.params, &sent_val, 0.02, "WP tau=0.02", false, &mut report, &mut t);
+    t.print();
+
+    // (b) span task (SQuAD proxy) — train a second checkpoint on spans
+    let span_task = SpanTask::new(vocab, seq);
+    let span_train = span_task.dataset(2048, 1);
+    let span_val = span_task.dataset(384, 2);
+    let span_path = std::path::Path::new("reports/trained_span_params.bin");
+    let span_store = if span_path.exists() {
+        ParamStore::from_file(&rt.manifest, span_path).expect("load span params")
+    } else {
+        let mut s = ParamStore::init(&rt.manifest, 1);
+        println!("\ntraining span model (150 steps)...");
+        acceltran::coordinator::train(
+            &mut rt, &mut s, &span_train, None, 150, 1e-3, 0, false,
+        )
+        .expect("span training");
+        s.save(span_path).ok();
+        s
+    };
+    println!("\n(b) span F1 vs net sparsity:");
+    let mut t = Table::new(["curve", "weight rho", "net sparsity", "F1"]);
+    sweep(&mut rt, &span_store.params, &span_val, 0.0, "no WP", true, &mut report, &mut t);
+    sweep(&mut rt, &span_store.params, &span_val, 0.02, "WP tau=0.02", true, &mut report, &mut t);
+    t.print();
+
+    println!(
+        "\nShape check (paper Sec. V-A2): WP shifts net sparsity only\n\
+         slightly rightward (activations dominate, Fig. 1) while costing\n\
+         task performance — hence the paper pairs DynaTran with MP, not WP."
+    );
+    std::fs::create_dir_all("reports").ok();
+    std::fs::write(
+        "reports/fig14_weight_pruning.json",
+        Json::arr(report).to_string_pretty(),
+    )
+    .unwrap();
+    println!("wrote reports/fig14_weight_pruning.json");
+}

@@ -1,0 +1,75 @@
+//! Fig. 16: compute + memory stalls as a function of #PEs and net buffer
+//! size (4:8:1 act:weight:mask split), for BERT-Tiny on the Edge
+//! template, with the paper's chosen point called out.
+//!
+//! Run with: `cargo bench --bench fig16_stalls_dse`
+
+use acceltran::model::TransformerConfig;
+use acceltran::sim::engine::{simulate, SparsityProfile};
+use acceltran::sim::scheduler::Policy;
+use acceltran::sim::AcceleratorConfig;
+use acceltran::util::json::Json;
+use acceltran::util::table::{eng, Table};
+
+fn main() {
+    println!("== Fig. 16: stalls vs hardware resources ==\n");
+    let model = TransformerConfig::bert_tiny();
+    let seq = 512;
+    let sp = SparsityProfile::paper_default();
+    let mut t = Table::new([
+        "PEs",
+        "net buffer MB",
+        "compute stalls",
+        "memory stalls",
+        "cycles",
+    ]);
+    let mut report = Vec::new();
+    let mut grid: Vec<(usize, usize, u64, u64)> = Vec::new();
+    for &pes in &[32usize, 64, 128, 256] {
+        for &buf_mb in &[10usize, 13, 16] {
+            let mut cfg = AcceleratorConfig::edge();
+            cfg.pes = pes;
+            let unit = (buf_mb << 20) / 13;
+            cfg.act_buffer_bytes = 4 * unit;
+            cfg.weight_buffer_bytes = 8 * unit;
+            cfg.mask_buffer_bytes = unit;
+            let r = simulate(&cfg, &model, seq, Policy::Staggered, sp);
+            t.row([
+                pes.to_string(),
+                buf_mb.to_string(),
+                eng(r.stalls.compute_total() as f64),
+                eng(r.stalls.memory_total() as f64),
+                eng(r.total_cycles as f64),
+            ]);
+            report.push(Json::obj(vec![
+                ("pes", Json::num(pes as f64)),
+                ("buffer_mb", Json::num(buf_mb as f64)),
+                ("compute_stalls", Json::num(r.stalls.compute_total() as f64)),
+                ("memory_stalls", Json::num(r.stalls.memory_total() as f64)),
+                ("cycles", Json::num(r.total_cycles as f64)),
+            ]));
+            grid.push((pes, buf_mb, r.stalls.compute_total(), r.stalls.memory_total()));
+        }
+    }
+    t.print();
+    // shape check: fewest PEs has the most compute stalls at every buffer
+    for &buf in &[10usize, 13, 16] {
+        let at = |p: usize| grid.iter().find(|g| g.0 == p && g.1 == buf).unwrap().2;
+        assert!(
+            at(32) >= at(256),
+            "compute stalls must not increase with PEs (buf {buf}MB)"
+        );
+    }
+    println!(
+        "\nChosen point (paper Sec. V-C): 64 PEs / 13 MB — a knee point\n\
+         balancing stalls against area/power; see examples/design_space.rs\n\
+         for the automated chosen-point logic."
+    );
+    std::fs::create_dir_all("reports").ok();
+    std::fs::write(
+        "reports/fig16_stalls.json",
+        Json::arr(report).to_string_pretty(),
+    )
+    .unwrap();
+    println!("wrote reports/fig16_stalls.json");
+}

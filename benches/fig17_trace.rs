@@ -1,0 +1,104 @@
+//! Fig. 17: power consumption and resource/buffer utilization of
+//! BERT-Tiny over one inference batch on AccelTran-Edge, as a cycle
+//! trace.
+//!
+//! Run with: `cargo bench --bench fig17_trace`
+
+use acceltran::model::TransformerConfig;
+use acceltran::sim::engine::{simulate, SparsityProfile};
+use acceltran::sim::scheduler::Policy;
+use acceltran::sim::AcceleratorConfig;
+use acceltran::util::json::Json;
+use acceltran::util::table::Table;
+
+fn main() {
+    println!("== Fig. 17: Edge power / utilization trace (BERT-Tiny) ==\n");
+    let mut cfg = AcceleratorConfig::edge();
+    // cold first batch: Fig. 17(b) shows utilization at zero while the
+    // word/position embeddings stream into the weight buffer (~60% of
+    // it), before compute begins
+    cfg.embeddings_resident = false;
+    let model = TransformerConfig::bert_tiny();
+    let r = simulate(&cfg, &model, 512, Policy::Staggered,
+                     SparsityProfile::paper_default());
+
+    // print a decimated trace table (the bench writes the full trace to
+    // JSON for plotting)
+    let mut t = Table::new([
+        "cycle",
+        "MAC lanes",
+        "softmax",
+        "layernorm",
+        "act buf %",
+        "w buf %",
+        "dyn W",
+        "leak W",
+    ]);
+    let stride = (r.trace.len() / 24).max(1);
+    for s in r.trace.iter().step_by(stride) {
+        t.row([
+            s.cycle.to_string(),
+            s.mac_lanes_active.to_string(),
+            s.softmax_active.to_string(),
+            s.layernorm_active.to_string(),
+            format!("{:.0}", 100.0 * s.act_buffer_frac),
+            format!("{:.0}", 100.0 * s.weight_buffer_frac),
+            format!("{:.2}", s.dynamic_power_w),
+            format!("{:.3}", s.leakage_power_w),
+        ]);
+    }
+    t.print();
+
+    // Fig. 17 shape checks
+    // (a) leakage stays far below dynamic power (power gating)
+    let max_dyn = r.trace.iter().map(|s| s.dynamic_power_w).fold(0.0, f64::max);
+    let max_leak = r.trace.iter().map(|s| s.leakage_power_w).fold(0.0, f64::max);
+    assert!(
+        max_leak < 0.2 * max_dyn.max(1e-9),
+        "leakage {max_leak} vs dynamic {max_dyn}"
+    );
+    // (b) both MAC and softmax are active at some point; at least one
+    // sample shows simultaneous use (staggered heads)
+    assert!(r.trace.iter().any(|s| s.mac_lanes_active > 0));
+    assert!(r.trace.iter().any(|s| s.softmax_active > 0));
+    let overlap = r
+        .trace
+        .iter()
+        .any(|s| s.mac_lanes_active > 0 && s.softmax_active > 0);
+    println!(
+        "\nMAC+softmax overlap observed: {overlap} (staggered scheduling, Fig. 10(b))"
+    );
+    // (c) the weight buffer fills early (embeddings ~60%) then persists
+    let early_w = r
+        .trace
+        .iter()
+        .take(r.trace.len() / 4)
+        .map(|s| s.weight_buffer_frac)
+        .fold(0.0, f64::max);
+    println!("peak weight-buffer occupancy in first quarter: {:.0}%", 100.0 * early_w);
+
+    println!(
+        "\ntotals: {} cycles, {:.3} mJ/seq, avg power {:.2} W, \
+         MAC util {:.1}%, softmax util {:.1}%",
+        r.total_cycles,
+        r.energy_mj_per_seq(),
+        r.avg_power_w(&cfg),
+        100.0 * r.mac_utilization,
+        100.0 * r.softmax_utilization
+    );
+    std::fs::create_dir_all("reports").ok();
+    let samples = Json::arr(r.trace.iter().map(|s| {
+        Json::obj(vec![
+            ("cycle", Json::num(s.cycle as f64)),
+            ("mac", Json::num(s.mac_lanes_active as f64)),
+            ("softmax", Json::num(s.softmax_active as f64)),
+            ("ln", Json::num(s.layernorm_active as f64)),
+            ("act_buf", Json::num(s.act_buffer_frac)),
+            ("w_buf", Json::num(s.weight_buffer_frac)),
+            ("dyn_w", Json::num(s.dynamic_power_w)),
+            ("leak_w", Json::num(s.leakage_power_w)),
+        ])
+    }));
+    std::fs::write("reports/fig17_trace.json", samples.to_string_pretty()).unwrap();
+    println!("wrote reports/fig17_trace.json ({} samples)", r.trace.len());
+}

@@ -1,0 +1,86 @@
+//! Fig. 18: area and power breakdown by compute module for
+//! AccelTran-Edge.
+//!
+//! Area comes from the 14nm technology model (back-fitted to the paper's
+//! synthesis results — the area panel reproduces Fig. 18(a) by
+//! construction, which doubles as a regression test on the constants).
+//! Power shares come from *simulation*: the energy ledger of a real
+//! BERT-Tiny run, so the power panel is a genuine measurement of the
+//! modeled workload (paper: MAC 39.3%, softmax 49.9%).
+//!
+//! Run with: `cargo bench --bench fig18_breakdown`
+
+use acceltran::model::TransformerConfig;
+use acceltran::sim::engine::{simulate, SparsityProfile};
+use acceltran::sim::scheduler::Policy;
+use acceltran::sim::tech::AreaBreakdown;
+use acceltran::sim::AcceleratorConfig;
+use acceltran::util::json::Json;
+use acceltran::util::table::Table;
+
+fn main() {
+    println!("== Fig. 18: AccelTran-Edge area & power breakdown ==\n");
+    let cfg = AcceleratorConfig::edge();
+
+    // ---- (a) area ------------------------------------------------------
+    let a = AreaBreakdown::compute(&cfg);
+    let total = a.compute_mm2();
+    let mut t = Table::new(["module", "area mm^2", "share", "paper share"]);
+    for (name, mm2, paper) in [
+        ("MAC lanes", a.mac_lanes_mm2, 19.2),
+        ("softmax modules", a.softmax_mm2, 44.7),
+        ("layer-norm modules", a.layernorm_mm2, 10.3),
+        ("pre/post sparsity", a.sparsity_mm2, 15.1),
+        ("DynaTran+dataflow+DMA", a.other_mm2, 10.7),
+    ] {
+        t.row([
+            name.to_string(),
+            format!("{mm2:.2}"),
+            format!("{:.1}%", 100.0 * mm2 / total),
+            format!("{paper:.1}%"),
+        ]);
+    }
+    t.print();
+    println!("total compute area: {total:.2} mm^2 (paper: 55.12 mm^2)\n");
+
+    // ---- (b) power: energy shares of a simulated BERT-Tiny run ---------
+    let model = TransformerConfig::bert_tiny();
+    let r = simulate(&cfg, &model, 512, Policy::Staggered,
+                     SparsityProfile::paper_default());
+    let e = &r.energy;
+    let compute = e.compute_pj();
+    let mut t = Table::new(["module", "energy share", "paper power share"]);
+    for (name, pj, paper) in [
+        ("MAC lanes", e.mac_pj, 39.3),
+        ("softmax modules", e.softmax_pj, 49.9),
+        ("layer-norm modules", e.layernorm_pj, f64::NAN),
+        ("DynaTran modules", e.dynatran_pj, f64::NAN),
+        ("sparsity modules", e.sparsity_pj, f64::NAN),
+    ] {
+        t.row([
+            name.to_string(),
+            format!("{:.1}%", 100.0 * pj / compute),
+            if paper.is_nan() {
+                "(within 10.8% rest)".to_string()
+            } else {
+                format!("{paper:.1}%")
+            },
+        ]);
+    }
+    t.print();
+    println!(
+        "\nShape check: MAC + softmax dominate compute energy \
+         ({:.0}% combined; paper: 89.2%).",
+        100.0 * (e.mac_pj + e.softmax_pj) / compute
+    );
+    std::fs::create_dir_all("reports").ok();
+    let j = Json::obj(vec![
+        ("area_total_mm2", Json::num(total)),
+        ("area_mac_share", Json::num(a.mac_lanes_mm2 / total)),
+        ("area_softmax_share", Json::num(a.softmax_mm2 / total)),
+        ("power_mac_share", Json::num(e.mac_pj / compute)),
+        ("power_softmax_share", Json::num(e.softmax_pj / compute)),
+    ]);
+    std::fs::write("reports/fig18_breakdown.json", j.to_string_pretty()).unwrap();
+    println!("wrote reports/fig18_breakdown.json");
+}

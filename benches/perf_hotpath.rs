@@ -1,0 +1,118 @@
+//! §Perf hot-path microbenchmarks: the simulator event loop, the
+//! host-side pruning kernels, the sparsity pipeline, and the PJRT
+//! dispatch overhead.  These are the measurements behind EXPERIMENTS.md
+//! §Perf (before/after table).
+//!
+//! Run with: `cargo bench --bench perf_hotpath`
+
+use std::time::Duration;
+
+use acceltran::model::{OpGraph, TransformerConfig};
+use acceltran::pruning::dynatran_prune_inplace;
+use acceltran::sim::engine::{Engine, SparsityProfile};
+use acceltran::sim::scheduler::Policy;
+use acceltran::sim::sparsity::{precompute_align, CompressedTile};
+use acceltran::sim::AcceleratorConfig;
+use acceltran::util::bench::bench;
+use acceltran::util::json::Json;
+use acceltran::util::rng::Rng;
+
+fn main() {
+    println!("== §Perf: hot-path microbenchmarks ==\n");
+    let mut report = Vec::new();
+    let mut push = |s: &acceltran::util::bench::Sample, metric: &str, value: f64| {
+        println!("{s}   [{metric}: {value:.3}]");
+        report.push(Json::obj(vec![
+            ("name", Json::str(s.name.clone())),
+            ("median_us", Json::num(s.median.as_secs_f64() * 1e6)),
+            ("metric", Json::str(metric)),
+            ("value", Json::num(value)),
+        ]));
+    };
+
+    // 1. simulator end-to-end: BERT-Tiny on Edge (the main hot loop)
+    let model = TransformerConfig::bert_tiny();
+    let cfg = AcceleratorConfig::edge();
+    let graph = OpGraph::build(&model, cfg.batch, 128);
+    let tiles: usize = graph
+        .nodes
+        .iter()
+        .map(|n| {
+            acceltran::sim::tiling::tile_op(&n.dims, 1, 16, 16, 16).total_tiles()
+        })
+        .sum();
+    let s = bench("sim: bert-tiny x edge @128 (full run)", 2,
+                  Duration::from_secs(3), || {
+        Engine::new(cfg.clone(), &graph, Policy::Staggered,
+                    SparsityProfile::paper_default())
+            .run()
+            .total_cycles
+    });
+    let tiles_per_s = tiles as f64 / s.median.as_secs_f64();
+    push(&s, "simulated tile-ops/s", tiles_per_s);
+
+    // 2. server-scale simulation (batching efficiency of the event loop)
+    let server = AcceleratorConfig::server();
+    let graph_srv = OpGraph::build(&model, 8, 128);
+    let mut srv_cfg = server.clone();
+    srv_cfg.batch = 8;
+    let s = bench("sim: bert-tiny x server(b8) @128", 1,
+                  Duration::from_secs(3), || {
+        Engine::new(srv_cfg.clone(), &graph_srv, Policy::Staggered,
+                    SparsityProfile::paper_default())
+            .run()
+            .total_cycles
+    });
+    push(&s, "runs/s", s.per_sec());
+
+    // 3. DynaTran host prune throughput (GB/s)
+    let mut rng = Rng::new(1);
+    let data: Vec<f32> = (0..1 << 20).map(|_| rng.normal()).collect();
+    let mut buf = data.clone();
+    let s = bench("dynatran prune 4MB f32", 3, Duration::from_secs(2), || {
+        buf.copy_from_slice(&data);
+        dynatran_prune_inplace(&mut buf, 0.5)
+    });
+    let gbs = (data.len() * 4) as f64 / s.median.as_secs_f64() / 1e9;
+    push(&s, "GB/s", gbs);
+
+    // 4. sparsity pipeline: compress + align a 16x16 tile pair
+    let w: Vec<f32> = (0..256).map(|_| if rng.chance(0.5) { 0.0 } else { rng.normal() }).collect();
+    let a: Vec<f32> = (0..256).map(|_| if rng.chance(0.5) { 0.0 } else { rng.normal() }).collect();
+    let s = bench("sparsity: compress+align 16x16 pair", 10,
+                  Duration::from_secs(1), || {
+        let cw = CompressedTile::compress(&w);
+        let ca = CompressedTile::compress(&a);
+        precompute_align(&cw, &ca).w.len()
+    });
+    push(&s, "pairs/s", s.per_sec());
+
+    // 5. PJRT dispatch overhead (needs artifacts)
+    if let Ok(mut rt) = acceltran::runtime::Runtime::load_default() {
+        let params =
+            acceltran::runtime::ParamStore::init(&rt.manifest, 0).params_literal();
+        let seq = rt.manifest.seq;
+        let ids: Vec<i32> = (0..seq).map(|i| (i % 512) as i32).collect();
+        // warm the compile cache first
+        rt.classify(1, &params, &ids, 0.0).unwrap();
+        let s = bench("pjrt: classify_b1 dispatch", 3, Duration::from_secs(3), || {
+            rt.classify(1, &params, &ids, 0.0).unwrap()
+        });
+        push(&s, "req/s", s.per_sec());
+        let ids32: Vec<i32> = (0..32 * seq).map(|i| (i % 512) as i32).collect();
+        let s = bench("pjrt: classify_b32 dispatch", 2, Duration::from_secs(3), || {
+            rt.classify(32, &params, &ids32, 0.0).unwrap()
+        });
+        push(&s, "seq/s", s.per_sec() * 32.0);
+    } else {
+        println!("(pjrt benches skipped: run `make artifacts`)");
+    }
+
+    std::fs::create_dir_all("reports").ok();
+    std::fs::write(
+        "reports/perf_hotpath.json",
+        Json::arr(report).to_string_pretty(),
+    )
+    .unwrap();
+    println!("\nwrote reports/perf_hotpath.json");
+}

@@ -1,0 +1,101 @@
+//! Table III: area, theoretical peak TOP/s, minimum main memory, and the
+//! power-consumption breakdown for AccelTran-Server, AccelTran-Edge, and
+//! Edge LP mode.
+//!
+//! Area/TOPs come from the technology + config models; power rows come
+//! from *simulating* the paper's workload for each design point
+//! (BERT-Base for Server, BERT-Tiny for Edge).
+//!
+//! Run with: `cargo bench --bench tab03_hw_summary`
+
+use acceltran::model::memreq::{mb, MemReq};
+use acceltran::model::TransformerConfig;
+use acceltran::sim::engine::{simulate, SparsityProfile};
+use acceltran::sim::scheduler::Policy;
+use acceltran::sim::tech::AreaBreakdown;
+use acceltran::sim::AcceleratorConfig;
+use acceltran::util::json::Json;
+use acceltran::util::table::Table;
+
+fn main() {
+    println!("== Table III: hardware summary ==\n");
+    let sp = SparsityProfile::paper_default();
+    let rows: Vec<(AcceleratorConfig, TransformerConfig, &str)> = vec![
+        (
+            AcceleratorConfig::server(),
+            TransformerConfig::bert_base(),
+            "372.74 TOP/s, 1950.95 mm^2, 95.51 W",
+        ),
+        (
+            AcceleratorConfig::edge(),
+            TransformerConfig::bert_tiny(),
+            "15.05 TOP/s, 55.12 mm^2, 6.78 W",
+        ),
+        (
+            AcceleratorConfig::edge_lp(),
+            TransformerConfig::bert_tiny(),
+            "7.52 TOP/s, 55.12 mm^2, 4.13 W",
+        ),
+    ];
+    let mut t = Table::new([
+        "accelerator",
+        "area mm^2",
+        "peak TOP/s",
+        "main mem MB",
+        "PE W",
+        "buffer W",
+        "mem W",
+        "total W",
+        "paper row",
+    ]);
+    let mut report = Vec::new();
+    let mut results = Vec::new();
+    for (cfg, model, paper) in &rows {
+        let area = AreaBreakdown::compute(cfg);
+        let mr = MemReq::compute(model, 1, model.seq, 0.5);
+        let r = simulate(cfg, model, 512, Policy::Staggered, sp);
+        let seconds = r.latency_s(cfg);
+        let w = |pj: f64| pj * 1e-12 / seconds;
+        let pe_w = w(r.energy.compute_pj() + r.energy.leakage_pj);
+        let buf_w = w(r.energy.buffer_pj);
+        let mem_w = w(r.energy.memory_pj);
+        let total_w = r.avg_power_w(cfg);
+        t.row([
+            cfg.name.clone(),
+            format!("{:.2}", area.compute_mm2()),
+            format!("{:.2}", cfg.peak_ops_per_s() / 1e12),
+            format!("{:.1}", mb(mr.main_memory_bytes())),
+            format!("{pe_w:.2}"),
+            format!("{buf_w:.3}"),
+            format!("{mem_w:.2}"),
+            format!("{total_w:.2}"),
+            paper.to_string(),
+        ]);
+        report.push(Json::obj(vec![
+            ("accelerator", Json::str(cfg.name.clone())),
+            ("area_mm2", Json::num(area.compute_mm2())),
+            ("peak_tops", Json::num(cfg.peak_ops_per_s() / 1e12)),
+            ("main_mem_mb", Json::num(mb(mr.main_memory_bytes()))),
+            ("total_w", Json::num(total_w)),
+        ]));
+        results.push((cfg.name.clone(), total_w, r.throughput_seq_s(cfg)));
+    }
+    t.print();
+
+    // LP-mode shape check (paper: -39.1% power, -38.7% throughput)
+    let edge = results.iter().find(|r| r.0 == "acceltran-edge").unwrap();
+    let lp = results.iter().find(|r| r.0 == "acceltran-edge-lp").unwrap();
+    let dp = 100.0 * (1.0 - lp.1 / edge.1);
+    let dt = 100.0 * (1.0 - lp.2 / edge.2);
+    println!(
+        "\nLP mode: power -{dp:.1}% (paper -39.1%), throughput -{dt:.1}% \
+         (paper -38.7%)"
+    );
+    std::fs::create_dir_all("reports").ok();
+    std::fs::write(
+        "reports/tab03_hw_summary.json",
+        Json::arr(report).to_string_pretty(),
+    )
+    .unwrap();
+    println!("wrote reports/tab03_hw_summary.json");
+}

@@ -1,0 +1,68 @@
+//! Design-space exploration scenario (paper Sec. V-C / Fig. 16): sweep
+//! PE count x net buffer size for BERT-Tiny on the Edge template, print
+//! the stall surface, and recommend the paper's chosen point.
+//!
+//! Run with: `cargo run --release --example design_space`
+
+use acceltran::model::TransformerConfig;
+use acceltran::sim::engine::{simulate, SparsityProfile};
+use acceltran::sim::scheduler::Policy;
+use acceltran::sim::AcceleratorConfig;
+use acceltran::util::table::{eng, Table};
+
+fn main() {
+    let model = TransformerConfig::bert_tiny();
+    let seq = 128;
+    let sp = SparsityProfile::paper_default();
+    let pes_grid = [32usize, 64, 128, 256];
+    let buf_grid = [10usize, 13, 16];
+
+    let mut t = Table::new([
+        "PEs",
+        "buffer MB",
+        "compute stalls",
+        "memory stalls",
+        "cycles",
+        "area-proxy (PEs x MB)",
+    ]);
+    let mut results = Vec::new();
+    for &pes in &pes_grid {
+        for &buf in &buf_grid {
+            let mut cfg = AcceleratorConfig::edge();
+            cfg.pes = pes;
+            // the paper's 4:8:1 activation:weight:mask split (Sec. V-C)
+            let unit = (buf << 20) / 13;
+            cfg.act_buffer_bytes = 4 * unit;
+            cfg.weight_buffer_bytes = 8 * unit;
+            cfg.mask_buffer_bytes = unit;
+            let r = simulate(&cfg, &model, seq, Policy::Staggered, sp);
+            t.row([
+                pes.to_string(),
+                buf.to_string(),
+                eng(r.stalls.compute_total() as f64),
+                eng(r.stalls.memory_total() as f64),
+                eng(r.total_cycles as f64),
+                (pes * buf).to_string(),
+            ]);
+            results.push((pes, buf, r));
+        }
+    }
+    t.print();
+
+    // Chosen-point logic: smallest (PEs x buffer) whose cycle count is
+    // within 10% of the best observed — the Fig. 16 trade-off argument.
+    let best_cycles = results.iter().map(|(_, _, r)| r.total_cycles).min().unwrap();
+    let chosen = results
+        .iter()
+        .filter(|(_, _, r)| r.total_cycles as f64 <= best_cycles as f64 * 1.1)
+        .min_by_key(|(pes, buf, _)| pes * buf)
+        .unwrap();
+    println!(
+        "\nchosen point: {} PEs, {} MB net buffer (cycles {} vs best {}) — \
+         the paper selects 64 PEs / 13 MB by the same trade-off",
+        chosen.0,
+        chosen.1,
+        eng(chosen.2.total_cycles as f64),
+        eng(best_cycles as f64)
+    );
+}

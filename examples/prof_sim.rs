@@ -1,0 +1,18 @@
+//! §Perf profiling driver: 200 back-to-back Edge simulations for
+//! `perf record` (see EXPERIMENTS.md §Perf).  Not a demo — use
+//! `examples/quickstart.rs` for that.
+use acceltran::model::{OpGraph, TransformerConfig};
+use acceltran::sim::engine::{Engine, SparsityProfile};
+use acceltran::sim::scheduler::Policy;
+use acceltran::sim::AcceleratorConfig;
+fn main() {
+    let model = TransformerConfig::bert_tiny();
+    let cfg = AcceleratorConfig::edge();
+    let graph = OpGraph::build(&model, cfg.batch, 128);
+    let mut acc = 0u64;
+    for _ in 0..200 {
+        acc += Engine::new(cfg.clone(), &graph, Policy::Staggered,
+                           SparsityProfile::paper_default()).run().total_cycles;
+    }
+    println!("{acc}");
+}

@@ -1,0 +1,69 @@
+//! Quickstart: the two halves of AccelTran in one page.
+//!
+//! 1. **Functional path** — load the AOT-compiled model artifact through
+//!    the PJRT runtime and classify a batch at two DynaTran thresholds.
+//! 2. **Timing path** — simulate the same model on AccelTran-Edge and
+//!    print throughput / energy / utilization.
+//!
+//! Run with: `cargo run --release --example quickstart`
+//! (requires `make artifacts` first)
+
+use acceltran::model::TransformerConfig;
+use acceltran::nlp::sentiment::SentimentTask;
+use acceltran::runtime::{ParamStore, Runtime};
+use acceltran::sim::engine::{simulate, SparsityProfile};
+use acceltran::sim::scheduler::Policy;
+use acceltran::sim::AcceleratorConfig;
+use acceltran::util::table::eng;
+use anyhow::Result;
+
+fn main() -> Result<()> {
+    // ---- functional path: PJRT inference ------------------------------
+    let mut rt = Runtime::load_default()?;
+    println!(
+        "loaded {} ({} params, {} artifacts) on {}",
+        rt.manifest.model_name,
+        rt.manifest.param_count,
+        rt.manifest.artifacts.len(),
+        rt.client.platform_name(),
+    );
+    let params = ParamStore::init(&rt.manifest, 0).params_literal();
+    let task = SentimentTask::new(rt.manifest.vocab, rt.manifest.seq, 7);
+    let ds = task.dataset(8, 1);
+    let mut ids = Vec::new();
+    for ex in &ds.examples {
+        ids.extend_from_slice(&ex.ids);
+    }
+    for tau in [0.0f32, 0.05] {
+        let t0 = std::time::Instant::now();
+        let logits = rt.classify(8, &params, &ids, tau)?;
+        let rho = rt.activation_sparsity(&params, &ids, tau)?;
+        println!(
+            "tau={tau:<5} activation sparsity {rho:.3}  first logits {:?}  ({:?})",
+            &logits[..2],
+            t0.elapsed()
+        );
+    }
+
+    // ---- timing path: cycle-accurate simulation -----------------------
+    let cfg = AcceleratorConfig::edge();
+    let model = TransformerConfig::bert_tiny();
+    let r = simulate(&cfg, &model, 128, Policy::Staggered,
+                     SparsityProfile::paper_default());
+    println!(
+        "\nAccelTran-Edge x {} @ seq 128, batch {}:",
+        model.name, cfg.batch
+    );
+    println!("  cycles        {}", eng(r.total_cycles as f64));
+    println!("  latency       {:.3} ms", 1e3 * r.latency_s(&cfg));
+    println!("  throughput    {} seq/s", eng(r.throughput_seq_s(&cfg)));
+    println!("  energy        {:.3} mJ/seq", r.energy_mj_per_seq());
+    println!("  avg power     {:.2} W", r.avg_power_w(&cfg));
+    println!(
+        "  utilization   MAC {:.1}%  softmax {:.1}%  DMA {:.1}%",
+        100.0 * r.mac_utilization,
+        100.0 * r.softmax_utilization,
+        100.0 * r.dma_utilization
+    );
+    Ok(())
+}

@@ -1,0 +1,59 @@
+//! Serving scenario: stream classification requests through the dynamic
+//! batcher with DynaTran on vs off, reporting throughput and latency
+//! percentiles — the coordinator-level view of the paper's dynamic
+//! inference story.
+//!
+//! Run with: `cargo run --release --example serve -- [n_requests]`
+
+use acceltran::coordinator::BatchServer;
+use acceltran::nlp::sentiment::SentimentTask;
+use acceltran::runtime::{ParamStore, Runtime};
+use anyhow::Result;
+
+fn run_wave(server: &mut BatchServer, reqs: &[(Vec<i32>, f32)]) -> Result<f64> {
+    let t0 = std::time::Instant::now();
+    let mut served = 0usize;
+    for (ids, tau) in reqs {
+        server.submit(ids.clone(), *tau);
+        served += server.step()?.len();
+    }
+    served += server.drain()?.len();
+    assert_eq!(served, reqs.len());
+    Ok(served as f64 / t0.elapsed().as_secs_f64())
+}
+
+fn main() -> Result<()> {
+    let n: usize = std::env::args()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(512);
+    let rt = Runtime::load_default()?;
+    let vocab = rt.manifest.vocab;
+    let seq = rt.manifest.seq;
+    let params = ParamStore::init(&rt.manifest, 0).params_literal();
+    let mut server = BatchServer::new(rt, params);
+
+    let task = SentimentTask::new(vocab, seq, 11);
+    let ds = task.dataset(n, 5);
+
+    for (label, tau) in [("DynaTran off (tau=0)", 0.0f32), ("DynaTran on (tau=0.05)", 0.05)] {
+        let reqs: Vec<(Vec<i32>, f32)> =
+            ds.examples.iter().map(|e| (e.ids.clone(), tau)).collect();
+        let rps = run_wave(&mut server, &reqs)?;
+        let s = &server.stats;
+        println!(
+            "{label:<24} {rps:>8.1} req/s | dispatch latency mean {:?} p50 {:?} p99 {:?} | {} dispatches, {} padded",
+            s.mean_latency(),
+            s.latency_percentile(50.0),
+            s.latency_percentile(99.0),
+            s.dispatches,
+            s.padded_rows
+        );
+        server.stats = Default::default();
+    }
+    println!(
+        "\n(functional CPU-PJRT numbers; the ASIC-level serving speedups are\n\
+         produced by the simulator — see `acceltran simulate` and benches/)"
+    );
+    Ok(())
+}

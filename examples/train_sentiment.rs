@@ -1,0 +1,71 @@
+//! End-to-end validation driver (EXPERIMENTS.md §End-to-end): train the
+//! BERT-Tiny-shaped encoder on the synthetic sentiment corpus entirely
+//! through the Rust + PJRT stack (AOT `train_step_b32` artifact — Python
+//! never runs), log the loss curve, then regenerate the DynaTran
+//! accuracy-vs-sparsity trade-off on the *trained* model (the Fig. 11/12
+//! experiment at this model scale).
+//!
+//! Run with: `cargo run --release --example train_sentiment -- [steps]`
+
+use acceltran::coordinator::{self};
+use acceltran::nlp::sentiment::SentimentTask;
+use acceltran::runtime::{ParamStore, Runtime};
+use acceltran::util::table::Table;
+use anyhow::Result;
+
+fn main() -> Result<()> {
+    let steps: usize = std::env::args()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(300);
+    let mut rt = Runtime::load_default()?;
+    let vocab = rt.manifest.vocab;
+    let seq = rt.manifest.seq;
+    let task = SentimentTask::new(vocab, seq, 7);
+    let train_ds = task.dataset(4096, 1);
+    let val_ds = task.dataset(768, 2);
+    println!(
+        "synthetic sentiment: 4096 train / 768 val, lexicon oracle accuracy {:.3}",
+        task.lexicon_accuracy(&val_ds)
+    );
+
+    let mut store = ParamStore::init(&rt.manifest, 0);
+    println!(
+        "training {} ({} params) for {steps} AdamW steps (b=32, lr=1e-3)...",
+        rt.manifest.model_name, rt.manifest.param_count
+    );
+    let t0 = std::time::Instant::now();
+    let log = coordinator::train(
+        &mut rt, &mut store, &train_ds, Some(&val_ds), steps, 1e-3, 50, true,
+    )?;
+    let train_time = t0.elapsed();
+    let (head, tail) = log.head_tail_means(10);
+    println!(
+        "loss curve: {head:.4} -> {tail:.4} over {steps} steps in {train_time:?} \
+         ({:.1} steps/s)",
+        steps as f64 / train_time.as_secs_f64()
+    );
+
+    // accuracy-vs-sparsity trade-off on the trained model
+    let taus = [0.0f32, 0.01, 0.02, 0.03, 0.04, 0.06, 0.08, 0.10];
+    let params = store.params_literal();
+    let curve =
+        coordinator::sweep_dynatran(&mut rt, &params, &val_ds, &taus, 512)?;
+    println!("\nDynaTran sweep on the trained model (Fig. 11(a)/12 shape):");
+    let mut t = Table::new(["tau", "activation sparsity", "accuracy"]);
+    for p in &curve.points {
+        t.row([
+            format!("{:.2}", p.knob),
+            format!("{:.3}", p.activation_sparsity),
+            format!("{:.4}", p.accuracy),
+        ]);
+    }
+    t.print();
+    println!(
+        "max accuracy {:.4}; max sparsity within 1% of it: {:.3}",
+        curve.max_accuracy(),
+        curve.max_sparsity_within(0.01)
+    );
+    store.save("reports/train_sentiment_params.bin").ok();
+    Ok(())
+}

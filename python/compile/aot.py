@@ -1,0 +1,184 @@
+"""AOT compile path: lower every model variant to HLO *text* artifacts.
+
+The interchange format is HLO text, NOT a serialized ``HloModuleProto``:
+jax >= 0.5 emits protos with 64-bit instruction ids that the xla crate's
+bundled xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text
+parser reassigns ids, so text round-trips cleanly (see
+/opt/xla-example/README.md).  Lowering uses ``return_tuple=True`` and the
+Rust runtime unwraps with ``to_tuple1()`` / tuple indexing.
+
+Usage (invoked by ``make artifacts``)::
+
+    cd python && python -m compile.aot --out-dir ../artifacts
+
+Emits one ``<name>.hlo.txt`` per entry of ``ARTIFACTS`` plus a
+``manifest.json`` describing parameter layout, shapes, dtypes and argument
+signatures for the Rust side.  Python never runs on the request path.
+"""
+
+from __future__ import annotations
+
+import argparse
+import functools
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO module -> XlaComputation -> HLO text (id-safe path)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def f32(shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def i32(shape):
+    return jax.ShapeDtypeStruct(shape, jnp.int32)
+
+
+# --------------------------------------------------------------------------
+# Artifact definitions
+# --------------------------------------------------------------------------
+
+def _artifact_defs(cfg: M.ModelConfig):
+    """Name -> (callable returning a tuple, example-arg ShapeDtypeStructs,
+    human signature).  Every fn returns a tuple (return_tuple lowering)."""
+    np_ = M.param_count(cfg)
+    S = cfg.seq
+
+    def classify_fn(params, ids, tau):
+        return (M.classify(cfg, params, ids, tau, jnp.float32(1.0),
+                           prune_mode=M.PRUNE_DYNATRAN),)
+
+    def classify_topk_fn(params, ids, keep_frac):
+        return (M.classify(cfg, params, ids, jnp.float32(0.0), keep_frac,
+                           prune_mode=M.PRUNE_TOPK),)
+
+    def classify_pallas_fn(params, ids, tau):
+        return (M.classify(cfg, params, ids, tau, jnp.float32(1.0),
+                           prune_mode=M.PRUNE_DYNATRAN, use_pallas=True),)
+
+    def sparsity_fn(params, ids, tau):
+        return (M.activation_sparsity(cfg, params, ids, tau),)
+
+    def train_fn(params, m, v, step, ids, labels, lr):
+        return M.train_step(cfg, params, m, v, step, ids, labels, lr)
+
+    def prune_fn(x, tau):
+        from .kernels import dynatran
+        return tuple(dynatran.dynatran_prune(x, tau))
+
+    defs = {}
+    for batch in (1, 8, 32):
+        defs[f"classify_b{batch}"] = (
+            classify_fn,
+            (f32((np_,)), i32((batch, S)), f32(())),
+            f"(params[{np_}], ids[{batch},{S}] i32, tau) -> logits[{batch},{cfg.classes}]",
+        )
+    defs["classify_topk_b32"] = (
+        classify_topk_fn,
+        (f32((np_,)), i32((32, S)), f32(())),
+        f"(params[{np_}], ids[32,{S}] i32, keep_frac) -> logits[32,{cfg.classes}]",
+    )
+    defs["classify_pallas_b2"] = (
+        classify_pallas_fn,
+        (f32((np_,)), i32((2, S)), f32(())),
+        f"(params[{np_}], ids[2,{S}] i32, tau) -> logits[2,{cfg.classes}] (L1 Pallas kernels)",
+    )
+    defs["act_sparsity_b8"] = (
+        sparsity_fn,
+        (f32((np_,)), i32((8, S)), f32(())),
+        f"(params[{np_}], ids[8,{S}] i32, tau) -> mean activation sparsity []",
+    )
+    defs["train_step_b32"] = (
+        train_fn,
+        (f32((np_,)), f32((np_,)), f32((np_,)), f32(()),
+         i32((32, S)), i32((32,)), f32(())),
+        f"(params, m, v, step, ids[32,{S}], labels[32], lr) -> (params', m', v', loss)",
+    )
+    defs["dynatran_prune_256x256"] = (
+        prune_fn,
+        (f32((256, 256)), f32(())),
+        "(x[256,256], tau) -> (pruned[256,256], mask[256,256]) (L1 Pallas kernel)",
+    )
+    return defs
+
+
+def export_all(cfg: M.ModelConfig, out_dir: str, only: list[str] | None = None,
+               verbose: bool = True) -> dict:
+    os.makedirs(out_dir, exist_ok=True)
+    defs = _artifact_defs(cfg)
+    manifest = {
+        "model": {
+            "name": cfg.name,
+            "vocab": cfg.vocab,
+            "seq": cfg.seq,
+            "hidden": cfg.hidden,
+            "layers": cfg.layers,
+            "heads": cfg.heads,
+            "ff": cfg.ff,
+            "classes": cfg.classes,
+            "param_count": M.param_count(cfg),
+        },
+        "params": [
+            {"name": n, "shape": list(s), "init_std": std}
+            for n, s, std in M.param_specs(cfg)
+        ],
+        "artifacts": {},
+    }
+    for name, (fn, args, sig) in defs.items():
+        if only and name not in only:
+            continue
+        path = os.path.join(out_dir, f"{name}.hlo.txt")
+        lowered = jax.jit(fn).lower(*args)
+        text = to_hlo_text(lowered)
+        with open(path, "w") as f:
+            f.write(text)
+        manifest["artifacts"][name] = {
+            "file": f"{name}.hlo.txt",
+            "signature": sig,
+            "args": [
+                {"shape": list(a.shape), "dtype": a.dtype.name} for a in args
+            ],
+            "hlo_bytes": len(text),
+        }
+        if verbose:
+            print(f"  wrote {path} ({len(text)} bytes)  {sig}")
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    if verbose:
+        print(f"  wrote {os.path.join(out_dir, 'manifest.json')}")
+    return manifest
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--model", default="bert-tiny",
+                    choices=["bert-tiny", "bert-mini"])
+    ap.add_argument("--vocab", type=int, default=1024)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--only", nargs="*", default=None,
+                    help="restrict to named artifacts")
+    args = ap.parse_args()
+    mk = (M.ModelConfig.bert_tiny if args.model == "bert-tiny"
+          else M.ModelConfig.bert_mini)
+    cfg = mk(vocab=args.vocab, seq=args.seq)
+    print(f"AOT-lowering {cfg.name}: h={cfg.hidden} L={cfg.layers} "
+          f"heads={cfg.heads} params={M.param_count(cfg)}")
+    export_all(cfg, args.out_dir, only=args.only)
+
+
+if __name__ == "__main__":
+    main()

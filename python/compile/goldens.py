@@ -1,0 +1,91 @@
+"""Golden-file generator for the Rust integration tests.
+
+Runs the eager (python/XLA) model on fixed seeds and dumps raw
+little-endian binaries under ``artifacts/goldens/``.  The Rust runtime
+tests load the same AOT HLO artifacts through the PJRT client, execute
+them on the same inputs, and assert the outputs match these goldens —
+closing the loop python-eager == HLO-text == rust-PJRT.
+
+Usage: cd python && python -m compile.goldens --out-dir ../artifacts/goldens
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax.numpy as jnp
+import numpy as np
+
+from . import model as M
+from .kernels import dynatran
+
+
+def _dump(path: str, arr) -> None:
+    np.asarray(arr).astype("<f4" if np.asarray(arr).dtype.kind == "f"
+               else "<i4").tofile(path)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts/goldens")
+    ap.add_argument("--vocab", type=int, default=1024)
+    ap.add_argument("--seq", type=int, default=64)
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+    cfg = M.ModelConfig.bert_tiny(vocab=args.vocab, seq=args.seq)
+
+    params = M.init_params(cfg, seed=42)
+    rng = np.random.default_rng(42)
+    ids8 = rng.integers(0, cfg.vocab, (8, cfg.seq)).astype("<i4")
+    labels8 = rng.integers(0, cfg.classes, (8,)).astype("<i4")
+
+    index = {"model": cfg.name, "param_count": M.param_count(cfg),
+             "entries": {}}
+
+    def put(name, arr, dtype):
+        path = os.path.join(args.out_dir, name + ".bin")
+        _dump(path, arr)
+        a = np.asarray(arr)
+        index["entries"][name] = {"file": name + ".bin",
+                                  "shape": list(a.shape), "dtype": dtype}
+        print(f"  golden {name}: shape={list(a.shape)}")
+
+    put("params", params, "f32")
+    put("ids_b8", ids8, "i32")
+    put("labels_b8", labels8, "i32")
+
+    for tau in (0.0, 0.05):
+        logits = M.classify(cfg, params, jnp.array(ids8), jnp.float32(tau),
+                            jnp.float32(1.0))
+        put(f"logits_b8_tau{tau:g}".replace(".", "p"), logits, "f32")
+
+    rho = M.activation_sparsity(cfg, params, jnp.array(ids8),
+                                jnp.float32(0.05))
+    put("act_sparsity_tau0p05", jnp.reshape(rho, (1,)), "f32")
+
+    # DynaTran kernel golden (matches dynatran_prune_256x256 artifact).
+    x = rng.standard_normal((256, 256)).astype("f4")
+    pruned, mask = dynatran.dynatran_prune(jnp.array(x), jnp.float32(0.5))
+    put("prune_x", x, "f32")
+    put("prune_out_tau0p5", pruned, "f32")
+    put("prune_mask_tau0p5", mask, "f32")
+
+    # One train step from the golden init (loss + a param checksum).
+    m = jnp.zeros_like(params)
+    v = jnp.zeros_like(params)
+    p2, m2, v2, loss = M.train_step(cfg, params, m, v, jnp.float32(0.0),
+                                    jnp.array(ids8[:32].repeat(4, axis=0)[:32]),
+                                    jnp.array(labels8.repeat(4)[:32]),
+                                    jnp.float32(1e-3))
+    put("train_loss0", jnp.reshape(loss, (1,)), "f32")
+    put("train_params1_sum", jnp.reshape(jnp.sum(p2), (1,)), "f32")
+
+    with open(os.path.join(args.out_dir, "goldens.json"), "w") as f:
+        json.dump(index, f, indent=2)
+    print(f"  wrote {os.path.join(args.out_dir, 'goldens.json')}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,10 @@
+"""L1: Pallas kernels for AccelTran's compute hot-spots.
+
+Every kernel here has a pure-jnp oracle of the same name in ``ref.py`` and
+a pytest/hypothesis harness under ``python/tests/``.  All kernels run with
+``interpret=True`` (CPU PJRT cannot execute Mosaic custom-calls); on a real
+TPU the same BlockSpecs express the HBM<->VMEM schedule that the paper's
+buffers/MAC-lanes express in ASIC terms (see DESIGN.md §Hardware-Adaptation).
+"""
+
+from . import dynatran, layernorm, matmul, ref, softmax  # noqa: F401

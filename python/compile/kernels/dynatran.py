@@ -1,0 +1,80 @@
+"""L1 Pallas kernel: the DynaTran dynamic-pruning module (paper Sec. III-B5).
+
+The hardware module compares every element of an input tile against a
+pre-computed threshold tau in a single clock cycle (b*x*y parallel
+comparators, Fig. 7) and emits a binary mask alongside the pruned tile.
+Here the same operation is expressed as a Pallas kernel so it lowers into
+the model's HLO and — on a real TPU — would run as one fused VPU pass over
+the VMEM-resident tile (a pure elementwise select: no MXU involvement,
+matching the paper's "negligible compute overhead" claim).
+
+interpret=True everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls; interpret mode lowers to plain HLO that both jax-CPU and the
+Rust xla-crate client can run.  Correctness vs. ``ref.dynatran_prune`` is
+asserted by ``python/tests/test_dynatran_kernel.py``.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK_ROWS = 16
+
+
+def _dynatran_kernel(tau_ref, x_ref, out_ref, mask_ref):
+    """One grid step: prune one (block_rows, N) tile against scalar tau.
+
+    The mask convention follows the AccelTran sparsity pipeline: mask == 1
+    marks an *ineffectual* (pruned) element (Sec. III-B6).
+    """
+    x = x_ref[...]
+    tau = tau_ref[0, 0]
+    keep = jnp.abs(x) >= tau
+    out_ref[...] = jnp.where(keep, x, jnp.zeros_like(x))
+    mask_ref[...] = (~keep).astype(x.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows",))
+def dynatran_prune(x: jax.Array, tau: jax.Array,
+                   block_rows: int = DEFAULT_BLOCK_ROWS):
+    """Prune ``x`` (2-D, rows divisible by ``block_rows``) at threshold tau.
+
+    Returns ``(pruned, mask)`` exactly like ``ref.dynatran_prune``.  The
+    grid walks row-blocks; each step sees a full-width (block_rows, N) tile,
+    mirroring how a PE's DynaTran module consumes one tile per cycle.
+    """
+    m, n = x.shape
+    if m % block_rows != 0:
+        raise ValueError(f"rows {m} not divisible by block_rows {block_rows}")
+    tau2 = jnp.asarray(tau, dtype=x.dtype).reshape(1, 1)
+    grid = (m // block_rows,)
+    return pl.pallas_call(
+        _dynatran_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),           # tau scalar
+            pl.BlockSpec((block_rows, n), lambda i: (i, 0)),  # x row-block
+        ],
+        out_specs=[
+            pl.BlockSpec((block_rows, n), lambda i: (i, 0)),
+            pl.BlockSpec((block_rows, n), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((m, n), x.dtype),
+            jax.ShapeDtypeStruct((m, n), x.dtype),
+        ],
+        interpret=True,
+    )(tau2, x)
+
+
+def prune_only(x: jax.Array, tau: jax.Array,
+               block_rows: int = DEFAULT_BLOCK_ROWS) -> jax.Array:
+    """Convenience wrapper returning just the pruned values (the L2 model
+    threads this through every activation; masks are a hardware-side
+    concept consumed by the Rust sparsity modules)."""
+    pruned, _ = dynatran_prune(x, tau, block_rows=block_rows)
+    return pruned

@@ -1,0 +1,48 @@
+"""L1 Pallas kernel: the layer-norm module (paper C-OP-8/11, Sec. III-B3).
+
+Like softmax, layer-norm gets a dedicated hardware module in AccelTran
+(10.3% of Edge area, Fig. 18a).  Each grid step normalizes a row-block over
+the hidden axis in VMEM: mean, variance, rsqrt, affine — one fused VPU pass
+per tile, no MXU traffic.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK_ROWS = 16
+EPS = 1e-5
+
+
+def _layernorm_kernel(x_ref, g_ref, b_ref, o_ref):
+    x = x_ref[...]
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+    o_ref[...] = (x - mu) * jax.lax.rsqrt(var + EPS) * g_ref[...] + b_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows",))
+def layernorm(x: jax.Array, gamma: jax.Array, beta: jax.Array,
+              block_rows: int = DEFAULT_BLOCK_ROWS) -> jax.Array:
+    """Layer norm over the last axis of 2-D ``x`` with affine params."""
+    m, n = x.shape
+    if m % block_rows != 0:
+        raise ValueError(f"rows {m} not divisible by block_rows {block_rows}")
+    g2 = gamma.reshape(1, n)
+    b2 = beta.reshape(1, n)
+    return pl.pallas_call(
+        _layernorm_kernel,
+        grid=(m // block_rows,),
+        in_specs=[
+            pl.BlockSpec((block_rows, n), lambda i: (i, 0)),
+            pl.BlockSpec((1, n), lambda i: (0, 0)),
+            pl.BlockSpec((1, n), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_rows, n), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, n), x.dtype),
+        interpret=True,
+    )(x, g2, b2)

@@ -1,0 +1,128 @@
+"""L1 Pallas kernel: tiled matrix multiplication (paper Sec. III-B1, Fig. 3).
+
+AccelTran's core insight on the compute side is that every transformer
+matmul should be decomposed into small tiles (paper uses 1 x 16 x 16 along
+b/i/j) streamed to MAC lanes under a chosen dataflow.  On a TPU the same
+insight maps to BlockSpec: the grid is the paper's (i, j, k) loop nest, the
+BlockSpec index maps are the dataflow, and VMEM plays the role of the PE's
+local registers.  The [b, i, j, k] dataflow selected by the paper (Fig. 15)
+corresponds to the grid iteration order used here: k innermost maximizes
+accumulator locality, j then i outermost reuse the weight strip — the exact
+reuse pattern the paper's MAC lanes exploit.
+
+Two variants:
+
+* ``matmul_tiled`` — the canonical (i, j, k) accumulation kernel, the real
+  TPU pattern (k-revisits accumulate into the output block).
+* ``matmul_fullk`` — (i, j) grid with full-K strips; fewer grid steps, used
+  by the L2 model under interpret mode where grid overhead dominates.
+
+Both are verified against ``ref.matmul`` (pytest + hypothesis shape sweeps).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Paper tile sizes: b=1, i=16, j=16 (Sec. IV-B); K block chosen to match.
+DEFAULT_BM = 16
+DEFAULT_BN = 16
+DEFAULT_BK = 16
+
+
+def _matmul_kernel(x_ref, y_ref, o_ref, *, nk: int):
+    """Grid step (i, j, k): accumulate one (bm, bk) @ (bk, bn) product.
+
+    The output BlockSpec maps every k to the same (i, j) block, so the
+    o_ref revisits accumulate — the MAC-lane adder-tree accumulation, one
+    tile-pair per step (a "MAC lane" consumes b*x*y*z / M cycles per tile
+    pair; the Rust cycle model charges exactly that).
+    """
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(x_ref[...], y_ref[...],
+                          preferred_element_type=o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk"))
+def matmul_tiled(x: jax.Array, y: jax.Array,
+                 bm: int = DEFAULT_BM, bn: int = DEFAULT_BN,
+                 bk: int = DEFAULT_BK) -> jax.Array:
+    """Tiled GEMM: x (M, K) @ y (K, N) with an (i, j, k) grid."""
+    m, k = x.shape
+    k2, n = y.shape
+    if k != k2:
+        raise ValueError(f"inner dims mismatch: {k} vs {k2}")
+    for dim, blk, name in ((m, bm, "M"), (n, bn, "N"), (k, bk, "K")):
+        if dim % blk != 0:
+            raise ValueError(f"{name}={dim} not divisible by block {blk}")
+    grid = (m // bm, n // bn, k // bk)
+    kernel = functools.partial(_matmul_kernel, nk=grid[2])
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), x.dtype),
+        interpret=True,
+    )(x, y)
+
+
+def _matmul_fullk_kernel(x_ref, y_ref, o_ref):
+    o_ref[...] = jnp.dot(x_ref[...], y_ref[...],
+                         preferred_element_type=o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn"))
+def matmul_fullk(x: jax.Array, y: jax.Array,
+                 bm: int = 32, bn: int = 32) -> jax.Array:
+    """Tiled GEMM with full-K strips: grid (i, j), block (bm, K) @ (K, bn).
+
+    Used inside the AOT model artifacts: interpret-mode grid steps are
+    emulated with HLO while-loops, so fewer/fatter steps run much faster on
+    the CPU validation path while keeping the same VMEM-resident tiling
+    structure a TPU build would use for these (small-K) projections.
+    """
+    m, k = x.shape
+    k2, n = y.shape
+    if k != k2:
+        raise ValueError(f"inner dims mismatch: {k} vs {k2}")
+    if m % bm != 0 or n % bn != 0:
+        raise ValueError(f"M={m}/N={n} not divisible by blocks {bm}/{bn}")
+    grid = (m // bm, n // bn)
+    return pl.pallas_call(
+        _matmul_fullk_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((k, bn), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), x.dtype),
+        interpret=True,
+    )(x, y)
+
+
+def vmem_bytes(bm: int, bn: int, bk: int, dtype_bytes: int = 4) -> int:
+    """Static VMEM footprint of one ``matmul_tiled`` grid step (x block +
+    y block + output accumulator).  Used by the §Perf analysis to size
+    blocks against the ~16 MiB/core TPU VMEM budget."""
+    return dtype_bytes * (bm * bk + bk * bn + bm * bn)
+
+
+def mxu_utilization(bm: int, bn: int, bk: int, mxu: int = 128) -> float:
+    """Fraction of a (mxu x mxu) systolic pass the block actually fills —
+    the §Perf MXU-utilization estimate for one grid step."""
+    fill = (min(bm, mxu) / mxu) * (min(bn, mxu) / mxu) * (min(bk, mxu) / mxu)
+    return fill

@@ -1,0 +1,93 @@
+"""Pure-jnp reference oracles for every Pallas kernel in this package.
+
+These are the *correctness ground truth* for the L1 layer: pytest (with
+hypothesis sweeps over shapes/thresholds) asserts `assert_allclose` between
+each Pallas kernel (run with interpret=True) and the function of the same
+name here.  They are also used directly by the L2 model when
+``use_pallas=False`` (the fast pure-XLA path exported for the Rust serving
+hot loop).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "dynatran_prune",
+    "sparsity",
+    "matmul",
+    "gelu",
+    "softmax",
+    "layernorm",
+    "attention",
+    "topk_keep_fraction",
+]
+
+
+def dynatran_prune(x: jax.Array, tau) -> tuple[jax.Array, jax.Array]:
+    """DynaTran magnitude pruning (paper Sec. III-A).
+
+    Zeroes every element with ``|x| < tau`` and returns ``(pruned, mask)``
+    where ``mask`` is 1.0 at *pruned* (ineffectual) positions — the binary
+    mask convention of the AccelTran sparsity modules (paper Sec. III-B6:
+    "if the entry in the mask is 1 ... the corresponding entry is
+    ineffectual").
+    """
+    tau = jnp.asarray(tau, dtype=x.dtype)
+    keep = jnp.abs(x) >= tau
+    pruned = jnp.where(keep, x, jnp.zeros_like(x))
+    mask = (~keep).astype(x.dtype)
+    return pruned, mask
+
+
+def sparsity(x: jax.Array) -> jax.Array:
+    """Pruning ratio rho(M) = (# zero elements) / (total elements)."""
+    return jnp.mean((x == 0).astype(jnp.float32))
+
+
+def matmul(x: jax.Array, y: jax.Array) -> jax.Array:
+    """Plain GEMM oracle for the tiled Pallas matmul."""
+    return jnp.matmul(x, y)
+
+
+def gelu(x: jax.Array) -> jax.Array:
+    """Exact (erf-based) GeLU, matching the MAC-lane GeLU unit."""
+    return jax.nn.gelu(x, approximate=False)
+
+
+def softmax(x: jax.Array) -> jax.Array:
+    """Numerically-stable row softmax over the last axis."""
+    m = jnp.max(x, axis=-1, keepdims=True)
+    e = jnp.exp(x - m)
+    return e / jnp.sum(e, axis=-1, keepdims=True)
+
+
+def layernorm(x: jax.Array, gamma: jax.Array, beta: jax.Array,
+              eps: float = 1e-5) -> jax.Array:
+    """Layer norm over the last axis with affine parameters."""
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + eps) * gamma + beta
+
+
+def attention(q: jax.Array, k: jax.Array, v: jax.Array,
+              scale: float) -> jax.Array:
+    """Single-head scaled dot-product attention (C-OP-4..6 of Table I)."""
+    a = jnp.matmul(q, jnp.swapaxes(k, -1, -2)) * scale
+    s = softmax(a)
+    return jnp.matmul(s, v)
+
+
+def topk_keep_fraction(x: jax.Array, keep_frac) -> jax.Array:
+    """Top-k baseline pruning (SpAtten-style), expressed as a per-row
+    quantile threshold so that ``k = keep_frac * row_len`` survivors remain.
+
+    Keeping the top-k |values| of a row is equivalent to thresholding at the
+    (1 - k/N) quantile of |row|; the quantile form admits a *traced* k, so a
+    single AOT artifact serves every sweep point of Fig. 11(b).
+    """
+    keep_frac = jnp.asarray(keep_frac, dtype=x.dtype)
+    q = jnp.clip(1.0 - keep_frac, 0.0, 1.0)
+    thr = jnp.quantile(jnp.abs(x), q, axis=-1, keepdims=True)
+    return jnp.where(jnp.abs(x) >= thr, x, jnp.zeros_like(x))

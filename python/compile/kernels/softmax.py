@@ -1,0 +1,42 @@
+"""L1 Pallas kernel: the softmax module (paper C-OP-5, Sec. III-B3/Fig. 18).
+
+AccelTran dedicates specialized hardware to softmax because it sits on the
+attention critical path and, per Fig. 18(b), draws ~half the compute power.
+The hardware computes the exponential sum over an entire tile in parallel;
+the Pallas analogue is a row-block kernel where each grid step reduces full
+rows held in VMEM (max-subtraction for fixed-point-style stability, exp,
+row-sum, divide) in one VPU pass.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK_ROWS = 16
+
+
+def _softmax_kernel(x_ref, o_ref):
+    x = x_ref[...]
+    m = jnp.max(x, axis=-1, keepdims=True)
+    e = jnp.exp(x - m)
+    o_ref[...] = e / jnp.sum(e, axis=-1, keepdims=True)
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows",))
+def softmax(x: jax.Array, block_rows: int = DEFAULT_BLOCK_ROWS) -> jax.Array:
+    """Row softmax over the last axis of a 2-D array, row-block tiled."""
+    m, n = x.shape
+    if m % block_rows != 0:
+        raise ValueError(f"rows {m} not divisible by block_rows {block_rows}")
+    return pl.pallas_call(
+        _softmax_kernel,
+        grid=(m // block_rows,),
+        in_specs=[pl.BlockSpec((block_rows, n), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((block_rows, n), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, n), x.dtype),
+        interpret=True,
+    )(x)

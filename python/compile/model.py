@@ -1,0 +1,367 @@
+"""L2: encoder-only transformer (BERT-family-shaped) in JAX.
+
+This is the model side of the AccelTran reproduction: the exact op sequence
+of the paper's Table I (M-OP-0 embeddings+position, per-layer C-OP-1..11:
+QKV projections, scaled-dot-product attention with softmax, output
+projection, add+layer-norm, two feed-forward GeLU layers, layer-norm),
+with two dynamic-inference hooks threaded through the graph:
+
+* **DynaTran** (the paper's contribution): every activation matrix is
+  magnitude-thresholded at a runtime scalar ``tau`` (Sec. III-A).
+* **top-k** (the SpAtten-style baseline): attention rows keep only the
+  top ``keep_frac * N`` scores (expressed as a traced quantile threshold
+  so one artifact serves the whole Fig. 11(b) sweep).
+
+Parameters live in ONE flat f32 vector.  The Rust coordinator owns that
+buffer (init, optimizer state, persistence); ``param_specs`` publishes the
+layout so both sides agree.  This keeps the PJRT call signature trivial:
+``classify(params, ids, tau) -> logits`` and
+``train_step(params, m, v, step, ids, labels, lr) -> (params', m', v', loss)``.
+
+Everything here is build-time only: ``aot.py`` lowers jitted wrappers to
+HLO text once; Python never appears on the Rust request path.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import ref
+from .kernels import dynatran as k_dynatran
+from .kernels import layernorm as k_layernorm
+from .kernels import matmul as k_matmul
+from .kernels import softmax as k_softmax
+
+
+# --------------------------------------------------------------------------
+# Configuration
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Architecture hyper-parameters (paper Sec. IV-A naming).
+
+    ``bert_tiny()`` matches BERT-Tiny's shape (h=128, 2 layers, 2 heads);
+    the vocabulary is the synthetic-sentiment tokenizer's (the 30,522-entry
+    WordPiece vocab of the paper needs the proprietary-scale corpus; see
+    DESIGN.md §Substitutions).
+    """
+
+    name: str = "bert-tiny-synth"
+    vocab: int = 1024
+    seq: int = 64
+    hidden: int = 128
+    layers: int = 2
+    heads: int = 2
+    ff: int = 512
+    classes: int = 2
+
+    @property
+    def head_dim(self) -> int:
+        assert self.hidden % self.heads == 0
+        return self.hidden // self.heads
+
+    @staticmethod
+    def bert_tiny(vocab: int = 1024, seq: int = 64,
+                  classes: int = 2) -> "ModelConfig":
+        return ModelConfig(name="bert-tiny-synth", vocab=vocab, seq=seq,
+                           hidden=128, layers=2, heads=2, ff=512,
+                           classes=classes)
+
+    @staticmethod
+    def bert_mini(vocab: int = 1024, seq: int = 64,
+                  classes: int = 2) -> "ModelConfig":
+        return ModelConfig(name="bert-mini-synth", vocab=vocab, seq=seq,
+                           hidden=256, layers=4, heads=4, ff=1024,
+                           classes=classes)
+
+
+# --------------------------------------------------------------------------
+# Flat parameter layout
+# --------------------------------------------------------------------------
+
+def param_specs(cfg: ModelConfig) -> list[tuple[str, tuple[int, ...], float]]:
+    """(name, shape, init_std) for every parameter, in flat-buffer order.
+
+    The Rust side reads this layout from ``artifacts/manifest.json`` and
+    initializes/owns the flat buffer; slicing here must match exactly.
+    """
+    h, f = cfg.hidden, cfg.ff
+    specs: list[tuple[str, tuple[int, ...], float]] = [
+        ("embed.word", (cfg.vocab, h), 0.02),
+        ("embed.pos", (cfg.seq, h), 0.02),
+    ]
+    for layer in range(cfg.layers):
+        p = f"layer{layer}"
+        std = 0.02
+        specs += [
+            (f"{p}.attn.wq", (h, h), std),
+            (f"{p}.attn.bq", (h,), 0.0),
+            (f"{p}.attn.wk", (h, h), std),
+            (f"{p}.attn.bk", (h,), 0.0),
+            (f"{p}.attn.wv", (h, h), std),
+            (f"{p}.attn.bv", (h,), 0.0),
+            (f"{p}.attn.wo", (h, h), std),
+            (f"{p}.attn.bo", (h,), 0.0),
+            (f"{p}.ln1.gamma", (h,), -1.0),   # init_std < 0 => init to 1.0
+            (f"{p}.ln1.beta", (h,), 0.0),
+            (f"{p}.ffn.w1", (h, f), std),
+            (f"{p}.ffn.b1", (f,), 0.0),
+            (f"{p}.ffn.w2", (f, h), std),
+            (f"{p}.ffn.b2", (h,), 0.0),
+            (f"{p}.ln2.gamma", (h,), -1.0),
+            (f"{p}.ln2.beta", (h,), 0.0),
+        ]
+    specs += [
+        ("cls.w", (h, cfg.classes), 0.02),
+        ("cls.b", (cfg.classes,), 0.0),
+    ]
+    return specs
+
+
+def param_count(cfg: ModelConfig) -> int:
+    return sum(math.prod(shape) for _, shape, _ in param_specs(cfg))
+
+
+def unpack_params(cfg: ModelConfig, flat: jax.Array) -> dict[str, jax.Array]:
+    """Slice the flat buffer into named, shaped parameter arrays."""
+    params: dict[str, jax.Array] = {}
+    off = 0
+    for name, shape, _ in param_specs(cfg):
+        n = math.prod(shape)
+        params[name] = jax.lax.dynamic_slice_in_dim(flat, off, n).reshape(shape)
+        off += n
+    return params
+
+
+def init_params(cfg: ModelConfig, seed: int = 0) -> jax.Array:
+    """Reference initializer (tests / python-side experiments).  The Rust
+    coordinator performs the same per-spec init with its own PRNG."""
+    key = jax.random.PRNGKey(seed)
+    chunks = []
+    for name, shape, std in param_specs(cfg):
+        key, sub = jax.random.split(key)
+        n = math.prod(shape)
+        if std < 0:        # layer-norm gain: ones
+            chunks.append(jnp.ones((n,), jnp.float32))
+        elif std == 0.0:   # biases: zeros
+            chunks.append(jnp.zeros((n,), jnp.float32))
+        else:
+            chunks.append(std * jax.random.normal(sub, (n,), jnp.float32))
+    return jnp.concatenate(chunks)
+
+
+# --------------------------------------------------------------------------
+# Forward pass
+# --------------------------------------------------------------------------
+
+PRUNE_NONE = "none"
+PRUNE_DYNATRAN = "dynatran"
+PRUNE_TOPK = "topk"
+
+
+def _ops(use_pallas: bool):
+    """Select the kernel set: L1 Pallas kernels (numerics-validation
+    artifacts) or the pure-jnp oracles (fast fused serving artifacts)."""
+    if use_pallas:
+        return dict(
+            matmul=lambda x, y: k_matmul.matmul_fullk(x, y, bm=16, bn=16),
+            softmax=k_softmax.softmax,
+            layernorm=k_layernorm.layernorm,
+            prune=k_dynatran.prune_only,
+        )
+    return dict(
+        matmul=ref.matmul,
+        softmax=ref.softmax,
+        layernorm=ref.layernorm,
+        prune=lambda x, tau: ref.dynatran_prune(x, tau)[0],
+    )
+
+
+def encoder_forward(cfg: ModelConfig, flat_params: jax.Array,
+                    ids: jax.Array, tau: jax.Array,
+                    keep_frac: jax.Array,
+                    prune_mode: str = PRUNE_DYNATRAN,
+                    use_pallas: bool = False) -> jax.Array:
+    """Run the encoder stack; returns the (B, S, H) hidden states.
+
+    ``tau`` only has effect under DynaTran mode; ``keep_frac`` only under
+    top-k mode.  ``tau == 0`` / ``keep_frac == 1`` are exact no-ops, so the
+    unpruned baseline is the same artifact evaluated at the identity point.
+    """
+    ops = _ops(use_pallas)
+    p = unpack_params(cfg, flat_params)
+    B, S = ids.shape
+    H, nh, hd = cfg.hidden, cfg.heads, cfg.head_dim
+    scale = 1.0 / math.sqrt(hd)
+
+    def prune_act(x2d: jax.Array) -> jax.Array:
+        """DynaTran hook on an activation matrix (paper prunes *all*
+        activations, not just attention scores — its key delta vs SpAtten
+        and Energon)."""
+        if prune_mode == PRUNE_DYNATRAN:
+            return ops["prune"](x2d, tau)
+        return x2d
+
+    # M-OP-0: embeddings + position encodings.
+    hemb = jnp.take(p["embed.word"], ids, axis=0)          # (B, S, H)
+    hidden = hemb + p["embed.pos"][None, :, :]
+
+    for layer in range(cfg.layers):
+        lp = f"layer{layer}"
+        x2 = hidden.reshape(B * S, H)
+        x2 = prune_act(x2)
+
+        # C-OP-1..3: QKV projections (per-head weights fused into h x h).
+        q = prune_act(ops["matmul"](x2, p[f"{lp}.attn.wq"]) + p[f"{lp}.attn.bq"])
+        k = prune_act(ops["matmul"](x2, p[f"{lp}.attn.wk"]) + p[f"{lp}.attn.bk"])
+        v = prune_act(ops["matmul"](x2, p[f"{lp}.attn.wv"]) + p[f"{lp}.attn.bv"])
+
+        qh = q.reshape(B, S, nh, hd).transpose(0, 2, 1, 3)  # (B, nh, S, hd)
+        kh = k.reshape(B, S, nh, hd).transpose(0, 2, 1, 3)
+        vh = v.reshape(B, S, nh, hd).transpose(0, 2, 1, 3)
+
+        # C-OP-4..5: attention scores + softmax.  Batched heads are folded
+        # into the row dimension so the 2-D tiled kernels apply unchanged.
+        a = jnp.einsum("bnsd,bntd->bnst", qh, kh) * scale    # (B, nh, S, S)
+        a2 = a.reshape(B * nh * S, S)
+        if prune_mode == PRUNE_TOPK:
+            a2 = ref.topk_keep_fraction(a2, keep_frac)
+        else:
+            a2 = prune_act(a2)
+        s2 = ops["softmax"](a2)
+        s = s2.reshape(B, nh, S, S)
+
+        # C-OP-6: probabilities x values.
+        ph = jnp.einsum("bnst,bntd->bnsd", s, vh)            # (B, nh, S, hd)
+        pcat = ph.transpose(0, 2, 1, 3).reshape(B * S, H)
+        pcat = prune_act(pcat)
+
+        # C-OP-7: output projection.
+        mha = ops["matmul"](pcat, p[f"{lp}.attn.wo"]) + p[f"{lp}.attn.bo"]
+        mha = prune_act(mha)
+
+        # C-OP-8: residual add + layer-norm.
+        x_ln1 = ops["layernorm"](mha + x2, p[f"{lp}.ln1.gamma"],
+                                 p[f"{lp}.ln1.beta"])
+
+        # C-OP-9..10: feed-forward with GeLU (GeLU fused at MAC-lane output).
+        f1 = ref.gelu(ops["matmul"](prune_act(x_ln1), p[f"{lp}.ffn.w1"])
+                      + p[f"{lp}.ffn.b1"])
+        f1 = prune_act(f1)
+        f2 = ops["matmul"](f1, p[f"{lp}.ffn.w2"]) + p[f"{lp}.ffn.b2"]
+        f2 = prune_act(f2)
+
+        # C-OP-11: layer-norm (residual from x_ln1, standard post-LN BERT).
+        out = ops["layernorm"](f2 + x_ln1, p[f"{lp}.ln2.gamma"],
+                               p[f"{lp}.ln2.beta"])
+        hidden = out.reshape(B, S, H)
+
+    return hidden
+
+
+def classify(cfg: ModelConfig, flat_params: jax.Array, ids: jax.Array,
+             tau: jax.Array, keep_frac: jax.Array,
+             prune_mode: str = PRUNE_DYNATRAN,
+             use_pallas: bool = False) -> jax.Array:
+    """Sequence classification from the position-0 ([CLS]) token."""
+    hidden = encoder_forward(cfg, flat_params, ids, tau, keep_frac,
+                             prune_mode=prune_mode, use_pallas=use_pallas)
+    p = unpack_params(cfg, flat_params)
+    pooled = hidden[:, 0, :]                               # (B, H)
+    return ref.matmul(pooled, p["cls.w"]) + p["cls.b"]
+
+
+def activation_sparsity(cfg: ModelConfig, flat_params: jax.Array,
+                        ids: jax.Array, tau: jax.Array) -> jax.Array:
+    """Mean post-DynaTran activation sparsity over the forward pass —
+    the rho axis of Figs. 11/12.  Re-runs the encoder accumulating the
+    zero-fraction of every pruned activation matrix."""
+    # Capture sparsities functionally by re-implementing the hook.
+    acc = []
+
+    ops = _ops(False)
+    p = unpack_params(cfg, flat_params)
+    B, S = ids.shape
+    H, nh, hd = cfg.hidden, cfg.heads, cfg.head_dim
+    scale = 1.0 / math.sqrt(hd)
+
+    def prune_act(x2d):
+        out = ops["prune"](x2d, tau)
+        acc.append(ref.sparsity(out))
+        return out
+
+    hemb = jnp.take(p["embed.word"], ids, axis=0)
+    hidden = hemb + p["embed.pos"][None, :, :]
+    for layer in range(cfg.layers):
+        lp = f"layer{layer}"
+        x2 = prune_act(hidden.reshape(B * S, H))
+        q = prune_act(ops["matmul"](x2, p[f"{lp}.attn.wq"]) + p[f"{lp}.attn.bq"])
+        k = prune_act(ops["matmul"](x2, p[f"{lp}.attn.wk"]) + p[f"{lp}.attn.bk"])
+        v = prune_act(ops["matmul"](x2, p[f"{lp}.attn.wv"]) + p[f"{lp}.attn.bv"])
+        qh = q.reshape(B, S, nh, hd).transpose(0, 2, 1, 3)
+        kh = k.reshape(B, S, nh, hd).transpose(0, 2, 1, 3)
+        vh = v.reshape(B, S, nh, hd).transpose(0, 2, 1, 3)
+        a = jnp.einsum("bnsd,bntd->bnst", qh, kh) * scale
+        a2 = prune_act(a.reshape(B * nh * S, S))
+        s = ops["softmax"](a2).reshape(B, nh, S, S)
+        ph = jnp.einsum("bnst,bntd->bnsd", s, vh)
+        pcat = prune_act(ph.transpose(0, 2, 1, 3).reshape(B * S, H))
+        mha = prune_act(ops["matmul"](pcat, p[f"{lp}.attn.wo"]) + p[f"{lp}.attn.bo"])
+        x_ln1 = ops["layernorm"](mha + x2, p[f"{lp}.ln1.gamma"], p[f"{lp}.ln1.beta"])
+        f1 = prune_act(ref.gelu(ops["matmul"](prune_act(x_ln1), p[f"{lp}.ffn.w1"])
+                                + p[f"{lp}.ffn.b1"]))
+        f2 = prune_act(ops["matmul"](f1, p[f"{lp}.ffn.w2"]) + p[f"{lp}.ffn.b2"])
+        hidden = ops["layernorm"](f2 + x_ln1, p[f"{lp}.ln2.gamma"],
+                                  p[f"{lp}.ln2.beta"]).reshape(B, S, H)
+    return jnp.mean(jnp.stack(acc))
+
+
+# --------------------------------------------------------------------------
+# Training (AdamW on the flat buffer)
+# --------------------------------------------------------------------------
+
+ADAM_B1 = 0.9
+ADAM_B2 = 0.999
+ADAM_EPS = 1e-8
+
+
+def loss_fn(cfg: ModelConfig, flat_params: jax.Array, ids: jax.Array,
+            labels: jax.Array) -> jax.Array:
+    """Mean softmax cross-entropy (training always runs unpruned)."""
+    logits = classify(cfg, flat_params, ids,
+                      tau=jnp.float32(0.0), keep_frac=jnp.float32(1.0),
+                      prune_mode=PRUNE_NONE, use_pallas=False)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    picked = jnp.take_along_axis(logits, labels[:, None], axis=-1)[:, 0]
+    return jnp.mean(logz - picked)
+
+
+def train_step(cfg: ModelConfig, flat_params: jax.Array, m: jax.Array,
+               v: jax.Array, step: jax.Array, ids: jax.Array,
+               labels: jax.Array, lr: jax.Array):
+    """One AdamW step over the flat buffer.
+
+    Returns ``(params', m', v', loss)``.  The optimizer state (m, v) is two
+    more flat f32 buffers owned by the Rust coordinator; ``step`` is a
+    float32 scalar step counter for bias correction.
+    """
+    loss, grads = jax.value_and_grad(
+        lambda fp: loss_fn(cfg, fp, ids, labels))(flat_params)
+    t = step + 1.0
+    m2 = ADAM_B1 * m + (1.0 - ADAM_B1) * grads
+    v2 = ADAM_B2 * v + (1.0 - ADAM_B2) * jnp.square(grads)
+    mhat = m2 / (1.0 - ADAM_B1 ** t)
+    vhat = v2 / (1.0 - ADAM_B2 ** t)
+    upd = lr * mhat / (jnp.sqrt(vhat) + ADAM_EPS)
+    return flat_params - upd, m2, v2, loss
+
+
+def accuracy(logits: jax.Array, labels: jax.Array) -> jax.Array:
+    return jnp.mean((jnp.argmax(logits, axis=-1) == labels)
+                    .astype(jnp.float32))

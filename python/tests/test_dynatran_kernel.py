@@ -1,0 +1,77 @@
+"""L1 correctness: DynaTran Pallas kernel vs. pure-jnp oracle.
+
+Hypothesis sweeps shapes and thresholds; the kernel must be bit-exact to
+the oracle (pure select, no arithmetic reassociation)."""
+
+import hypothesis
+import hypothesis.strategies as st
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.kernels import dynatran, ref
+
+hypothesis.settings.register_profile(
+    "ci", deadline=None, max_examples=25,
+    suppress_health_check=[hypothesis.HealthCheck.too_slow])
+hypothesis.settings.load_profile("ci")
+
+
+def _rand(shape, seed):
+    return np.random.default_rng(seed).standard_normal(shape).astype("f4")
+
+
+@hypothesis.given(
+    rows=st.integers(1, 8),
+    cols=st.integers(1, 96),
+    block=st.sampled_from([1, 2, 4, 8, 16]),
+    tau=st.floats(0.0, 2.0),
+    seed=st.integers(0, 2**16),
+)
+def test_matches_oracle(rows, cols, block, tau, seed):
+    m = rows * block
+    x = jnp.array(_rand((m, cols), seed))
+    got_p, got_m = dynatran.dynatran_prune(x, tau, block_rows=block)
+    exp_p, exp_m = ref.dynatran_prune(x, tau)
+    np.testing.assert_array_equal(np.asarray(got_p), np.asarray(exp_p))
+    np.testing.assert_array_equal(np.asarray(got_m), np.asarray(exp_m))
+
+
+def test_tau_zero_is_identity():
+    x = jnp.array(_rand((32, 32), 0))
+    p, m = dynatran.dynatran_prune(x, 0.0)
+    np.testing.assert_array_equal(np.asarray(p), np.asarray(x))
+    # nothing pruned (mask all zero) — standard normals are never exactly 0
+    assert float(jnp.sum(m)) == 0.0
+
+
+def test_tau_huge_prunes_everything():
+    x = jnp.array(_rand((32, 32), 1))
+    p, m = dynatran.dynatran_prune(x, 1e9)
+    assert float(jnp.sum(jnp.abs(p))) == 0.0
+    assert float(jnp.sum(m)) == 32 * 32
+
+
+@hypothesis.given(tau1=st.floats(0.0, 1.0), tau2=st.floats(0.0, 1.0),
+                  seed=st.integers(0, 2**16))
+def test_sparsity_monotone_in_tau(tau1, tau2, seed):
+    """rho(tau) is non-decreasing — the invariant the threshold
+    calculator's look-up table relies on (paper Sec. III-A)."""
+    lo, hi = min(tau1, tau2), max(tau1, tau2)
+    x = jnp.array(_rand((32, 32), seed))
+    p_lo, _ = dynatran.dynatran_prune(x, lo)
+    p_hi, _ = dynatran.dynatran_prune(x, hi)
+    assert float(ref.sparsity(p_hi)) >= float(ref.sparsity(p_lo))
+
+
+def test_mask_marks_exactly_the_zeroed_entries():
+    x = jnp.array(_rand((16, 64), 3))
+    p, m = dynatran.dynatran_prune(x, 0.7)
+    pruned_at = np.asarray(p) == 0.0
+    mask_at = np.asarray(m) == 1.0
+    np.testing.assert_array_equal(pruned_at, mask_at)
+
+
+def test_rejects_bad_block():
+    with pytest.raises(ValueError):
+        dynatran.dynatran_prune(jnp.zeros((10, 4)), 0.1, block_rows=16)

@@ -1,0 +1,132 @@
+"""L2 correctness: model shapes, prune-mode semantics, pallas/jnp parity,
+training-step sanity, and the flat-parameter layout contract with Rust."""
+
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+from compile.kernels import ref
+
+CFG = M.ModelConfig.bert_tiny()
+
+
+@pytest.fixture(scope="module")
+def params():
+    return M.init_params(CFG, seed=0)
+
+
+@pytest.fixture(scope="module")
+def batch():
+    rng = np.random.default_rng(7)
+    ids = jnp.array(rng.integers(0, CFG.vocab, (4, CFG.seq)), jnp.int32)
+    labels = jnp.array(rng.integers(0, CFG.classes, (4,)), jnp.int32)
+    return ids, labels
+
+
+def test_param_count_matches_specs(params):
+    assert params.shape == (M.param_count(CFG),)
+    total = sum(math.prod(s) for _, s, _ in M.param_specs(CFG))
+    assert total == M.param_count(CFG)
+
+
+def test_param_specs_are_unique_and_ordered():
+    names = [n for n, _, _ in M.param_specs(CFG)]
+    assert len(names) == len(set(names))
+    assert names[0] == "embed.word" and names[-1] == "cls.b"
+
+
+def test_unpack_roundtrip(params):
+    up = M.unpack_params(CFG, params)
+    flat_again = jnp.concatenate([up[n].reshape(-1)
+                                  for n, _, _ in M.param_specs(CFG)])
+    np.testing.assert_array_equal(np.asarray(flat_again), np.asarray(params))
+
+
+def test_layernorm_gains_init_to_one(params):
+    up = M.unpack_params(CFG, params)
+    np.testing.assert_array_equal(np.asarray(up["layer0.ln1.gamma"]),
+                                  np.ones(CFG.hidden, "f4"))
+
+
+def test_classify_shape(params, batch):
+    ids, _ = batch
+    logits = M.classify(CFG, params, ids, jnp.float32(0.0), jnp.float32(1.0))
+    assert logits.shape == (4, CFG.classes)
+    assert np.isfinite(np.asarray(logits)).all()
+
+
+def test_tau_zero_equals_no_pruning(params, batch):
+    ids, _ = batch
+    a = M.classify(CFG, params, ids, jnp.float32(0.0), jnp.float32(1.0),
+                   prune_mode=M.PRUNE_DYNATRAN)
+    b = M.classify(CFG, params, ids, jnp.float32(0.0), jnp.float32(1.0),
+                   prune_mode=M.PRUNE_NONE)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_keepfrac_one_is_near_identity(params, batch):
+    ids, _ = batch
+    a = M.classify(CFG, params, ids, jnp.float32(0.0), jnp.float32(1.0),
+                   prune_mode=M.PRUNE_TOPK)
+    b = M.classify(CFG, params, ids, jnp.float32(0.0), jnp.float32(1.0),
+                   prune_mode=M.PRUNE_NONE)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                               rtol=1e-3, atol=1e-4)
+
+
+def test_pruning_changes_logits(params, batch):
+    ids, _ = batch
+    a = M.classify(CFG, params, ids, jnp.float32(0.0), jnp.float32(1.0))
+    b = M.classify(CFG, params, ids, jnp.float32(0.2), jnp.float32(1.0))
+    assert not np.allclose(np.asarray(a), np.asarray(b))
+
+
+def test_pallas_path_matches_jnp_path(params, batch):
+    ids, _ = batch
+    for tau in (0.0, 0.05):
+        a = M.classify(CFG, params, ids, jnp.float32(tau), jnp.float32(1.0),
+                       use_pallas=False)
+        b = M.classify(CFG, params, ids, jnp.float32(tau), jnp.float32(1.0),
+                       use_pallas=True)
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-3, atol=1e-4)
+
+
+def test_activation_sparsity_monotone(params, batch):
+    ids, _ = batch
+    rhos = [float(M.activation_sparsity(CFG, params, ids, jnp.float32(t)))
+            for t in (0.0, 0.02, 0.05, 0.1)]
+    assert all(b >= a - 1e-6 for a, b in zip(rhos, rhos[1:]))
+    assert rhos[-1] > 0.3   # tau=0.1 prunes a large fraction post-LN
+
+
+def test_train_step_reduces_loss(params, batch):
+    ids, labels = batch
+    fp = params
+    m = jnp.zeros_like(fp)
+    v = jnp.zeros_like(fp)
+    losses = []
+    for step in range(12):
+        fp, m, v, loss = M.train_step(CFG, fp, m, v, jnp.float32(step),
+                                      ids, labels, jnp.float32(3e-3))
+        losses.append(float(loss))
+    # overfit 4 examples: loss must drop substantially
+    assert losses[-1] < losses[0] * 0.6, losses
+
+
+def test_accuracy_metric():
+    logits = jnp.array([[2.0, -1.0], [0.0, 3.0], [1.0, 0.5]])
+    labels = jnp.array([0, 1, 1])
+    assert float(M.accuracy(logits, labels)) == pytest.approx(2.0 / 3.0)
+
+
+def test_topk_keep_fraction_keeps_expected_count():
+    x = jnp.array(np.random.default_rng(0).standard_normal((8, 64)), jnp.float32)
+    kept = ref.topk_keep_fraction(x, jnp.float32(0.25))
+    nz = np.count_nonzero(np.asarray(kept), axis=-1)
+    assert (np.abs(nz - 16) <= 1).all()

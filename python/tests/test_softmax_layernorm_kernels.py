@@ -1,0 +1,70 @@
+"""L1 correctness: softmax + layer-norm Pallas modules vs. oracles."""
+
+import hypothesis
+import hypothesis.strategies as st
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.kernels import layernorm, ref, softmax
+
+hypothesis.settings.register_profile(
+    "ci", deadline=None, max_examples=20,
+    suppress_health_check=[hypothesis.HealthCheck.too_slow])
+hypothesis.settings.load_profile("ci")
+
+
+def _rand(shape, seed, scale=1.0):
+    return (scale *
+            np.random.default_rng(seed).standard_normal(shape)).astype("f4")
+
+
+@hypothesis.given(rows=st.integers(1, 6), cols=st.integers(1, 80),
+                  block=st.sampled_from([1, 4, 16]),
+                  scale=st.sampled_from([0.1, 1.0, 20.0]),
+                  seed=st.integers(0, 2**16))
+def test_softmax_matches_oracle(rows, cols, block, scale, seed):
+    m = rows * block
+    x = jnp.array(_rand((m, cols), seed, scale))
+    got = softmax.softmax(x, block_rows=block)
+    exp = ref.softmax(x)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(exp),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_softmax_rows_sum_to_one():
+    x = jnp.array(_rand((32, 64), 0, 30.0))   # large logits: stability check
+    got = np.asarray(softmax.softmax(x))
+    np.testing.assert_allclose(got.sum(axis=-1), np.ones(32), rtol=1e-5)
+    assert np.isfinite(got).all()
+
+
+@hypothesis.given(rows=st.integers(1, 6), cols=st.integers(2, 96),
+                  block=st.sampled_from([1, 4, 16]),
+                  seed=st.integers(0, 2**16))
+def test_layernorm_matches_oracle(rows, cols, block, seed):
+    m = rows * block
+    x = jnp.array(_rand((m, cols), seed))
+    g = jnp.array(_rand((cols,), seed + 1))
+    b = jnp.array(_rand((cols,), seed + 2))
+    got = layernorm.layernorm(x, g, b, block_rows=block)
+    exp = ref.layernorm(x, g, b)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(exp),
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_layernorm_output_is_normalized():
+    x = jnp.array(_rand((16, 128), 5, 7.0))
+    ones = jnp.ones((128,), jnp.float32)
+    zeros = jnp.zeros((128,), jnp.float32)
+    got = np.asarray(layernorm.layernorm(x, ones, zeros))
+    np.testing.assert_allclose(got.mean(axis=-1), np.zeros(16), atol=1e-5)
+    np.testing.assert_allclose(got.std(axis=-1), np.ones(16), atol=1e-2)
+
+
+def test_block_validation():
+    with pytest.raises(ValueError):
+        softmax.softmax(jnp.zeros((10, 8)), block_rows=16)
+    with pytest.raises(ValueError):
+        layernorm.layernorm(jnp.zeros((10, 8)), jnp.ones(8), jnp.zeros(8),
+                            block_rows=16)

@@ -1,0 +1,260 @@
+//! Request router + dynamic batcher.
+//!
+//! The AOT artifacts export fixed batch shapes (1, 8, 32).  The batcher
+//! drains its queue into the largest shape it can fill (padding the tail
+//! with copies of the last request — padded rows are computed and
+//! discarded), amortizing the per-dispatch overhead exactly like the
+//! serving-side dynamic batching of vLLM-style routers, scaled to this
+//! repo's single-process setting.
+
+use std::collections::VecDeque;
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use crate::runtime::Runtime;
+
+/// Exported batch shapes, largest first.
+const BATCH_SHAPES: &[usize] = &[32, 8, 1];
+
+/// One classification request.
+#[derive(Clone, Debug)]
+pub struct Request {
+    pub id: u64,
+    /// `seq`-length token ids.
+    pub ids: Vec<i32>,
+    /// DynaTran threshold for this request's dynamic-inference level.
+    pub tau: f32,
+    pub enqueued_at: Instant,
+}
+
+/// One completed response.
+#[derive(Clone, Debug)]
+pub struct Response {
+    pub id: u64,
+    pub logits: Vec<f32>,
+    pub latency: Duration,
+    /// Batch shape the request was served in.
+    pub batch: usize,
+}
+
+/// Aggregate serving statistics.
+#[derive(Clone, Debug, Default)]
+pub struct ServerStats {
+    pub served: u64,
+    pub dispatches: u64,
+    pub padded_rows: u64,
+    latencies_us: Vec<u64>,
+}
+
+impl ServerStats {
+    pub fn record(&mut self, latency: Duration, batch_fill: usize, batch: usize) {
+        self.served += batch_fill as u64;
+        self.dispatches += 1;
+        self.padded_rows += (batch - batch_fill) as u64;
+        self.latencies_us.push(latency.as_micros() as u64);
+    }
+
+    /// Latency percentile over *dispatch* latencies, p in [0, 100].
+    pub fn latency_percentile(&self, p: f64) -> Duration {
+        if self.latencies_us.is_empty() {
+            return Duration::ZERO;
+        }
+        let mut xs = self.latencies_us.clone();
+        xs.sort_unstable();
+        let idx = ((p / 100.0) * (xs.len() - 1) as f64).round() as usize;
+        Duration::from_micros(xs[idx])
+    }
+
+    pub fn mean_latency(&self) -> Duration {
+        if self.latencies_us.is_empty() {
+            return Duration::ZERO;
+        }
+        Duration::from_micros(
+            self.latencies_us.iter().sum::<u64>() / self.latencies_us.len() as u64,
+        )
+    }
+}
+
+/// The batching server.
+pub struct BatchServer {
+    runtime: Runtime,
+    params: xla::Literal,
+    queue: VecDeque<Request>,
+    pub stats: ServerStats,
+    next_id: u64,
+    /// Maximum queue dwell before a partial batch is flushed.
+    pub max_wait: Duration,
+}
+
+impl BatchServer {
+    pub fn new(runtime: Runtime, params: xla::Literal) -> BatchServer {
+        BatchServer {
+            runtime,
+            params,
+            queue: VecDeque::new(),
+            stats: ServerStats::default(),
+            next_id: 0,
+            max_wait: Duration::from_millis(5),
+        }
+    }
+
+    /// Enqueue a request; returns its id.
+    pub fn submit(&mut self, ids: Vec<i32>, tau: f32) -> u64 {
+        let id = self.next_id;
+        self.next_id += 1;
+        self.queue.push_back(Request {
+            id,
+            ids,
+            tau,
+            enqueued_at: Instant::now(),
+        });
+        id
+    }
+
+    pub fn pending(&self) -> usize {
+        self.queue.len()
+    }
+
+    /// Pick the batch shape for the current queue: dispatch the largest
+    /// exported shape once it fills; otherwise keep accumulating until
+    /// the oldest request has dwelled past `max_wait`, then flush with
+    /// the smallest shape that covers the queue (padding the remainder).
+    fn choose_shape(&self) -> Option<usize> {
+        let n = self.queue.len();
+        if n == 0 {
+            return None;
+        }
+        let largest = BATCH_SHAPES[0];
+        if n >= largest {
+            return Some(largest);
+        }
+        let oldest = self.queue.front().unwrap().enqueued_at;
+        if oldest.elapsed() >= self.max_wait {
+            // flush: smallest shape that covers the queue
+            let b = *BATCH_SHAPES
+                .iter()
+                .filter(|&&b| b >= n)
+                .min()
+                .unwrap_or(&largest);
+            return Some(b);
+        }
+        None
+    }
+
+    /// Serve at most one batch; returns the responses (empty if the
+    /// batcher decided to keep waiting).
+    pub fn step(&mut self) -> Result<Vec<Response>> {
+        let Some(batch) = self.choose_shape() else {
+            return Ok(Vec::new());
+        };
+        let fill = batch.min(self.queue.len());
+        let reqs: Vec<Request> = (0..fill).map(|_| self.queue.pop_front().unwrap()).collect();
+        let seq = self.runtime.manifest.seq;
+        let mut ids = Vec::with_capacity(batch * seq);
+        for r in &reqs {
+            assert_eq!(r.ids.len(), seq, "request seq mismatch");
+            ids.extend_from_slice(&r.ids);
+        }
+        // pad with copies of the last request
+        for _ in fill..batch {
+            let last = &reqs[fill - 1];
+            ids.extend_from_slice(&last.ids);
+        }
+        // per-batch tau: requests are grouped FIFO; use the max tau so no
+        // request gets *more* pruning than it asked for... conservative
+        // choice is min (least pruning = most accurate).
+        let tau = reqs.iter().map(|r| r.tau).fold(f32::INFINITY, f32::min);
+        let t0 = Instant::now();
+        let logits = self.runtime.classify(batch, &self.params, &ids, tau)?;
+        let elapsed = t0.elapsed();
+        let classes = self.runtime.manifest.classes;
+        let mut out = Vec::with_capacity(fill);
+        for (i, r) in reqs.into_iter().enumerate() {
+            out.push(Response {
+                id: r.id,
+                logits: logits[i * classes..(i + 1) * classes].to_vec(),
+                latency: r.enqueued_at.elapsed(),
+                batch,
+            });
+        }
+        self.stats.record(elapsed, fill, batch);
+        Ok(out)
+    }
+
+    /// Drain the queue completely.
+    pub fn drain(&mut self) -> Result<Vec<Response>> {
+        let mut out = Vec::new();
+        // force flush regardless of dwell time
+        let saved = self.max_wait;
+        self.max_wait = Duration::ZERO;
+        while self.pending() > 0 {
+            out.extend(self.step()?);
+        }
+        self.max_wait = saved;
+        Ok(out)
+    }
+
+    pub fn runtime_mut(&mut self) -> &mut Runtime {
+        &mut self.runtime
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Shape-choice logic is pure; test it without a runtime via a probe
+    // mirroring the policy exactly.
+    fn choose(n: usize, waited: bool) -> Option<usize> {
+        if n == 0 {
+            return None;
+        }
+        if n >= BATCH_SHAPES[0] {
+            return Some(BATCH_SHAPES[0]);
+        }
+        if waited {
+            return Some(
+                *BATCH_SHAPES
+                    .iter()
+                    .filter(|&&b| b >= n)
+                    .min()
+                    .unwrap_or(&BATCH_SHAPES[0]),
+            );
+        }
+        None
+    }
+
+    #[test]
+    fn full_batches_dispatch_immediately() {
+        assert_eq!(choose(32, false), Some(32));
+        assert_eq!(choose(40, false), Some(32));
+    }
+
+    #[test]
+    fn partial_batches_wait_then_flush() {
+        // partial batches accumulate toward the big shape...
+        assert_eq!(choose(8, false), None);
+        assert_eq!(choose(5, false), None);
+        assert_eq!(choose(1, false), None);
+        // ...and flush to the smallest covering shape after max_wait.
+        assert_eq!(choose(5, true), Some(8));
+        assert_eq!(choose(8, true), Some(8));
+        assert_eq!(choose(9, true), Some(32));
+        assert_eq!(choose(1, true), Some(1));
+        assert_eq!(choose(0, true), None);
+    }
+
+    #[test]
+    fn stats_percentiles() {
+        let mut s = ServerStats::default();
+        for us in [100u64, 200, 300, 400, 1000] {
+            s.record(Duration::from_micros(us), 8, 8);
+        }
+        assert_eq!(s.latency_percentile(0.0), Duration::from_micros(100));
+        assert_eq!(s.latency_percentile(50.0), Duration::from_micros(300));
+        assert_eq!(s.latency_percentile(100.0), Duration::from_micros(1000));
+        assert_eq!(s.served, 40);
+        assert_eq!(s.padded_rows, 0);
+    }
+}

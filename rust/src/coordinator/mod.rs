@@ -1,0 +1,21 @@
+//! L3 coordination: the serving front-end and experiment drivers that tie
+//! the functional runtime (PJRT artifacts) and the timing model (the
+//! AccelTran simulator) together.
+//!
+//! * [`batcher`] — request router + dynamic batcher: incoming classify
+//!   requests are queued, grouped to the nearest exported batch shape
+//!   (b1 / b8 / b32, padding with replicas), executed on the runtime, and
+//!   answered with per-request logits and latency accounting.
+//! * [`eval`] — evaluation loops over `nlp` datasets: accuracy / F1 /
+//!   activation-sparsity sweeps across DynaTran tau and top-k keep
+//!   fractions (the Figs. 11/12/14 drivers).
+//! * [`trainer`] — the end-to-end training driver: AdamW steps through
+//!   the `train_step_b32` artifact, loss-curve logging, checkpoints.
+
+pub mod batcher;
+pub mod eval;
+pub mod trainer;
+
+pub use batcher::{BatchServer, Request, Response, ServerStats};
+pub use eval::{evaluate_accuracy, sweep_dynatran, sweep_topk, EvalReport};
+pub use trainer::{train, TrainLog};

@@ -1,0 +1,144 @@
+//! End-to-end training driver over the `train_step_b32` AOT artifact.
+//!
+//! The Rust side owns parameters and optimizer state (`ParamStore`),
+//! streams synthetic-sentiment batches, invokes the AdamW train-step
+//! executable, and logs the loss curve — the "train a small transformer
+//! through the full stack" validation recorded in EXPERIMENTS.md.
+
+use anyhow::Result;
+
+use crate::nlp::Dataset;
+use crate::runtime::{ParamStore, Runtime};
+
+/// Training log: per-step losses and periodic validation accuracies.
+#[derive(Clone, Debug, Default)]
+pub struct TrainLog {
+    pub losses: Vec<f32>,
+    /// (step, accuracy) checkpoints.
+    pub val_accuracy: Vec<(usize, f64)>,
+}
+
+impl TrainLog {
+    /// Mean loss over the first / last `k` steps (loss-curve summary).
+    pub fn head_tail_means(&self, k: usize) -> (f32, f32) {
+        let k = k.min(self.losses.len()).max(1);
+        let head: f32 = self.losses[..k].iter().sum::<f32>() / k as f32;
+        let tail: f32 =
+            self.losses[self.losses.len() - k..].iter().sum::<f32>() / k as f32;
+        (head, tail)
+    }
+}
+
+/// Train for `steps` AdamW steps at learning rate `lr`, evaluating on
+/// `val` every `eval_every` steps (0 = never).  Parameters stay on the
+/// PJRT side as literals between steps; only the scalar loss round-trips
+/// per step.
+pub fn train(
+    rt: &mut Runtime,
+    store: &mut ParamStore,
+    train_ds: &Dataset,
+    val_ds: Option<&Dataset>,
+    steps: usize,
+    lr: f32,
+    eval_every: usize,
+    verbose: bool,
+) -> Result<TrainLog> {
+    let batch = 32usize;
+    let batches = train_ds.batches(batch);
+    assert!(!batches.is_empty());
+    let mut log = TrainLog::default();
+    let mut p = store.params_literal();
+    let mut m = store.m_literal();
+    let mut v = store.v_literal();
+    for step in 0..steps {
+        let (ids, labels) = &batches[step % batches.len()];
+        let (p2, m2, v2, loss) =
+            rt.train_step(p, m, v, store.step + step as f32, ids, labels, lr)?;
+        p = p2;
+        m = m2;
+        v = v2;
+        log.losses.push(loss);
+        if verbose && (step % 20 == 0 || step + 1 == steps) {
+            println!("  step {step:>4}  loss {loss:.4}");
+        }
+        if eval_every > 0 && val_ds.is_some() && (step + 1) % eval_every == 0 {
+            store.absorb(&p, &m, &v)?;
+            // re-create literals after absorb moved them to host
+            p = store.params_literal();
+            m = store.m_literal();
+            v = store.v_literal();
+            let r = super::eval::evaluate_accuracy(
+                rt,
+                &store.params_literal(),
+                val_ds.unwrap(),
+                0.0,
+                256,
+            )?;
+            if verbose {
+                println!("  step {:>4}  val accuracy {:.4}", step + 1, r.accuracy);
+            }
+            log.val_accuracy.push((step + 1, r.accuracy));
+        }
+    }
+    store.absorb(&p, &m, &v)?;
+    store.step += steps as f32;
+    Ok(log)
+}
+
+/// Train-once cache: load trained params from `path` if present,
+/// otherwise train `steps` on a fresh synthetic-sentiment corpus and save.
+/// The Figs. 11/12/14 bench harnesses share one trained model this way.
+pub fn ensure_trained(
+    rt: &mut Runtime,
+    path: &std::path::Path,
+    steps: usize,
+    verbose: bool,
+) -> Result<ParamStore> {
+    if path.exists() {
+        if let Ok(store) = ParamStore::from_file(&rt.manifest, path) {
+            if verbose {
+                println!("loaded cached trained params from {path:?}");
+            }
+            return Ok(store);
+        }
+    }
+    let task = crate::nlp::sentiment::SentimentTask::new(
+        rt.manifest.vocab,
+        rt.manifest.seq,
+        7,
+    );
+    let train_ds = task.dataset(4096, 1);
+    let mut store = ParamStore::init(&rt.manifest, 0);
+    if verbose {
+        println!("training {} steps for the evaluation benches...", steps);
+    }
+    train(rt, &mut store, &train_ds, None, steps, 1e-3, 0, verbose)?;
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir).ok();
+    }
+    store.save(path)?;
+    Ok(store)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn head_tail_means() {
+        let log = TrainLog {
+            losses: vec![1.0, 0.9, 0.8, 0.3, 0.2, 0.1],
+            val_accuracy: vec![],
+        };
+        let (head, tail) = log.head_tail_means(2);
+        assert!((head - 0.95).abs() < 1e-6);
+        assert!((tail - 0.15).abs() < 1e-6);
+    }
+
+    #[test]
+    fn head_tail_handles_short_logs() {
+        let log = TrainLog { losses: vec![0.5], val_accuracy: vec![] };
+        let (h, t) = log.head_tail_means(10);
+        assert_eq!((h, t), (0.5, 0.5));
+    }
+}

@@ -1,0 +1,38 @@
+//! # AccelTran — sparsity-aware accelerator simulation for dynamic
+//! transformer inference
+//!
+//! Rust reproduction of *AccelTran: A Sparsity-Aware Accelerator for
+//! Dynamic Inference with Transformers* (Tuli & Jha, IEEE TCAD 2023),
+//! built as the L3 layer of a three-layer Rust + JAX + Pallas stack:
+//!
+//! * [`sim`] — the paper's contribution: a cycle-accurate simulator of the
+//!   AccelTran ASIC (PEs, MAC lanes, softmax/layer-norm modules, DynaTran
+//!   pruning, binary-mask sparsity pipeline, buffers, LP-DDR3 /
+//!   monolithic-3D-RRAM main memory, smart stagger scheduling, 24 tiled
+//!   dataflows, 14nm area/energy models).
+//! * [`runtime`] — PJRT client wrapper that loads the AOT-compiled HLO
+//!   text artifacts produced by `python/compile/aot.py` and executes them
+//!   on the CPU PJRT backend (functional inference/training path).
+//! * [`coordinator`] — request router + dynamic batcher + evaluation
+//!   loops tying the functional model (runtime) and the timing model
+//!   (sim) together behind one serving API.
+//! * [`model`] — transformer architecture descriptions (Table I op
+//!   inventory, Fig. 1 memory analytics) shared by sim and runtime.
+//! * [`pruning`] — host-side DynaTran / top-k / magnitude pruning over f32
+//!   tensors for the Fig. 11–14 profiling curves and the Fig. 13
+//!   throughput comparison.
+//! * [`nlp`] — synthetic sentiment + span tasks standing in for SST-2 /
+//!   SQuAD (see DESIGN.md §Substitutions).
+//! * [`util`] — zero-dependency substrates (PRNG, JSON, CLI, property
+//!   testing, tables, bench timing) built from scratch for this image.
+
+pub mod coordinator;
+pub mod model;
+pub mod nlp;
+pub mod pruning;
+pub mod runtime;
+pub mod sim;
+pub mod util;
+
+/// Crate-wide result type.
+pub type Result<T> = anyhow::Result<T>;

@@ -1,0 +1,356 @@
+//! `acceltran` — CLI for the AccelTran reproduction.
+//!
+//! Subcommands:
+//!   ops       print the Table I op inventory for a model
+//!   memreq    Fig. 1 memory-requirement breakdown
+//!   config    show an accelerator preset (Table II) + Table III summary
+//!   simulate  cycle-accurate simulation of a model on a design point
+//!   sweep     design-space exploration (Fig. 16 stall surface)
+//!   dataflow  compare the 24 dataflows on a matmul (Fig. 15)
+//!   train     train the synthetic-sentiment model through the runtime
+//!   serve     batched serving demo over the runtime
+//!   eval      accuracy/sparsity sweep (Figs. 11/12)
+
+use acceltran::coordinator::{self, BatchServer};
+use acceltran::model::{memreq::MemReq, OpGraph, TransformerConfig};
+use acceltran::nlp::sentiment::SentimentTask;
+use acceltran::runtime::{ParamStore, Runtime};
+use acceltran::sim::engine::{simulate, SparsityProfile};
+use acceltran::sim::scheduler::Policy;
+use acceltran::sim::tech::AreaBreakdown;
+use acceltran::sim::{dataflow, tiling, AcceleratorConfig};
+use acceltran::util::cli::Args;
+use acceltran::util::table::{eng, Table};
+use anyhow::{anyhow, Result};
+
+fn main() {
+    let args = Args::from_env(true);
+    let result = match args.subcommand.as_deref() {
+        Some("ops") => cmd_ops(&args),
+        Some("memreq") => cmd_memreq(&args),
+        Some("config") => cmd_config(&args),
+        Some("simulate") => cmd_simulate(&args),
+        Some("sweep") => cmd_sweep(&args),
+        Some("dataflow") => cmd_dataflow(&args),
+        Some("train") => cmd_train(&args),
+        Some("serve") => cmd_serve(&args),
+        Some("eval") => cmd_eval(&args),
+        _ => {
+            print_usage();
+            Ok(())
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn print_usage() {
+    println!(
+        "acceltran — sparsity-aware transformer accelerator simulator\n\
+         \n\
+         usage: acceltran <subcommand> [--options]\n\
+         \n\
+         subcommands:\n\
+           ops       --model bert-tiny [--batch 1 --seq 128]\n\
+           memreq    --model bert-base [--weight-sparsity 0.5]\n\
+           config    --preset edge|server|edge-lp\n\
+           simulate  --preset edge --model bert-tiny [--seq 128]\n\
+                     [--act-sparsity 0.5 --weight-sparsity 0.5]\n\
+                     [--no-dynatran --no-sparsity-modules --policy equal]\n\
+           sweep     --model bert-tiny [--seq 128]\n\
+           dataflow  [--m 64 --k 64 --n 64 --lanes 4]\n\
+           train     [--steps 200 --lr 1e-3 --examples 4096 --save path]\n\
+           serve     [--requests 256 --tau 0.04]\n\
+           eval      [--taus 0,0.02,0.05 --examples 512 --params path]"
+    );
+}
+
+fn model_from(args: &Args) -> Result<TransformerConfig> {
+    let name = args.get_or("model", "bert-tiny");
+    TransformerConfig::preset(name)
+        .ok_or_else(|| anyhow!("unknown model '{name}' (bert-tiny|bert-mini|bert-base)"))
+}
+
+fn preset_from(args: &Args) -> Result<AcceleratorConfig> {
+    let name = args.get_or("preset", "edge");
+    AcceleratorConfig::preset(name)
+        .ok_or_else(|| anyhow!("unknown preset '{name}' (edge|server|edge-lp)"))
+}
+
+fn cmd_ops(args: &Args) -> Result<()> {
+    let model = model_from(args)?;
+    let batch = args.get_usize("batch", 1);
+    let seq = args.get_usize("seq", 128);
+    let g = OpGraph::build(&model, batch, seq);
+    g.validate().map_err(|e| anyhow!(e))?;
+    println!(
+        "{} @ batch={batch} seq={seq}: {} ops, {} dense MACs",
+        model.name,
+        g.nodes.len(),
+        eng(g.total_macs() as f64)
+    );
+    let mut t = Table::new(["op", "kind", "dims", "flops"]);
+    for n in g.nodes.iter().take(args.get_usize("limit", 30)) {
+        t.row([
+            n.label.clone(),
+            format!("{:?}", n.kind),
+            format!("{:?}", n.dims),
+            eng(n.dims.flops() as f64),
+        ]);
+    }
+    t.print();
+    Ok(())
+}
+
+fn cmd_memreq(args: &Args) -> Result<()> {
+    let model = model_from(args)?;
+    let ws = args.get_f64("weight-sparsity", 0.5);
+    let batch = args.get_usize("batch", 1);
+    let seq = args.get_usize("seq", model.seq);
+    let mr = MemReq::compute(&model, batch, seq, ws);
+    println!(
+        "{} @ batch={batch} seq={seq} weight-sparsity={ws}: act/weight ratio {:.2}x",
+        model.name,
+        mr.act_to_weight_ratio()
+    );
+    let mb = |b: f64| format!("{:.2}", b / (1 << 20) as f64);
+    let mut t = Table::new(["component", "MB"]);
+    t.row(["embeddings".to_string(), mb(mr.embedding_bytes)]);
+    t.row(["weights (compressed)".to_string(), mb(mr.weight_bytes)]);
+    t.row(["activations".to_string(), mb(mr.activation_bytes)]);
+    t.row(["main memory (emb+w)".to_string(), mb(mr.main_memory_bytes())]);
+    t.print();
+    Ok(())
+}
+
+fn cmd_config(args: &Args) -> Result<()> {
+    let cfg = preset_from(args)?;
+    let area = AreaBreakdown::compute(&cfg);
+    println!("{} (Table II / Table III):", cfg.name);
+    let mut t = Table::new(["parameter", "value"]);
+    t.row(["PEs".to_string(), cfg.pes.to_string()]);
+    t.row(["MAC lanes".to_string(), cfg.total_mac_lanes().to_string()]);
+    t.row(["softmax modules".to_string(), cfg.total_softmax().to_string()]);
+    t.row([
+        "layer-norm modules".to_string(),
+        cfg.total_layernorm().to_string(),
+    ]);
+    t.row(["batch".to_string(), cfg.batch.to_string()]);
+    t.row([
+        "memory".to_string(),
+        format!(
+            "{:?} ({} GB/s)",
+            cfg.memory,
+            cfg.memory.bandwidth_bytes_per_s() / 1e9
+        ),
+    ]);
+    t.row([
+        "buffers (act/w/mask MB)".to_string(),
+        format!(
+            "{}/{}/{}",
+            cfg.act_buffer_bytes >> 20,
+            cfg.weight_buffer_bytes >> 20,
+            cfg.mask_buffer_bytes >> 20
+        ),
+    ]);
+    t.row([
+        "peak TOP/s".to_string(),
+        format!("{:.2}", cfg.peak_ops_per_s() / 1e12),
+    ]);
+    t.row([
+        "compute area mm^2".to_string(),
+        format!("{:.2}", area.compute_mm2()),
+    ]);
+    t.print();
+    Ok(())
+}
+
+fn sparsity_from(args: &Args) -> SparsityProfile {
+    SparsityProfile {
+        weight_rho: args.get_f64("weight-sparsity", 0.5),
+        act_rho: args.get_f64("act-sparsity", 0.5),
+        inherent_act_rho: args.get_f64("inherent-sparsity", 0.1),
+    }
+}
+
+fn cmd_simulate(args: &Args) -> Result<()> {
+    let mut cfg = preset_from(args)?;
+    let model = model_from(args)?;
+    let seq = args.get_usize("seq", 128);
+    if args.has("no-dynatran") {
+        cfg.dynatran_enabled = false;
+    }
+    if args.has("no-sparsity-modules") {
+        cfg.sparsity_modules = false;
+    }
+    if let Some(df) = args.get("dataflow") {
+        cfg.dataflow = dataflow::Dataflow::parse(df)
+            .ok_or_else(|| anyhow!("bad dataflow '{df}'"))?;
+    }
+    if let Some(p) = args.get("pes") {
+        cfg.pes = p.parse()?;
+    }
+    let policy = if args.get_or("policy", "staggered") == "equal" {
+        Policy::EqualPriority
+    } else {
+        Policy::Staggered
+    };
+    let sp = sparsity_from(args);
+    let r = simulate(&cfg, &model, seq, policy, sp);
+    println!("{}", r.to_json(&cfg).to_string_pretty());
+    Ok(())
+}
+
+fn cmd_sweep(args: &Args) -> Result<()> {
+    let model = model_from(args)?;
+    let seq = args.get_usize("seq", 128);
+    let sp = sparsity_from(args);
+    let mut t = Table::new([
+        "PEs", "buffer MB", "compute stalls", "memory stalls", "cycles",
+    ]);
+    for &pes in &[32usize, 64, 128, 256] {
+        for &buf_mb in &[10usize, 13, 16] {
+            let mut cfg = AcceleratorConfig::edge();
+            cfg.pes = pes;
+            // 4:8:1 split of the net buffer (Sec. V-C)
+            let unit = (buf_mb << 20) / 13;
+            cfg.act_buffer_bytes = 4 * unit;
+            cfg.weight_buffer_bytes = 8 * unit;
+            cfg.mask_buffer_bytes = unit;
+            let r = simulate(&cfg, &model, seq, Policy::Staggered, sp);
+            t.row([
+                pes.to_string(),
+                buf_mb.to_string(),
+                eng(r.stalls.compute_total() as f64),
+                eng(r.stalls.memory_total() as f64),
+                eng(r.total_cycles as f64),
+            ]);
+        }
+    }
+    t.print();
+    Ok(())
+}
+
+fn cmd_dataflow(args: &Args) -> Result<()> {
+    let m = args.get_usize("m", 64);
+    let k = args.get_usize("k", 64);
+    let n = args.get_usize("n", 64);
+    let lanes = args.get_usize("lanes", 4);
+    let grid = tiling::tile_matmul(m, k, n, 1, 16, 16, 16);
+    let mut t = Table::new(["dataflow", "reuse instances", "dyn energy (nJ)"]);
+    for df in dataflow::Dataflow::all() {
+        let r = dataflow::replay(
+            df,
+            &grid,
+            lanes,
+            acceltran::sim::tech::BUFFER_PJ_PER_BYTE * acceltran::sim::tech::ELEM_BYTES,
+            acceltran::sim::tech::MAC_PJ,
+        );
+        t.row([
+            r.dataflow_name.clone(),
+            r.reuse_instances().to_string(),
+            format!("{:.2}", r.dynamic_energy_pj / 1e3),
+        ]);
+    }
+    t.print();
+    Ok(())
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let mut rt = Runtime::load_default()?;
+    let vocab = rt.manifest.vocab;
+    let seq = rt.manifest.seq;
+    let steps = args.get_usize("steps", 200);
+    let lr = args.get_f64("lr", 1e-3) as f32;
+    let n = args.get_usize("examples", 4096);
+    let task = SentimentTask::new(vocab, seq, args.get_u64("task-seed", 7));
+    let train_ds = task.dataset(n, 1);
+    let val_ds = task.dataset(512, 2);
+    let mut store = ParamStore::init(&rt.manifest, args.get_u64("seed", 0));
+    println!(
+        "training {} ({} params) on synthetic sentiment: {} examples, {} steps",
+        rt.manifest.model_name, rt.manifest.param_count, n, steps
+    );
+    let log = coordinator::train(
+        &mut rt, &mut store, &train_ds, Some(&val_ds), steps, lr, 50, true,
+    )?;
+    let (head, tail) = log.head_tail_means(10);
+    println!("loss: first-10 mean {head:.4} -> last-10 mean {tail:.4}");
+    if let Some(path) = args.get("save") {
+        store.save(path)?;
+        println!("saved params to {path}");
+    }
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let rt = Runtime::load_default()?;
+    let vocab = rt.manifest.vocab;
+    let seq = rt.manifest.seq;
+    let n = args.get_usize("requests", 256);
+    let tau = args.get_f64("tau", 0.04) as f32;
+    let params = match args.get("params") {
+        Some(p) => xla::Literal::vec1(&ParamStore::from_file(&rt.manifest, p)?.params),
+        None => ParamStore::init(&rt.manifest, 0).params_literal(),
+    };
+    let mut server = BatchServer::new(rt, params);
+    let task = SentimentTask::new(vocab, seq, 7);
+    let ds = task.dataset(n, 3);
+    let t0 = std::time::Instant::now();
+    let mut served = 0usize;
+    for ex in &ds.examples {
+        server.submit(ex.ids.clone(), tau);
+        served += server.step()?.len();
+    }
+    served += server.drain()?.len();
+    let dt = t0.elapsed();
+    let s = &server.stats;
+    println!(
+        "served {served} requests in {dt:?} ({:.1} req/s), {} dispatches, \
+         {} padded rows",
+        served as f64 / dt.as_secs_f64(),
+        s.dispatches,
+        s.padded_rows
+    );
+    println!(
+        "dispatch latency: mean {:?}  p50 {:?}  p99 {:?}",
+        s.mean_latency(),
+        s.latency_percentile(50.0),
+        s.latency_percentile(99.0)
+    );
+    Ok(())
+}
+
+fn cmd_eval(args: &Args) -> Result<()> {
+    let mut rt = Runtime::load_default()?;
+    let vocab = rt.manifest.vocab;
+    let seq = rt.manifest.seq;
+    let examples = args.get_usize("examples", 512);
+    let taus: Vec<f32> = args
+        .get_or("taus", "0,0.01,0.02,0.03,0.04,0.06,0.08,0.1")
+        .split(',')
+        .map(|s| s.trim().parse().unwrap())
+        .collect();
+    let params = match args.get("params") {
+        Some(p) => xla::Literal::vec1(&ParamStore::from_file(&rt.manifest, p)?.params),
+        None => {
+            println!("(untrained params — pass --params for a trained model)");
+            ParamStore::init(&rt.manifest, 0).params_literal()
+        }
+    };
+    let task = SentimentTask::new(vocab, seq, 7);
+    let ds = task.dataset(examples, 2);
+    let curve = coordinator::sweep_dynatran(&mut rt, &params, &ds, &taus, examples)?;
+    let mut t = Table::new(["tau", "act sparsity", "accuracy"]);
+    for p in &curve.points {
+        t.row([
+            format!("{:.3}", p.knob),
+            format!("{:.3}", p.activation_sparsity),
+            format!("{:.4}", p.accuracy),
+        ]);
+    }
+    t.print();
+    Ok(())
+}

@@ -1,0 +1,175 @@
+//! Transformer architecture configuration (paper Sec. II-A / IV-A).
+
+/// Shape of an encoder-only transformer, in the paper's notation:
+/// hidden dimension `h`, `l` encoder layers, `n` attention heads per
+/// layer, feed-forward dimension (4h for the BERT family), vocabulary and
+/// maximum sequence length.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct TransformerConfig {
+    pub name: String,
+    pub hidden: usize,
+    pub layers: usize,
+    pub heads: usize,
+    pub ff: usize,
+    pub vocab: usize,
+    pub seq: usize,
+}
+
+impl TransformerConfig {
+    /// BERT-Tiny (Turc et al.): h=128, 2 layers, 2 heads.  The paper's
+    /// edge-side evaluation model.
+    pub fn bert_tiny() -> Self {
+        TransformerConfig {
+            name: "bert-tiny".into(),
+            hidden: 128,
+            layers: 2,
+            heads: 2,
+            ff: 512,
+            vocab: 30_522,
+            seq: 512,
+        }
+    }
+
+    /// BERT-Mini: h=256, 4 layers, 4 heads (Fig. 13 second model).
+    pub fn bert_mini() -> Self {
+        TransformerConfig {
+            name: "bert-mini".into(),
+            hidden: 256,
+            layers: 4,
+            heads: 4,
+            ff: 1024,
+            vocab: 30_522,
+            seq: 512,
+        }
+    }
+
+    /// BERT-Base: h=768, 12 layers, 12 heads.  The paper's server-side
+    /// evaluation model.
+    pub fn bert_base() -> Self {
+        TransformerConfig {
+            name: "bert-base".into(),
+            hidden: 768,
+            layers: 12,
+            heads: 12,
+            ff: 3072,
+            vocab: 30_522,
+            seq: 512,
+        }
+    }
+
+    /// The synthetic-task model exported by `python/compile/aot.py`
+    /// (BERT-Tiny shape on the synthetic vocabulary; see DESIGN.md
+    /// §Substitutions).
+    pub fn bert_tiny_synth(vocab: usize, seq: usize) -> Self {
+        TransformerConfig {
+            name: "bert-tiny-synth".into(),
+            hidden: 128,
+            layers: 2,
+            heads: 2,
+            ff: 512,
+            vocab,
+            seq,
+        }
+    }
+
+    /// Look up a preset by name.
+    pub fn preset(name: &str) -> Option<Self> {
+        match name {
+            "bert-tiny" => Some(Self::bert_tiny()),
+            "bert-mini" => Some(Self::bert_mini()),
+            "bert-base" => Some(Self::bert_base()),
+            _ => None,
+        }
+    }
+
+    /// Per-head dimension h/n.
+    pub fn head_dim(&self) -> usize {
+        debug_assert_eq!(self.hidden % self.heads, 0);
+        self.hidden / self.heads
+    }
+
+    /// Weight parameters of one encoder layer (QKV + output projection +
+    /// FFN + layer-norm affine), the quantity Fig. 1 calls "weights".
+    pub fn layer_weight_params(&self) -> usize {
+        let h = self.hidden;
+        let attn = 4 * h * h + 4 * h; // wq,wk,wv,wo + biases
+        let ffn = 2 * h * self.ff + self.ff + h;
+        let ln = 4 * h; // two layer-norms, gamma+beta each
+        attn + ffn + ln
+    }
+
+    /// Total weight parameters across all encoder layers.
+    pub fn weight_params(&self) -> usize {
+        self.layers * self.layer_weight_params()
+    }
+
+    /// Word + position embedding parameters (M-OP-0 inputs).
+    pub fn embedding_params(&self) -> usize {
+        (self.vocab + self.seq) * self.hidden
+    }
+
+    /// Activation elements produced by one forward pass at batch size `b`
+    /// and sequence length `s` — every intermediate matrix of Table I
+    /// (the quantity that dominates Fig. 1's activation bars).
+    pub fn activation_elems(&self, batch: usize, seq: usize) -> usize {
+        let h = self.hidden;
+        let n = self.heads;
+        let per_layer =
+            // input H + Q,K,V + per-head scores A and probs S + P + MHA out
+            seq * h          // H entering the layer
+            + 3 * seq * h    // Q, K, V (all heads concatenated)
+            + 2 * n * seq * seq // A_i and S_i per head
+            + seq * h        // P (concat heads)
+            + seq * h        // H^MHA
+            + seq * h        // H^LN
+            + seq * self.ff  // H^F1
+            + seq * h        // H^F2
+            + seq * h; // H^O
+        batch * (self.layers * per_layer + seq * h) // + embedding output
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn presets_have_paper_shapes() {
+        let tiny = TransformerConfig::bert_tiny();
+        assert_eq!((tiny.hidden, tiny.layers, tiny.heads), (128, 2, 2));
+        let base = TransformerConfig::bert_base();
+        assert_eq!((base.hidden, base.layers, base.heads), (768, 12, 12));
+        assert_eq!(base.head_dim(), 64);
+    }
+
+    #[test]
+    fn preset_lookup() {
+        assert!(TransformerConfig::preset("bert-tiny").is_some());
+        assert!(TransformerConfig::preset("gpt-17t").is_none());
+    }
+
+    #[test]
+    fn bert_base_param_count_is_close_to_110m() {
+        // BERT-Base is famously ~110M parameters; embeddings + encoder
+        // weights here (no pooler) should land in [100M, 115M].
+        let base = TransformerConfig::bert_base();
+        let total = base.weight_params() + base.embedding_params();
+        assert!(
+            (100_000_000..115_000_000).contains(&total),
+            "got {total}"
+        );
+    }
+
+    #[test]
+    fn activation_to_weight_ratio_larger_for_tiny() {
+        // Fig. 1: activations/weights = 8.98x for BERT-Tiny vs 2.06x for
+        // BERT-Base — the ratio must be substantially larger for Tiny.
+        let tiny = TransformerConfig::bert_tiny();
+        let base = TransformerConfig::bert_base();
+        let r_tiny =
+            tiny.activation_elems(1, tiny.seq) as f64 / tiny.weight_params() as f64;
+        let r_base =
+            base.activation_elems(1, base.seq) as f64 / base.weight_params() as f64;
+        assert!(r_tiny > 2.0 * r_base, "tiny {r_tiny:.2} base {r_base:.2}");
+    }
+}

@@ -1,0 +1,11 @@
+//! Transformer architecture descriptions shared by the simulator and the
+//! functional runtime: configuration presets, the Table I memory/compute
+//! op inventory, Fig. 1 memory-requirement analytics, and the op-graph
+//! builder that the control block schedules.
+
+pub mod config;
+pub mod memreq;
+pub mod ops;
+
+pub use config::TransformerConfig;
+pub use ops::{OpGraph, OpKind, OpNode};

@@ -1,0 +1,76 @@
+//! Synthetic NLP tasks standing in for SST-2 and SQuAD-v2 (paper
+//! Sec. IV-A; DESIGN.md §Substitutions explains why the originals are
+//! gated behind proprietary-scale pretraining corpora).
+//!
+//! * [`sentiment`] — an SST-2-like binary sentiment task: sequences are
+//!   sampled from a lexicon whose tokens carry latent polarity weights;
+//!   the label is the sign of the (noisy) polarity sum.  Linear structure
+//!   plus token interactions make it learnable-but-not-trivial for a
+//!   BERT-Tiny-scale encoder, producing the accuracy-vs-sparsity curve
+//!   shapes of Figs. 11/12/14.
+//! * [`span`] — a SQuAD-like span task reduced to binary "does the
+//!   answer-marker span appear" detection, scored with F1 — enough to
+//!   exercise the second metric column of Fig. 14.
+
+pub mod sentiment;
+pub mod span;
+
+/// A tokenized example: fixed-length token ids + integer label.
+#[derive(Clone, Debug)]
+pub struct Example {
+    pub ids: Vec<i32>,
+    pub label: i32,
+}
+
+/// A dataset split.
+#[derive(Clone, Debug)]
+pub struct Dataset {
+    pub examples: Vec<Example>,
+    pub vocab: usize,
+    pub seq: usize,
+    pub classes: usize,
+}
+
+impl Dataset {
+    /// Iterate fixed-size batches (the trailing partial batch is padded
+    /// by repeating examples, matching the fixed-shape AOT artifacts).
+    pub fn batches(&self, batch: usize) -> Vec<(Vec<i32>, Vec<i32>)> {
+        assert!(batch > 0 && !self.examples.is_empty());
+        let mut out = Vec::new();
+        let mut i = 0;
+        while i < self.examples.len() {
+            let mut ids = Vec::with_capacity(batch * self.seq);
+            let mut labels = Vec::with_capacity(batch);
+            for b in 0..batch {
+                let ex = &self.examples[(i + b) % self.examples.len()];
+                ids.extend_from_slice(&ex.ids);
+                labels.push(ex.label);
+            }
+            out.push((ids, labels));
+            i += batch;
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn batches_pad_by_wrapping() {
+        let ds = Dataset {
+            examples: (0..5)
+                .map(|i| Example { ids: vec![i; 4], label: i })
+                .collect(),
+            vocab: 10,
+            seq: 4,
+            classes: 2,
+        };
+        let bs = ds.batches(2);
+        assert_eq!(bs.len(), 3);
+        let (ids, labels) = &bs[2];
+        assert_eq!(ids.len(), 8);
+        assert_eq!(labels, &vec![4, 0]); // wrapped
+    }
+}

@@ -1,0 +1,165 @@
+//! SST-2-like synthetic sentiment task.
+//!
+//! Generation model: tokens `[2, vocab)` carry polarity weights drawn
+//! from a sparse mixture (most tokens neutral, some strongly signed —
+//! mirroring sentiment lexica).  A sequence samples a topic-skewed bag of
+//! tokens; its label is `sign(sum of polarities + noise)`.  Token 0 is
+//! `[CLS]` (the classification position of the L2 model), token 1 is
+//! `[PAD]`.
+
+use super::{Dataset, Example};
+use crate::util::rng::Rng;
+
+pub const CLS: i32 = 0;
+pub const PAD: i32 = 1;
+
+/// Task generator parameters.
+#[derive(Clone, Debug)]
+pub struct SentimentTask {
+    pub vocab: usize,
+    pub seq: usize,
+    /// Fraction of lexicon tokens that are polar (non-neutral).
+    pub polar_fraction: f64,
+    /// Label-noise standard deviation on the polarity sum.
+    pub noise: f32,
+    /// Per-token polarity weights (index = token id).
+    polarity: Vec<f32>,
+}
+
+impl SentimentTask {
+    pub fn new(vocab: usize, seq: usize, seed: u64) -> SentimentTask {
+        let mut rng = Rng::new(seed);
+        let polar_fraction = 0.3;
+        let mut polarity = vec![0.0f32; vocab];
+        for p in polarity.iter_mut().skip(2) {
+            if rng.chance(polar_fraction) {
+                *p = rng.normal() * 1.0;
+            }
+        }
+        SentimentTask { vocab, seq, polar_fraction, noise: 0.5, polarity }
+    }
+
+    /// Sample one example.
+    pub fn sample(&self, rng: &mut Rng) -> Example {
+        let mut ids = Vec::with_capacity(self.seq);
+        ids.push(CLS);
+        // topic skew: bias token draws toward a per-sequence polarity
+        // direction so sequences are separable but overlapping.
+        let skew = rng.normal() * 0.8;
+        let mut polarity_sum = 0.0f32;
+        let content_len = 2 + rng.index(self.seq - 2);
+        for _ in 0..content_len.min(self.seq - 1) {
+            // rejection-sample a token leaning toward `skew`
+            let mut tok = 2 + rng.index(self.vocab - 2);
+            for _ in 0..3 {
+                let cand = 2 + rng.index(self.vocab - 2);
+                if (self.polarity[cand] - skew).abs()
+                    < (self.polarity[tok] - skew).abs()
+                {
+                    tok = cand;
+                }
+            }
+            polarity_sum += self.polarity[tok];
+            ids.push(tok as i32);
+        }
+        while ids.len() < self.seq {
+            ids.push(PAD);
+        }
+        let label = if polarity_sum + rng.normal() * self.noise > 0.0 {
+            1
+        } else {
+            0
+        };
+        Example { ids, label }
+    }
+
+    /// Generate a dataset split of `n` examples.
+    pub fn dataset(&self, n: usize, seed: u64) -> Dataset {
+        let mut rng = Rng::new(seed);
+        Dataset {
+            examples: (0..n).map(|_| self.sample(&mut rng)).collect(),
+            vocab: self.vocab,
+            seq: self.seq,
+            classes: 2,
+        }
+    }
+
+    /// Bayes-ish reference accuracy: classify by the true polarity sum
+    /// (no noise knowledge).  Upper-bounds what the model can reach.
+    pub fn lexicon_accuracy(&self, ds: &Dataset) -> f64 {
+        let mut correct = 0usize;
+        for ex in &ds.examples {
+            let sum: f32 = ex
+                .ids
+                .iter()
+                .filter(|&&t| t >= 2)
+                .map(|&t| self.polarity[t as usize])
+                .sum();
+            let pred = if sum > 0.0 { 1 } else { 0 };
+            if pred == ex.label {
+                correct += 1;
+            }
+        }
+        correct as f64 / ds.examples.len() as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn task() -> SentimentTask {
+        SentimentTask::new(1024, 64, 7)
+    }
+
+    #[test]
+    fn examples_are_well_formed() {
+        let ds = task().dataset(200, 1);
+        for ex in &ds.examples {
+            assert_eq!(ex.ids.len(), 64);
+            assert_eq!(ex.ids[0], CLS);
+            assert!(ex.ids.iter().all(|&t| (t as usize) < 1024));
+            assert!(ex.label == 0 || ex.label == 1);
+        }
+    }
+
+    #[test]
+    fn labels_are_balanced_ish() {
+        let ds = task().dataset(2000, 2);
+        let pos = ds.examples.iter().filter(|e| e.label == 1).count();
+        let frac = pos as f64 / 2000.0;
+        assert!((0.3..0.7).contains(&frac), "pos frac {frac}");
+    }
+
+    #[test]
+    fn task_is_learnable_by_lexicon() {
+        // the generating lexicon must beat chance by a wide margin,
+        // otherwise no model could learn it.
+        let t = task();
+        let ds = t.dataset(2000, 3);
+        let acc = t.lexicon_accuracy(&ds);
+        assert!(acc > 0.75, "lexicon accuracy {acc}");
+    }
+
+    #[test]
+    fn deterministic_given_seeds() {
+        let a = task().dataset(10, 9);
+        let b = task().dataset(10, 9);
+        for (x, y) in a.examples.iter().zip(&b.examples) {
+            assert_eq!(x.ids, y.ids);
+            assert_eq!(x.label, y.label);
+        }
+    }
+
+    #[test]
+    fn train_and_val_differ() {
+        let t = task();
+        let train = t.dataset(10, 1);
+        let val = t.dataset(10, 2);
+        assert!(train
+            .examples
+            .iter()
+            .zip(&val.examples)
+            .any(|(a, b)| a.ids != b.ids));
+    }
+}

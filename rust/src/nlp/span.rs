@@ -1,0 +1,127 @@
+//! SQuAD-v2-like synthetic span task, scored with F1 (Fig. 14(b) axis).
+//!
+//! Reduced formulation: a "question" token prefix asks about a marker
+//! token; the label is whether a valid answer span (marker followed by a
+//! content token within a window) appears in the "context" portion.
+//! Like SQuAD-v2, a substantial fraction of examples are unanswerable —
+//! so accuracy and F1 diverge and F1 is the meaningful metric.
+
+use super::{Dataset, Example};
+use crate::util::rng::Rng;
+
+pub const CLS: i32 = 0;
+pub const PAD: i32 = 1;
+/// Separator between question and context.
+pub const SEP: i32 = 2;
+
+#[derive(Clone, Debug)]
+pub struct SpanTask {
+    pub vocab: usize,
+    pub seq: usize,
+    /// Tokens `[3, 3+markers)` act as askable markers.
+    pub markers: usize,
+    /// Fraction of answerable examples.
+    pub answerable: f64,
+}
+
+impl SpanTask {
+    pub fn new(vocab: usize, seq: usize) -> SpanTask {
+        assert!(vocab > 64 && seq >= 16);
+        SpanTask { vocab, seq, markers: 16, answerable: 0.55 }
+    }
+
+    pub fn sample(&self, rng: &mut Rng) -> Example {
+        let marker = 3 + rng.index(self.markers) as i32;
+        let answerable = rng.chance(self.answerable);
+        let mut ids = vec![CLS, marker, SEP];
+        let content_start = ids.len();
+        while ids.len() < self.seq {
+            let tok = (3 + self.markers) as i32
+                + rng.index(self.vocab - 3 - self.markers) as i32;
+            ids.push(tok);
+        }
+        if answerable {
+            // plant the marker followed by a content token in the context
+            let pos = content_start + rng.index(self.seq - content_start - 1);
+            ids[pos] = marker;
+        } else {
+            // ensure the marker does NOT appear in the context
+            for t in ids.iter_mut().skip(content_start) {
+                if *t == marker {
+                    *t += 1;
+                }
+            }
+        }
+        Example { ids, label: answerable as i32 }
+    }
+
+    pub fn dataset(&self, n: usize, seed: u64) -> Dataset {
+        let mut rng = Rng::new(seed);
+        Dataset {
+            examples: (0..n).map(|_| self.sample(&mut rng)).collect(),
+            vocab: self.vocab,
+            seq: self.seq,
+            classes: 2,
+        }
+    }
+}
+
+/// Binary F1 with class 1 ("answerable") as the positive class.
+pub fn f1_score(predictions: &[i32], labels: &[i32]) -> f64 {
+    assert_eq!(predictions.len(), labels.len());
+    let mut tp = 0.0;
+    let mut fp = 0.0;
+    let mut fne = 0.0;
+    for (&p, &l) in predictions.iter().zip(labels) {
+        match (p, l) {
+            (1, 1) => tp += 1.0,
+            (1, 0) => fp += 1.0,
+            (0, 1) => fne += 1.0,
+            _ => {}
+        }
+    }
+    if tp == 0.0 {
+        return 0.0;
+    }
+    let precision = tp / (tp + fp);
+    let recall = tp / (tp + fne);
+    2.0 * precision * recall / (precision + recall)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn answerable_examples_contain_marker_in_context() {
+        let t = SpanTask::new(1024, 64);
+        let ds = t.dataset(500, 4);
+        for ex in &ds.examples {
+            let marker = ex.ids[1];
+            let in_context = ex.ids[3..].contains(&marker);
+            assert_eq!(in_context, ex.label == 1);
+        }
+    }
+
+    #[test]
+    fn f1_perfect_and_degenerate() {
+        assert_eq!(f1_score(&[1, 0, 1], &[1, 0, 1]), 1.0);
+        assert_eq!(f1_score(&[0, 0, 0], &[1, 1, 0]), 0.0);
+    }
+
+    #[test]
+    fn f1_balances_precision_recall() {
+        // 2 TP, 2 FP, 0 FN: precision .5, recall 1 -> F1 = 2/3
+        let f1 = f1_score(&[1, 1, 1, 1], &[1, 1, 0, 0]);
+        assert!((f1 - 2.0 / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn answerable_fraction_matches() {
+        let t = SpanTask::new(1024, 64);
+        let ds = t.dataset(2000, 5);
+        let frac = ds.examples.iter().filter(|e| e.label == 1).count() as f64
+            / 2000.0;
+        assert!((frac - t.answerable).abs() < 0.05, "frac {frac}");
+    }
+}

@@ -1,0 +1,120 @@
+//! Sparsity/accuracy profiling sweeps (Figs. 11 and 12 infrastructure).
+//!
+//! A sweep evaluates, per pruning hyper-parameter point (tau for
+//! DynaTran, k for top-k), the resulting *net activation sparsity* and a
+//! task metric (accuracy), producing the curves the DynaTran module's
+//! threshold calculator stores (Sec. III-B5) and the comparisons of
+//! Sec. V-A.
+
+use crate::util::json::Json;
+
+/// One point of a profiled curve.
+#[derive(Clone, Copy, Debug)]
+pub struct SweepPoint {
+    /// The pruning hyper-parameter (tau, or keep-fraction for top-k).
+    pub knob: f64,
+    pub activation_sparsity: f64,
+    pub accuracy: f64,
+}
+
+/// A labelled accuracy/sparsity curve.
+#[derive(Clone, Debug)]
+pub struct Curve {
+    pub label: String,
+    pub points: Vec<SweepPoint>,
+}
+
+impl Curve {
+    pub fn new(label: impl Into<String>) -> Curve {
+        Curve { label: label.into(), points: Vec::new() }
+    }
+
+    pub fn push(&mut self, knob: f64, activation_sparsity: f64, accuracy: f64) {
+        self.points.push(SweepPoint { knob, activation_sparsity, accuracy });
+    }
+
+    /// Maximum accuracy along the curve (Fig. 12 annotations).
+    pub fn max_accuracy(&self) -> f64 {
+        self.points.iter().map(|p| p.accuracy).fold(f64::MIN, f64::max)
+    }
+
+    /// Maximum sparsity achieved with accuracy within `tol` of the
+    /// curve's own maximum ("higher sparsity without much accuracy
+    /// loss", Sec. V-A1).
+    pub fn max_sparsity_within(&self, tol: f64) -> f64 {
+        let best = self.max_accuracy();
+        self.points
+            .iter()
+            .filter(|p| p.accuracy >= best - tol)
+            .map(|p| p.activation_sparsity)
+            .fold(0.0, f64::max)
+    }
+
+    /// Highest sparsity at which accuracy still reaches `floor` —
+    /// the "same accuracy, 1.17x–1.2x higher sparsity" comparison.
+    pub fn sparsity_at_accuracy(&self, floor: f64) -> Option<f64> {
+        self.points
+            .iter()
+            .filter(|p| p.accuracy >= floor)
+            .map(|p| p.activation_sparsity)
+            .fold(None, |acc, s| Some(acc.map_or(s, |a: f64| a.max(s))))
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("label", Json::str(self.label.clone())),
+            (
+                "points",
+                Json::arr(self.points.iter().map(|p| {
+                    Json::obj(vec![
+                        ("knob", Json::num(p.knob)),
+                        ("sparsity", Json::num(p.activation_sparsity)),
+                        ("accuracy", Json::num(p.accuracy)),
+                    ])
+                })),
+            ),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn curve() -> Curve {
+        let mut c = Curve::new("dynatran");
+        // typical shape: slight rise, plateau, cliff
+        c.push(0.00, 0.10, 0.880);
+        c.push(0.02, 0.30, 0.885);
+        c.push(0.04, 0.45, 0.884);
+        c.push(0.06, 0.55, 0.870);
+        c.push(0.08, 0.65, 0.700);
+        c
+    }
+
+    #[test]
+    fn max_accuracy_finds_bump() {
+        assert_eq!(curve().max_accuracy(), 0.885);
+    }
+
+    #[test]
+    fn max_sparsity_within_tolerance() {
+        let c = curve();
+        assert_eq!(c.max_sparsity_within(0.002), 0.45);
+        assert_eq!(c.max_sparsity_within(0.02), 0.55);
+    }
+
+    #[test]
+    fn sparsity_at_accuracy_floor() {
+        let c = curve();
+        assert_eq!(c.sparsity_at_accuracy(0.86), Some(0.55));
+        assert_eq!(c.sparsity_at_accuracy(0.95), None);
+    }
+
+    #[test]
+    fn json_roundtrip_fields() {
+        let j = curve().to_json();
+        assert_eq!(j.get("label").unwrap().as_str(), Some("dynatran"));
+        assert_eq!(j.get("points").unwrap().as_arr().unwrap().len(), 5);
+    }
+}

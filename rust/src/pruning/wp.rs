@@ -1,0 +1,82 @@
+//! Static weight pruning (paper Sec. V-A2): DynaTran's magnitude rule
+//! applied *once* to model weights before inference ("WP"), and the
+//! MP-like operating point (magnitude pruning to a target sparsity,
+//! standing in for movement pruning — see DESIGN.md §Substitutions).
+
+use crate::sim::dynatran;
+
+/// Prune a flat weight buffer at a fixed threshold (WP).  Returns the
+/// achieved weight sparsity.
+pub fn weight_prune_threshold(weights: &mut [f32], tau: f32) -> f64 {
+    dynatran::prune(weights, tau);
+    dynatran::sparsity(weights)
+}
+
+/// Prune a flat weight buffer to a *target* sparsity by choosing the
+/// magnitude quantile (the MP-like 50% operating point of Table IV).
+/// Returns the threshold used.
+pub fn weight_prune_to_sparsity(weights: &mut [f32], target_rho: f64) -> f32 {
+    assert!((0.0..1.0).contains(&target_rho));
+    if weights.is_empty() || target_rho == 0.0 {
+        return 0.0;
+    }
+    let mut mags: Vec<f32> = weights.iter().map(|w| w.abs()).collect();
+    mags.sort_unstable_by(|a, b| a.partial_cmp(b).unwrap());
+    let idx = ((mags.len() as f64 * target_rho) as usize).min(mags.len() - 1);
+    let tau = mags[idx];
+    dynatran::prune(weights, tau);
+    tau
+}
+
+/// Net sparsity over weights and activations combined, weighted by
+/// element counts (the x-axis of Fig. 14).
+pub fn net_sparsity(
+    weight_rho: f64,
+    weight_elems: usize,
+    act_rho: f64,
+    act_elems: usize,
+) -> f64 {
+    let total = (weight_elems + act_elems) as f64;
+    if total == 0.0 {
+        return 0.0;
+    }
+    (weight_rho * weight_elems as f64 + act_rho * act_elems as f64) / total
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn prune_to_sparsity_hits_target() {
+        let mut rng = Rng::new(5);
+        let mut w = rng.normal_vec(50_000, 0.5);
+        weight_prune_to_sparsity(&mut w, 0.5);
+        let rho = dynatran::sparsity(&w);
+        assert!((rho - 0.5).abs() < 0.01, "rho {rho}");
+    }
+
+    #[test]
+    fn threshold_prune_reports_sparsity() {
+        let mut w = vec![0.1, -0.9, 0.3, 0.0];
+        let rho = weight_prune_threshold(&mut w, 0.2);
+        assert_eq!(w, vec![0.0, -0.9, 0.3, 0.0]);
+        assert_eq!(rho, 0.5);
+    }
+
+    #[test]
+    fn net_sparsity_is_weighted_mean() {
+        // activations dominate (Fig. 1), so net sparsity tracks act_rho:
+        let net = net_sparsity(0.9, 100, 0.3, 900);
+        assert!((net - 0.36).abs() < 1e-9);
+    }
+
+    #[test]
+    fn net_sparsity_marginal_gain_from_wp() {
+        // Sec. V-A2: high activation:weight ratio => WP adds little.
+        let without_wp = net_sparsity(0.0, 100, 0.5, 900);
+        let with_wp = net_sparsity(0.6, 100, 0.5, 900);
+        assert!(with_wp - without_wp < 0.07);
+    }
+}

@@ -1,0 +1,405 @@
+//! Artifact manifest + compiled-executable registry.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::json::Json;
+
+/// One AOT artifact as described by `artifacts/manifest.json`.
+#[derive(Clone, Debug)]
+pub struct Artifact {
+    pub name: String,
+    pub file: String,
+    pub signature: String,
+    /// (shape, dtype) per argument; dtype is "float32" or "int32".
+    pub args: Vec<(Vec<usize>, String)>,
+}
+
+/// Model metadata + artifact index parsed from `manifest.json`.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub model_name: String,
+    pub vocab: usize,
+    pub seq: usize,
+    pub hidden: usize,
+    pub layers: usize,
+    pub heads: usize,
+    pub classes: usize,
+    pub param_count: usize,
+    /// (name, shape, init_std) in flat-buffer order; init_std < 0 means
+    /// init-to-one (layer-norm gains), 0 means zeros (biases).
+    pub param_specs: Vec<(String, Vec<usize>, f64)>,
+    pub artifacts: HashMap<String, Artifact>,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} — run `make artifacts`"))?;
+        let j = Json::parse(&text).map_err(|e| anyhow!("{path:?}: {e}"))?;
+        let model = j.get("model").ok_or_else(|| anyhow!("missing model"))?;
+        let get = |k: &str| -> Result<usize> {
+            model
+                .get(k)
+                .and_then(Json::as_usize)
+                .ok_or_else(|| anyhow!("manifest model.{k} missing"))
+        };
+        let mut param_specs = Vec::new();
+        for p in j
+            .get("params")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("missing params"))?
+        {
+            param_specs.push((
+                p.get("name")
+                    .and_then(Json::as_str)
+                    .ok_or_else(|| anyhow!("param name"))?
+                    .to_string(),
+                p.get("shape")
+                    .and_then(Json::as_usize_vec)
+                    .ok_or_else(|| anyhow!("param shape"))?,
+                p.get("init_std")
+                    .and_then(Json::as_f64)
+                    .ok_or_else(|| anyhow!("param init_std"))?,
+            ));
+        }
+        let mut artifacts = HashMap::new();
+        for (name, a) in j
+            .get("artifacts")
+            .and_then(Json::as_obj)
+            .ok_or_else(|| anyhow!("missing artifacts"))?
+        {
+            let args = a
+                .get("args")
+                .and_then(Json::as_arr)
+                .ok_or_else(|| anyhow!("artifact args"))?
+                .iter()
+                .map(|arg| -> Result<(Vec<usize>, String)> {
+                    Ok((
+                        arg.get("shape")
+                            .and_then(Json::as_usize_vec)
+                            .ok_or_else(|| anyhow!("arg shape"))?,
+                        arg.get("dtype")
+                            .and_then(Json::as_str)
+                            .ok_or_else(|| anyhow!("arg dtype"))?
+                            .to_string(),
+                    ))
+                })
+                .collect::<Result<Vec<_>>>()?;
+            artifacts.insert(
+                name.clone(),
+                Artifact {
+                    name: name.clone(),
+                    file: a
+                        .get("file")
+                        .and_then(Json::as_str)
+                        .ok_or_else(|| anyhow!("artifact file"))?
+                        .to_string(),
+                    signature: a
+                        .get("signature")
+                        .and_then(Json::as_str)
+                        .unwrap_or("")
+                        .to_string(),
+                    args,
+                },
+            );
+        }
+        Ok(Manifest {
+            dir,
+            model_name: model
+                .get("name")
+                .and_then(Json::as_str)
+                .unwrap_or("?")
+                .to_string(),
+            vocab: get("vocab")?,
+            seq: get("seq")?,
+            hidden: get("hidden")?,
+            layers: get("layers")?,
+            heads: get("heads")?,
+            classes: get("classes")?,
+            param_count: get("param_count")?,
+            param_specs,
+            artifacts,
+        })
+    }
+
+    /// Default artifact directory: `$ACCELTRAN_ARTIFACTS` or
+    /// `<crate>/artifacts`.
+    pub fn default_dir() -> PathBuf {
+        std::env::var_os("ACCELTRAN_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|| {
+                PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+            })
+    }
+}
+
+/// The PJRT runtime: one CPU client + lazily compiled executables.
+pub struct Runtime {
+    pub client: xla::PjRtClient,
+    pub manifest: Manifest,
+    compiled: HashMap<String, xla::PjRtLoadedExecutable>,
+}
+
+impl Runtime {
+    /// Create a runtime over the default artifact directory.
+    pub fn load_default() -> Result<Runtime> {
+        Self::load(Manifest::default_dir())
+    }
+
+    pub fn load(dir: impl AsRef<Path>) -> Result<Runtime> {
+        let manifest = Manifest::load(dir)?;
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| anyhow!("PJRT CPU client: {e:?}"))?;
+        Ok(Runtime { client, manifest, compiled: HashMap::new() })
+    }
+
+    /// Compile (once) and return the executable for `name`.
+    ///
+    /// HLO *text* is the interchange format: jax >= 0.5 serialized protos
+    /// carry 64-bit instruction ids that xla_extension 0.5.1 rejects; the
+    /// text parser reassigns ids (see python/compile/aot.py).
+    pub fn executable(&mut self, name: &str) -> Result<&xla::PjRtLoadedExecutable> {
+        if !self.compiled.contains_key(name) {
+            let art = self
+                .manifest
+                .artifacts
+                .get(name)
+                .ok_or_else(|| anyhow!("unknown artifact '{name}'"))?;
+            let path = self.manifest.dir.join(&art.file);
+            let path_str = path
+                .to_str()
+                .ok_or_else(|| anyhow!("non-utf8 path {path:?}"))?;
+            let proto = xla::HloModuleProto::from_text_file(path_str)
+                .map_err(|e| anyhow!("parsing {path:?}: {e:?}"))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .map_err(|e| anyhow!("compiling {name}: {e:?}"))?;
+            self.compiled.insert(name.to_string(), exe);
+        }
+        Ok(&self.compiled[name])
+    }
+
+    /// Execute artifact `name` on literal inputs; returns the tuple
+    /// elements as literals (lowering always uses return_tuple=True).
+    pub fn execute(&mut self, name: &str, args: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let expected = self
+            .manifest
+            .artifacts
+            .get(name)
+            .map(|a| a.args.len())
+            .unwrap_or(0);
+        if expected != args.len() {
+            bail!(
+                "artifact '{name}' expects {expected} args, got {}",
+                args.len()
+            );
+        }
+        let exe = self.executable(name)?;
+        let result = exe
+            .execute::<xla::Literal>(args)
+            .map_err(|e| anyhow!("executing {name}: {e:?}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetching {name} result: {e:?}"))?;
+        result
+            .to_tuple()
+            .map_err(|e| anyhow!("untupling {name} result: {e:?}"))
+    }
+
+    // ---- typed convenience wrappers ------------------------------------
+
+    /// `classify_b{B}`: logits for a batch of token ids at DynaTran
+    /// threshold `tau`.  `ids` is row-major `[batch * seq]`.
+    pub fn classify(
+        &mut self,
+        batch: usize,
+        params: &xla::Literal,
+        ids: &[i32],
+        tau: f32,
+    ) -> Result<Vec<f32>> {
+        let seq = self.manifest.seq;
+        if ids.len() != batch * seq {
+            bail!("ids length {} != batch {batch} * seq {seq}", ids.len());
+        }
+        let name = format!("classify_b{batch}");
+        let ids_lit = xla::Literal::vec1(ids)
+            .reshape(&[batch as i64, seq as i64])
+            .map_err(|e| anyhow!("reshape ids: {e:?}"))?;
+        let tau_lit = xla::Literal::scalar(tau);
+        let out = self.execute(&name, &[params.clone(), ids_lit, tau_lit])?;
+        out[0]
+            .to_vec::<f32>()
+            .map_err(|e| anyhow!("logits to_vec: {e:?}"))
+    }
+
+    /// `classify_topk_b32`: logits under top-k pruning at `keep_frac`.
+    pub fn classify_topk(
+        &mut self,
+        params: &xla::Literal,
+        ids: &[i32],
+        keep_frac: f32,
+    ) -> Result<Vec<f32>> {
+        let seq = self.manifest.seq;
+        let batch = ids.len() / seq;
+        let ids_lit = xla::Literal::vec1(ids)
+            .reshape(&[batch as i64, seq as i64])
+            .map_err(|e| anyhow!("reshape ids: {e:?}"))?;
+        let out = self.execute(
+            "classify_topk_b32",
+            &[params.clone(), ids_lit, xla::Literal::scalar(keep_frac)],
+        )?;
+        out[0]
+            .to_vec::<f32>()
+            .map_err(|e| anyhow!("logits to_vec: {e:?}"))
+    }
+
+    /// `act_sparsity_b8`: mean post-DynaTran activation sparsity at tau.
+    pub fn activation_sparsity(
+        &mut self,
+        params: &xla::Literal,
+        ids: &[i32],
+        tau: f32,
+    ) -> Result<f32> {
+        let seq = self.manifest.seq;
+        let ids_lit = xla::Literal::vec1(ids)
+            .reshape(&[(ids.len() / seq) as i64, seq as i64])
+            .map_err(|e| anyhow!("reshape ids: {e:?}"))?;
+        let out = self.execute(
+            "act_sparsity_b8",
+            &[params.clone(), ids_lit, xla::Literal::scalar(tau)],
+        )?;
+        out[0]
+            .to_vec::<f32>()
+            .map_err(|e| anyhow!("sparsity to_vec: {e:?}"))?
+            .first()
+            .copied()
+            .ok_or_else(|| anyhow!("empty sparsity result"))
+    }
+
+    /// `train_step_b32`: one AdamW step.  Returns
+    /// `(params', m', v', loss)` as literals (params stay as literals so
+    /// the training loop avoids host round-trips of the full buffer).
+    #[allow(clippy::too_many_arguments)]
+    pub fn train_step(
+        &mut self,
+        params: xla::Literal,
+        m: xla::Literal,
+        v: xla::Literal,
+        step: f32,
+        ids: &[i32],
+        labels: &[i32],
+        lr: f32,
+    ) -> Result<(xla::Literal, xla::Literal, xla::Literal, f32)> {
+        let seq = self.manifest.seq;
+        let batch = labels.len();
+        if ids.len() != batch * seq {
+            bail!("ids length {} != batch {batch} * seq {seq}", ids.len());
+        }
+        let ids_lit = xla::Literal::vec1(ids)
+            .reshape(&[batch as i64, seq as i64])
+            .map_err(|e| anyhow!("reshape ids: {e:?}"))?;
+        let labels_lit = xla::Literal::vec1(labels);
+        let mut out = self.execute(
+            "train_step_b32",
+            &[
+                params,
+                m,
+                v,
+                xla::Literal::scalar(step),
+                ids_lit,
+                labels_lit,
+                xla::Literal::scalar(lr),
+            ],
+        )?;
+        if out.len() != 4 {
+            bail!("train_step returned {} outputs, want 4", out.len());
+        }
+        let loss = out[3]
+            .to_vec::<f32>()
+            .map_err(|e| anyhow!("loss to_vec: {e:?}"))?[0];
+        let v2 = out.remove(2);
+        let m2 = out.remove(1);
+        let p2 = out.remove(0);
+        Ok((p2, m2, v2, loss))
+    }
+
+    /// `dynatran_prune_256x256`: the standalone L1 Pallas kernel.
+    pub fn dynatran_prune(
+        &mut self,
+        x: &[f32],
+        tau: f32,
+    ) -> Result<(Vec<f32>, Vec<f32>)> {
+        if x.len() != 256 * 256 {
+            bail!("prune artifact is fixed at 256x256");
+        }
+        let x_lit = xla::Literal::vec1(x)
+            .reshape(&[256, 256])
+            .map_err(|e| anyhow!("reshape x: {e:?}"))?;
+        let out = self.execute(
+            "dynatran_prune_256x256",
+            &[x_lit, xla::Literal::scalar(tau)],
+        )?;
+        let pruned = out[0]
+            .to_vec::<f32>()
+            .map_err(|e| anyhow!("pruned to_vec: {e:?}"))?;
+        let mask = out[1]
+            .to_vec::<f32>()
+            .map_err(|e| anyhow!("mask to_vec: {e:?}"))?;
+        Ok((pruned, mask))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Full integration tests (needing artifacts/) live in
+    // rust/tests/runtime_integration.rs; here we test manifest parsing
+    // against a synthetic manifest.
+
+    #[test]
+    fn parses_synthetic_manifest() {
+        let dir = std::env::temp_dir().join(format!(
+            "acceltran_manifest_test_{}",
+            std::process::id()
+        ));
+        std::fs::create_dir_all(&dir).unwrap();
+        let manifest = r#"{
+          "model": {"name": "m", "vocab": 16, "seq": 4, "hidden": 8,
+                    "layers": 1, "heads": 2, "ff": 16, "classes": 2,
+                    "param_count": 100},
+          "params": [{"name": "embed.word", "shape": [16, 8],
+                      "init_std": 0.02}],
+          "artifacts": {"classify_b1": {"file": "classify_b1.hlo.txt",
+             "signature": "sig",
+             "args": [{"shape": [100], "dtype": "float32"},
+                      {"shape": [1, 4], "dtype": "int32"},
+                      {"shape": [], "dtype": "float32"}],
+             "hlo_bytes": 3}}
+        }"#;
+        std::fs::write(dir.join("manifest.json"), manifest).unwrap();
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.param_count, 100);
+        assert_eq!(m.vocab, 16);
+        assert_eq!(m.param_specs.len(), 1);
+        let a = &m.artifacts["classify_b1"];
+        assert_eq!(a.args.len(), 3);
+        assert_eq!(a.args[1].0, vec![1, 4]);
+        assert_eq!(a.args[1].1, "int32");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn missing_manifest_is_a_clear_error() {
+        let err = Manifest::load("/nonexistent/dir").unwrap_err();
+        assert!(err.to_string().contains("make artifacts"));
+    }
+}

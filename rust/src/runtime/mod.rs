@@ -1,0 +1,15 @@
+//! PJRT runtime: loads the AOT-compiled HLO text artifacts produced by
+//! `python/compile/aot.py` and executes them on the CPU PJRT client.
+//!
+//! This is the *functional* half of the stack (the simulator is the
+//! timing half): classification forward passes (with the DynaTran tau or
+//! top-k keep-fraction as runtime scalars), activation-sparsity probes,
+//! AdamW training steps, and the standalone Pallas DynaTran kernel.
+//! Python never runs here — artifacts are compiled once at build time
+//! (`make artifacts`) and this module is pure Rust + PJRT.
+
+pub mod artifacts;
+pub mod params;
+
+pub use artifacts::{Artifact, Manifest, Runtime};
+pub use params::ParamStore;

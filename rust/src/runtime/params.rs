@@ -1,0 +1,201 @@
+//! Flat-parameter ownership: initialization, optimizer state, and
+//! persistence for the model parameters the Rust coordinator feeds the
+//! AOT artifacts.
+//!
+//! The layout contract comes from `manifest.json` (`param_specs`):
+//! parameters are concatenated in spec order into one f32 vector; specs
+//! with `init_std > 0` draw `N(0, std^2)`, `init_std == 0` are zeros
+//! (biases), `init_std < 0` are ones (layer-norm gains).  Matches
+//! `python/compile/model.py::init_params` semantics (not bit-for-bit —
+//! the RNGs differ — but distributionally, which is all training needs).
+
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use super::artifacts::Manifest;
+use crate::util::rng::Rng;
+
+/// Owned model parameters + AdamW state.
+pub struct ParamStore {
+    pub params: Vec<f32>,
+    pub m: Vec<f32>,
+    pub v: Vec<f32>,
+    pub step: f32,
+}
+
+impl ParamStore {
+    /// Initialize from manifest specs with the given seed.
+    pub fn init(manifest: &Manifest, seed: u64) -> ParamStore {
+        let mut rng = Rng::new(seed);
+        let mut params = Vec::with_capacity(manifest.param_count);
+        for (_name, shape, init_std) in &manifest.param_specs {
+            let n: usize = shape.iter().product();
+            if *init_std < 0.0 {
+                params.extend(std::iter::repeat_n(1.0f32, n));
+            } else if *init_std == 0.0 {
+                params.extend(std::iter::repeat_n(0.0f32, n));
+            } else {
+                params.extend(rng.normal_vec(n, *init_std as f32));
+            }
+        }
+        assert_eq!(
+            params.len(),
+            manifest.param_count,
+            "spec layout disagrees with param_count"
+        );
+        let zeros = vec![0.0f32; params.len()];
+        ParamStore { params, m: zeros.clone(), v: zeros, step: 0.0 }
+    }
+
+    /// Load raw little-endian f32 params from disk (e.g. a golden file or
+    /// a previously saved checkpoint).
+    pub fn from_file(manifest: &Manifest, path: impl AsRef<Path>) -> Result<ParamStore> {
+        let params = read_f32(path.as_ref())?;
+        if params.len() != manifest.param_count {
+            bail!(
+                "param file has {} f32s, manifest wants {}",
+                params.len(),
+                manifest.param_count
+            );
+        }
+        let zeros = vec![0.0f32; params.len()];
+        Ok(ParamStore { params, m: zeros.clone(), v: zeros, step: 0.0 })
+    }
+
+    /// Save params as raw little-endian f32.
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
+        write_f32(path.as_ref(), &self.params)
+    }
+
+    /// Params as an XLA literal (1-D f32).
+    pub fn params_literal(&self) -> xla::Literal {
+        xla::Literal::vec1(&self.params)
+    }
+
+    pub fn m_literal(&self) -> xla::Literal {
+        xla::Literal::vec1(&self.m)
+    }
+
+    pub fn v_literal(&self) -> xla::Literal {
+        xla::Literal::vec1(&self.v)
+    }
+
+    /// Absorb the literals returned by a train step.
+    pub fn absorb(
+        &mut self,
+        p: &xla::Literal,
+        m: &xla::Literal,
+        v: &xla::Literal,
+    ) -> Result<()> {
+        self.params = p
+            .to_vec::<f32>()
+            .map_err(|e| anyhow!("params to_vec: {e:?}"))?;
+        self.m = m.to_vec::<f32>().map_err(|e| anyhow!("m to_vec: {e:?}"))?;
+        self.v = v.to_vec::<f32>().map_err(|e| anyhow!("v to_vec: {e:?}"))?;
+        self.step += 1.0;
+        Ok(())
+    }
+}
+
+/// Read a raw little-endian f32 binary file.
+pub fn read_f32(path: &Path) -> Result<Vec<f32>> {
+    let bytes = std::fs::read(path).with_context(|| format!("reading {path:?}"))?;
+    if bytes.len() % 4 != 0 {
+        bail!("{path:?}: length {} not a multiple of 4", bytes.len());
+    }
+    Ok(bytes
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect())
+}
+
+/// Read a raw little-endian i32 binary file.
+pub fn read_i32(path: &Path) -> Result<Vec<i32>> {
+    let bytes = std::fs::read(path).with_context(|| format!("reading {path:?}"))?;
+    if bytes.len() % 4 != 0 {
+        bail!("{path:?}: length {} not a multiple of 4", bytes.len());
+    }
+    Ok(bytes
+        .chunks_exact(4)
+        .map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect())
+}
+
+/// Write raw little-endian f32.
+pub fn write_f32(path: &Path, data: &[f32]) -> Result<()> {
+    let mut bytes = Vec::with_capacity(data.len() * 4);
+    for v in data {
+        bytes.extend_from_slice(&v.to_le_bytes());
+    }
+    std::fs::write(path, bytes).with_context(|| format!("writing {path:?}"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fake_manifest() -> Manifest {
+        Manifest {
+            dir: std::path::PathBuf::from("."),
+            model_name: "m".into(),
+            vocab: 4,
+            seq: 2,
+            hidden: 2,
+            layers: 1,
+            heads: 1,
+            classes: 2,
+            param_count: 4 * 2 + 2 + 2,
+            param_specs: vec![
+                ("embed".into(), vec![4, 2], 0.02),
+                ("gamma".into(), vec![2], -1.0),
+                ("bias".into(), vec![2], 0.0),
+            ],
+            artifacts: Default::default(),
+        }
+    }
+
+    #[test]
+    fn init_respects_spec_kinds() {
+        let ps = ParamStore::init(&fake_manifest(), 1);
+        assert_eq!(ps.params.len(), 12);
+        // embed: normal(0, .02) -> nonzero, small
+        assert!(ps.params[..8].iter().any(|&v| v != 0.0));
+        assert!(ps.params[..8].iter().all(|&v| v.abs() < 0.2));
+        // gamma: ones
+        assert_eq!(&ps.params[8..10], &[1.0, 1.0]);
+        // bias: zeros
+        assert_eq!(&ps.params[10..12], &[0.0, 0.0]);
+        assert!(ps.m.iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn init_is_seed_deterministic() {
+        let a = ParamStore::init(&fake_manifest(), 7);
+        let b = ParamStore::init(&fake_manifest(), 7);
+        let c = ParamStore::init(&fake_manifest(), 8);
+        assert_eq!(a.params, b.params);
+        assert_ne!(a.params, c.params);
+    }
+
+    #[test]
+    fn save_load_roundtrip() {
+        let dir = std::env::temp_dir();
+        let path = dir.join(format!("acceltran_params_{}.bin", std::process::id()));
+        let manifest = fake_manifest();
+        let ps = ParamStore::init(&manifest, 3);
+        ps.save(&path).unwrap();
+        let loaded = ParamStore::from_file(&manifest, &path).unwrap();
+        assert_eq!(ps.params, loaded.params);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn wrong_size_file_rejected() {
+        let dir = std::env::temp_dir();
+        let path = dir.join(format!("acceltran_bad_{}.bin", std::process::id()));
+        std::fs::write(&path, [0u8; 8]).unwrap();
+        assert!(ParamStore::from_file(&fake_manifest(), &path).is_err());
+        std::fs::remove_file(&path).ok();
+    }
+}

@@ -1,0 +1,165 @@
+//! Baseline platform models for the Fig. 20 comparison.
+//!
+//! The paper evaluates AccelTran against off-the-shelf devices (Raspberry
+//! Pi 4B, Intel NCS2, Apple M1 CPU/GPU for edge; NVIDIA A100 for server)
+//! and prior accelerators (OPTIMUS, SpAtten, Energon), normalizing
+//! throughput/energy to 14nm via scaling equations.  We cannot run those
+//! testbeds, so each baseline is an *analytic platform model*: absolute
+//! throughput/energy estimates assembled from public benchmark data,
+//! normalized to 14nm with [`super::tech::scale_to_14nm`], with the
+//! paper's own reported relative factors carried alongside so the bench
+//! prints paper-vs-measured factors side by side (DESIGN.md
+//! §Substitutions).
+
+use super::tech::scale_to_14nm;
+
+/// One baseline platform at a given workload.
+#[derive(Clone, Debug)]
+pub struct Baseline {
+    pub name: &'static str,
+    /// Sequences per second on the workload (at the platform's native
+    /// node, before normalization).
+    pub throughput_seq_s: f64,
+    /// Millijoules per sequence (native node).
+    pub energy_mj_per_seq: f64,
+    /// Process node in nm (for 14nm normalization).
+    pub node_nm: f64,
+    /// The paper's reported factor: AccelTran throughput / this platform
+    /// (NaN where the paper gives no number — read from Fig. 20's log
+    /// axes, so order-of-magnitude).
+    pub paper_throughput_factor: f64,
+    /// The paper's reported energy factor (platform / AccelTran).
+    pub paper_energy_factor: f64,
+}
+
+impl Baseline {
+    /// Throughput normalized to 14nm (inverter-delay proxy, Sec. IV-C).
+    pub fn norm_throughput(&self) -> f64 {
+        let (delay, _) = scale_to_14nm(self.node_nm);
+        self.throughput_seq_s * delay
+    }
+
+    /// Energy normalized to 14nm.
+    pub fn norm_energy_mj(&self) -> f64 {
+        let (_, energy) = scale_to_14nm(self.node_nm);
+        self.energy_mj_per_seq / energy
+    }
+}
+
+/// Edge-side baselines: BERT-Tiny inference (paper Fig. 20(a)).
+/// Absolute estimates: RPi 4B from ARM PyTorch fp16 runs of tiny
+/// transformers (~2 seq/s at seq 128, ~5 W); NCS2 from OpenVINO NPU
+/// numbers; M1 from TensorFlow-metal.  Paper factors: RPi quoted in the
+/// text (330,578x / 93,300x); the others read from Fig. 20(a)'s log axes.
+pub fn edge_baselines() -> Vec<Baseline> {
+    vec![
+        Baseline {
+            name: "Raspberry Pi 4B",
+            throughput_seq_s: 2.0,
+            energy_mj_per_seq: 2500.0,
+            node_nm: 28.0,
+            paper_throughput_factor: 330_578.0,
+            paper_energy_factor: 93_300.0,
+        },
+        Baseline {
+            name: "Intel NCS v2",
+            throughput_seq_s: 25.0,
+            energy_mj_per_seq: 60.0,
+            node_nm: 16.0,
+            paper_throughput_factor: 40_000.0,
+            paper_energy_factor: 20_000.0,
+        },
+        Baseline {
+            name: "Apple M1 CPU",
+            throughput_seq_s: 120.0,
+            energy_mj_per_seq: 120.0,
+            node_nm: 5.0,
+            paper_throughput_factor: 16_000.0,
+            paper_energy_factor: 8_000.0,
+        },
+        Baseline {
+            name: "Apple M1 GPU",
+            throughput_seq_s: 350.0,
+            energy_mj_per_seq: 30.0,
+            node_nm: 5.0,
+            paper_throughput_factor: 5_000.0,
+            paper_energy_factor: 3_000.0,
+        },
+    ]
+}
+
+/// Server-side baselines: BERT-Base inference (paper Fig. 20(b)).
+/// A100 absolutes from public BERT-Base fp16 throughput at batch 32 /
+/// seq 128 on its native 7nm node.  The prior accelerators publish
+/// numbers the paper itself re-normalized to 14nm relative to the A100,
+/// so their entries here carry *already-normalized* absolutes
+/// (node_nm = 14): OPTIMUS / SpAtten / Energon placed at the paper's
+/// relative positions below AccelTran-Server.
+pub fn server_baselines() -> Vec<Baseline> {
+    vec![
+        Baseline {
+            name: "NVIDIA A100",
+            throughput_seq_s: 2_000.0,
+            energy_mj_per_seq: 200.0,
+            node_nm: 7.0,
+            paper_throughput_factor: 63.0,
+            paper_energy_factor: 10_805.0,
+        },
+        Baseline {
+            name: "OPTIMUS",
+            throughput_seq_s: 3_000.0,
+            energy_mj_per_seq: 25.0,
+            node_nm: 14.0,
+            paper_throughput_factor: 25.0,
+            paper_energy_factor: 50.0,
+        },
+        Baseline {
+            name: "SpAtten",
+            throughput_seq_s: 6_000.0,
+            energy_mj_per_seq: 12.0,
+            node_nm: 14.0,
+            paper_throughput_factor: 10.0,
+            paper_energy_factor: 12.0,
+        },
+        Baseline {
+            name: "Energon",
+            throughput_seq_s: 9_000.0,
+            energy_mj_per_seq: 7.0,
+            node_nm: 14.0,
+            paper_throughput_factor: 5.73,
+            paper_energy_factor: 3.69,
+        },
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn normalization_moves_in_the_right_direction() {
+        // a 28nm platform gets *faster* when normalized to 14nm
+        let rpi = &edge_baselines()[0];
+        assert!(rpi.norm_throughput() > rpi.throughput_seq_s);
+        assert!(rpi.norm_energy_mj() < rpi.energy_mj_per_seq);
+        // a 5nm platform gets slower/hungrier at 14nm
+        let m1 = &edge_baselines()[2];
+        assert!(m1.norm_throughput() < m1.throughput_seq_s);
+        assert!(m1.norm_energy_mj() > m1.energy_mj_per_seq);
+    }
+
+    #[test]
+    fn baseline_ordering_matches_fig20() {
+        // edge: RPi slowest, M1 GPU fastest among baselines
+        let edge = edge_baselines();
+        assert!(edge[0].throughput_seq_s < edge[3].throughput_seq_s);
+        // server: Energon is the strongest prior accelerator
+        let server = server_baselines();
+        let energon = server.iter().find(|b| b.name == "Energon").unwrap();
+        for b in &server {
+            assert!(b.throughput_seq_s <= energon.throughput_seq_s);
+        }
+        // paper factors: Energon is the closest competitor
+        assert!(energon.paper_throughput_factor < 10.0);
+    }
+}

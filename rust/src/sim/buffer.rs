@@ -1,0 +1,219 @@
+//! On-chip buffers (activation, weight, mask) with occupancy tracking,
+//! reference-counted residency, and eviction (paper Sec. III-B2/8).
+//!
+//! The control block loads a matrix's tiles into a buffer before compute
+//! ops consume them; data stays resident until its last consumer
+//! finishes, then becomes evictable.  A *memory stall* occurs when a load
+//! wants space and nothing is evictable (Sec. III-B8); the engine counts
+//! those via [`Buffer::reserve`] failures.
+
+use std::collections::HashMap;
+
+/// Identifies a resident allocation (one matrix / tensor).
+pub type AllocId = usize;
+
+/// One on-chip buffer.
+#[derive(Debug)]
+pub struct Buffer {
+    pub name: &'static str,
+    pub capacity_bytes: usize,
+    used_bytes: usize,
+    /// Live allocations: id -> (bytes, consumers remaining, evictable).
+    allocs: HashMap<AllocId, Alloc>,
+    /// Peak occupancy observed (for Fig. 17(c)).
+    pub peak_bytes: usize,
+    /// Total bytes ever written / read (for energy accounting).
+    pub bytes_written: u64,
+    pub bytes_read: u64,
+    /// Eviction events (buffer-usage "drops" in Fig. 17(c)).
+    pub evictions: u64,
+}
+
+#[derive(Debug)]
+struct Alloc {
+    bytes: usize,
+    consumers: usize,
+    evictable: bool,
+}
+
+impl Buffer {
+    pub fn new(name: &'static str, capacity_bytes: usize) -> Buffer {
+        Buffer {
+            name,
+            capacity_bytes,
+            used_bytes: 0,
+            allocs: HashMap::new(),
+            peak_bytes: 0,
+            bytes_written: 0,
+            bytes_read: 0,
+            evictions: 0,
+        }
+    }
+
+    pub fn used_bytes(&self) -> usize {
+        self.used_bytes
+    }
+
+    pub fn free_bytes(&self) -> usize {
+        self.capacity_bytes - self.used_bytes
+    }
+
+    pub fn occupancy(&self) -> f64 {
+        self.used_bytes as f64 / self.capacity_bytes as f64
+    }
+
+    /// Try to reserve `bytes` for allocation `id` with `consumers`
+    /// downstream readers.  Idempotent: re-reserving a live id succeeds
+    /// without double-counting (ops retry reservations after stalls).
+    /// Evicts evictable allocations (LRU-free order is immaterial at
+    /// this granularity) until it fits.  Returns false — a memory stall —
+    /// if even after eviction there is no room.
+    pub fn reserve(&mut self, id: AllocId, bytes: usize, consumers: usize) -> bool {
+        if self.allocs.contains_key(&id) {
+            return true;
+        }
+        if bytes > self.capacity_bytes {
+            return false; // cannot ever fit: caller splits or stalls forever
+        }
+        while self.free_bytes() < bytes {
+            // evict any evictable allocation
+            let victim = self
+                .allocs
+                .iter()
+                .find(|(_, a)| a.evictable)
+                .map(|(&k, _)| k);
+            match victim {
+                Some(k) => {
+                    let a = self.allocs.remove(&k).unwrap();
+                    self.used_bytes -= a.bytes;
+                    self.evictions += 1;
+                }
+                None => return false,
+            }
+        }
+        self.allocs.insert(
+            id,
+            Alloc { bytes, consumers, evictable: consumers == 0 },
+        );
+        self.used_bytes += bytes;
+        self.peak_bytes = self.peak_bytes.max(self.used_bytes);
+        self.bytes_written += bytes as u64;
+        true
+    }
+
+    /// Force-spill a live allocation to make room (the control block's
+    /// admission-control fallback when dependency chains would otherwise
+    /// circularly wait on buffer space).  Picks the *highest-id* live
+    /// allocation not in `exclude` — the most recently scheduled
+    /// producer, i.e. the data needed furthest in the future.  Returns
+    /// `(id, bytes)` of the spilled allocation.
+    pub fn spill_victim(&mut self, exclude: &[AllocId]) -> Option<(AllocId, usize)> {
+        let victim = self
+            .allocs
+            .keys()
+            .copied()
+            .filter(|k| !exclude.contains(k))
+            .max()?;
+        let a = self.allocs.remove(&victim).unwrap();
+        self.used_bytes -= a.bytes;
+        self.evictions += 1;
+        Some((victim, a.bytes))
+    }
+
+    /// Whether `id` is resident.
+    pub fn resident(&self, id: AllocId) -> bool {
+        self.allocs.contains_key(&id)
+    }
+
+    /// Record a read of `bytes` from allocation `id` (energy accounting).
+    pub fn read(&mut self, id: AllocId, bytes: usize) {
+        debug_assert!(self.resident(id), "read of non-resident alloc {id}");
+        self.bytes_read += bytes as u64;
+    }
+
+    /// One consumer of `id` finished; when the count hits zero the data
+    /// becomes evictable (it stays resident until space is needed, which
+    /// produces the sudden usage drops of Fig. 17(c)).
+    pub fn release(&mut self, id: AllocId) {
+        if let Some(a) = self.allocs.get_mut(&id) {
+            debug_assert!(a.consumers > 0, "release underflow on {id}");
+            a.consumers -= 1;
+            if a.consumers == 0 {
+                a.evictable = true;
+            }
+        }
+    }
+
+    /// Conservation check: used == sum of live allocation sizes.
+    pub fn check_conservation(&self) -> bool {
+        self.used_bytes == self.allocs.values().map(|a| a.bytes).sum::<usize>()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    #[test]
+    fn reserve_and_evict() {
+        let mut b = Buffer::new("act", 1000);
+        assert!(b.reserve(1, 600, 1));
+        assert!(!b.reserve(2, 600, 1)); // no space, nothing evictable
+        b.release(1); // now evictable
+        assert!(b.reserve(2, 600, 1)); // evicts 1
+        assert!(!b.resident(1));
+        assert!(b.resident(2));
+        assert_eq!(b.evictions, 1);
+    }
+
+    #[test]
+    fn oversized_request_fails() {
+        let mut b = Buffer::new("w", 100);
+        assert!(!b.reserve(1, 101, 0));
+    }
+
+    #[test]
+    fn occupancy_tracks_peak() {
+        let mut b = Buffer::new("act", 1000);
+        b.reserve(1, 300, 1);
+        b.reserve(2, 500, 1);
+        assert_eq!(b.peak_bytes, 800);
+        b.release(1);
+        b.release(2);
+        assert!(b.reserve(3, 900, 0)); // evicts both
+        assert_eq!(b.peak_bytes, 900);
+    }
+
+    #[test]
+    fn zero_consumer_allocs_are_immediately_evictable() {
+        let mut b = Buffer::new("mask", 100);
+        assert!(b.reserve(1, 80, 0));
+        assert!(b.reserve(2, 80, 1)); // evicts 1 without a release
+    }
+
+    #[test]
+    fn conservation_property() {
+        prop::check(51, 100, |g| {
+            let cap = g.usize_in(100, 10_000);
+            let mut b = Buffer::new("t", cap);
+            let mut live: Vec<AllocId> = Vec::new();
+            let mut next_id = 0;
+            for _ in 0..g.usize_in(1, 60) {
+                if g.bool() || live.is_empty() {
+                    let bytes = g.usize_in(1, cap / 2);
+                    let consumers = g.usize_in(0, 3);
+                    if b.reserve(next_id, bytes, consumers) {
+                        live.push(next_id);
+                    }
+                    next_id += 1;
+                } else {
+                    let idx = g.usize_in(0, live.len() - 1);
+                    b.release(live[idx]);
+                }
+                assert!(b.check_conservation());
+                assert!(b.used_bytes() <= cap);
+            }
+        });
+    }
+}

@@ -1,0 +1,272 @@
+//! Accelerator design-point configuration (paper Table II).
+
+use super::dataflow::Dataflow;
+
+/// Main-memory technology (Table II: LP-DDR3 for Edge, monolithic-3D
+/// RRAM for Server; Table IV ablates Server onto DRAM).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum MemoryKind {
+    /// 1-channel LP-DDR3-1600: 25.6 GB/s.
+    LpDdr3,
+    /// 2-channel monolithic-3D RRAM: 256 GB/s, lower retrieval latency.
+    Mono3dRram,
+}
+
+impl MemoryKind {
+    /// Peak bandwidth in bytes per second.
+    pub fn bandwidth_bytes_per_s(self) -> f64 {
+        match self {
+            MemoryKind::LpDdr3 => 25.6e9,
+            MemoryKind::Mono3dRram => 256.0e9,
+        }
+    }
+
+    /// First-word access latency in accelerator cycles @700 MHz.
+    /// LP-DDR3 ~50 ns ≈ 35 cycles; monolithic-3D RRAM sits on inter-tier
+    /// vias directly above the logic tier, ~10 ns ≈ 7 cycles.
+    pub fn latency_cycles(self) -> u64 {
+        match self {
+            MemoryKind::LpDdr3 => 35,
+            MemoryKind::Mono3dRram => 7,
+        }
+    }
+
+    /// Access energy (pJ per byte), from the NVSim/NVMain-derived power
+    /// rows of Table III (see `tech` for the derivation).
+    pub fn energy_pj_per_byte(self) -> f64 {
+        match self {
+            MemoryKind::LpDdr3 => 113.7,
+            MemoryKind::Mono3dRram => 144.0,
+        }
+    }
+
+    /// Idle (background) power in watts — charged while the simulation
+    /// is running regardless of traffic.
+    pub fn idle_power_w(self) -> f64 {
+        match self {
+            MemoryKind::LpDdr3 => 0.10,
+            MemoryKind::Mono3dRram => 1.20,
+        }
+    }
+}
+
+/// One AccelTran design point (Table II row).
+#[derive(Clone, Debug)]
+pub struct AcceleratorConfig {
+    pub name: String,
+    /// Number of processing elements.
+    pub pes: usize,
+    /// MAC lanes per PE.
+    pub mac_lanes_per_pe: usize,
+    /// Softmax modules per PE.
+    pub softmax_per_pe: usize,
+    /// Layer-norm modules per PE (1 in both paper design points; Fig. 18
+    /// lists 64 LN modules for the 64-PE Edge).
+    pub layernorm_per_pe: usize,
+    /// Multipliers per MAC lane (M; paper fixes M=16).
+    pub multipliers_per_lane: usize,
+    /// Elements processed per cycle by a softmax / layer-norm module.
+    pub special_elems_per_cycle: usize,
+    /// Activation buffer bytes.
+    pub act_buffer_bytes: usize,
+    /// Weight buffer bytes.
+    pub weight_buffer_bytes: usize,
+    /// Mask buffer bytes.
+    pub mask_buffer_bytes: usize,
+    pub memory: MemoryKind,
+    /// Inference batch size.
+    pub batch: usize,
+    /// Clock in Hz (700 MHz for both design points).
+    pub clock_hz: f64,
+    /// Tile sizes along b, i(=x), j(=z): paper sets (1, 16, 16); the k
+    /// tile equals the MAC-lane depth.
+    pub tile_b: usize,
+    pub tile_i: usize,
+    pub tile_j: usize,
+    pub tile_k: usize,
+    /// Loop-unrolling order for tile issue.
+    pub dataflow: Dataflow,
+    /// Dynamic pruning at runtime (Table IV ablation: "w/o DynaTran").
+    pub dynatran_enabled: bool,
+    /// Pre/post-compute sparsity modules present (Table IV: "w/o
+    /// Sparsity-aware modules" computes densely even on pruned data).
+    pub sparsity_modules: bool,
+    /// Low-power mode: only half the compute hardware active at a time
+    /// (Table III "LP mode").
+    pub low_power: bool,
+    /// Steady-state serving: word/position embeddings are already
+    /// resident in the weight buffer ("these load operations only occur
+    /// once and subsequent transformer evaluations reuse these
+    /// embeddings", Sec. V-D).  Disable to simulate the cold first batch
+    /// (the 51K-cycle load phase of Fig. 17(b)).
+    pub embeddings_resident: bool,
+}
+
+impl AcceleratorConfig {
+    /// AccelTran-Edge (Table II).
+    pub fn edge() -> Self {
+        AcceleratorConfig {
+            name: "acceltran-edge".into(),
+            pes: 64,
+            mac_lanes_per_pe: 16,
+            softmax_per_pe: 4,
+            layernorm_per_pe: 1,
+            multipliers_per_lane: 16,
+            special_elems_per_cycle: 16,
+            act_buffer_bytes: 4 << 20,
+            weight_buffer_bytes: 8 << 20,
+            mask_buffer_bytes: 1 << 20,
+            memory: MemoryKind::LpDdr3,
+            batch: 4,
+            clock_hz: 700.0e6,
+            tile_b: 1,
+            tile_i: 16,
+            tile_j: 16,
+            tile_k: 16,
+            dataflow: Dataflow::BIJK,
+            dynatran_enabled: true,
+            sparsity_modules: true,
+            low_power: false,
+            embeddings_resident: true,
+        }
+    }
+
+    /// AccelTran-Server (Table II).
+    pub fn server() -> Self {
+        AcceleratorConfig {
+            name: "acceltran-server".into(),
+            pes: 512,
+            mac_lanes_per_pe: 32,
+            softmax_per_pe: 32,
+            layernorm_per_pe: 1,
+            multipliers_per_lane: 16,
+            special_elems_per_cycle: 16,
+            act_buffer_bytes: 32 << 20,
+            weight_buffer_bytes: 64 << 20,
+            mask_buffer_bytes: 8 << 20,
+            memory: MemoryKind::Mono3dRram,
+            batch: 32,
+            clock_hz: 700.0e6,
+            tile_b: 1,
+            tile_i: 16,
+            tile_j: 16,
+            tile_k: 16,
+            dataflow: Dataflow::BIJK,
+            dynatran_enabled: true,
+            sparsity_modules: true,
+            low_power: false,
+            embeddings_resident: true,
+        }
+    }
+
+    /// Edge low-power mode (Table III third row): half the compute
+    /// hardware power-gated at any time.
+    pub fn edge_lp() -> Self {
+        let mut c = Self::edge();
+        c.name = "acceltran-edge-lp".into();
+        c.low_power = true;
+        c
+    }
+
+    pub fn preset(name: &str) -> Option<Self> {
+        match name {
+            "edge" | "acceltran-edge" => Some(Self::edge()),
+            "server" | "acceltran-server" => Some(Self::server()),
+            "edge-lp" | "acceltran-edge-lp" => Some(Self::edge_lp()),
+            _ => None,
+        }
+    }
+
+    /// Total MAC lanes (scaled down in LP mode, which gates half).
+    pub fn total_mac_lanes(&self) -> usize {
+        let n = self.pes * self.mac_lanes_per_pe;
+        if self.low_power { n / 2 } else { n }
+    }
+
+    /// Total softmax modules.
+    pub fn total_softmax(&self) -> usize {
+        let n = self.pes * self.softmax_per_pe;
+        if self.low_power { n / 2 } else { n }
+    }
+
+    /// Total layer-norm modules.
+    pub fn total_layernorm(&self) -> usize {
+        let n = self.pes * self.layernorm_per_pe;
+        if self.low_power { n / 2 } else { n }
+    }
+
+    /// Theoretical peak ops/s (Table III TOP/s column): every multiplier
+    /// plus every softmax/LN element-slot busy every cycle.
+    pub fn peak_ops_per_s(&self) -> f64 {
+        let per_cycle = self.total_mac_lanes() * self.multipliers_per_lane
+            + self.total_softmax() * self.special_elems_per_cycle
+            + self.total_layernorm() * self.special_elems_per_cycle;
+        per_cycle as f64 * self.clock_hz
+    }
+
+    /// Net on-chip buffer bytes.
+    pub fn total_buffer_bytes(&self) -> usize {
+        self.act_buffer_bytes + self.weight_buffer_bytes + self.mask_buffer_bytes
+    }
+
+    /// Cycles -> seconds.
+    pub fn cycles_to_s(&self, cycles: u64) -> f64 {
+        cycles as f64 / self.clock_hz
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn edge_matches_table_ii() {
+        let e = AcceleratorConfig::edge();
+        assert_eq!(e.pes, 64);
+        assert_eq!(e.total_mac_lanes(), 1024);
+        assert_eq!(e.total_softmax(), 256);
+        assert_eq!(e.act_buffer_bytes, 4 << 20);
+        assert_eq!(e.batch, 4);
+    }
+
+    #[test]
+    fn server_matches_table_ii() {
+        let s = AcceleratorConfig::server();
+        assert_eq!(s.pes, 512);
+        assert_eq!(s.total_mac_lanes(), 16384);
+        assert_eq!(s.total_softmax(), 16384);
+        assert_eq!(s.memory, MemoryKind::Mono3dRram);
+        assert_eq!(s.batch, 32);
+    }
+
+    #[test]
+    fn peak_tops_match_table_iii() {
+        // Table III: Edge 15.05 TOP/s, Server 372.74 TOP/s, Edge-LP 7.52.
+        let edge = AcceleratorConfig::edge().peak_ops_per_s() / 1e12;
+        assert!((edge - 15.05).abs() < 0.1, "edge {edge:.2}");
+        let server = AcceleratorConfig::server().peak_ops_per_s() / 1e12;
+        assert!((server - 372.74).abs() < 1.0, "server {server:.2}");
+        let lp = AcceleratorConfig::edge_lp().peak_ops_per_s() / 1e12;
+        assert!((lp - 7.52).abs() < 0.1, "lp {lp:.2}");
+    }
+
+    #[test]
+    fn lp_mode_halves_resources() {
+        let e = AcceleratorConfig::edge();
+        let lp = AcceleratorConfig::edge_lp();
+        assert_eq!(lp.total_mac_lanes() * 2, e.total_mac_lanes());
+        assert_eq!(lp.total_softmax() * 2, e.total_softmax());
+    }
+
+    #[test]
+    fn memory_kinds_differ() {
+        assert!(
+            MemoryKind::Mono3dRram.bandwidth_bytes_per_s()
+                > 5.0 * MemoryKind::LpDdr3.bandwidth_bytes_per_s()
+        );
+        assert!(
+            MemoryKind::Mono3dRram.latency_cycles()
+                < MemoryKind::LpDdr3.latency_cycles()
+        );
+    }
+}

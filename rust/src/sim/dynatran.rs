@@ -1,0 +1,245 @@
+//! The DynaTran module (paper Sec. III-A, III-B5): single-cycle
+//! magnitude-threshold pruning with a transfer-function-driven threshold
+//! calculator.
+//!
+//! Hardware behaviour: `b*x*y` parallel comparators zero every element
+//! with `|m| < tau` and set the corresponding mask bit, all in one clock
+//! cycle.  `tau` itself is *not* computed — it is looked up from a
+//! pre-profiled sparsity transfer function rho(tau) stored in the
+//! module's internal register, given a user-level target (desired
+//! sparsity or accuracy).
+
+/// Prune a dense tile in place and return the mask (`true` = pruned).
+/// This is the functional twin of the Pallas `dynatran_prune` kernel
+/// (python/compile/kernels/dynatran.py) and is tested against the same
+/// semantics.
+pub fn prune(values: &mut [f32], tau: f32) -> Vec<bool> {
+    let mut mask = Vec::with_capacity(values.len());
+    for v in values.iter_mut() {
+        if v.abs() < tau {
+            *v = 0.0;
+            mask.push(true);
+        } else {
+            mask.push(false);
+        }
+    }
+    mask
+}
+
+/// Non-destructive variant.
+pub fn pruned(values: &[f32], tau: f32) -> (Vec<f32>, Vec<bool>) {
+    let mut out = values.to_vec();
+    let mask = prune(&mut out, tau);
+    (out, mask)
+}
+
+/// Sparsity rho of a slice.
+pub fn sparsity(values: &[f32]) -> f64 {
+    if values.is_empty() {
+        return 0.0;
+    }
+    values.iter().filter(|&&v| v == 0.0).count() as f64 / values.len() as f64
+}
+
+/// The top-k baseline (SpAtten): keep the `k` largest |values| per row of
+/// an `rows x cols` matrix, zero the rest.  O(N log N) per row here
+/// (the hardware's sorting engine is what gives it the paper's O(N^3)
+/// full-matrix complexity); compare with `prune`'s single pass — this
+/// asymmetry is exactly the Fig. 13 experiment.
+pub fn topk_prune_rows(values: &mut [f32], cols: usize, k: usize) {
+    assert!(cols > 0 && values.len() % cols == 0);
+    if k >= cols {
+        return;
+    }
+    let mut mags: Vec<f32> = Vec::with_capacity(cols);
+    for row in values.chunks_mut(cols) {
+        mags.clear();
+        mags.extend(row.iter().map(|v| v.abs()));
+        // threshold = k-th largest magnitude
+        mags.sort_unstable_by(|a, b| b.partial_cmp(a).unwrap());
+        let thr = mags[k - 1];
+        let mut kept = 0usize;
+        for v in row.iter_mut() {
+            // keep ties up to exactly k survivors (hardware keeps first-k)
+            if v.abs() > thr || (v.abs() == thr && kept < k) {
+                if v.abs() >= thr {
+                    kept += 1;
+                }
+            } else {
+                *v = 0.0;
+            }
+        }
+    }
+}
+
+/// A profiled rho(tau) transfer function: monotone samples of threshold
+/// -> resulting sparsity for one (model, task) pair, as stored in the
+/// DynaTran module's internal register (Sec. III-B5 "threshold
+/// calculator").
+#[derive(Clone, Debug)]
+pub struct TransferFunction {
+    /// (tau, rho) samples sorted by tau, rho non-decreasing.
+    pub samples: Vec<(f32, f64)>,
+    pub label: String,
+}
+
+impl TransferFunction {
+    /// Profile a transfer function from representative activation data:
+    /// evaluate rho at `steps` thresholds in `[0, tau_max]`.
+    pub fn profile(label: &str, data: &[f32], tau_max: f32, steps: usize) -> Self {
+        assert!(steps >= 2);
+        let mut mags: Vec<f32> = data.iter().map(|v| v.abs()).collect();
+        mags.sort_unstable_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = mags.len().max(1) as f64;
+        let samples = (0..steps)
+            .map(|s| {
+                let tau = tau_max * s as f32 / (steps - 1) as f32;
+                // rho = fraction of |x| < tau, via binary search
+                let idx = mags.partition_point(|&m| m < tau);
+                (tau, idx as f64 / n)
+            })
+            .collect();
+        TransferFunction { samples, label: label.to_string() }
+    }
+
+    /// rho(tau) by linear interpolation.
+    pub fn sparsity_at(&self, tau: f32) -> f64 {
+        let s = &self.samples;
+        if s.is_empty() {
+            return 0.0;
+        }
+        if tau <= s[0].0 {
+            return s[0].1;
+        }
+        if tau >= s[s.len() - 1].0 {
+            return s[s.len() - 1].1;
+        }
+        let i = s.partition_point(|&(t, _)| t < tau);
+        let (t0, r0) = s[i - 1];
+        let (t1, r1) = s[i];
+        if t1 == t0 {
+            return r1;
+        }
+        r0 + (r1 - r0) * ((tau - t0) / (t1 - t0)) as f64
+    }
+
+    /// The threshold-calculator look-up (Fig. 7): smallest tau achieving
+    /// the desired sparsity `rho` (clamped to the profiled range).  This
+    /// is the "simple look-up operation" that keeps DynaTran at one
+    /// cycle.
+    pub fn tau_for_sparsity(&self, rho: f64) -> f32 {
+        let s = &self.samples;
+        if s.is_empty() {
+            return 0.0;
+        }
+        if rho <= s[0].1 {
+            return s[0].0;
+        }
+        if rho >= s[s.len() - 1].1 {
+            return s[s.len() - 1].0;
+        }
+        let i = s.partition_point(|&(_, r)| r < rho);
+        let (t0, r0) = s[i - 1];
+        let (t1, r1) = s[i];
+        if (r1 - r0).abs() < f64::EPSILON {
+            return t1;
+        }
+        t0 + (t1 - t0) * ((rho - r0) / (r1 - r0)) as f32
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    #[test]
+    fn prune_matches_definition() {
+        let mut v = vec![0.5, -0.05, 0.2, -0.9, 0.0];
+        let mask = prune(&mut v, 0.25);
+        assert_eq!(v, vec![0.5, 0.0, 0.0, -0.9, 0.0]);
+        assert_eq!(mask, vec![false, true, true, false, true]);
+    }
+
+    #[test]
+    fn prune_boundary_keeps_equal_magnitude() {
+        // |m| >= tau is kept (paper's definition uses >=).
+        let mut v = vec![0.25, -0.25];
+        let mask = prune(&mut v, 0.25);
+        assert_eq!(mask, vec![false, false]);
+    }
+
+    #[test]
+    fn sparsity_monotone_in_tau_property() {
+        prop::check(41, 100, |g| {
+            let n = g.usize_in(1, 400);
+            let data = g.normal_vec(n, 1.0);
+            let t1 = g.f32_in(0.0, 2.0);
+            let t2 = g.f32_in(0.0, 2.0);
+            let (lo, hi) = if t1 < t2 { (t1, t2) } else { (t2, t1) };
+            let (a, _) = pruned(&data, lo);
+            let (b, _) = pruned(&data, hi);
+            assert!(sparsity(&b) >= sparsity(&a));
+        });
+    }
+
+    #[test]
+    fn topk_keeps_exactly_k_per_row() {
+        prop::check(42, 100, |g| {
+            let rows = g.usize_in(1, 8);
+            let cols = g.usize_in(2, 64);
+            let k = g.usize_in(1, cols);
+            let mut data = g.normal_vec(rows * cols, 1.0);
+            topk_prune_rows(&mut data, cols, k);
+            for row in data.chunks(cols) {
+                let nnz = row.iter().filter(|&&v| v != 0.0).count();
+                assert!(nnz <= k, "nnz {nnz} > k {k}");
+                // standard normals: ties have measure zero, so == k
+                assert!(nnz == k.min(cols), "nnz {nnz} k {k}");
+            }
+        });
+    }
+
+    #[test]
+    fn topk_keeps_the_largest() {
+        let mut v = vec![0.1, -0.9, 0.5, 0.2];
+        topk_prune_rows(&mut v, 4, 2);
+        assert_eq!(v, vec![0.0, -0.9, 0.5, 0.0]);
+    }
+
+    #[test]
+    fn transfer_function_inverts_itself() {
+        let mut g = crate::util::rng::Rng::new(7);
+        let data = g.normal_vec(20_000, 0.5);
+        let tf = TransferFunction::profile("test", &data, 1.0, 64);
+        for &target in &[0.1, 0.3, 0.5, 0.7, 0.9] {
+            let tau = tf.tau_for_sparsity(target);
+            let achieved = tf.sparsity_at(tau);
+            assert!(
+                (achieved - target).abs() < 0.02,
+                "target {target} achieved {achieved} (tau {tau})"
+            );
+        }
+    }
+
+    #[test]
+    fn transfer_function_matches_actual_pruning() {
+        let mut g = crate::util::rng::Rng::new(8);
+        let data = g.normal_vec(50_000, 1.0);
+        let tf = TransferFunction::profile("gauss", &data, 2.0, 128);
+        let tau = tf.tau_for_sparsity(0.6);
+        let (pruned_vals, _) = pruned(&data, tau);
+        let rho = sparsity(&pruned_vals);
+        assert!((rho - 0.6).abs() < 0.02, "rho {rho}");
+    }
+
+    #[test]
+    fn transfer_function_is_monotone() {
+        let mut g = crate::util::rng::Rng::new(9);
+        let data = g.normal_vec(10_000, 1.0);
+        let tf = TransferFunction::profile("gauss", &data, 2.0, 32);
+        for w in tf.samples.windows(2) {
+            assert!(w[1].1 >= w[0].1);
+        }
+    }
+}

@@ -1,0 +1,31 @@
+//! The AccelTran cycle-accurate accelerator simulator (the paper's core
+//! contribution, Sec. III-B).
+//!
+//! Pipeline: an [`crate::model::OpGraph`] (Table I op stream) is tiled
+//! ([`tiling`]), ordered under one of 24 dataflows ([`dataflow`]), and
+//! issued by the control block ([`scheduler`]) to hardware resources —
+//! MAC lanes / softmax / layer-norm modules ([`modules`]) grouped into
+//! PEs ([`pe`]) that contain DynaTran pruning ([`dynatran`]) and
+//! binary-mask sparsity ([`sparsity`]) stages — against on-chip buffers
+//! ([`buffer`]) filled over a DMA-fronted main memory ([`memory`]).
+//! The event loop ([`engine`]) advances cycles, accounts stalls, and
+//! charges the 14nm area/energy model ([`tech`]); results aggregate in
+//! ([`stats`]).
+
+pub mod baselines;
+pub mod buffer;
+pub mod config;
+pub mod dataflow;
+pub mod dynatran;
+pub mod engine;
+pub mod memory;
+pub mod modules;
+pub mod pe;
+pub mod scheduler;
+pub mod sparsity;
+pub mod stats;
+pub mod tech;
+pub mod tiling;
+
+pub use config::{AcceleratorConfig, MemoryKind};
+pub use engine::{Engine, SimResult};

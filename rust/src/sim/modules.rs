@@ -1,0 +1,176 @@
+//! Compute-module cost models: MAC lane (Fig. 6), softmax module, and
+//! layer-norm module (Sec. III-B3/4), plus the per-PE DynaTran and
+//! sparsity stages' cycle/energy charges.
+//!
+//! These are *timing/energy* models at tile granularity — the functional
+//! math runs in the PJRT runtime (L2 artifacts); the simulator only needs
+//! how many cycles and picojoules each tile costs on each module.
+
+use super::tech;
+
+/// Cycle/energy cost of one unit of work on a module.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct TileCost {
+    pub cycles: u64,
+    pub energy_pj: f64,
+}
+
+/// MAC lane: `M` multipliers feeding a log2(M)-deep adder tree; GeLU
+/// optionally applied at the output (C-OP-9/10).
+#[derive(Clone, Copy, Debug)]
+pub struct MacLane {
+    /// Multipliers per lane (paper: M = 16).
+    pub multipliers: usize,
+}
+
+impl MacLane {
+    pub fn new(multipliers: usize) -> MacLane {
+        assert!(multipliers.is_power_of_two(), "adder tree needs 2^n inputs");
+        MacLane { multipliers }
+    }
+
+    /// Pipeline fill latency: multiplier stage + adder-tree stages.
+    pub fn pipeline_depth(&self) -> u64 {
+        1 + (self.multipliers as f64).log2() as u64
+    }
+
+    /// Cost of one tile-pair with `macs` *effectual* multiplications
+    /// (post sparsity filtering).  Minimum cycles = n_o / M (Sec. III-B4),
+    /// plus the pipeline fill; energy charges only effectual MACs — the
+    /// zero-free data guarantee.
+    pub fn tile_cost(&self, macs: usize, gelu_elems: usize) -> TileCost {
+        let compute = (macs as u64).div_ceil(self.multipliers as u64);
+        TileCost {
+            cycles: compute.max(1) + self.pipeline_depth(),
+            energy_pj: macs as f64 * tech::MAC_PJ
+                + gelu_elems as f64 * tech::GELU_PJ_PER_ELEM,
+        }
+    }
+}
+
+/// Softmax module: processes a row-block tile, computing exp and the
+/// row-wise exponential sum over the whole tile in parallel
+/// (`elems_per_cycle` element-slots per cycle), then divides.
+#[derive(Clone, Copy, Debug)]
+pub struct SoftmaxModule {
+    pub elems_per_cycle: usize,
+}
+
+impl SoftmaxModule {
+    /// Cost of one `rows x cols` row-block tile.  Three passes over the
+    /// data (max-subtract+exp, sum, divide) pipelined into ~1 visit per
+    /// element plus a fixed reduction latency.
+    pub fn tile_cost(&self, rows: usize, cols: usize) -> TileCost {
+        let elems = rows * cols;
+        let cycles = (elems as u64).div_ceil(self.elems_per_cycle as u64)
+            + (cols as f64).log2().ceil() as u64 // reduction tree
+            + 2; // divide + writeback
+        TileCost {
+            cycles,
+            energy_pj: elems as f64 * tech::SOFTMAX_PJ_PER_ELEM,
+        }
+    }
+}
+
+/// Layer-norm module: mean/variance reduction + rsqrt + affine.
+#[derive(Clone, Copy, Debug)]
+pub struct LayerNormModule {
+    pub elems_per_cycle: usize,
+}
+
+impl LayerNormModule {
+    pub fn tile_cost(&self, rows: usize, cols: usize) -> TileCost {
+        let elems = rows * cols;
+        let cycles = (elems as u64).div_ceil(self.elems_per_cycle as u64)
+            + (cols as f64).log2().ceil() as u64
+            + 3; // mean, rsqrt, affine latch
+        TileCost {
+            cycles,
+            energy_pj: elems as f64 * tech::LAYERNORM_PJ_PER_ELEM,
+        }
+    }
+}
+
+/// DynaTran stage: one cycle per tile regardless of size (parallel
+/// comparators, Fig. 7) — the paper's headline micro-architectural claim.
+pub fn dynatran_cost(elems: usize) -> TileCost {
+    TileCost {
+        cycles: 1,
+        energy_pj: elems as f64 * tech::DYNATRAN_PJ_PER_ELEM,
+    }
+}
+
+/// Pre- or post-compute sparsity stage over a tile: AND/XOR mask logic +
+/// zero-collapsing shift, one cycle per tile slice (pipelined with the
+/// consuming module, so it adds latency but not throughput).
+pub fn sparsity_stage_cost(elems: usize) -> TileCost {
+    TileCost {
+        cycles: 1,
+        energy_pj: elems as f64 * tech::SPARSITY_PJ_PER_ELEM,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mac_lane_min_cycles_is_no_over_m() {
+        // Sec. III-B4: minimum cycles for n_o ops with M multipliers.
+        let lane = MacLane::new(16);
+        let c = lane.tile_cost(16 * 16 * 16, 0);
+        assert_eq!(c.cycles, (4096 / 16) as u64 + lane.pipeline_depth());
+    }
+
+    #[test]
+    fn sparse_tile_is_cheaper() {
+        let lane = MacLane::new(16);
+        let dense = lane.tile_cost(4096, 0);
+        let sparse = lane.tile_cost(1024, 0); // 75% effectual skipped
+        assert!(sparse.cycles < dense.cycles);
+        assert!(sparse.energy_pj < dense.energy_pj / 3.0);
+    }
+
+    #[test]
+    fn empty_tile_still_costs_a_cycle() {
+        let lane = MacLane::new(16);
+        assert!(lane.tile_cost(0, 0).cycles >= 1);
+    }
+
+    #[test]
+    fn adder_tree_depth() {
+        assert_eq!(MacLane::new(16).pipeline_depth(), 5);
+        assert_eq!(MacLane::new(4).pipeline_depth(), 3);
+    }
+
+    #[test]
+    #[should_panic(expected = "adder tree")]
+    fn non_power_of_two_rejected() {
+        MacLane::new(12);
+    }
+
+    #[test]
+    fn softmax_cost_scales_with_tile() {
+        let m = SoftmaxModule { elems_per_cycle: 16 };
+        let small = m.tile_cost(16, 64);
+        let big = m.tile_cost(16, 512);
+        assert!(big.cycles > 7 * small.cycles / 2);
+        assert!(big.energy_pj > 7.0 * small.energy_pj);
+    }
+
+    #[test]
+    fn dynatran_is_single_cycle_at_any_size() {
+        assert_eq!(dynatran_cost(16).cycles, 1);
+        assert_eq!(dynatran_cost(1 << 20).cycles, 1);
+        assert!(dynatran_cost(1 << 20).energy_pj > dynatran_cost(16).energy_pj);
+    }
+
+    #[test]
+    fn gelu_adds_energy_not_cycles() {
+        let lane = MacLane::new(16);
+        let plain = lane.tile_cost(4096, 0);
+        let with_gelu = lane.tile_cost(4096, 256);
+        assert_eq!(plain.cycles, with_gelu.cycles);
+        assert!(with_gelu.energy_pj > plain.energy_pj);
+    }
+}

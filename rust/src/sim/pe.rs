@@ -1,0 +1,205 @@
+//! Processing-element composition (paper Sec. III-B3, Fig. 5).
+//!
+//! A PE bundles: activation/weight FIFOs, a DynaTran module, a
+//! pre-compute sparsity module, `mac_lanes_per_pe` MAC lanes (plus the
+//! per-PE softmax and layer-norm modules of Fig. 4's organization), and a
+//! post-compute sparsity module.  The engine schedules against the
+//! *pooled* module counts for efficiency; this module provides the
+//! per-PE functional pipeline used by the host-side pruning path and the
+//! integration tests — it processes real tile data end-to-end exactly as
+//! the hardware pipeline stages would.
+
+use super::dynatran;
+use super::modules::{dynatran_cost, sparsity_stage_cost, MacLane, TileCost};
+use super::sparsity::{precompute_align, CompressedTile};
+
+/// Functional + costed result of pushing one tile pair through a PE.
+#[derive(Debug)]
+pub struct PeTileResult {
+    /// Dense output (dot products per output element are the engine's
+    /// job; the PE pipeline's unit test surface is elementwise products
+    /// feeding the adder tree).
+    pub products: Vec<f32>,
+    /// Output mask after post-compute expansion.
+    pub out_mask: Vec<bool>,
+    /// Effectual multiplications executed.
+    pub effectual_macs: usize,
+    /// Aggregate pipeline cost.
+    pub cost: TileCost,
+}
+
+/// One processing element.
+#[derive(Debug)]
+pub struct Pe {
+    pub lane: MacLane,
+    /// DynaTran threshold currently latched in the module register.
+    pub tau: f32,
+    pub dynatran_enabled: bool,
+    pub sparsity_enabled: bool,
+}
+
+impl Pe {
+    pub fn new(multipliers: usize, tau: f32) -> Pe {
+        Pe {
+            lane: MacLane::new(multipliers),
+            tau,
+            dynatran_enabled: true,
+            sparsity_enabled: true,
+        }
+    }
+
+    /// Push an aligned weight/activation tile pair through the full PE
+    /// pipeline: DynaTran -> compress -> pre-compute sparsity -> MAC
+    /// (elementwise products; accumulation happens in the adder tree) ->
+    /// post-compute expansion.
+    pub fn process_tile(&self, w_dense: &[f32], a_dense: &[f32]) -> PeTileResult {
+        assert_eq!(w_dense.len(), a_dense.len());
+        let mut cycles = 0u64;
+        let mut energy = 0.0f64;
+
+        // 1. DynaTran prune on the incoming activation tile (weights are
+        //    pruned when first loaded; pruning them again is idempotent).
+        let (a_pruned, _mask) = if self.dynatran_enabled {
+            let c = dynatran_cost(a_dense.len());
+            cycles += c.cycles;
+            energy += c.energy_pj;
+            dynatran::pruned(a_dense, self.tau)
+        } else {
+            (a_dense.to_vec(), vec![false; a_dense.len()])
+        };
+
+        // 2. compress both operands to zero-free form.
+        let w = CompressedTile::compress(w_dense);
+        let a = CompressedTile::compress(&a_pruned);
+
+        // 3. pre-compute sparsity alignment (or dense fallback).
+        let (wv, av, out_mask) = if self.sparsity_enabled {
+            let c = sparsity_stage_cost(w_dense.len());
+            cycles += c.cycles;
+            energy += c.energy_pj;
+            let pair = precompute_align(&w, &a);
+            (pair.w, pair.a, pair.out_mask)
+        } else {
+            (w.decompress(), a.decompress(), vec![false; w_dense.len()])
+        };
+
+        // 4. MAC lane: effectual multiplications only.
+        let eff = wv.len();
+        let mac = self.lane.tile_cost(eff, 0);
+        cycles += mac.cycles;
+        energy += mac.energy_pj;
+        let mut products: Vec<f32> = wv.iter().zip(&av).map(|(x, y)| x * y).collect();
+
+        // 5. post-compute sparsity: re-expand to dense positions.
+        if self.sparsity_enabled {
+            let c = sparsity_stage_cost(out_mask.len());
+            cycles += c.cycles;
+            energy += c.energy_pj;
+            let compressed = CompressedTile {
+                values: products.into_iter().filter(|&v| v != 0.0).collect(),
+                mask: out_mask.clone(),
+            };
+            // positions masked out are zeros; compressed.decompress gives
+            // the dense product vector — but products with value 0 from
+            // effectual pairs must be preserved, so rebuild positionally.
+            let mut dense = vec![0.0f32; out_mask.len()];
+            let mut it = wv.iter().zip(&av).map(|(x, y)| x * y);
+            for (pos, &pruned) in out_mask.iter().enumerate() {
+                if !pruned {
+                    dense[pos] = it.next().unwrap_or(0.0);
+                }
+            }
+            let _ = compressed;
+            products = dense;
+        }
+
+        PeTileResult {
+            products,
+            out_mask,
+            effectual_macs: eff,
+            cost: TileCost { cycles, energy_pj: energy },
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    #[test]
+    fn pipeline_matches_dense_elementwise_product() {
+        prop::check(61, 200, |g| {
+            let n = g.usize_in(1, 256);
+            let w = g.normal_vec(n, 1.0);
+            let a = g.normal_vec(n, 1.0);
+            let tau = g.f32_in(0.0, 0.5);
+            let pe = Pe::new(16, tau);
+            let out = pe.process_tile(&w, &a);
+            for i in 0..n {
+                let a_eff = if a[i].abs() < tau { 0.0 } else { a[i] };
+                let expect = w[i] * a_eff;
+                assert!(
+                    (out.products[i] - expect).abs() < 1e-6,
+                    "i={i} got {} want {expect}",
+                    out.products[i]
+                );
+            }
+        });
+    }
+
+    #[test]
+    fn sparsity_disabled_still_correct_but_denser() {
+        let w = vec![1.0, 0.0, 2.0, 3.0];
+        let a = vec![4.0, 5.0, 0.0, 0.5];
+        let mut pe = Pe::new(4, 1.0); // tau=1.0 prunes a[3]=0.5
+        let with = pe.process_tile(&w, &a);
+        pe.sparsity_enabled = false;
+        let without = pe.process_tile(&w, &a);
+        assert_eq!(with.products, without.products);
+        assert!(with.effectual_macs < without.effectual_macs);
+    }
+
+    #[test]
+    fn sparsity_modules_pay_off_on_realistic_tiles() {
+        // On a 16x16 tile at ~50% sparsity the skipped MAC energy far
+        // outweighs the AND/XOR/shifter stage overhead (the reason the
+        // modules exist); tiny dense tiles would not amortize it.
+        let mut g = crate::util::rng::Rng::new(11);
+        let w = g.normal_vec(256, 1.0);
+        let a = g.normal_vec(256, 1.0);
+        let mut pe = Pe::new(16, 0.7); // prunes ~52% of activations
+        let with = pe.process_tile(&w, &a);
+        pe.sparsity_enabled = false;
+        let without = pe.process_tile(&w, &a);
+        assert_eq!(with.products, without.products);
+        assert!(
+            with.cost.energy_pj < without.cost.energy_pj,
+            "with {} without {}",
+            with.cost.energy_pj,
+            without.cost.energy_pj
+        );
+        assert!(with.cost.cycles <= without.cost.cycles);
+    }
+
+    #[test]
+    fn higher_tau_fewer_effectual_macs() {
+        let mut g = crate::util::rng::Rng::new(3);
+        let w = g.normal_vec(512, 1.0);
+        let a = g.normal_vec(512, 1.0);
+        let low = Pe::new(16, 0.1).process_tile(&w, &a);
+        let high = Pe::new(16, 1.0).process_tile(&w, &a);
+        assert!(high.effectual_macs < low.effectual_macs);
+        assert!(high.cost.cycles <= low.cost.cycles);
+    }
+
+    #[test]
+    fn dynatran_disabled_keeps_small_values() {
+        let w = vec![1.0f32; 4];
+        let a = vec![0.01, 0.02, 0.03, 0.9];
+        let mut pe = Pe::new(4, 0.5);
+        pe.dynatran_enabled = false;
+        let out = pe.process_tile(&w, &a);
+        assert_eq!(out.products, a);
+    }
+}

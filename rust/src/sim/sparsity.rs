@@ -1,0 +1,247 @@
+//! Binary-mask sparsity pipeline (paper Sec. III-B6, Fig. 8).
+//!
+//! AccelTran stores tiles *zero-free*: the nonzero values plus a binary
+//! mask with one bit per original element (mask bit 1 = ineffectual /
+//! pruned, matching the DynaTran module's output convention).  Before a
+//! MAC-lane consumes a weight/activation tile pair, the pre-compute
+//! sparsity module intersects the two masks (bitwise AND of the *keep*
+//! view), filters each operand down to the common support via the filter
+//! masks (XOR), and zero-collapses — so the lanes see only effectual
+//! multiplications.  The post-compute module re-expands outputs.
+//!
+//! This module is a *functional* implementation (bit-exact data
+//! transformation, used by the host-side pruning experiments and the
+//! property tests); the cycle/energy cost of the hardware stage is
+//! charged by `tech`/`engine`.
+
+/// A tile in compressed zero-free form.
+#[derive(Clone, Debug, PartialEq)]
+pub struct CompressedTile {
+    /// Non-zero values in row-major order of the original tile.
+    pub values: Vec<f32>,
+    /// One bit per original element; `true` = ineffectual (value was
+    /// pruned/zero), `false` = a value is present.
+    pub mask: Vec<bool>,
+}
+
+impl CompressedTile {
+    /// Compress a dense tile: drop zeros, record the mask.
+    pub fn compress(dense: &[f32]) -> CompressedTile {
+        let mut values = Vec::with_capacity(dense.len());
+        let mut mask = Vec::with_capacity(dense.len());
+        for &v in dense {
+            if v == 0.0 {
+                mask.push(true);
+            } else {
+                mask.push(false);
+                values.push(v);
+            }
+        }
+        CompressedTile { values, mask }
+    }
+
+    /// Expand back to dense form (the post-compute sparsity module).
+    pub fn decompress(&self) -> Vec<f32> {
+        let mut out = Vec::with_capacity(self.mask.len());
+        let mut it = self.values.iter();
+        for &pruned in &self.mask {
+            if pruned {
+                out.push(0.0);
+            } else {
+                out.push(*it.next().expect("mask/value length mismatch"));
+            }
+        }
+        debug_assert!(it.next().is_none(), "extra values beyond mask");
+        out
+    }
+
+    /// Elements in the original tile.
+    pub fn len(&self) -> usize {
+        self.mask.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.mask.is_empty()
+    }
+
+    /// Non-zero count.
+    pub fn nnz(&self) -> usize {
+        self.values.len()
+    }
+
+    /// Sparsity ratio rho.
+    pub fn sparsity(&self) -> f64 {
+        if self.mask.is_empty() {
+            return 0.0;
+        }
+        (self.len() - self.nnz()) as f64 / self.len() as f64
+    }
+
+    /// Stored bytes under the paper's encoding at `elem_bytes` per value
+    /// plus 1 mask bit per element.
+    pub fn stored_bytes(&self, elem_bytes: f64) -> f64 {
+        self.nnz() as f64 * elem_bytes + self.len() as f64 / 8.0
+    }
+}
+
+/// Output of the pre-compute sparsity module for one operand pair.
+#[derive(Clone, Debug, PartialEq)]
+pub struct AlignedPair {
+    /// Zero-free weight values on the common support.
+    pub w: Vec<f32>,
+    /// Zero-free activation values on the common support.
+    pub a: Vec<f32>,
+    /// Output mask: `true` where *either* operand was ineffectual (the
+    /// product is zero there) — i.e. the complement of the AND of keeps.
+    pub out_mask: Vec<bool>,
+}
+
+/// The Fig. 8 pre-compute sparsity module.
+///
+/// * output mask  = NOT(keep_w AND keep_a)   (bitwise AND over keeps)
+/// * filter_w     = keep_w XOR common_keep   (w values to drop)
+/// * filter_a     = keep_a XOR common_keep
+/// * zero-collapsing shifter = compaction of the surviving values.
+///
+/// Elementwise semantics (the operands are aligned element-for-element,
+/// as in a Hadamard step of a tiled MAC with matching layouts).
+pub fn precompute_align(w: &CompressedTile, a: &CompressedTile) -> AlignedPair {
+    assert_eq!(w.len(), a.len(), "operand tiles must agree in shape");
+    let mut out_w = Vec::new();
+    let mut out_a = Vec::new();
+    let mut out_mask = Vec::with_capacity(w.len());
+    let mut wi = 0usize;
+    let mut ai = 0usize;
+    for idx in 0..w.len() {
+        let keep_w = !w.mask[idx];
+        let keep_a = !a.mask[idx];
+        let common = keep_w && keep_a; // the AND gate
+        out_mask.push(!common);
+        // filter masks: keep_x XOR common = x-only positions (dropped)
+        if common {
+            out_w.push(w.values[wi]);
+            out_a.push(a.values[ai]);
+        }
+        if keep_w {
+            wi += 1;
+        }
+        if keep_a {
+            ai += 1;
+        }
+    }
+    debug_assert_eq!(wi, w.values.len());
+    debug_assert_eq!(ai, a.values.len());
+    AlignedPair { w: out_w, a: out_a, out_mask }
+}
+
+/// Effectual MAC count for a tile pair after pre-compute alignment —
+/// what the MAC lane actually executes.
+pub fn effectual_macs(w: &CompressedTile, a: &CompressedTile) -> usize {
+    precompute_align(w, a).w.len()
+}
+
+/// Expected fraction of *effectual* products when weight and activation
+/// sparsities are independent: (1 - rho_w)(1 - rho_a).  The engine uses
+/// this closed form instead of materializing tiles.
+pub fn effectual_fraction(rho_w: f64, rho_a: f64) -> f64 {
+    debug_assert!((0.0..=1.0).contains(&rho_w) && (0.0..=1.0).contains(&rho_a));
+    (1.0 - rho_w) * (1.0 - rho_a)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+    use crate::util::rng::Rng;
+
+    fn random_sparse(rng: &mut Rng, n: usize, rho: f64) -> Vec<f32> {
+        (0..n)
+            .map(|_| {
+                if rng.chance(rho) {
+                    0.0
+                } else {
+                    rng.normal() + 0.01 // avoid exact zeros among kept
+                }
+            })
+            .collect()
+    }
+
+    #[test]
+    fn compress_roundtrip_property() {
+        prop::check(31, 200, |g| {
+            let n = g.usize_in(0, 512);
+            let rho = g.f32_in(0.0, 1.0) as f64;
+            let dense = random_sparse(g.rng(), n, rho);
+            let c = CompressedTile::compress(&dense);
+            assert_eq!(c.decompress(), dense);
+            assert_eq!(c.nnz(), dense.iter().filter(|&&v| v != 0.0).count());
+        });
+    }
+
+    #[test]
+    fn aligned_products_match_dense_products() {
+        prop::check(32, 200, |g| {
+            let n = g.usize_in(1, 256);
+            let wd = random_sparse(g.rng(), n, 0.5);
+            let ad = random_sparse(g.rng(), n, 0.5);
+            let w = CompressedTile::compress(&wd);
+            let a = CompressedTile::compress(&ad);
+            let pair = precompute_align(&w, &a);
+            // sum of aligned products == dense dot product
+            let sparse_dot: f64 = pair
+                .w
+                .iter()
+                .zip(&pair.a)
+                .map(|(&x, &y)| (x as f64) * (y as f64))
+                .sum();
+            let dense_dot: f64 = wd
+                .iter()
+                .zip(&ad)
+                .map(|(&x, &y)| (x as f64) * (y as f64))
+                .sum();
+            assert!((sparse_dot - dense_dot).abs() < 1e-4,
+                    "{sparse_dot} vs {dense_dot}");
+        });
+    }
+
+    #[test]
+    fn out_mask_is_and_of_keeps() {
+        let w = CompressedTile::compress(&[1.0, 0.0, 2.0, 0.0]);
+        let a = CompressedTile::compress(&[3.0, 4.0, 0.0, 0.0]);
+        let pair = precompute_align(&w, &a);
+        assert_eq!(pair.out_mask, vec![false, true, true, true]);
+        assert_eq!(pair.w, vec![1.0]);
+        assert_eq!(pair.a, vec![3.0]);
+    }
+
+    #[test]
+    fn effectual_macs_never_exceed_min_nnz() {
+        prop::check(33, 100, |g| {
+            let n = g.usize_in(1, 128);
+            let w = CompressedTile::compress(&random_sparse(g.rng(), n, 0.3));
+            let a = CompressedTile::compress(&random_sparse(g.rng(), n, 0.7));
+            let eff = effectual_macs(&w, &a);
+            assert!(eff <= w.nnz().min(a.nnz()));
+        });
+    }
+
+    #[test]
+    fn effectual_fraction_closed_form_tracks_measurement() {
+        let mut rng = Rng::new(99);
+        let n = 200_000;
+        let w = CompressedTile::compress(&random_sparse(&mut rng, n, 0.5));
+        let a = CompressedTile::compress(&random_sparse(&mut rng, n, 0.3));
+        let measured = effectual_macs(&w, &a) as f64 / n as f64;
+        let predicted = effectual_fraction(0.5, 0.3);
+        assert!((measured - predicted).abs() < 0.01,
+                "measured {measured:.3} predicted {predicted:.3}");
+    }
+
+    #[test]
+    fn stored_bytes_accounts_mask_overhead() {
+        let c = CompressedTile::compress(&[0.0; 64]);
+        assert_eq!(c.stored_bytes(2.5), 8.0); // only the mask
+        let d = CompressedTile::compress(&[1.0; 64]);
+        assert_eq!(d.stored_bytes(2.5), 64.0 * 2.5 + 8.0);
+    }
+}

@@ -1,0 +1,162 @@
+//! Simulation statistics: stall counters, energy ledger, utilization and
+//! power traces (Figs. 16/17), and the final report structure.
+
+use crate::util::json::Json;
+
+/// Energy ledger in picojoules, split by subsystem (Fig. 18(b) axes plus
+/// buffers/memory for Table III power rows).
+#[derive(Clone, Debug, Default)]
+pub struct EnergyLedger {
+    pub mac_pj: f64,
+    pub softmax_pj: f64,
+    pub layernorm_pj: f64,
+    pub dynatran_pj: f64,
+    pub sparsity_pj: f64,
+    pub buffer_pj: f64,
+    pub memory_pj: f64,
+    pub leakage_pj: f64,
+}
+
+impl EnergyLedger {
+    pub fn compute_pj(&self) -> f64 {
+        self.mac_pj + self.softmax_pj + self.layernorm_pj + self.dynatran_pj
+            + self.sparsity_pj
+    }
+
+    pub fn total_pj(&self) -> f64 {
+        self.compute_pj() + self.buffer_pj + self.memory_pj + self.leakage_pj
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("mac_pj", Json::num(self.mac_pj)),
+            ("softmax_pj", Json::num(self.softmax_pj)),
+            ("layernorm_pj", Json::num(self.layernorm_pj)),
+            ("dynatran_pj", Json::num(self.dynatran_pj)),
+            ("sparsity_pj", Json::num(self.sparsity_pj)),
+            ("buffer_pj", Json::num(self.buffer_pj)),
+            ("memory_pj", Json::num(self.memory_pj)),
+            ("leakage_pj", Json::num(self.leakage_pj)),
+            ("total_pj", Json::num(self.total_pj())),
+        ])
+    }
+}
+
+/// Stall counters (Fig. 16 semantics, Sec. III-B8).
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct StallCounters {
+    /// Compute op ready but all modules of its kind busy.
+    pub compute_resource: u64,
+    /// Compute op ready but an operand not yet buffered.
+    pub compute_operand: u64,
+    /// Memory load blocked on buffer space (nothing evictable).
+    pub memory_buffer_full: u64,
+    /// Memory store blocked on an unfinished compute op.
+    pub memory_pending_compute: u64,
+}
+
+impl StallCounters {
+    pub fn compute_total(&self) -> u64 {
+        self.compute_resource + self.compute_operand
+    }
+
+    pub fn memory_total(&self) -> u64 {
+        self.memory_buffer_full + self.memory_pending_compute
+    }
+}
+
+/// One sample of the per-cycle trace (Fig. 17): utilization of each
+/// resource class, buffer occupancy, and instantaneous power.
+#[derive(Clone, Copy, Debug)]
+pub struct TraceSample {
+    pub cycle: u64,
+    pub mac_lanes_active: usize,
+    pub softmax_active: usize,
+    pub layernorm_active: usize,
+    pub act_buffer_frac: f64,
+    pub weight_buffer_frac: f64,
+    pub dynamic_power_w: f64,
+    pub leakage_power_w: f64,
+}
+
+/// Trace recorder with fixed-width cycle bins to bound memory.
+#[derive(Debug)]
+pub struct Trace {
+    pub bin_cycles: u64,
+    pub samples: Vec<TraceSample>,
+}
+
+impl Trace {
+    pub fn new(bin_cycles: u64) -> Trace {
+        assert!(bin_cycles > 0);
+        Trace { bin_cycles, samples: Vec::new() }
+    }
+
+    /// Record a sample if `cycle` entered a new bin.
+    pub fn maybe_record(&mut self, sample: TraceSample) {
+        match self.samples.last() {
+            Some(last) if sample.cycle / self.bin_cycles == last.cycle / self.bin_cycles => {}
+            _ => self.samples.push(sample),
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::arr(self.samples.iter().map(|s| {
+            Json::obj(vec![
+                ("cycle", Json::num(s.cycle as f64)),
+                ("mac", Json::num(s.mac_lanes_active as f64)),
+                ("softmax", Json::num(s.softmax_active as f64)),
+                ("layernorm", Json::num(s.layernorm_active as f64)),
+                ("act_buf", Json::num(s.act_buffer_frac)),
+                ("w_buf", Json::num(s.weight_buffer_frac)),
+                ("dyn_w", Json::num(s.dynamic_power_w)),
+                ("leak_w", Json::num(s.leakage_power_w)),
+            ])
+        }))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ledger_totals() {
+        let l = EnergyLedger {
+            mac_pj: 10.0,
+            softmax_pj: 5.0,
+            buffer_pj: 1.0,
+            memory_pj: 2.0,
+            leakage_pj: 0.5,
+            ..Default::default()
+        };
+        assert_eq!(l.compute_pj(), 15.0);
+        assert_eq!(l.total_pj(), 18.5);
+    }
+
+    #[test]
+    fn trace_bins_dedupe() {
+        let mut t = Trace::new(100);
+        for c in [0u64, 5, 50, 150, 160, 320] {
+            t.maybe_record(TraceSample {
+                cycle: c,
+                mac_lanes_active: 0,
+                softmax_active: 0,
+                layernorm_active: 0,
+                act_buffer_frac: 0.0,
+                weight_buffer_frac: 0.0,
+                dynamic_power_w: 0.0,
+                leakage_power_w: 0.0,
+            });
+        }
+        let cycles: Vec<u64> = t.samples.iter().map(|s| s.cycle).collect();
+        assert_eq!(cycles, vec![0, 150, 320]);
+    }
+
+    #[test]
+    fn ledger_json_has_total() {
+        let l = EnergyLedger { mac_pj: 3.0, ..Default::default() };
+        let j = l.to_json();
+        assert_eq!(j.get("total_pj").unwrap().as_f64(), Some(3.0));
+    }
+}

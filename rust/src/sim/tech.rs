@@ -1,0 +1,210 @@
+//! 14nm FinFET technology model: per-module area, dynamic energy and
+//! leakage constants.
+//!
+//! The paper obtains these from SystemVerilog RTL synthesized with Design
+//! Compiler on a 14nm library, buffers via FinCACTI, and main memory via
+//! NVSim/NVMain, then plugs the constants into a Python cycle-accurate
+//! simulator.  We perform the same plug-in with constants *back-fitted to
+//! the paper's published aggregates* (Table III totals, Fig. 18
+//! breakdowns, Table II bandwidths), so regenerating Table III / Fig. 18
+//! from these constants reproduces the paper's rows — see the derivations
+//! on each constant.  DESIGN.md §Substitutions records this substitution.
+
+use super::config::AcceleratorConfig;
+
+// ---------------------------------------------------------------------------
+// Area (mm^2), derived from Edge totals: 55.12 mm^2 split per Fig. 18(a):
+// MAC lanes 19.2% over 1024 lanes, softmax 44.7% over 256 modules,
+// layer-norm 10.3% over 64 modules, sparsity pre+post 15.1% over 64 PEs,
+// "others" (DynaTran + dataflow + DMA control) 10.7% over 64 PEs.
+// ---------------------------------------------------------------------------
+
+/// Area of one MAC lane (16 multipliers + adder tree + GeLU), mm^2.
+pub const MAC_LANE_AREA_MM2: f64 = 55.12 * 0.192 / 1024.0;
+/// Area of one softmax module, mm^2 (dominates: parallel exp + tile sum).
+pub const SOFTMAX_AREA_MM2: f64 = 55.12 * 0.447 / 256.0;
+/// Area of one layer-norm module, mm^2.
+pub const LAYERNORM_AREA_MM2: f64 = 55.12 * 0.103 / 64.0;
+/// Pre+post sparsity modules per PE, mm^2.
+pub const SPARSITY_AREA_MM2_PER_PE: f64 = 55.12 * 0.151 / 64.0;
+/// DynaTran module + dataflow mux + DMA slice per PE, mm^2.
+pub const OTHER_AREA_MM2_PER_PE: f64 = 55.12 * 0.107 / 64.0;
+
+/// On-chip SRAM buffer area per MB (FinCACTI-scale 14nm SRAM ~0.35
+/// mm^2/Mb incl. periphery => ~2.8 mm^2/MB; buffers are excluded from the
+/// paper's compute-area breakdown so this only feeds chip-level summaries).
+pub const BUFFER_AREA_MM2_PER_MB: f64 = 2.8;
+
+// ---------------------------------------------------------------------------
+// Dynamic energy (pJ), derived from Edge power: PEs draw 3.79 W at 700MHz
+// under BERT-Tiny; Fig. 18(b) splits compute power as MAC 39.3%,
+// softmax 49.9%, layer-norm + sparsity + rest 10.8%.  At near-full
+// utilization: MAC lanes 3.79*0.393 W / (1024 lanes * 0.7e9 cycle/s)
+// = 2.08 pJ per lane-cycle = 0.130 pJ per 20-bit MAC (M=16/lane).
+// ---------------------------------------------------------------------------
+
+/// Energy of one fixed-point (IL+FL = 20-bit) multiply-accumulate, pJ.
+pub const MAC_PJ: f64 = 0.130;
+/// Softmax module energy per element processed, pJ.  Calibrated at the
+/// *workload* level: on BERT-Tiny (seq 512, batch 4) the softmax modules
+/// process ~4.2M elements against ~310M effectual MACs, and Fig. 18(b)
+/// reports softmax at 49.9% of compute power vs MAC 39.3% — so each
+/// softmax element must cost ~1.27 * (310M/4.2M) * MAC_PJ ~= 12 pJ.
+/// The fixed-point exponential unit is genuinely that expensive, which
+/// is also why softmax modules take 44.7% of Edge's area (Fig. 18(a)).
+pub const SOFTMAX_PJ_PER_ELEM: f64 = 12.0;
+/// Layer-norm energy per element, pJ (mean/var/rsqrt/affine; the rsqrt
+/// unit dominates — LN modules take 10.3% of area for 64 instances).
+pub const LAYERNORM_PJ_PER_ELEM: f64 = 1.0;
+/// DynaTran comparator energy per element, pJ (one compare + mask write;
+/// the "negligible overhead" claim in silicon terms).
+pub const DYNATRAN_PJ_PER_ELEM: f64 = 0.018;
+/// Pre/post-compute sparsity module energy per element (AND/XOR gates +
+/// zero-collapsing shifter stage), pJ.  Bit-level mask logic: an order
+/// of magnitude below a 20-bit MAC, so skipping ineffectual MACs is a
+/// clear net win at the tile level (Table IV row 4's 1.9x energy gap).
+pub const SPARSITY_PJ_PER_ELEM: f64 = 0.012;
+/// On-chip buffer read/write energy per byte, pJ (FinCACTI-scale SRAM;
+/// Edge buffer power 0.08 W at BERT-Tiny traffic).
+pub const BUFFER_PJ_PER_BYTE: f64 = 0.35;
+/// GeLU unit energy per element (piecewise-poly eval at lane output), pJ.
+pub const GELU_PJ_PER_ELEM: f64 = 0.12;
+
+// ---------------------------------------------------------------------------
+// Leakage (W).  Fig. 17(a) shows leakage is a small fraction thanks to
+// power-gating of unused modules; modules leak only while powered on.
+// ---------------------------------------------------------------------------
+
+/// Leakage per powered-on MAC lane, W.
+pub const MAC_LANE_LEAK_W: f64 = 2.0e-4;
+/// Leakage per powered-on softmax module, W.
+pub const SOFTMAX_LEAK_W: f64 = 8.0e-4;
+/// Leakage per powered-on layer-norm module, W.
+pub const LAYERNORM_LEAK_W: f64 = 6.0e-4;
+/// Buffer leakage per MB (SRAM cannot be fully gated while holding data).
+pub const BUFFER_LEAK_W_PER_MB: f64 = 2.0e-3;
+
+/// Fixed-point element width in bytes (IL=4 + FL=16 bits = 2.5 B).
+pub const ELEM_BYTES: f64 = 2.5;
+
+/// Per-design-point area summary (Table III area column + Fig. 18(a)).
+#[derive(Clone, Debug)]
+pub struct AreaBreakdown {
+    pub mac_lanes_mm2: f64,
+    pub softmax_mm2: f64,
+    pub layernorm_mm2: f64,
+    pub sparsity_mm2: f64,
+    pub other_mm2: f64,
+    pub buffers_mm2: f64,
+    pub memory_mm2: f64,
+}
+
+impl AreaBreakdown {
+    pub fn compute(cfg: &AcceleratorConfig) -> AreaBreakdown {
+        // Area counts physical modules (LP mode gates them but they exist).
+        let lanes = cfg.pes * cfg.mac_lanes_per_pe;
+        let smx = cfg.pes * cfg.softmax_per_pe;
+        let ln = cfg.pes * cfg.layernorm_per_pe;
+        let mb = cfg.total_buffer_bytes() as f64 / (1 << 20) as f64;
+        AreaBreakdown {
+            mac_lanes_mm2: lanes as f64 * MAC_LANE_AREA_MM2,
+            softmax_mm2: smx as f64 * SOFTMAX_AREA_MM2,
+            layernorm_mm2: ln as f64 * LAYERNORM_AREA_MM2,
+            sparsity_mm2: cfg.pes as f64 * SPARSITY_AREA_MM2_PER_PE,
+            other_mm2: cfg.pes as f64 * OTHER_AREA_MM2_PER_PE,
+            buffers_mm2: mb * BUFFER_AREA_MM2_PER_MB,
+            // monolithic-3D RRAM stacks above the logic tier (two memory
+            // tiers, Sec. IV-B) — zero footprint; DRAM is off-chip.
+            memory_mm2: 0.0,
+        }
+    }
+
+    /// Compute-logic area (the paper's Fig. 18a universe).
+    pub fn compute_mm2(&self) -> f64 {
+        self.mac_lanes_mm2
+            + self.softmax_mm2
+            + self.layernorm_mm2
+            + self.sparsity_mm2
+            + self.other_mm2
+    }
+
+    /// Total die area including buffers.
+    pub fn total_mm2(&self) -> f64 {
+        self.compute_mm2() + self.buffers_mm2 + self.memory_mm2
+    }
+}
+
+/// Stillmaker–Baas-style technology scaling of throughput/energy between
+/// nodes, used to normalize baseline platforms to 14nm (Sec. IV-C).
+/// Returns (delay_scale, energy_scale) to convert *from* `from_nm` *to*
+/// 14nm: divide latency by `delay_scale`, divide energy by `energy_scale`.
+pub fn scale_to_14nm(from_nm: f64) -> (f64, f64) {
+    // Inverter-delay and switching-energy proxies; near-linear in feature
+    // size over 28..7nm per the scaling-equations paper.
+    let delay = from_nm / 14.0;
+    let energy = (from_nm / 14.0).powi(2);
+    (delay, energy)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::config::AcceleratorConfig;
+
+    #[test]
+    fn edge_compute_area_matches_fig18() {
+        let a = AreaBreakdown::compute(&AcceleratorConfig::edge());
+        let total = a.compute_mm2();
+        assert!((total - 55.12).abs() < 0.5, "total {total:.2}");
+        // Fig. 18(a) shares must be reproduced by construction.
+        assert!((a.mac_lanes_mm2 / total - 0.192).abs() < 0.01);
+        assert!((a.softmax_mm2 / total - 0.447).abs() < 0.01);
+        assert!((a.layernorm_mm2 / total - 0.103).abs() < 0.01);
+    }
+
+    #[test]
+    fn server_area_is_paper_scale() {
+        // Table III: 1950.95 mm^2 for Server.  Our per-module constants
+        // must land within 25% (Server's softmax/PE ratio differs from
+        // Edge, so exact equality is not expected).
+        let a = AreaBreakdown::compute(&AcceleratorConfig::server());
+        let total = a.compute_mm2();
+        assert!(
+            (1400.0..2500.0).contains(&total),
+            "server compute area {total:.0} mm^2"
+        );
+    }
+
+    #[test]
+    fn mac_energy_reproduces_edge_pe_power() {
+        // 1024 lanes * 16 MACs * 0.7 GHz * MAC_PJ ~= 3.79 W * 39.3%.
+        let w = 1024.0 * 16.0 * 0.7e9 * MAC_PJ * 1e-12;
+        assert!((w - 3.79 * 0.393).abs() < 0.1, "w {w:.2}");
+    }
+
+    #[test]
+    fn softmax_energy_reproduces_fig18b_share() {
+        // Workload-level calibration: BERT-Tiny @ seq 512, batch 4.
+        // softmax elements: layers * heads * batch * seq^2
+        let smx_elems = 2.0 * 2.0 * 4.0 * 512.0 * 512.0;
+        // effectual MACs: ~1.24G dense * 0.25 effectual at the paper's
+        // 50%/50% operating point
+        let eff_macs = 1.24e9 * 0.25;
+        let ratio =
+            (smx_elems * SOFTMAX_PJ_PER_ELEM) / (eff_macs * MAC_PJ);
+        // Fig. 18(b): softmax 49.9% vs MAC 39.3% -> ratio ~1.27
+        assert!(
+            (0.9..1.7).contains(&ratio),
+            "softmax/MAC energy ratio {ratio:.2} (paper ~1.27)"
+        );
+    }
+
+    #[test]
+    fn scaling_to_14nm() {
+        let (d, e) = scale_to_14nm(28.0);
+        assert!((d - 2.0).abs() < 1e-9);
+        assert!((e - 4.0).abs() < 1e-9);
+        let (d14, e14) = scale_to_14nm(14.0);
+        assert_eq!((d14, e14), (1.0, 1.0));
+    }
+}

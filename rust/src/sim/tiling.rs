@@ -1,0 +1,178 @@
+//! Tiled matrix-multiplication decomposition (paper Sec. III-B1, Fig. 3).
+//!
+//! A (possibly batched) matmul `W[b, i, k] x A[b, k, j]` is cut into tiles
+//! of shape `(tile_b, tile_i, tile_k) x (tile_b, tile_k, tile_j)`; each
+//! tile pair is one unit of work for a MAC lane.  Elementwise ops
+//! (softmax rows, layer-norm rows) tile along rows only.
+
+use crate::model::ops::OpDims;
+
+/// Tile-grid geometry of one tiled op.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct TileGrid {
+    /// Grid extents along b, i, j, k (elementwise ops use k = 1).
+    pub nb: usize,
+    pub ni: usize,
+    pub nj: usize,
+    pub nk: usize,
+    /// Scalar multiply(-accumulate)s per full tile.
+    pub macs_per_tile: usize,
+    /// Output elements per (b, i, j) tile (accumulated over k).
+    pub out_elems_per_tile: usize,
+    /// Operand tile sizes in elements.
+    pub w_tile_elems: usize,
+    pub a_tile_elems: usize,
+}
+
+impl TileGrid {
+    /// Total tile-pair work units (each visited once per k-step).
+    pub fn total_tiles(&self) -> usize {
+        self.nb * self.ni * self.nj * self.nk
+    }
+
+    /// Output tiles (accumulations collapse the k axis).
+    pub fn output_tiles(&self) -> usize {
+        self.nb * self.ni * self.nj
+    }
+}
+
+/// Ceiling division.
+#[inline]
+pub fn ceil_div(a: usize, b: usize) -> usize {
+    debug_assert!(b > 0);
+    a.div_ceil(b)
+}
+
+/// Tile a matmul of `m x k @ k x n` (batch folded into m by the op-graph
+/// builder) with tile sizes `(tb, ti, tj, tk)`.
+pub fn tile_matmul(
+    m: usize,
+    k: usize,
+    n: usize,
+    tb: usize,
+    ti: usize,
+    tj: usize,
+    tk: usize,
+) -> TileGrid {
+    // batch is folded into rows upstream; tb retained for generality.
+    let nb = 1usize.max(tb.min(1));
+    TileGrid {
+        nb,
+        ni: ceil_div(m, ti),
+        nj: ceil_div(n, tj),
+        nk: ceil_div(k, tk),
+        macs_per_tile: tb.max(1) * ti * tj * tk,
+        out_elems_per_tile: tb.max(1) * ti * tj,
+        w_tile_elems: tb.max(1) * ti * tk,
+        a_tile_elems: tb.max(1) * tk * tj,
+    }
+}
+
+/// Tile a *batched* tensor multiplication `W[b, m, k] x A[b, k, n]`
+/// keeping the batch axis as a real tile loop (tile_b = 1 per the
+/// paper's Table II choice) — the form the Fig. 15 dataflow study uses.
+pub fn tile_matmul_batched(
+    b: usize,
+    m: usize,
+    k: usize,
+    n: usize,
+    ti: usize,
+    tj: usize,
+    tk: usize,
+) -> TileGrid {
+    TileGrid {
+        nb: b.max(1),
+        ni: ceil_div(m, ti),
+        nj: ceil_div(n, tj),
+        nk: ceil_div(k, tk),
+        macs_per_tile: ti * tj * tk,
+        out_elems_per_tile: ti * tj,
+        w_tile_elems: ti * tk,
+        a_tile_elems: tk * tj,
+    }
+}
+
+/// Tile an elementwise / row-wise op of `m x n` into row blocks of
+/// `ti` rows (each block is one softmax/LN module work unit covering the
+/// full row, matching the modules' full-tile parallel reductions).
+pub fn tile_rows(m: usize, n: usize, ti: usize) -> TileGrid {
+    TileGrid {
+        nb: 1,
+        ni: ceil_div(m, ti),
+        nj: 1,
+        nk: 1,
+        macs_per_tile: ti * n,
+        out_elems_per_tile: ti * n,
+        w_tile_elems: 0,
+        a_tile_elems: ti * n,
+    }
+}
+
+/// Tile any [`OpDims`] under the given tile sizes.
+pub fn tile_op(dims: &OpDims, tb: usize, ti: usize, tj: usize, tk: usize) -> TileGrid {
+    match *dims {
+        OpDims::MatMul { m, k, n } => tile_matmul(m, k, n, tb, ti, tj, tk),
+        OpDims::Elem { m, n } => tile_rows(m, n, ti),
+        OpDims::Load { elems } => TileGrid {
+            nb: 1,
+            ni: ceil_div(elems, ti * tj),
+            nj: 1,
+            nk: 1,
+            macs_per_tile: 0,
+            out_elems_per_tile: ti * tj,
+            w_tile_elems: ti * tj,
+            a_tile_elems: 0,
+        },
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    #[test]
+    fn paper_example_tiling() {
+        // C-OP-1 for BERT-Tiny batch 4, seq 512: 2048 x 128 @ 128 x 64.
+        let g = tile_matmul(2048, 128, 64, 1, 16, 16, 16);
+        assert_eq!((g.ni, g.nj, g.nk), (128, 4, 8));
+        assert_eq!(g.total_tiles(), 128 * 4 * 8);
+        assert_eq!(g.macs_per_tile, 16 * 16 * 16);
+    }
+
+    #[test]
+    fn ragged_edges_round_up() {
+        let g = tile_matmul(100, 30, 17, 1, 16, 16, 16);
+        assert_eq!((g.ni, g.nj, g.nk), (7, 2, 2));
+    }
+
+    #[test]
+    fn row_tiling_covers_all_rows() {
+        let g = tile_rows(2048, 512, 16);
+        assert_eq!(g.ni, 128);
+        assert_eq!(g.output_tiles(), 128);
+    }
+
+    #[test]
+    fn tile_work_covers_dense_macs() {
+        // Property: tiles * macs_per_tile >= exact macs (padding only adds).
+        prop::check(11, 200, |g| {
+            let m = g.usize_in(1, 300);
+            let k = g.usize_in(1, 300);
+            let n = g.usize_in(1, 300);
+            let grid = tile_matmul(m, k, n, 1, 16, 16, 16);
+            let covered = grid.total_tiles() * grid.macs_per_tile;
+            assert!(covered >= m * k * n);
+            // ...and padding is bounded by one tile per axis.
+            let bound = (m + 16) * (k + 16) * (n + 16);
+            assert!(covered <= bound, "covered {covered} bound {bound}");
+        });
+    }
+
+    #[test]
+    fn load_tiling_counts_chunks() {
+        let dims = OpDims::Load { elems: 10_000 };
+        let g = tile_op(&dims, 1, 16, 16, 16);
+        assert_eq!(g.ni, ceil_div(10_000, 256));
+    }
+}

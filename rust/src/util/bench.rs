@@ -1,0 +1,82 @@
+//! Bench timing harness (criterion is not vendored in this image).
+//!
+//! Used by every `benches/*.rs` target: warms up, runs a fixed wall-clock
+//! budget of iterations, and reports min/median/mean in the same units
+//! criterion would.  Results also feed the EXPERIMENTS.md §Perf log.
+
+use std::time::{Duration, Instant};
+
+/// Timing summary of one benchmark.
+#[derive(Debug, Clone)]
+pub struct Sample {
+    pub name: String,
+    pub iters: usize,
+    pub min: Duration,
+    pub median: Duration,
+    pub mean: Duration,
+}
+
+impl Sample {
+    /// Iterations per second based on the median.
+    pub fn per_sec(&self) -> f64 {
+        1.0 / self.median.as_secs_f64()
+    }
+}
+
+impl std::fmt::Display for Sample {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "{:<44} median {:>12?}  mean {:>12?}  ({} iters)",
+            self.name, self.median, self.mean, self.iters
+        )
+    }
+}
+
+/// Run `f` repeatedly for roughly `budget` after `warmup` iterations and
+/// return per-iteration statistics.  `f` should return a value that the
+/// harness black-boxes to keep the optimizer honest.
+pub fn bench<T, F: FnMut() -> T>(name: &str, warmup: usize, budget: Duration, mut f: F) -> Sample {
+    for _ in 0..warmup {
+        std::hint::black_box(f());
+    }
+    let mut times = Vec::new();
+    let start = Instant::now();
+    while start.elapsed() < budget || times.is_empty() {
+        let t0 = Instant::now();
+        std::hint::black_box(f());
+        times.push(t0.elapsed());
+        if times.len() >= 10_000 {
+            break;
+        }
+    }
+    times.sort_unstable();
+    let min = times[0];
+    let median = times[times.len() / 2];
+    let mean = times.iter().sum::<Duration>() / times.len() as u32;
+    Sample { name: name.to_string(), iters: times.len(), min, median, mean }
+}
+
+/// Convenience: bench with the default 3-iteration warmup and 1s budget.
+pub fn quick<T, F: FnMut() -> T>(name: &str, f: F) -> Sample {
+    bench(name, 3, Duration::from_secs(1), f)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_reports_sane_times() {
+        let s = bench("spin", 1, Duration::from_millis(50), || {
+            let mut acc = 0u64;
+            for i in 0..1000 {
+                acc = acc.wrapping_add(i);
+            }
+            acc
+        });
+        assert!(s.iters > 0);
+        assert!(s.min <= s.median && s.median >= Duration::ZERO);
+        assert!(s.per_sec() > 0.0);
+    }
+}

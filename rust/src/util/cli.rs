@@ -1,0 +1,127 @@
+//! Tiny command-line argument parser (clap is not vendored).
+//!
+//! Supports the subcommand + `--flag value` / `--flag` / positional style
+//! used by the `acceltran` binary and the bench harnesses.
+
+use std::collections::BTreeMap;
+
+/// Parsed arguments: a subcommand, `--key value` options, bare `--switch`
+/// flags, and positionals.
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub options: BTreeMap<String, String>,
+    pub switches: Vec<String>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of argument strings (without argv[0]).
+    /// The first non-flag token becomes the subcommand when
+    /// `with_subcommand` is set.
+    pub fn parse<I: IntoIterator<Item = String>>(argv: I, with_subcommand: bool) -> Args {
+        let mut out = Args::default();
+        let mut iter = argv.into_iter().peekable();
+        while let Some(tok) = iter.next() {
+            if let Some(name) = tok.strip_prefix("--") {
+                if let Some((k, v)) = name.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if iter
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = iter.next().unwrap();
+                    out.options.insert(name.to_string(), v);
+                } else {
+                    out.switches.push(name.to_string());
+                }
+            } else if with_subcommand && out.subcommand.is_none() {
+                out.subcommand = Some(tok);
+            } else {
+                out.positional.push(tok);
+            }
+        }
+        out
+    }
+
+    /// Parse the process arguments.
+    pub fn from_env(with_subcommand: bool) -> Args {
+        Args::parse(std::env::args().skip(1), with_subcommand)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.options.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).unwrap_or(default)
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> usize {
+        self.get(key)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{key} expects an integer, got '{v}'")))
+            .unwrap_or(default)
+    }
+
+    pub fn get_u64(&self, key: &str, default: u64) -> u64 {
+        self.get(key)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{key} expects an integer, got '{v}'")))
+            .unwrap_or(default)
+    }
+
+    pub fn get_f64(&self, key: &str, default: f64) -> f64 {
+        self.get(key)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{key} expects a number, got '{v}'")))
+            .unwrap_or(default)
+    }
+
+    pub fn has(&self, switch: &str) -> bool {
+        self.switches.iter().any(|s| s == switch)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from), true)
+    }
+
+    #[test]
+    fn subcommand_and_options() {
+        let a = parse("simulate --model bert-tiny --pes 64 --verbose");
+        assert_eq!(a.subcommand.as_deref(), Some("simulate"));
+        assert_eq!(a.get("model"), Some("bert-tiny"));
+        assert_eq!(a.get_usize("pes", 0), 64);
+        assert!(a.has("verbose"));
+    }
+
+    #[test]
+    fn equals_form() {
+        let a = parse("run --tau=0.05");
+        assert_eq!(a.get_f64("tau", 0.0), 0.05);
+    }
+
+    #[test]
+    fn positionals() {
+        let a = parse("serve req1 req2");
+        assert_eq!(a.positional, vec!["req1", "req2"]);
+    }
+
+    #[test]
+    fn defaults() {
+        let a = parse("x");
+        assert_eq!(a.get_or("missing", "d"), "d");
+        assert_eq!(a.get_usize("n", 3), 3);
+        assert!(!a.has("quiet"));
+    }
+
+    #[test]
+    fn switch_before_option() {
+        let a = parse("cmd --fast --n 4");
+        assert!(a.has("fast"));
+        assert_eq!(a.get_usize("n", 0), 4);
+    }
+}

@@ -1,0 +1,13 @@
+//! Zero-dependency substrates used across the crate.
+//!
+//! The build image vendors only `xla`/`anyhow`/`thiserror`, so the usual
+//! ecosystem crates (rand, serde, clap, criterion, proptest) are
+//! reimplemented here at the scale this project needs — each one small,
+//! tested, and documented.
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod prop;
+pub mod rng;
+pub mod table;

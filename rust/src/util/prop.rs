@@ -1,0 +1,113 @@
+//! Minimal property-based testing harness (proptest is not vendored).
+//!
+//! `check(seed, cases, |g| { ... })` runs a closure over `cases` randomized
+//! inputs drawn from a [`Gen`]; on failure it reports the case index and
+//! the per-case seed so the exact input can be replayed with
+//! `Gen::replay`.
+
+use super::rng::Rng;
+
+/// Randomized input source handed to each property case.
+pub struct Gen {
+    rng: Rng,
+    /// Per-case seed, printed on failure for replay.
+    pub case_seed: u64,
+}
+
+impl Gen {
+    /// Rebuild the generator a failing case reported.
+    pub fn replay(case_seed: u64) -> Gen {
+        Gen { rng: Rng::new(case_seed), case_seed }
+    }
+
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        assert!(lo <= hi);
+        lo + self.rng.index(hi - lo + 1)
+    }
+
+    pub fn u64(&mut self) -> u64 {
+        self.rng.next_u64()
+    }
+
+    pub fn f32_in(&mut self, lo: f32, hi: f32) -> f32 {
+        self.rng.uniform_range(lo, hi)
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.chance(0.5)
+    }
+
+    pub fn normal_vec(&mut self, n: usize, std: f32) -> Vec<f32> {
+        self.rng.normal_vec(n, std)
+    }
+
+    pub fn pick<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        self.rng.choose(xs)
+    }
+
+    pub fn rng(&mut self) -> &mut Rng {
+        &mut self.rng
+    }
+}
+
+/// Run `cases` property checks.  The property panics (e.g. via `assert!`)
+/// to signal failure; this wrapper enriches the panic with replay info.
+pub fn check<F: FnMut(&mut Gen)>(seed: u64, cases: usize, mut property: F) {
+    let mut root = Rng::new(seed);
+    for case in 0..cases {
+        let case_seed = root.next_u64();
+        let mut g = Gen::replay(case_seed);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            property(&mut g)
+        }));
+        if let Err(payload) = result {
+            let msg = payload
+                .downcast_ref::<String>()
+                .map(|s| s.as_str())
+                .or_else(|| payload.downcast_ref::<&str>().copied())
+                .unwrap_or("<non-string panic>");
+            panic!(
+                "property failed on case {case}/{cases} (replay with \
+                 Gen::replay({case_seed})): {msg}"
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut n = 0;
+        check(1, 50, |g| {
+            let x = g.usize_in(0, 10);
+            assert!(x <= 10);
+            n += 1;
+        });
+        assert_eq!(n, 50);
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn failing_property_reports_case() {
+        check(2, 100, |g| {
+            let x = g.usize_in(0, 100);
+            assert!(x < 90, "x={x}");
+        });
+    }
+
+    #[test]
+    fn replay_reproduces_input() {
+        let mut seed_and_val = None;
+        check(3, 5, |g| {
+            if seed_and_val.is_none() {
+                seed_and_val = Some((g.case_seed, g.u64()));
+            }
+        });
+        let (seed, val) = seed_and_val.unwrap();
+        let mut g = Gen::replay(seed);
+        assert_eq!(g.u64(), val);
+    }
+}

@@ -1,0 +1,125 @@
+//! ASCII table printer for paper-style result tables.
+
+/// Column-aligned table with a header row, printed in the same row/column
+//  style the paper's tables use.
+#[derive(Debug, Default)]
+pub struct Table {
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new<S: Into<String>, I: IntoIterator<Item = S>>(header: I) -> Table {
+        Table {
+            header: header.into_iter().map(Into::into).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row<S: Into<String>, I: IntoIterator<Item = S>>(&mut self, cells: I) -> &mut Self {
+        let cells: Vec<String> = cells.into_iter().map(Into::into).collect();
+        assert_eq!(
+            cells.len(),
+            self.header.len(),
+            "row width {} != header width {}",
+            cells.len(),
+            self.header.len()
+        );
+        self.rows.push(cells);
+        self
+    }
+
+    pub fn render(&self) -> String {
+        let ncols = self.header.len();
+        let mut widths: Vec<usize> = self.header.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, cell) in row.iter().enumerate() {
+                widths[i] = widths[i].max(cell.len());
+            }
+        }
+        let sep = {
+            let mut s = String::from("+");
+            for w in &widths {
+                s.push_str(&"-".repeat(w + 2));
+                s.push('+');
+            }
+            s
+        };
+        let fmt_row = |cells: &[String]| {
+            let mut s = String::from("|");
+            for i in 0..ncols {
+                s.push(' ');
+                s.push_str(&cells[i]);
+                s.push_str(&" ".repeat(widths[i] - cells[i].len() + 1));
+                s.push('|');
+            }
+            s
+        };
+        let mut out = String::new();
+        out.push_str(&sep);
+        out.push('\n');
+        out.push_str(&fmt_row(&self.header));
+        out.push('\n');
+        out.push_str(&sep);
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row));
+            out.push('\n');
+        }
+        out.push_str(&sep);
+        out
+    }
+
+    pub fn print(&self) {
+        println!("{}", self.render());
+    }
+}
+
+/// Format a number with engineering suffixes (K/M/G/T) like the paper's
+/// "330K x" style annotations.
+pub fn eng(v: f64) -> String {
+    let (div, suffix) = match v.abs() {
+        x if x >= 1e12 => (1e12, "T"),
+        x if x >= 1e9 => (1e9, "G"),
+        x if x >= 1e6 => (1e6, "M"),
+        x if x >= 1e3 => (1e3, "K"),
+        _ => (1.0, ""),
+    };
+    let scaled = v / div;
+    if scaled.abs() >= 100.0 || scaled.fract() == 0.0 {
+        format!("{scaled:.0}{suffix}")
+    } else if scaled.abs() >= 10.0 {
+        format!("{scaled:.1}{suffix}")
+    } else {
+        format!("{scaled:.2}{suffix}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_aligned() {
+        let mut t = Table::new(["name", "value"]);
+        t.row(["edge", "55.12"]).row(["server-long-name", "1950.95"]);
+        let s = t.render();
+        let lines: Vec<&str> = s.lines().collect();
+        assert!(lines.iter().all(|l| l.len() == lines[0].len()));
+        assert!(s.contains("server-long-name"));
+    }
+
+    #[test]
+    #[should_panic(expected = "row width")]
+    fn rejects_ragged_rows() {
+        Table::new(["a", "b"]).row(["only-one"]);
+    }
+
+    #[test]
+    fn eng_suffixes() {
+        assert_eq!(eng(330_578.0), "331K");
+        assert_eq!(eng(5.73), "5.73");
+        assert_eq!(eng(93_300.0), "93.3K");
+        assert_eq!(eng(372.74e12), "373T");
+    }
+}

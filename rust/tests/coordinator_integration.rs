@@ -1,0 +1,126 @@
+//! Integration: coordinator (batcher + trainer + eval) over the real
+//! PJRT runtime and artifacts.  Requires `make artifacts`.
+
+use std::path::PathBuf;
+
+use acceltran::coordinator::{self, BatchServer};
+use acceltran::nlp::sentiment::SentimentTask;
+use acceltran::runtime::{ParamStore, Runtime};
+
+fn artifacts_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+fn have_artifacts() -> bool {
+    artifacts_dir().join("manifest.json").exists()
+}
+
+macro_rules! require_artifacts {
+    () => {
+        if !have_artifacts() {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        }
+    };
+}
+
+#[test]
+fn batch_server_serves_all_requests() {
+    require_artifacts!();
+    let rt = Runtime::load(artifacts_dir()).unwrap();
+    let vocab = rt.manifest.vocab;
+    let seq = rt.manifest.seq;
+    let classes = rt.manifest.classes;
+    let params = ParamStore::init(&rt.manifest, 0).params_literal();
+    let mut server = BatchServer::new(rt, params);
+    let task = SentimentTask::new(vocab, seq, 3);
+    let ds = task.dataset(50, 1);
+    let mut ids: Vec<u64> = Vec::new();
+    for ex in &ds.examples {
+        ids.push(server.submit(ex.ids.clone(), 0.02));
+    }
+    let responses = server.drain().unwrap();
+    assert_eq!(responses.len(), 50);
+    let mut got: Vec<u64> = responses.iter().map(|r| r.id).collect();
+    got.sort_unstable();
+    assert_eq!(got, ids);
+    for r in &responses {
+        assert_eq!(r.logits.len(), classes);
+        assert!(r.logits.iter().all(|v| v.is_finite()));
+    }
+    assert!(server.stats.dispatches < 50, "batching must group requests");
+}
+
+#[test]
+fn short_training_run_reduces_loss_through_runtime() {
+    require_artifacts!();
+    let mut rt = Runtime::load(artifacts_dir()).unwrap();
+    let vocab = rt.manifest.vocab;
+    let seq = rt.manifest.seq;
+    let task = SentimentTask::new(vocab, seq, 7);
+    let train_ds = task.dataset(256, 1);
+    let mut store = ParamStore::init(&rt.manifest, 0);
+    let log = coordinator::train(
+        &mut rt, &mut store, &train_ds, None, 30, 3e-3, 0, false,
+    )
+    .unwrap();
+    assert_eq!(log.losses.len(), 30);
+    let (head, tail) = log.head_tail_means(5);
+    assert!(
+        tail < head,
+        "loss did not decrease: head {head:.4} tail {tail:.4}"
+    );
+    assert!(log.losses.iter().all(|l| l.is_finite()));
+}
+
+#[test]
+fn eval_sweep_produces_monotone_sparsity() {
+    require_artifacts!();
+    let mut rt = Runtime::load(artifacts_dir()).unwrap();
+    let vocab = rt.manifest.vocab;
+    let seq = rt.manifest.seq;
+    let params = ParamStore::init(&rt.manifest, 0).params_literal();
+    let task = SentimentTask::new(vocab, seq, 7);
+    let ds = task.dataset(64, 2);
+    let curve = coordinator::sweep_dynatran(
+        &mut rt,
+        &params,
+        &ds,
+        &[0.0, 0.03, 0.08],
+        64,
+    )
+    .unwrap();
+    assert_eq!(curve.points.len(), 3);
+    // activation sparsity must be non-decreasing in tau
+    for w in curve.points.windows(2) {
+        assert!(
+            w[1].activation_sparsity >= w[0].activation_sparsity - 1e-6,
+            "{:?}",
+            curve.points
+        );
+    }
+    // accuracy stays in [0, 1]
+    assert!(curve
+        .points
+        .iter()
+        .all(|p| (0.0..=1.0).contains(&p.accuracy)));
+}
+
+#[test]
+fn topk_sweep_runs() {
+    require_artifacts!();
+    let mut rt = Runtime::load(artifacts_dir()).unwrap();
+    let vocab = rt.manifest.vocab;
+    let seq = rt.manifest.seq;
+    let params = ParamStore::init(&rt.manifest, 0).params_literal();
+    let task = SentimentTask::new(vocab, seq, 7);
+    let ds = task.dataset(64, 2);
+    let curve =
+        coordinator::sweep_topk(&mut rt, &params, &ds, &[1.0, 0.5, 0.25], 64)
+            .unwrap();
+    assert_eq!(curve.points.len(), 3);
+    // smaller keep fraction => more pruned attention => higher sparsity
+    assert!(
+        curve.points[2].activation_sparsity > curve.points[0].activation_sparsity
+    );
+}

@@ -1,0 +1,201 @@
+//! Integration: the Rust PJRT runtime executing the AOT HLO artifacts
+//! must reproduce the Python-eager goldens bit-for-bit (prune kernel) /
+//! to f32 tolerance (model forward) — closing the loop
+//! python-eager == HLO-text == rust-PJRT.
+//!
+//! Requires `make artifacts` (skips with a message otherwise: CI images
+//! always build artifacts first via the Makefile).
+
+use std::path::PathBuf;
+
+use acceltran::runtime::params::{read_f32, read_i32};
+use acceltran::runtime::{ParamStore, Runtime};
+
+fn artifacts_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+fn goldens_dir() -> PathBuf {
+    artifacts_dir().join("goldens")
+}
+
+fn have_artifacts() -> bool {
+    artifacts_dir().join("manifest.json").exists()
+        && goldens_dir().join("goldens.json").exists()
+}
+
+macro_rules! require_artifacts {
+    () => {
+        if !have_artifacts() {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        }
+    };
+}
+
+fn golden_f32(name: &str) -> Vec<f32> {
+    read_f32(&goldens_dir().join(format!("{name}.bin"))).unwrap()
+}
+
+fn golden_i32(name: &str) -> Vec<i32> {
+    read_i32(&goldens_dir().join(format!("{name}.bin"))).unwrap()
+}
+
+fn assert_close(got: &[f32], want: &[f32], atol: f32, rtol: f32, what: &str) {
+    assert_eq!(got.len(), want.len(), "{what}: length mismatch");
+    for (i, (g, w)) in got.iter().zip(want).enumerate() {
+        let tol = atol + rtol * w.abs();
+        assert!(
+            (g - w).abs() <= tol,
+            "{what}[{i}]: got {g}, want {w} (tol {tol})"
+        );
+    }
+}
+
+#[test]
+fn prune_kernel_matches_golden_bit_exact() {
+    require_artifacts!();
+    let mut rt = Runtime::load(artifacts_dir()).unwrap();
+    let x = golden_f32("prune_x");
+    let (pruned, mask) = rt.dynatran_prune(&x, 0.5).unwrap();
+    assert_eq!(pruned, golden_f32("prune_out_tau0p5"), "pruned values");
+    assert_eq!(mask, golden_f32("prune_mask_tau0p5"), "mask");
+}
+
+#[test]
+fn classify_matches_golden_at_tau_zero_and_nonzero() {
+    require_artifacts!();
+    let mut rt = Runtime::load(artifacts_dir()).unwrap();
+    let params = xla::Literal::vec1(&golden_f32("params"));
+    let ids = golden_i32("ids_b8");
+    for (tau, golden) in [(0.0f32, "logits_b8_tau0"), (0.05, "logits_b8_tau0p05")] {
+        let logits = rt.classify(8, &params, &ids, tau).unwrap();
+        assert_close(&logits, &golden_f32(golden), 1e-4, 1e-3,
+                     &format!("logits tau={tau}"));
+    }
+}
+
+#[test]
+fn activation_sparsity_matches_golden() {
+    require_artifacts!();
+    let mut rt = Runtime::load(artifacts_dir()).unwrap();
+    let params = xla::Literal::vec1(&golden_f32("params"));
+    let ids = golden_i32("ids_b8");
+    let rho = rt.activation_sparsity(&params, &ids, 0.05).unwrap();
+    let want = golden_f32("act_sparsity_tau0p05")[0];
+    assert!((rho - want).abs() < 1e-4, "rho {rho} want {want}");
+}
+
+#[test]
+fn pallas_variant_agrees_with_fused_variant() {
+    // classify_pallas_b2 (L1 Pallas kernels lowered into the graph) must
+    // agree with classify_b1 x2 (pure-jnp path) on the same inputs —
+    // the L1-vs-L2 consistency check, executed entirely from Rust.
+    require_artifacts!();
+    let mut rt = Runtime::load(artifacts_dir()).unwrap();
+    let params = xla::Literal::vec1(&golden_f32("params"));
+    let ids = golden_i32("ids_b8");
+    let seq = rt.manifest.seq;
+    let two = &ids[..2 * seq];
+    let ids_lit = xla::Literal::vec1(two)
+        .reshape(&[2, seq as i64])
+        .unwrap();
+    let out = rt
+        .execute(
+            "classify_pallas_b2",
+            &[params.clone(), ids_lit, xla::Literal::scalar(0.05f32)],
+        )
+        .unwrap();
+    let pallas_logits = out[0].to_vec::<f32>().unwrap();
+    let mut fused = Vec::new();
+    for b in 0..2 {
+        let one = &ids[b * seq..(b + 1) * seq];
+        fused.extend(rt.classify(1, &params, one, 0.05).unwrap());
+    }
+    assert_close(&pallas_logits, &fused, 1e-3, 1e-2, "pallas vs fused");
+}
+
+#[test]
+fn train_step_reproduces_golden_loss() {
+    require_artifacts!();
+    let mut rt = Runtime::load(artifacts_dir()).unwrap();
+    let params = golden_f32("params");
+    let ids8 = golden_i32("ids_b8");
+    let labels8 = golden_i32("labels_b8");
+    // goldens tile the b8 batch up to b32 the same way goldens.py does
+    let seq = rt.manifest.seq;
+    let mut ids = Vec::new();
+    let mut labels = Vec::new();
+    for rep in 0..32 {
+        let b = rep % 8;
+        ids.extend_from_slice(&ids8[b * seq..(b + 1) * seq]);
+        let _ = rep;
+    }
+    for &l in &labels8 {
+        for _ in 0..4 {
+            labels.push(l);
+        }
+    }
+    // goldens.py uses ids8[:32].repeat(4, axis=0)[:32] == tile pattern
+    // 0,0,0,0,1,1,1,1,... rebuild to match exactly:
+    ids.clear();
+    for b in 0..8 {
+        for _ in 0..4 {
+            ids.extend_from_slice(&ids8[b * seq..(b + 1) * seq]);
+        }
+    }
+    let zeros = vec![0.0f32; params.len()];
+    let (p2, _m2, _v2, loss) = rt
+        .train_step(
+            xla::Literal::vec1(&params),
+            xla::Literal::vec1(&zeros),
+            xla::Literal::vec1(&zeros),
+            0.0,
+            &ids,
+            &labels,
+            1e-3,
+        )
+        .unwrap();
+    let want_loss = golden_f32("train_loss0")[0];
+    assert!(
+        (loss - want_loss).abs() < 1e-3,
+        "loss {loss} want {want_loss}"
+    );
+    let got_sum: f32 = p2.to_vec::<f32>().unwrap().iter().sum();
+    let want_sum = golden_f32("train_params1_sum")[0];
+    // sum over 536k params: allow loose tolerance for reduction order
+    assert!(
+        (got_sum - want_sum).abs() < 0.5 + want_sum.abs() * 1e-3,
+        "param sum {got_sum} want {want_sum}"
+    );
+}
+
+#[test]
+fn param_store_init_matches_manifest_layout() {
+    require_artifacts!();
+    let rt = Runtime::load(artifacts_dir()).unwrap();
+    let store = ParamStore::init(&rt.manifest, 0);
+    assert_eq!(store.params.len(), rt.manifest.param_count);
+    let golden = golden_f32("params");
+    assert_eq!(store.params.len(), golden.len());
+}
+
+#[test]
+fn tau_zero_and_large_tau_bracket_behaviour() {
+    // Behavioural property through the full rust path: tau=0 keeps the
+    // baseline logits; an absurd tau prunes everything and collapses the
+    // logits to a constant (bias-only) prediction.
+    require_artifacts!();
+    let mut rt = Runtime::load(artifacts_dir()).unwrap();
+    let params = xla::Literal::vec1(&golden_f32("params"));
+    let ids = golden_i32("ids_b8");
+    let base = rt.classify(8, &params, &ids, 0.0).unwrap();
+    let nuked = rt.classify(8, &params, &ids, 1e9).unwrap();
+    assert_ne!(base, nuked);
+    // all rows identical when every activation is pruned
+    let first = &nuked[..2];
+    for row in nuked.chunks(2) {
+        assert!((row[0] - first[0]).abs() < 1e-5);
+        assert!((row[1] - first[1]).abs() < 1e-5);
+    }
+}

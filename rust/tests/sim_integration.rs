@@ -1,0 +1,190 @@
+//! Integration tests over the full simulator stack: op-graph -> tiling ->
+//! scheduling -> engine, exercising the paper's system-level orderings
+//! (Table IV ablations, Fig. 16 trends, Fig. 19 sparsity effect) across
+//! module boundaries.
+
+use acceltran::model::TransformerConfig;
+use acceltran::sim::engine::{simulate, SparsityProfile};
+use acceltran::sim::scheduler::Policy;
+use acceltran::sim::AcceleratorConfig;
+
+fn paper() -> SparsityProfile {
+    SparsityProfile::paper_default()
+}
+
+/// Table IV ordering: the full configuration must beat every ablation on
+/// throughput; removing the sparsity modules must cost the most energy.
+#[test]
+fn table_iv_ablation_ordering() {
+    let model = TransformerConfig::bert_tiny();
+    let seq = 128;
+    let mut server = AcceleratorConfig::server();
+    server.batch = 8; // keep the test fast; ordering is batch-invariant
+
+    let full = simulate(&server, &model, seq, Policy::Staggered, paper());
+
+    let mut no_dynatran_cfg = server.clone();
+    no_dynatran_cfg.dynatran_enabled = false;
+    let no_dynatran =
+        simulate(&no_dynatran_cfg, &model, seq, Policy::Staggered, paper());
+
+    let no_mp = simulate(
+        &server,
+        &model,
+        seq,
+        Policy::Staggered,
+        SparsityProfile { weight_rho: 0.0, ..paper() },
+    );
+
+    let mut no_sparsity_cfg = server.clone();
+    no_sparsity_cfg.sparsity_modules = false;
+    let no_sparsity =
+        simulate(&no_sparsity_cfg, &model, seq, Policy::Staggered, paper());
+
+    let mut ddr_cfg = server.clone();
+    ddr_cfg.memory = acceltran::sim::MemoryKind::LpDdr3;
+    let ddr = simulate(&ddr_cfg, &model, seq, Policy::Staggered, paper());
+
+    // throughput: full beats every ablation (Table IV column 2)
+    for (name, r) in [
+        ("w/o DynaTran", &no_dynatran),
+        ("w/o MP", &no_mp),
+        ("w/o sparsity modules", &no_sparsity),
+        ("w/o mono-3D RRAM", &ddr),
+    ] {
+        assert!(
+            full.total_cycles <= r.total_cycles,
+            "{name}: full {} vs ablated {}",
+            full.total_cycles,
+            r.total_cycles
+        );
+    }
+    // energy: ablating the sparsity modules hurts energy the most among
+    // compute-side ablations (Table IV column 3: 0.2701 vs 0.1396/0.1503)
+    assert!(no_sparsity.energy.total_pj() > full.energy.total_pj());
+    assert!(no_sparsity.energy.total_pj() > no_dynatran.energy.total_pj());
+}
+
+/// Fig. 16: compute stalls grow as PEs shrink; memory stalls appear as
+/// buffers shrink.
+#[test]
+fn fig16_stall_trends() {
+    let model = TransformerConfig::bert_tiny();
+    let mk = |pes: usize, buf_mb: usize| {
+        let mut cfg = AcceleratorConfig::edge();
+        cfg.pes = pes;
+        let unit = (buf_mb << 20) / 13;
+        cfg.act_buffer_bytes = 4 * unit;
+        cfg.weight_buffer_bytes = 8 * unit;
+        cfg.mask_buffer_bytes = unit;
+        simulate(&cfg, &model, 128, Policy::Staggered, paper())
+    };
+    let small = mk(32, 13);
+    let large = mk(256, 13);
+    assert!(
+        small.stalls.compute_total() > large.stalls.compute_total(),
+        "32 PEs {} vs 256 PEs {}",
+        small.stalls.compute_total(),
+        large.stalls.compute_total()
+    );
+    // latency ordering follows stalls
+    assert!(small.total_cycles > large.total_cycles);
+}
+
+/// Fig. 19: sweeping activation sparsity upward monotonically improves
+/// throughput and energy.
+#[test]
+fn fig19_sparsity_monotonicity() {
+    let model = TransformerConfig::bert_tiny();
+    let cfg = AcceleratorConfig::edge();
+    let mut last_cycles = u64::MAX;
+    let mut last_energy = f64::INFINITY;
+    for rho in [0.0, 0.25, 0.5, 0.75] {
+        let r = simulate(
+            &cfg,
+            &model,
+            128,
+            Policy::Staggered,
+            SparsityProfile { act_rho: rho, ..paper() },
+        );
+        assert!(
+            r.total_cycles <= last_cycles,
+            "rho {rho}: {} > previous {}",
+            r.total_cycles,
+            last_cycles
+        );
+        assert!(r.energy.total_pj() <= last_energy);
+        last_cycles = r.total_cycles;
+        last_energy = r.energy.total_pj();
+    }
+}
+
+/// Server at paper batch sizes yields far higher throughput than Edge
+/// (Fig. 20 structure) and the trace/utilization outputs are well-formed.
+#[test]
+fn server_outscales_edge() {
+    let model = TransformerConfig::bert_tiny();
+    let edge_cfg = AcceleratorConfig::edge();
+    let server_cfg = AcceleratorConfig::server();
+    let edge = simulate(&edge_cfg, &model, 128, Policy::Staggered, paper());
+    let server = simulate(&server_cfg, &model, 128, Policy::Staggered, paper());
+    let edge_tp = edge.throughput_seq_s(&edge_cfg);
+    let server_tp = server.throughput_seq_s(&server_cfg);
+    assert!(
+        server_tp > 3.0 * edge_tp,
+        "server {server_tp:.0} vs edge {edge_tp:.0} seq/s"
+    );
+    assert!(!server.trace.is_empty());
+}
+
+/// Graph-level determinism: identical inputs give identical results.
+#[test]
+fn simulation_is_deterministic() {
+    let model = TransformerConfig::bert_tiny();
+    let cfg = AcceleratorConfig::edge();
+    let a = simulate(&cfg, &model, 128, Policy::Staggered, paper());
+    let b = simulate(&cfg, &model, 128, Policy::Staggered, paper());
+    assert_eq!(a.total_cycles, b.total_cycles);
+    assert_eq!(a.stalls, b.stalls);
+    assert!((a.energy.total_pj() - b.energy.total_pj()).abs() < 1e-6);
+}
+
+/// A deeper model (bert-mini) takes proportionally more cycles.
+#[test]
+fn deeper_model_costs_more() {
+    let cfg = AcceleratorConfig::edge();
+    let tiny = simulate(
+        &cfg,
+        &TransformerConfig::bert_tiny(),
+        128,
+        Policy::Staggered,
+        paper(),
+    );
+    let mini = simulate(
+        &cfg,
+        &TransformerConfig::bert_mini(),
+        128,
+        Policy::Staggered,
+        paper(),
+    );
+    assert!(mini.total_cycles > tiny.total_cycles);
+    assert!(mini.energy.total_pj() > tiny.energy.total_pj());
+}
+
+/// Longer sequences shift work toward the attention (softmax) modules.
+#[test]
+fn longer_sequences_grow_softmax_share() {
+    let model = TransformerConfig::bert_tiny();
+    let cfg = AcceleratorConfig::edge();
+    let short = simulate(&cfg, &model, 64, Policy::Staggered, paper());
+    let long = simulate(&cfg, &model, 256, Policy::Staggered, paper());
+    let share = |r: &acceltran::sim::SimResult| {
+        r.energy.softmax_pj / r.energy.compute_pj()
+    };
+    assert!(
+        share(&long) > share(&short),
+        "short {:.4} long {:.4}",
+        share(&short),
+        share(&long)
+    );
+}
