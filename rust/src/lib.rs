@@ -12,7 +12,10 @@
 //!   dataflows, 14nm area/energy models).
 //! * [`runtime`] — PJRT client wrapper that loads the AOT-compiled HLO
 //!   text artifacts produced by `python/compile/aot.py` and executes them
-//!   on the CPU PJRT backend (functional inference/training path).
+//!   on the CPU PJRT backend (functional inference/training path).  The
+//!   binding surface comes from the in-tree `xla` path crate, which is a
+//!   stub unless real PJRT bindings are swapped in — see DESIGN.md
+//!   §Substitutions.
 //! * [`coordinator`] — request router + dynamic batcher + evaluation
 //!   loops tying the functional model (runtime) and the timing model
 //!   (sim) together behind one serving API.

@@ -32,9 +32,9 @@ impl ParamStore {
         for (_name, shape, init_std) in &manifest.param_specs {
             let n: usize = shape.iter().product();
             if *init_std < 0.0 {
-                params.extend(std::iter::repeat_n(1.0f32, n));
+                params.extend(std::iter::repeat(1.0f32).take(n));
             } else if *init_std == 0.0 {
-                params.extend(std::iter::repeat_n(0.0f32, n));
+                params.extend(std::iter::repeat(0.0f32).take(n));
             } else {
                 params.extend(rng.normal_vec(n, *init_std as f32));
             }

@@ -28,4 +28,4 @@ pub mod tech;
 pub mod tiling;
 
 pub use config::{AcceleratorConfig, MemoryKind};
-pub use engine::{Engine, SimResult};
+pub use engine::{simulate, Engine, SimResult, SparsityProfile};

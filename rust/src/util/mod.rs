@@ -1,9 +1,9 @@
 //! Zero-dependency substrates used across the crate.
 //!
-//! The build image vendors only `xla`/`anyhow`/`thiserror`, so the usual
-//! ecosystem crates (rand, serde, clap, criterion, proptest) are
-//! reimplemented here at the scale this project needs — each one small,
-//! tested, and documented.
+//! The build pulls in only `anyhow` (registry) and the in-tree `xla`
+//! path crate, so the usual ecosystem crates (rand, serde, clap,
+//! criterion, proptest) are reimplemented here at the scale this
+//! project needs — each one small, tested, and documented.
 
 pub mod bench;
 pub mod cli;

@@ -1,0 +1,75 @@
+//! Tier-1 smoke test: drive the simulator hot path end-to-end through
+//! the `sim::simulate` convenience entry point and check that the
+//! headline derived metrics are present and self-consistent.  This is
+//! the one test every future perf PR must keep green before any
+//! benchmark numbers mean anything.
+
+use acceltran::model::TransformerConfig;
+use acceltran::sim::scheduler::Policy;
+use acceltran::sim::{simulate, AcceleratorConfig, SparsityProfile};
+
+#[test]
+fn simulate_edge_paper_default_is_self_consistent() {
+    let cfg = AcceleratorConfig::edge();
+    let model = TransformerConfig::bert_tiny();
+    let seq = 128;
+    let r = simulate(&cfg, &model, seq, Policy::Staggered, SparsityProfile::paper_default());
+
+    // the run did real work
+    assert!(r.total_cycles > 0, "zero cycles");
+    assert!(r.energy.total_pj() > 0.0, "zero energy");
+    assert_eq!(r.batch, cfg.batch);
+    assert_eq!(r.seq, seq);
+    assert_eq!(r.config_name, cfg.name);
+    assert_eq!(r.model_name, model.name);
+
+    // latency_s is cycles at the configured clock
+    let latency = r.latency_s(&cfg);
+    assert!(latency > 0.0);
+    let expect_latency = r.total_cycles as f64 / cfg.clock_hz;
+    assert!(
+        (latency - expect_latency).abs() <= 1e-12 * expect_latency.max(1.0),
+        "latency {latency} vs cycles/clock {expect_latency}"
+    );
+
+    // throughput_seq_s is batch / latency
+    let tp = r.throughput_seq_s(&cfg);
+    let expect_tp = r.batch as f64 / latency;
+    assert!(
+        (tp - expect_tp).abs() <= 1e-9 * expect_tp,
+        "throughput {tp} vs batch/latency {expect_tp}"
+    );
+
+    // energy_mj_per_seq is total energy over the batch, in millijoules
+    let mj = r.energy_mj_per_seq();
+    let expect_mj = r.energy.total_pj() * 1e-9 / r.batch as f64;
+    assert!(
+        (mj - expect_mj).abs() <= 1e-9 * expect_mj.max(1e-12),
+        "energy {mj} vs ledger-derived {expect_mj}"
+    );
+    assert!(mj > 0.0);
+
+    // and avg power ties the two together: E / t
+    let w = r.avg_power_w(&cfg);
+    let expect_w = r.energy.total_pj() * 1e-12 / latency;
+    assert!((w - expect_w).abs() <= 1e-9 * expect_w.max(1e-12));
+}
+
+#[test]
+fn simulate_report_json_carries_derived_metrics() {
+    let cfg = AcceleratorConfig::edge();
+    let model = TransformerConfig::bert_tiny();
+    let r = simulate(&cfg, &model, 64, Policy::Staggered, SparsityProfile::paper_default());
+    let j = r.to_json(&cfg);
+    for key in [
+        "total_cycles",
+        "latency_s",
+        "throughput_seq_s",
+        "energy_mj_per_seq",
+        "avg_power_w",
+    ] {
+        let v = j.get(key).and_then(|v| v.as_f64());
+        assert!(v.is_some(), "missing {key}");
+        assert!(v.unwrap() > 0.0, "{key} not positive");
+    }
+}

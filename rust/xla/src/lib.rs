@@ -1,0 +1,383 @@
+//! In-tree stand-in for the `xla` PJRT bindings (xla-rs API surface).
+//!
+//! The AccelTran runtime layer (`acceltran::runtime`) is written against
+//! the xla-rs flavour of the PJRT C API: [`Literal`] host tensors,
+//! [`PjRtClient`] → [`PjRtLoadedExecutable`] → [`PjRtBuffer`], and HLO
+//! text ingestion via [`HloModuleProto`] / [`XlaComputation`].  This
+//! build image does not ship `libxla_extension`, so this crate provides
+//! the same surface in two tiers (DESIGN.md §Substitutions):
+//!
+//! * **Functional** — [`Literal`] is a real host tensor (typed element
+//!   storage + shape), so parameter stores, batching, golden-file I/O,
+//!   and every compile-time consumer work unchanged.
+//! * **Stubbed** — [`PjRtClient::compile`] returns an error: no HLO can
+//!   execute without the native backend.  Callers already gate every
+//!   execution path on artifact availability, so tier-1 builds and
+//!   tests stay hermetic and green.
+//!
+//! Swapping in the real bindings is a one-line change in
+//! `rust/Cargo.toml` (point the `xla` dependency at the real crate);
+//! nothing in `acceltran` itself changes.
+
+use std::fmt;
+
+/// `true` in this stub build; the real bindings do not define it, which
+/// makes accidental use of stub-only behaviour a compile error after a
+/// swap rather than a silent fallback.
+pub const IS_STUB: bool = true;
+
+/// Error type mirroring xla-rs: carries a message, formats like the
+/// native error strings the runtime wraps with `anyhow!("...: {e:?}")`.
+pub struct XlaError {
+    pub msg: String,
+}
+
+impl XlaError {
+    fn new(msg: impl Into<String>) -> XlaError {
+        XlaError { msg: msg.into() }
+    }
+
+    fn stub(what: &str) -> XlaError {
+        XlaError::new(format!(
+            "{what}: xla stub (no native PJRT backend in this build; \
+             see DESIGN.md §Substitutions)"
+        ))
+    }
+}
+
+impl fmt::Debug for XlaError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "XlaError({})", self.msg)
+    }
+}
+
+impl fmt::Display for XlaError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl std::error::Error for XlaError {}
+
+/// Typed element storage of a [`Literal`].
+#[derive(Clone, Debug, PartialEq)]
+pub enum LiteralData {
+    F32(Vec<f32>),
+    F64(Vec<f64>),
+    I32(Vec<i32>),
+    I64(Vec<i64>),
+    /// Tuple literals, as produced by `return_tuple=True` lowerings.
+    Tuple(Vec<Literal>),
+}
+
+impl LiteralData {
+    fn element_count(&self) -> usize {
+        match self {
+            LiteralData::F32(v) => v.len(),
+            LiteralData::F64(v) => v.len(),
+            LiteralData::I32(v) => v.len(),
+            LiteralData::I64(v) => v.len(),
+            LiteralData::Tuple(v) => v.len(),
+        }
+    }
+
+    fn dtype_name(&self) -> &'static str {
+        match self {
+            LiteralData::F32(_) => "f32",
+            LiteralData::F64(_) => "f64",
+            LiteralData::I32(_) => "i32",
+            LiteralData::I64(_) => "i64",
+            LiteralData::Tuple(_) => "tuple",
+        }
+    }
+}
+
+/// Element types a [`Literal`] can hold.  Sealed by construction: only
+/// the types below implement it.
+pub trait NativeType: Copy + Sized {
+    fn wrap(data: Vec<Self>) -> LiteralData;
+    fn unwrap(data: &LiteralData) -> Option<Vec<Self>>;
+}
+
+impl NativeType for f32 {
+    fn wrap(data: Vec<f32>) -> LiteralData {
+        LiteralData::F32(data)
+    }
+    fn unwrap(data: &LiteralData) -> Option<Vec<f32>> {
+        match data {
+            LiteralData::F32(v) => Some(v.clone()),
+            _ => None,
+        }
+    }
+}
+
+impl NativeType for f64 {
+    fn wrap(data: Vec<f64>) -> LiteralData {
+        LiteralData::F64(data)
+    }
+    fn unwrap(data: &LiteralData) -> Option<Vec<f64>> {
+        match data {
+            LiteralData::F64(v) => Some(v.clone()),
+            _ => None,
+        }
+    }
+}
+
+impl NativeType for i32 {
+    fn wrap(data: Vec<i32>) -> LiteralData {
+        LiteralData::I32(data)
+    }
+    fn unwrap(data: &LiteralData) -> Option<Vec<i32>> {
+        match data {
+            LiteralData::I32(v) => Some(v.clone()),
+            _ => None,
+        }
+    }
+}
+
+impl NativeType for i64 {
+    fn wrap(data: Vec<i64>) -> LiteralData {
+        LiteralData::I64(data)
+    }
+    fn unwrap(data: &LiteralData) -> Option<Vec<i64>> {
+        match data {
+            LiteralData::I64(v) => Some(v.clone()),
+            _ => None,
+        }
+    }
+}
+
+/// A host tensor: typed flat element storage plus a shape.  Fully
+/// functional (not stubbed) — the coordinator's parameter plumbing and
+/// the golden-file tests rely on real round-trips.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Literal {
+    data: LiteralData,
+    dims: Vec<i64>,
+}
+
+impl Literal {
+    /// Rank-1 literal from a slice.
+    pub fn vec1<T: NativeType>(data: &[T]) -> Literal {
+        Literal {
+            dims: vec![data.len() as i64],
+            data: T::wrap(data.to_vec()),
+        }
+    }
+
+    /// Rank-0 (scalar) literal.
+    pub fn scalar<T: NativeType>(value: T) -> Literal {
+        Literal { dims: Vec::new(), data: T::wrap(vec![value]) }
+    }
+
+    /// Tuple literal (what `return_tuple=True` computations produce).
+    pub fn tuple(elements: Vec<Literal>) -> Literal {
+        Literal {
+            dims: vec![elements.len() as i64],
+            data: LiteralData::Tuple(elements),
+        }
+    }
+
+    /// Shape of the literal.
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+
+    /// Total element count.
+    pub fn element_count(&self) -> usize {
+        self.data.element_count()
+    }
+
+    /// Same storage under a new shape; errors when the element counts
+    /// disagree (matching the native reshape contract).
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal, XlaError> {
+        if matches!(self.data, LiteralData::Tuple(_)) {
+            return Err(XlaError::new("reshape: cannot reshape a tuple literal"));
+        }
+        let want: i64 = dims.iter().product();
+        if want < 0 || want as usize != self.element_count() {
+            return Err(XlaError::new(format!(
+                "reshape: {} elements into shape {dims:?}",
+                self.element_count()
+            )));
+        }
+        Ok(Literal { data: self.data.clone(), dims: dims.to_vec() })
+    }
+
+    /// Copy the elements out as `Vec<T>`; errors on a dtype mismatch.
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>, XlaError> {
+        T::unwrap(&self.data).ok_or_else(|| {
+            XlaError::new(format!(
+                "to_vec: literal holds {} data",
+                self.data.dtype_name()
+            ))
+        })
+    }
+
+    /// Split a tuple literal into its elements; errors on non-tuples.
+    pub fn to_tuple(&self) -> Result<Vec<Literal>, XlaError> {
+        match &self.data {
+            LiteralData::Tuple(elements) => Ok(elements.clone()),
+            _ => Err(XlaError::new(format!(
+                "to_tuple: literal holds {} data, not a tuple",
+                self.data.dtype_name()
+            ))),
+        }
+    }
+}
+
+/// Parsed HLO module.  The stub validates that the file exists and is
+/// readable (so missing-artifact errors stay accurate) but does not
+/// parse HLO text.
+#[derive(Clone, Debug)]
+pub struct HloModuleProto {
+    pub source_path: String,
+}
+
+impl HloModuleProto {
+    pub fn from_text_file(path: &str) -> Result<HloModuleProto, XlaError> {
+        match std::fs::metadata(path) {
+            Ok(_) => Ok(HloModuleProto { source_path: path.to_string() }),
+            Err(e) => Err(XlaError::new(format!("reading {path}: {e}"))),
+        }
+    }
+}
+
+/// A computation wrapping an HLO module, ready for compilation.
+#[derive(Clone, Debug)]
+pub struct XlaComputation {
+    pub proto: HloModuleProto,
+}
+
+impl XlaComputation {
+    pub fn from_proto(proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { proto: proto.clone() }
+    }
+}
+
+/// PJRT client handle.  Construction succeeds (manifest-only flows and
+/// server plumbing need a client value); compilation is where the stub
+/// reports the missing native backend.
+#[derive(Debug)]
+pub struct PjRtClient {
+    platform: &'static str,
+}
+
+impl PjRtClient {
+    /// The CPU PJRT client.
+    pub fn cpu() -> Result<PjRtClient, XlaError> {
+        Ok(PjRtClient { platform: "cpu-stub" })
+    }
+
+    pub fn platform_name(&self) -> &'static str {
+        self.platform
+    }
+
+    /// Always errors in the stub: executing HLO needs the native
+    /// `libxla_extension` backend.
+    pub fn compile(
+        &self,
+        computation: &XlaComputation,
+    ) -> Result<PjRtLoadedExecutable, XlaError> {
+        Err(XlaError::stub(&format!(
+            "compile({})",
+            computation.proto.source_path
+        )))
+    }
+}
+
+/// A compiled executable.  Unconstructable through the stub client, but
+/// the type (and its `execute` shape) must exist for callers to
+/// typecheck against the real API.
+#[derive(Debug)]
+pub struct PjRtLoadedExecutable {
+    _private: (),
+}
+
+impl PjRtLoadedExecutable {
+    /// Mirrors xla-rs: one result row per device, one buffer per output.
+    pub fn execute<T: std::borrow::Borrow<Literal>>(
+        &self,
+        _args: &[T],
+    ) -> Result<Vec<Vec<PjRtBuffer>>, XlaError> {
+        Err(XlaError::stub("execute"))
+    }
+}
+
+/// A device buffer holding one executable output.
+#[derive(Debug)]
+pub struct PjRtBuffer {
+    literal: Literal,
+}
+
+impl PjRtBuffer {
+    /// Copy the buffer back to a host [`Literal`].
+    pub fn to_literal_sync(&self) -> Result<Literal, XlaError> {
+        Ok(self.literal.clone())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn vec1_roundtrips_f32_and_i32() {
+        let f = Literal::vec1(&[1.0f32, -2.5, 0.0]);
+        assert_eq!(f.dims(), &[3]);
+        assert_eq!(f.to_vec::<f32>().unwrap(), vec![1.0, -2.5, 0.0]);
+        assert!(f.to_vec::<i32>().is_err());
+
+        let i = Literal::vec1(&[7i32, 8]);
+        assert_eq!(i.to_vec::<i32>().unwrap(), vec![7, 8]);
+    }
+
+    #[test]
+    fn scalar_is_rank_zero() {
+        let s = Literal::scalar(0.05f32);
+        assert_eq!(s.dims(), &[] as &[i64]);
+        assert_eq!(s.element_count(), 1);
+    }
+
+    #[test]
+    fn reshape_checks_element_count() {
+        let l = Literal::vec1(&(0..12).collect::<Vec<i32>>());
+        let r = l.reshape(&[3, 4]).unwrap();
+        assert_eq!(r.dims(), &[3, 4]);
+        assert_eq!(r.to_vec::<i32>().unwrap().len(), 12);
+        assert!(l.reshape(&[5, 5]).is_err());
+    }
+
+    #[test]
+    fn tuple_roundtrip() {
+        let t = Literal::tuple(vec![
+            Literal::vec1(&[1.0f32]),
+            Literal::scalar(2i32),
+        ]);
+        let parts = t.to_tuple().unwrap();
+        assert_eq!(parts.len(), 2);
+        assert_eq!(parts[1].to_vec::<i32>().unwrap(), vec![2]);
+        assert!(Literal::scalar(1i32).to_tuple().is_err());
+    }
+
+    #[test]
+    fn client_constructs_but_compile_is_stubbed() {
+        let client = PjRtClient::cpu().unwrap();
+        assert_eq!(client.platform_name(), "cpu-stub");
+        let dir = std::env::temp_dir();
+        let path = dir.join(format!("xla_stub_test_{}.hlo.txt", std::process::id()));
+        std::fs::write(&path, "HloModule m").unwrap();
+        let proto = HloModuleProto::from_text_file(path.to_str().unwrap()).unwrap();
+        let comp = XlaComputation::from_proto(&proto);
+        let err = client.compile(&comp).unwrap_err();
+        assert!(err.msg.contains("stub"), "{err:?}");
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn missing_hlo_file_is_a_clear_error() {
+        let err = HloModuleProto::from_text_file("/nonexistent/x.hlo.txt")
+            .unwrap_err();
+        assert!(err.msg.contains("/nonexistent/x.hlo.txt"));
+    }
+}
