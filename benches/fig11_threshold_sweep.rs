@@ -1,6 +1,6 @@
 //! Fig. 11: accuracy and activation sparsity as a function of (a) the
 //! DynaTran pruning threshold tau, and (b) the top-k keep fraction —
-//! on the trained synthetic-sentiment model through the PJRT runtime.
+//! on the trained synthetic-sentiment model through the runtime.
 //!
 //! (The paper uses BERT-Base on SST-2; we use the BERT-Tiny-shaped
 //! encoder on the synthetic sentiment task — see DESIGN.md
@@ -8,23 +8,25 @@
 //! sparsity, then a cliff; monotone sparsity in tau — are the
 //! reproduced claims.)
 //!
+//! Runs end-to-end on the pure-Rust reference backend (fine-tuning
+//! included); uses PJRT artifacts when present.  Problem size shrinks
+//! under `ACCELTRAN_TRAIN_STEPS` / `ACCELTRAN_EVAL_EXAMPLES` (the CI
+//! smoke job sets both).
+//!
 //! Run with: `cargo bench --bench fig11_threshold_sweep`
 
 use acceltran::coordinator::{self, trainer};
 use acceltran::nlp::sentiment::SentimentTask;
 use acceltran::runtime::Runtime;
+use acceltran::util::cli::env_usize;
 use acceltran::util::json::Json;
 use acceltran::util::table::Table;
 
 fn main() {
     println!("== Fig. 11: pruning-knob sweeps ==\n");
-    let mut rt = match Runtime::load_default() {
-        Ok(rt) => rt,
-        Err(e) => {
-            eprintln!("skipping (run `make artifacts`): {e}");
-            return;
-        }
-    };
+    let mut rt = Runtime::load_default().expect("runtime");
+    println!("backend: {}", rt.backend_name());
+    let examples = env_usize("ACCELTRAN_EVAL_EXAMPLES", 512);
     let store = trainer::ensure_trained(
         &mut rt,
         std::path::Path::new("reports/trained_params.bin"),
@@ -33,13 +35,13 @@ fn main() {
     )
     .expect("training failed");
     let task = SentimentTask::new(rt.manifest.vocab, rt.manifest.seq, 7);
-    let val = task.dataset(512, 2);
-    let params = store.params_literal();
+    let val = task.dataset(examples, 2);
 
     // (a) DynaTran: tau from 0 to 0.1 (the paper's range)
     let taus = [0.0f32, 0.01, 0.02, 0.03, 0.04, 0.05, 0.06, 0.08, 0.10];
-    let dyna = coordinator::sweep_dynatran(&mut rt, &params, &val, &taus, 512)
-        .expect("dynatran sweep");
+    let dyna =
+        coordinator::sweep_dynatran(&mut rt, &store.params, &val, &taus, examples)
+            .expect("dynatran sweep");
     println!("(a) DynaTran threshold sweep:");
     let mut t = Table::new(["tau", "activation sparsity", "accuracy"]);
     for p in &dyna.points {
@@ -54,8 +56,9 @@ fn main() {
     // (b) top-k: keep fraction in powers of two (the paper varies k in
     // powers of two)
     let keeps = [1.0f32, 0.5, 0.25, 0.125, 0.0625];
-    let topk = coordinator::sweep_topk(&mut rt, &params, &val, &keeps, 512)
-        .expect("topk sweep");
+    let topk =
+        coordinator::sweep_topk(&mut rt, &store.params, &val, &keeps, examples)
+            .expect("topk sweep");
     println!("\n(b) top-k keep-fraction sweep:");
     let mut t = Table::new(["keep frac", "net act sparsity", "accuracy"]);
     for p in &topk.points {
@@ -76,6 +79,10 @@ fn main() {
     }
     let base_acc = dyna.points[0].accuracy;
     let cliff_acc = dyna.points.last().unwrap().accuracy;
+    assert!(
+        base_acc > 0.5,
+        "trained model must beat the 50% random baseline at tau=0, got {base_acc:.3}"
+    );
     println!(
         "\nShape check: baseline accuracy {base_acc:.3}; accuracy at tau=0.1 \
          {cliff_acc:.3}; max DynaTran sparsity within 1% of peak accuracy: {:.3}",

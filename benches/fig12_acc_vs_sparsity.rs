@@ -13,18 +13,14 @@ use acceltran::coordinator::{self, trainer};
 use acceltran::nlp::sentiment::SentimentTask;
 use acceltran::pruning::wp::weight_prune_to_sparsity;
 use acceltran::runtime::Runtime;
+use acceltran::util::cli::env_usize;
 use acceltran::util::json::Json;
 use acceltran::util::table::Table;
 
 fn main() {
     println!("== Fig. 12: accuracy vs activation sparsity ==\n");
-    let mut rt = match Runtime::load_default() {
-        Ok(rt) => rt,
-        Err(e) => {
-            eprintln!("skipping (run `make artifacts`): {e}");
-            return;
-        }
-    };
+    let mut rt = Runtime::load_default().expect("runtime");
+    println!("backend: {}", rt.backend_name());
     let store = trainer::ensure_trained(
         &mut rt,
         std::path::Path::new("reports/trained_params.bin"),
@@ -32,18 +28,19 @@ fn main() {
         true,
     )
     .expect("training failed");
+    let examples = env_usize("ACCELTRAN_EVAL_EXAMPLES", 512);
     let task = SentimentTask::new(rt.manifest.vocab, rt.manifest.seq, 7);
-    let val = task.dataset(512, 2);
+    let val = task.dataset(examples, 2);
 
     let taus = [0.0f32, 0.01, 0.02, 0.03, 0.04, 0.06, 0.08];
     let keeps = [1.0f32, 0.5, 0.25, 0.125];
 
     // without MP
-    let params = store.params_literal();
-    let mut dyna = coordinator::sweep_dynatran(&mut rt, &params, &val, &taus, 512)
-        .expect("sweep");
+    let mut dyna =
+        coordinator::sweep_dynatran(&mut rt, &store.params, &val, &taus, examples)
+            .expect("sweep");
     dyna.label = "DynaTran".into();
-    let mut topk = coordinator::sweep_topk(&mut rt, &params, &val, &keeps, 512)
+    let mut topk = coordinator::sweep_topk(&mut rt, &store.params, &val, &keeps, examples)
         .expect("sweep");
     topk.label = "top-k".into();
 
@@ -62,13 +59,13 @@ fn main() {
             off += n;
         }
     }
-    let mp_lit = xla::Literal::vec1(&pruned_params);
     let mut dyna_mp =
-        coordinator::sweep_dynatran(&mut rt, &mp_lit, &val, &taus, 512)
+        coordinator::sweep_dynatran(&mut rt, &pruned_params, &val, &taus, examples)
             .expect("sweep");
     dyna_mp.label = "DynaTran + MP".into();
-    let mut topk_mp = coordinator::sweep_topk(&mut rt, &mp_lit, &val, &keeps, 512)
-        .expect("sweep");
+    let mut topk_mp =
+        coordinator::sweep_topk(&mut rt, &pruned_params, &val, &keeps, examples)
+            .expect("sweep");
     topk_mp.label = "top-k + MP".into();
 
     let curves = [&dyna, &topk, &dyna_mp, &topk_mp];

@@ -15,9 +15,11 @@ use acceltran::nlp::sentiment::SentimentTask;
 use acceltran::nlp::Dataset;
 use acceltran::pruning::wp::{net_sparsity, weight_prune_threshold};
 use acceltran::runtime::{ParamStore, Runtime};
+use acceltran::util::cli::env_usize;
 use acceltran::util::json::Json;
 use acceltran::util::table::Table;
 
+#[allow(clippy::too_many_arguments)]
 fn sweep(
     rt: &mut Runtime,
     params: &[f32],
@@ -28,6 +30,7 @@ fn sweep(
     report: &mut Vec<Json>,
     t: &mut Table,
 ) {
+    let examples = val.examples.len();
     // apply WP at a fixed threshold (the paper's protocol)
     let mut weights = params.to_vec();
     let weight_rho = if wp_tau > 0.0 {
@@ -35,10 +38,9 @@ fn sweep(
     } else {
         0.0
     };
-    let lit = xla::Literal::vec1(&weights);
     // activation sparsity swept via DynaTran tau
     for tau in [0.0f32, 0.02, 0.04, 0.06] {
-        let r = evaluate_accuracy(rt, &lit, val, tau, 384).expect("eval");
+        let r = evaluate_accuracy(rt, &weights, val, tau, examples).expect("eval");
         let act_elems = 3usize; // activations ~3x weights for tiny @ seq64
         let net = net_sparsity(weight_rho, 1, r.activation_sparsity, act_elems);
         let metric = if use_f1 { r.f1 } else { r.accuracy };
@@ -59,15 +61,11 @@ fn sweep(
 
 fn main() {
     println!("== Fig. 14: weight pruning (WP) effect on net sparsity ==\n");
-    let mut rt = match Runtime::load_default() {
-        Ok(rt) => rt,
-        Err(e) => {
-            eprintln!("skipping (run `make artifacts`): {e}");
-            return;
-        }
-    };
+    let mut rt = Runtime::load_default().expect("runtime");
+    println!("backend: {}", rt.backend_name());
     let vocab = rt.manifest.vocab;
     let seq = rt.manifest.seq;
+    let examples = env_usize("ACCELTRAN_EVAL_EXAMPLES", 384);
     let mut report = Vec::new();
 
     // (a) sentiment (SST-2 proxy) — shared trained checkpoint
@@ -78,7 +76,7 @@ fn main() {
         true,
     )
     .expect("training failed");
-    let sent_val = SentimentTask::new(vocab, seq, 7).dataset(384, 2);
+    let sent_val = SentimentTask::new(vocab, seq, 7).dataset(examples, 2);
     println!("(a) sentiment accuracy vs net sparsity:");
     let mut t = Table::new(["curve", "weight rho", "net sparsity", "accuracy"]);
     sweep(&mut rt, &store.params, &sent_val, 0.0, "no WP", false, &mut report, &mut t);
@@ -88,15 +86,20 @@ fn main() {
     // (b) span task (SQuAD proxy) — train a second checkpoint on spans
     let span_task = SpanTask::new(vocab, seq);
     let span_train = span_task.dataset(2048, 1);
-    let span_val = span_task.dataset(384, 2);
-    let span_path = std::path::Path::new("reports/trained_span_params.bin");
+    let span_val = span_task.dataset(examples, 2);
+    let span_steps = env_usize("ACCELTRAN_TRAIN_STEPS", 150);
+    // key the cache by steps so a reduced smoke checkpoint is never
+    // reused by a full-size run (mirrors trainer::ensure_trained's meta)
+    let span_path_buf =
+        std::path::PathBuf::from(format!("reports/trained_span_params_s{span_steps}.bin"));
+    let span_path = span_path_buf.as_path();
     let span_store = if span_path.exists() {
         ParamStore::from_file(&rt.manifest, span_path).expect("load span params")
     } else {
         let mut s = ParamStore::init(&rt.manifest, 1);
-        println!("\ntraining span model (150 steps)...");
+        println!("\ntraining span model ({span_steps} steps)...");
         acceltran::coordinator::train(
-            &mut rt, &mut s, &span_train, None, 150, 1e-3, 0, false,
+            &mut rt, &mut s, &span_train, None, span_steps, 1e-3, 0, false,
         )
         .expect("span training");
         s.save(span_path).ok();

@@ -16,6 +16,7 @@ use acceltran::runtime::Runtime;
 use acceltran::sim::engine::{simulate, SparsityProfile};
 use acceltran::sim::scheduler::Policy;
 use acceltran::sim::AcceleratorConfig;
+use acceltran::util::cli::env_usize;
 use acceltran::util::json::Json;
 use acceltran::util::table::{eng, Table};
 
@@ -25,8 +26,11 @@ fn main() {
     let model = TransformerConfig::bert_tiny();
     let weight_rho = 0.5; // conservative MP estimate, as in the paper
 
-    // accuracy side: trained model + tau sweep (skipped without artifacts)
-    let accuracy_curve = Runtime::load_default().ok().map(|mut rt| {
+    // accuracy side: trained model + tau sweep (reference backend by
+    // default, PJRT when artifacts are present)
+    let accuracy_curve = {
+        let mut rt = Runtime::load_default().expect("runtime");
+        println!("accuracy backend: {}", rt.backend_name());
         let store = trainer::ensure_trained(
             &mut rt,
             std::path::Path::new("reports/trained_params.bin"),
@@ -34,12 +38,15 @@ fn main() {
             true,
         )
         .expect("training failed");
+        let examples = env_usize("ACCELTRAN_EVAL_EXAMPLES", 512);
         let task = SentimentTask::new(rt.manifest.vocab, rt.manifest.seq, 7);
-        let val = task.dataset(512, 2);
+        let val = task.dataset(examples, 2);
         let taus = [0.0f32, 0.01, 0.02, 0.03, 0.05, 0.08];
-        let params = store.params_literal();
-        coordinator::sweep_dynatran(&mut rt, &params, &val, &taus, 512).unwrap()
-    });
+        Some(
+            coordinator::sweep_dynatran(&mut rt, &store.params, &val, &taus, examples)
+                .unwrap(),
+        )
+    };
 
     let mut t = Table::new([
         "act sparsity",

@@ -1,12 +1,13 @@
 //! Quickstart: the two halves of AccelTran in one page.
 //!
-//! 1. **Functional path** — load the AOT-compiled model artifact through
-//!    the PJRT runtime and classify a batch at two DynaTran thresholds.
+//! 1. **Functional path** — classify a batch at two DynaTran thresholds
+//!    through the runtime.  Runs out of the box on the pure-Rust
+//!    reference executor; loads the AOT/PJRT artifacts instead when they
+//!    are present (or when `ACCELTRAN_BACKEND=pjrt`).
 //! 2. **Timing path** — simulate the same model on AccelTran-Edge and
 //!    print throughput / energy / utilization.
 //!
 //! Run with: `cargo run --release --example quickstart`
-//! (requires `make artifacts` first)
 
 use acceltran::model::TransformerConfig;
 use acceltran::nlp::sentiment::SentimentTask;
@@ -18,16 +19,15 @@ use acceltran::util::table::eng;
 use anyhow::Result;
 
 fn main() -> Result<()> {
-    // ---- functional path: PJRT inference ------------------------------
+    // ---- functional path: runtime inference ---------------------------
     let mut rt = Runtime::load_default()?;
     println!(
-        "loaded {} ({} params, {} artifacts) on {}",
+        "loaded {} ({} params) on the '{}' backend",
         rt.manifest.model_name,
         rt.manifest.param_count,
-        rt.manifest.artifacts.len(),
-        rt.client.platform_name(),
+        rt.backend_name(),
     );
-    let params = ParamStore::init(&rt.manifest, 0).params_literal();
+    let params = ParamStore::init(&rt.manifest, 0);
     let task = SentimentTask::new(rt.manifest.vocab, rt.manifest.seq, 7);
     let ds = task.dataset(8, 1);
     let mut ids = Vec::new();
@@ -36,8 +36,8 @@ fn main() -> Result<()> {
     }
     for tau in [0.0f32, 0.05] {
         let t0 = std::time::Instant::now();
-        let logits = rt.classify(8, &params, &ids, tau)?;
-        let rho = rt.activation_sparsity(&params, &ids, tau)?;
+        let logits = rt.classify(8, &params.params, &ids, tau)?;
+        let rho = rt.activation_sparsity(&params.params, &ids, tau)?;
         println!(
             "tau={tau:<5} activation sparsity {rho:.3}  first logits {:?}  ({:?})",
             &logits[..2],

@@ -1,7 +1,8 @@
 //! Serving scenario: stream classification requests through the dynamic
 //! batcher with DynaTran on vs off, reporting throughput and latency
 //! percentiles — the coordinator-level view of the paper's dynamic
-//! inference story.
+//! inference story.  Runs out of the box on the reference backend; uses
+//! PJRT artifacts when present.
 //!
 //! Run with: `cargo run --release --example serve -- [n_requests]`
 
@@ -30,7 +31,8 @@ fn main() -> Result<()> {
     let rt = Runtime::load_default()?;
     let vocab = rt.manifest.vocab;
     let seq = rt.manifest.seq;
-    let params = ParamStore::init(&rt.manifest, 0).params_literal();
+    println!("serving on the '{}' backend", rt.backend_name());
+    let params = ParamStore::init(&rt.manifest, 0).params;
     let mut server = BatchServer::new(rt, params);
 
     let task = SentimentTask::new(vocab, seq, 11);
@@ -42,17 +44,19 @@ fn main() -> Result<()> {
         let rps = run_wave(&mut server, &reqs)?;
         let s = &server.stats;
         println!(
-            "{label:<24} {rps:>8.1} req/s | dispatch latency mean {:?} p50 {:?} p99 {:?} | {} dispatches, {} padded",
+            "{label:<24} {rps:>8.1} req/s | dispatch latency mean {:?} p50 {:?} p99 {:?} | \
+             {} dispatches, {:.1}% padded rows, queue high-water {}",
             s.mean_latency(),
             s.latency_percentile(50.0),
             s.latency_percentile(99.0),
             s.dispatches,
-            s.padded_rows
+            100.0 * s.padded_row_fraction(),
+            s.queue_depth_high_water
         );
         server.stats = Default::default();
     }
     println!(
-        "\n(functional CPU-PJRT numbers; the ASIC-level serving speedups are\n\
+        "\n(functional host-CPU numbers; the ASIC-level serving speedups are\n\
          produced by the simulator — see `acceltran simulate` and benches/)"
     );
     Ok(())

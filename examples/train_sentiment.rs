@@ -1,9 +1,10 @@
 //! End-to-end validation driver (EXPERIMENTS.md §End-to-end): train the
 //! BERT-Tiny-shaped encoder on the synthetic sentiment corpus entirely
-//! through the Rust + PJRT stack (AOT `train_step_b32` artifact — Python
-//! never runs), log the loss curve, then regenerate the DynaTran
-//! accuracy-vs-sparsity trade-off on the *trained* model (the Fig. 11/12
-//! experiment at this model scale).
+//! in Rust (native backprop + AdamW on the reference backend; the AOT
+//! `train_step_b32` artifact under PJRT — Python never runs), log the
+//! loss curve, then regenerate the DynaTran accuracy-vs-sparsity
+//! trade-off on the *trained* model (the Fig. 11/12 experiment at this
+//! model scale).
 //!
 //! Run with: `cargo run --release --example train_sentiment -- [steps]`
 
@@ -31,8 +32,11 @@ fn main() -> Result<()> {
 
     let mut store = ParamStore::init(&rt.manifest, 0);
     println!(
-        "training {} ({} params) for {steps} AdamW steps (b=32, lr=1e-3)...",
-        rt.manifest.model_name, rt.manifest.param_count
+        "training {} ({} params) for {steps} AdamW steps (b=32, lr=1e-3) \
+         on the '{}' backend...",
+        rt.manifest.model_name,
+        rt.manifest.param_count,
+        rt.backend_name()
     );
     let t0 = std::time::Instant::now();
     let log = coordinator::train(
@@ -48,9 +52,8 @@ fn main() -> Result<()> {
 
     // accuracy-vs-sparsity trade-off on the trained model
     let taus = [0.0f32, 0.01, 0.02, 0.03, 0.04, 0.06, 0.08, 0.10];
-    let params = store.params_literal();
     let curve =
-        coordinator::sweep_dynatran(&mut rt, &params, &val_ds, &taus, 512)?;
+        coordinator::sweep_dynatran(&mut rt, &store.params, &val_ds, &taus, 512)?;
     println!("\nDynaTran sweep on the trained model (Fig. 11(a)/12 shape):");
     let mut t = Table::new(["tau", "activation sparsity", "accuracy"]);
     for p in &curve.points {

@@ -1,9 +1,10 @@
 //! Request router + dynamic batcher.
 //!
-//! The AOT artifacts export fixed batch shapes (1, 8, 32).  The batcher
-//! drains its queue into the largest shape it can fill (padding the tail
-//! with copies of the last request — padded rows are computed and
-//! discarded), amortizing the per-dispatch overhead exactly like the
+//! The runtime backends export fixed batch shapes (1, 8, 32 for the AOT
+//! artifacts; the reference executor accepts the same shapes).  The
+//! batcher drains its queue into the largest shape it can *fill*; only a
+//! sub-8 tail is padded up to a covering shape (padded rows are computed
+//! and discarded), amortizing the per-dispatch overhead exactly like the
 //! serving-side dynamic batching of vLLM-style routers, scaled to this
 //! repo's single-process setting.
 
@@ -44,6 +45,11 @@ pub struct ServerStats {
     pub served: u64,
     pub dispatches: u64,
     pub padded_rows: u64,
+    /// Total rows dispatched (served + padded) — the padded-fraction
+    /// denominator.
+    pub rows_dispatched: u64,
+    /// Deepest the queue has ever been (updated on submit).
+    pub queue_depth_high_water: u64,
     latencies_us: Vec<u64>,
 }
 
@@ -52,7 +58,17 @@ impl ServerStats {
         self.served += batch_fill as u64;
         self.dispatches += 1;
         self.padded_rows += (batch - batch_fill) as u64;
+        self.rows_dispatched += batch as u64;
         self.latencies_us.push(latency.as_micros() as u64);
+    }
+
+    /// Fraction of dispatched rows that were padding (wasted compute);
+    /// 0.0 before the first dispatch.
+    pub fn padded_row_fraction(&self) -> f64 {
+        if self.rows_dispatched == 0 {
+            return 0.0;
+        }
+        self.padded_rows as f64 / self.rows_dispatched as f64
     }
 
     /// Latency percentile over *dispatch* latencies, p in [0, 100].
@@ -76,10 +92,27 @@ impl ServerStats {
     }
 }
 
+/// Flush-time shape choice for a queue of depth `n` (see
+/// [`BatchServer::choose_shape`]): the largest shape that fills
+/// completely when that avoids padding waste, otherwise the smallest
+/// covering shape for the sub-8 tail.
+fn flush_shape(n: usize) -> usize {
+    let full = BATCH_SHAPES.iter().copied().filter(|&b| b <= n).max().unwrap_or(1);
+    if full >= 8 || full == n {
+        return full;
+    }
+    BATCH_SHAPES
+        .iter()
+        .copied()
+        .filter(|&b| b >= n)
+        .min()
+        .unwrap_or(BATCH_SHAPES[0])
+}
+
 /// The batching server.
 pub struct BatchServer {
     runtime: Runtime,
-    params: xla::Literal,
+    params: Vec<f32>,
     queue: VecDeque<Request>,
     pub stats: ServerStats,
     next_id: u64,
@@ -88,7 +121,7 @@ pub struct BatchServer {
 }
 
 impl BatchServer {
-    pub fn new(runtime: Runtime, params: xla::Literal) -> BatchServer {
+    pub fn new(runtime: Runtime, params: Vec<f32>) -> BatchServer {
         BatchServer {
             runtime,
             params,
@@ -109,6 +142,8 @@ impl BatchServer {
             tau,
             enqueued_at: Instant::now(),
         });
+        self.stats.queue_depth_high_water =
+            self.stats.queue_depth_high_water.max(self.queue.len() as u64);
         id
     }
 
@@ -118,8 +153,10 @@ impl BatchServer {
 
     /// Pick the batch shape for the current queue: dispatch the largest
     /// exported shape once it fills; otherwise keep accumulating until
-    /// the oldest request has dwelled past `max_wait`, then flush with
-    /// the smallest shape that covers the queue (padding the remainder).
+    /// the oldest request has dwelled past `max_wait`, then flush —
+    /// preferring a completely-filled shape (8 then covers an 11-deep
+    /// queue with zero padding where covering it with 32 would pad 21
+    /// rows) and padding only the final sub-8 tail.
     fn choose_shape(&self) -> Option<usize> {
         let n = self.queue.len();
         if n == 0 {
@@ -131,13 +168,7 @@ impl BatchServer {
         }
         let oldest = self.queue.front().unwrap().enqueued_at;
         if oldest.elapsed() >= self.max_wait {
-            // flush: smallest shape that covers the queue
-            let b = *BATCH_SHAPES
-                .iter()
-                .filter(|&&b| b >= n)
-                .min()
-                .unwrap_or(&largest);
-            return Some(b);
+            return Some(flush_shape(n));
         }
         None
     }
@@ -214,13 +245,7 @@ mod tests {
             return Some(BATCH_SHAPES[0]);
         }
         if waited {
-            return Some(
-                *BATCH_SHAPES
-                    .iter()
-                    .filter(|&&b| b >= n)
-                    .min()
-                    .unwrap_or(&BATCH_SHAPES[0]),
-            );
+            return Some(flush_shape(n));
         }
         None
     }
@@ -237,12 +262,40 @@ mod tests {
         assert_eq!(choose(8, false), None);
         assert_eq!(choose(5, false), None);
         assert_eq!(choose(1, false), None);
-        // ...and flush to the smallest covering shape after max_wait.
+        // ...and flush preferring completely-filled shapes: an 11-deep
+        // queue dispatches 8 full rows (the 3-tail goes next round), a
+        // sub-8 queue pads up to the smallest covering shape.
         assert_eq!(choose(5, true), Some(8));
         assert_eq!(choose(8, true), Some(8));
-        assert_eq!(choose(9, true), Some(32));
+        assert_eq!(choose(9, true), Some(8));
+        assert_eq!(choose(11, true), Some(8));
+        assert_eq!(choose(31, true), Some(8));
         assert_eq!(choose(1, true), Some(1));
         assert_eq!(choose(0, true), None);
+    }
+
+    #[test]
+    fn flush_shape_minimizes_padding() {
+        // total padding across a full drain of n requests
+        let drain_padding = |mut n: usize| {
+            let mut padded = 0;
+            while n > 0 {
+                let b = flush_shape(n);
+                let fill = b.min(n);
+                padded += b - fill;
+                n -= fill;
+            }
+            padded
+        };
+        assert_eq!(drain_padding(32), 0);
+        assert_eq!(drain_padding(11), 5); // 8 full + 3-in-8 tail
+        assert_eq!(drain_padding(9), 0); // 8 full + 1-in-1 tail
+        assert_eq!(drain_padding(5), 3); // 5-in-8
+        // the old "smallest covering shape" policy padded 11 -> 32 (21
+        // wasted rows); the fill-first policy never pads more than 7.
+        for n in 1..=40 {
+            assert!(drain_padding(n) <= 7, "n={n}");
+        }
     }
 
     #[test]
@@ -256,5 +309,18 @@ mod tests {
         assert_eq!(s.latency_percentile(100.0), Duration::from_micros(1000));
         assert_eq!(s.served, 40);
         assert_eq!(s.padded_rows, 0);
+        assert_eq!(s.padded_row_fraction(), 0.0);
+    }
+
+    #[test]
+    fn stats_track_padding_and_rows() {
+        let mut s = ServerStats::default();
+        s.record(Duration::from_micros(50), 8, 8); // full
+        s.record(Duration::from_micros(50), 3, 8); // tail: 5 padded
+        assert_eq!(s.served, 11);
+        assert_eq!(s.dispatches, 2);
+        assert_eq!(s.padded_rows, 5);
+        assert_eq!(s.rows_dispatched, 16);
+        assert!((s.padded_row_fraction() - 5.0 / 16.0).abs() < 1e-12);
     }
 }

@@ -1,6 +1,6 @@
 //! Evaluation loops: accuracy / F1 / activation sparsity over `nlp`
-//! datasets through the PJRT runtime — the drivers behind Figs. 11, 12
-//! and 14.
+//! datasets through the runtime (any `ExecBackend`) — the drivers
+//! behind Figs. 11, 12 and 14.
 
 use anyhow::Result;
 
@@ -36,7 +36,7 @@ fn predictions(logits: &[f32], classes: usize) -> Vec<i32> {
 /// threshold `tau`, batching through the b32 artifact.
 pub fn evaluate_accuracy(
     rt: &mut Runtime,
-    params: &xla::Literal,
+    params: &[f32],
     ds: &Dataset,
     tau: f32,
     max_examples: usize,
@@ -47,7 +47,7 @@ pub fn evaluate_accuracy(
 /// Evaluate under top-k pruning at `keep_frac`.
 pub fn evaluate_topk(
     rt: &mut Runtime,
-    params: &xla::Literal,
+    params: &[f32],
     ds: &Dataset,
     keep_frac: f32,
     max_examples: usize,
@@ -62,7 +62,7 @@ enum PruneKnob {
 
 fn evaluate_inner(
     rt: &mut Runtime,
-    params: &xla::Literal,
+    params: &[f32],
     ds: &Dataset,
     knob: PruneKnob,
     max_examples: usize,
@@ -120,7 +120,7 @@ fn evaluate_inner(
 /// Sweep DynaTran thresholds, producing a Fig. 11(a)/12 curve.
 pub fn sweep_dynatran(
     rt: &mut Runtime,
-    params: &xla::Literal,
+    params: &[f32],
     ds: &Dataset,
     taus: &[f32],
     max_examples: usize,
@@ -136,7 +136,7 @@ pub fn sweep_dynatran(
 /// Sweep top-k keep fractions, producing the Fig. 11(b)/12 baseline curve.
 pub fn sweep_topk(
     rt: &mut Runtime,
-    params: &xla::Literal,
+    params: &[f32],
     ds: &Dataset,
     keep_fracs: &[f32],
     max_examples: usize,
@@ -152,7 +152,15 @@ pub fn sweep_topk(
         let s = rt.manifest.seq as f64;
         let h = rt.manifest.hidden as f64;
         let heads = rt.manifest.heads as f64;
-        let ff = 4.0 * h;
+        // feed-forward width from the layout itself (ffn.b1's length),
+        // so non-4h models report the right share; 4h as a fallback.
+        let ff = rt
+            .manifest
+            .param_specs
+            .iter()
+            .find(|(name, _, _)| name == "layer0.ffn.b1")
+            .map(|(_, shape, _)| shape.iter().product::<usize>() as f64)
+            .unwrap_or(4.0 * h);
         let per_layer_attn = 2.0 * heads * s * s;
         let per_layer_rest = 8.0 * s * h + s * ff;
         let attn_share = per_layer_attn / (per_layer_attn + per_layer_rest);

@@ -1,6 +1,7 @@
 //! L3 coordination: the serving front-end and experiment drivers that tie
-//! the functional runtime (PJRT artifacts) and the timing model (the
-//! AccelTran simulator) together.
+//! the functional runtime (any `runtime::ExecBackend` — the pure-Rust
+//! reference executor by default, PJRT artifacts when present) and the
+//! timing model (the AccelTran simulator) together.
 //!
 //! * [`batcher`] — request router + dynamic batcher: incoming classify
 //!   requests are queued, grouped to the nearest exported batch shape
@@ -10,7 +11,7 @@
 //!   activation-sparsity sweeps across DynaTran tau and top-k keep
 //!   fractions (the Figs. 11/12/14 drivers).
 //! * [`trainer`] — the end-to-end training driver: AdamW steps through
-//!   the `train_step_b32` artifact, loss-curve logging, checkpoints.
+//!   the runtime's `train_step`, loss-curve logging, checkpoints.
 
 pub mod batcher;
 pub mod eval;

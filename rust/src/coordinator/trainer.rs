@@ -1,9 +1,11 @@
-//! End-to-end training driver over the `train_step_b32` AOT artifact.
+//! End-to-end training driver over the runtime's `train_step` entry
+//! point (the reference backend's native backprop + AdamW, or the AOT
+//! `train_step_b32` artifact under PJRT).
 //!
 //! The Rust side owns parameters and optimizer state (`ParamStore`),
-//! streams synthetic-sentiment batches, invokes the AdamW train-step
-//! executable, and logs the loss curve — the "train a small transformer
-//! through the full stack" validation recorded in EXPERIMENTS.md.
+//! streams synthetic-sentiment batches, invokes the train step, and logs
+//! the loss curve — the "train a small transformer through the full
+//! stack" validation recorded in EXPERIMENTS.md.
 
 use anyhow::Result;
 
@@ -30,9 +32,10 @@ impl TrainLog {
 }
 
 /// Train for `steps` AdamW steps at learning rate `lr`, evaluating on
-/// `val` every `eval_every` steps (0 = never).  Parameters stay on the
-/// PJRT side as literals between steps; only the scalar loss round-trips
-/// per step.
+/// `val` every `eval_every` steps (0 = never).  Parameters and optimizer
+/// state update in place inside the `ParamStore`; only the scalar loss
+/// crosses the backend boundary per step.
+#[allow(clippy::too_many_arguments)]
 pub fn train(
     rt: &mut Runtime,
     store: &mut ParamStore,
@@ -47,29 +50,26 @@ pub fn train(
     let batches = train_ds.batches(batch);
     assert!(!batches.is_empty());
     let mut log = TrainLog::default();
-    let mut p = store.params_literal();
-    let mut m = store.m_literal();
-    let mut v = store.v_literal();
     for step in 0..steps {
         let (ids, labels) = &batches[step % batches.len()];
-        let (p2, m2, v2, loss) =
-            rt.train_step(p, m, v, store.step + step as f32, ids, labels, lr)?;
-        p = p2;
-        m = m2;
-        v = v2;
+        let loss = rt.train_step(
+            &mut store.params,
+            &mut store.m,
+            &mut store.v,
+            store.step,
+            ids,
+            labels,
+            lr,
+        )?;
+        store.step += 1.0;
         log.losses.push(loss);
         if verbose && (step % 20 == 0 || step + 1 == steps) {
             println!("  step {step:>4}  loss {loss:.4}");
         }
         if eval_every > 0 && val_ds.is_some() && (step + 1) % eval_every == 0 {
-            store.absorb(&p, &m, &v)?;
-            // re-create literals after absorb moved them to host
-            p = store.params_literal();
-            m = store.m_literal();
-            v = store.v_literal();
             let r = super::eval::evaluate_accuracy(
                 rt,
-                &store.params_literal(),
+                &store.params,
                 val_ds.unwrap(),
                 0.0,
                 256,
@@ -80,26 +80,43 @@ pub fn train(
             log.val_accuracy.push((step + 1, r.accuracy));
         }
     }
-    store.absorb(&p, &m, &v)?;
-    store.step += steps as f32;
     Ok(log)
 }
 
 /// Train-once cache: load trained params from `path` if present,
-/// otherwise train `steps` on a fresh synthetic-sentiment corpus and save.
-/// The Figs. 11/12/14 bench harnesses share one trained model this way.
+/// otherwise train `steps` on a fresh synthetic-sentiment corpus and
+/// save.  The Figs. 11/12/14 bench harnesses share one trained model
+/// this way.  `ACCELTRAN_TRAIN_STEPS` overrides `steps` (the CI smoke
+/// job uses it to shrink the fine-tune).  A `<path>.meta` sidecar
+/// records the steps/backend a checkpoint was trained under, so a
+/// reduced smoke checkpoint is never silently reused by a full-size
+/// run (or vice versa).
 pub fn ensure_trained(
     rt: &mut Runtime,
     path: &std::path::Path,
     steps: usize,
     verbose: bool,
 ) -> Result<ParamStore> {
+    let steps = std::env::var("ACCELTRAN_TRAIN_STEPS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(steps);
+    let meta_path = path.with_extension("bin.meta");
+    let meta = format!("steps={steps} backend={}", rt.backend_name());
     if path.exists() {
-        if let Ok(store) = ParamStore::from_file(&rt.manifest, path) {
-            if verbose {
-                println!("loaded cached trained params from {path:?}");
+        let cached_meta = std::fs::read_to_string(&meta_path).unwrap_or_default();
+        if cached_meta.trim() == meta {
+            if let Ok(store) = ParamStore::from_file(&rt.manifest, path) {
+                if verbose {
+                    println!("loaded cached trained params from {path:?} ({meta})");
+                }
+                return Ok(store);
             }
-            return Ok(store);
+        } else if verbose {
+            println!(
+                "retraining: cached checkpoint was '{}', want '{meta}'",
+                cached_meta.trim()
+            );
         }
     }
     let task = crate::nlp::sentiment::SentimentTask::new(
@@ -110,13 +127,18 @@ pub fn ensure_trained(
     let train_ds = task.dataset(4096, 1);
     let mut store = ParamStore::init(&rt.manifest, 0);
     if verbose {
-        println!("training {} steps for the evaluation benches...", steps);
+        println!(
+            "training {} steps on the {} backend for the evaluation benches...",
+            steps,
+            rt.backend_name()
+        );
     }
     train(rt, &mut store, &train_ds, None, steps, 1e-3, 0, verbose)?;
     if let Some(dir) = path.parent() {
         std::fs::create_dir_all(dir).ok();
     }
     store.save(path)?;
+    std::fs::write(&meta_path, &meta).ok();
     Ok(store)
 }
 

@@ -10,12 +10,12 @@
 //!   pruning, binary-mask sparsity pipeline, buffers, LP-DDR3 /
 //!   monolithic-3D-RRAM main memory, smart stagger scheduling, 24 tiled
 //!   dataflows, 14nm area/energy models).
-//! * [`runtime`] — PJRT client wrapper that loads the AOT-compiled HLO
-//!   text artifacts produced by `python/compile/aot.py` and executes them
-//!   on the CPU PJRT backend (functional inference/training path).  The
-//!   binding surface comes from the in-tree `xla` path crate, which is a
-//!   stub unless real PJRT bindings are swapped in — see DESIGN.md
-//!   §Substitutions.
+//! * [`runtime`] — the functional inference/training path behind the
+//!   pluggable `ExecBackend` trait: a pure-Rust reference executor that
+//!   runs the encoder natively (forward, sparsity probe, backprop +
+//!   AdamW; the hermetic default), and the PJRT backend that executes
+//!   the AOT HLO artifacts from `python/compile/aot.py` (gated on real
+//!   xla bindings — see DESIGN.md §Substitutions).
 //! * [`coordinator`] — request router + dynamic batcher + evaluation
 //!   loops tying the functional model (runtime) and the timing model
 //!   (sim) together behind one serving API.

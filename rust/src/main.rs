@@ -10,6 +10,10 @@
 //!   train     train the synthetic-sentiment model through the runtime
 //!   serve     batched serving demo over the runtime
 //!   eval      accuracy/sparsity sweep (Figs. 11/12)
+//!
+//! The functional subcommands (train/serve/eval) run on the pure-Rust
+//! reference backend out of the box; set `ACCELTRAN_BACKEND=pjrt` (with
+//! artifacts present) to dispatch to the AOT/PJRT path instead.
 
 use acceltran::coordinator::{self, BatchServer};
 use acceltran::model::{memreq::MemReq, OpGraph, TransformerConfig};
@@ -63,7 +67,10 @@ fn print_usage() {
            dataflow  [--m 64 --k 64 --n 64 --lanes 4]\n\
            train     [--steps 200 --lr 1e-3 --examples 4096 --save path]\n\
            serve     [--requests 256 --tau 0.04]\n\
-           eval      [--taus 0,0.02,0.05 --examples 512 --params path]"
+           eval      [--taus 0,0.02,0.05 --examples 512 --params path]\n\
+         \n\
+         train/serve/eval execute on the pure-Rust reference backend by\n\
+         default; ACCELTRAN_BACKEND=pjrt|reference overrides."
     );
 }
 
@@ -270,8 +277,13 @@ fn cmd_train(args: &Args) -> Result<()> {
     let val_ds = task.dataset(512, 2);
     let mut store = ParamStore::init(&rt.manifest, args.get_u64("seed", 0));
     println!(
-        "training {} ({} params) on synthetic sentiment: {} examples, {} steps",
-        rt.manifest.model_name, rt.manifest.param_count, n, steps
+        "training {} ({} params) on synthetic sentiment: {} examples, {} steps \
+         ['{}' backend]",
+        rt.manifest.model_name,
+        rt.manifest.param_count,
+        n,
+        steps,
+        rt.backend_name()
     );
     let log = coordinator::train(
         &mut rt, &mut store, &train_ds, Some(&val_ds), steps, lr, 50, true,
@@ -292,8 +304,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let n = args.get_usize("requests", 256);
     let tau = args.get_f64("tau", 0.04) as f32;
     let params = match args.get("params") {
-        Some(p) => xla::Literal::vec1(&ParamStore::from_file(&rt.manifest, p)?.params),
-        None => ParamStore::init(&rt.manifest, 0).params_literal(),
+        Some(p) => ParamStore::from_file(&rt.manifest, p)?.params,
+        None => ParamStore::init(&rt.manifest, 0).params,
     };
     let mut server = BatchServer::new(rt, params);
     let task = SentimentTask::new(vocab, seq, 7);
@@ -309,10 +321,12 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let s = &server.stats;
     println!(
         "served {served} requests in {dt:?} ({:.1} req/s), {} dispatches, \
-         {} padded rows",
+         {} padded rows ({:.1}%), queue high-water {}",
         served as f64 / dt.as_secs_f64(),
         s.dispatches,
-        s.padded_rows
+        s.padded_rows,
+        100.0 * s.padded_row_fraction(),
+        s.queue_depth_high_water
     );
     println!(
         "dispatch latency: mean {:?}  p50 {:?}  p99 {:?}",
@@ -334,10 +348,10 @@ fn cmd_eval(args: &Args) -> Result<()> {
         .map(|s| s.trim().parse().unwrap())
         .collect();
     let params = match args.get("params") {
-        Some(p) => xla::Literal::vec1(&ParamStore::from_file(&rt.manifest, p)?.params),
+        Some(p) => ParamStore::from_file(&rt.manifest, p)?.params,
         None => {
             println!("(untrained params — pass --params for a trained model)");
-            ParamStore::init(&rt.manifest, 0).params_literal()
+            ParamStore::init(&rt.manifest, 0).params
         }
     };
     let task = SentimentTask::new(vocab, seq, 7);

@@ -1,10 +1,20 @@
-//! Artifact manifest + compiled-executable registry.
+//! Artifact manifest: the model-shape + flat-parameter-layout contract
+//! shared by every execution backend.
+//!
+//! For the PJRT backend the manifest is parsed from the
+//! `artifacts/manifest.json` that `python/compile/aot.py` exports (and
+//! additionally indexes the HLO artifacts).  For the pure-Rust reference
+//! backend, [`Manifest::synthetic`] builds the same layout directly from
+//! a [`TransformerConfig`], mirroring `python/compile/model.py::
+//! param_specs` name for name — so `ParamStore` buffers and checkpoint
+//! files are interchangeable between backends.
 
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
 
-use anyhow::{anyhow, bail, Context, Result};
+use anyhow::{anyhow, Context, Result};
 
+use crate::model::TransformerConfig;
 use crate::util::json::Json;
 
 /// One AOT artifact as described by `artifacts/manifest.json`.
@@ -138,222 +148,57 @@ impl Manifest {
                 PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
             })
     }
-}
 
-/// The PJRT runtime: one CPU client + lazily compiled executables.
-pub struct Runtime {
-    pub client: xla::PjRtClient,
-    pub manifest: Manifest,
-    compiled: HashMap<String, xla::PjRtLoadedExecutable>,
-}
-
-impl Runtime {
-    /// Create a runtime over the default artifact directory.
-    pub fn load_default() -> Result<Runtime> {
-        Self::load(Manifest::default_dir())
-    }
-
-    pub fn load(dir: impl AsRef<Path>) -> Result<Runtime> {
-        let manifest = Manifest::load(dir)?;
-        let client = xla::PjRtClient::cpu()
-            .map_err(|e| anyhow!("PJRT CPU client: {e:?}"))?;
-        Ok(Runtime { client, manifest, compiled: HashMap::new() })
-    }
-
-    /// Compile (once) and return the executable for `name`.
-    ///
-    /// HLO *text* is the interchange format: jax >= 0.5 serialized protos
-    /// carry 64-bit instruction ids that xla_extension 0.5.1 rejects; the
-    /// text parser reassigns ids (see python/compile/aot.py).
-    pub fn executable(&mut self, name: &str) -> Result<&xla::PjRtLoadedExecutable> {
-        if !self.compiled.contains_key(name) {
-            let art = self
-                .manifest
-                .artifacts
-                .get(name)
-                .ok_or_else(|| anyhow!("unknown artifact '{name}'"))?;
-            let path = self.manifest.dir.join(&art.file);
-            let path_str = path
-                .to_str()
-                .ok_or_else(|| anyhow!("non-utf8 path {path:?}"))?;
-            let proto = xla::HloModuleProto::from_text_file(path_str)
-                .map_err(|e| anyhow!("parsing {path:?}: {e:?}"))?;
-            let comp = xla::XlaComputation::from_proto(&proto);
-            let exe = self
-                .client
-                .compile(&comp)
-                .map_err(|e| anyhow!("compiling {name}: {e:?}"))?;
-            self.compiled.insert(name.to_string(), exe);
+    /// Build the manifest for a model shape without any AOT artifacts —
+    /// the reference backend's layout contract.  The spec list mirrors
+    /// `python/compile/model.py::param_specs` exactly: embeddings, then
+    /// per layer QKV/output projections with biases, two layer-norms and
+    /// the two feed-forward matrices, then the classifier head.
+    /// `init_std` conventions match `ParamStore::init`: negative = ones
+    /// (layer-norm gains), zero = zeros (biases).
+    pub fn synthetic(model: &TransformerConfig, classes: usize) -> Manifest {
+        let h = model.hidden;
+        let f = model.ff;
+        let std = 0.02;
+        let mut specs: Vec<(String, Vec<usize>, f64)> = vec![
+            ("embed.word".into(), vec![model.vocab, h], std),
+            ("embed.pos".into(), vec![model.seq, h], std),
+        ];
+        for layer in 0..model.layers {
+            let p = format!("layer{layer}");
+            specs.push((format!("{p}.attn.wq"), vec![h, h], std));
+            specs.push((format!("{p}.attn.bq"), vec![h], 0.0));
+            specs.push((format!("{p}.attn.wk"), vec![h, h], std));
+            specs.push((format!("{p}.attn.bk"), vec![h], 0.0));
+            specs.push((format!("{p}.attn.wv"), vec![h, h], std));
+            specs.push((format!("{p}.attn.bv"), vec![h], 0.0));
+            specs.push((format!("{p}.attn.wo"), vec![h, h], std));
+            specs.push((format!("{p}.attn.bo"), vec![h], 0.0));
+            specs.push((format!("{p}.ln1.gamma"), vec![h], -1.0));
+            specs.push((format!("{p}.ln1.beta"), vec![h], 0.0));
+            specs.push((format!("{p}.ffn.w1"), vec![h, f], std));
+            specs.push((format!("{p}.ffn.b1"), vec![f], 0.0));
+            specs.push((format!("{p}.ffn.w2"), vec![f, h], std));
+            specs.push((format!("{p}.ffn.b2"), vec![h], 0.0));
+            specs.push((format!("{p}.ln2.gamma"), vec![h], -1.0));
+            specs.push((format!("{p}.ln2.beta"), vec![h], 0.0));
         }
-        Ok(&self.compiled[name])
-    }
-
-    /// Execute artifact `name` on literal inputs; returns the tuple
-    /// elements as literals (lowering always uses return_tuple=True).
-    pub fn execute(&mut self, name: &str, args: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
-        let expected = self
-            .manifest
-            .artifacts
-            .get(name)
-            .map(|a| a.args.len())
-            .unwrap_or(0);
-        if expected != args.len() {
-            bail!(
-                "artifact '{name}' expects {expected} args, got {}",
-                args.len()
-            );
+        specs.push(("cls.w".into(), vec![h, classes], std));
+        specs.push(("cls.b".into(), vec![classes], 0.0));
+        let param_count = specs.iter().map(|(_, s, _)| s.iter().product::<usize>()).sum();
+        Manifest {
+            dir: PathBuf::new(),
+            model_name: model.name.clone(),
+            vocab: model.vocab,
+            seq: model.seq,
+            hidden: h,
+            layers: model.layers,
+            heads: model.heads,
+            classes,
+            param_count,
+            param_specs: specs,
+            artifacts: HashMap::new(),
         }
-        let exe = self.executable(name)?;
-        let result = exe
-            .execute::<xla::Literal>(args)
-            .map_err(|e| anyhow!("executing {name}: {e:?}"))?[0][0]
-            .to_literal_sync()
-            .map_err(|e| anyhow!("fetching {name} result: {e:?}"))?;
-        result
-            .to_tuple()
-            .map_err(|e| anyhow!("untupling {name} result: {e:?}"))
-    }
-
-    // ---- typed convenience wrappers ------------------------------------
-
-    /// `classify_b{B}`: logits for a batch of token ids at DynaTran
-    /// threshold `tau`.  `ids` is row-major `[batch * seq]`.
-    pub fn classify(
-        &mut self,
-        batch: usize,
-        params: &xla::Literal,
-        ids: &[i32],
-        tau: f32,
-    ) -> Result<Vec<f32>> {
-        let seq = self.manifest.seq;
-        if ids.len() != batch * seq {
-            bail!("ids length {} != batch {batch} * seq {seq}", ids.len());
-        }
-        let name = format!("classify_b{batch}");
-        let ids_lit = xla::Literal::vec1(ids)
-            .reshape(&[batch as i64, seq as i64])
-            .map_err(|e| anyhow!("reshape ids: {e:?}"))?;
-        let tau_lit = xla::Literal::scalar(tau);
-        let out = self.execute(&name, &[params.clone(), ids_lit, tau_lit])?;
-        out[0]
-            .to_vec::<f32>()
-            .map_err(|e| anyhow!("logits to_vec: {e:?}"))
-    }
-
-    /// `classify_topk_b32`: logits under top-k pruning at `keep_frac`.
-    pub fn classify_topk(
-        &mut self,
-        params: &xla::Literal,
-        ids: &[i32],
-        keep_frac: f32,
-    ) -> Result<Vec<f32>> {
-        let seq = self.manifest.seq;
-        let batch = ids.len() / seq;
-        let ids_lit = xla::Literal::vec1(ids)
-            .reshape(&[batch as i64, seq as i64])
-            .map_err(|e| anyhow!("reshape ids: {e:?}"))?;
-        let out = self.execute(
-            "classify_topk_b32",
-            &[params.clone(), ids_lit, xla::Literal::scalar(keep_frac)],
-        )?;
-        out[0]
-            .to_vec::<f32>()
-            .map_err(|e| anyhow!("logits to_vec: {e:?}"))
-    }
-
-    /// `act_sparsity_b8`: mean post-DynaTran activation sparsity at tau.
-    pub fn activation_sparsity(
-        &mut self,
-        params: &xla::Literal,
-        ids: &[i32],
-        tau: f32,
-    ) -> Result<f32> {
-        let seq = self.manifest.seq;
-        let ids_lit = xla::Literal::vec1(ids)
-            .reshape(&[(ids.len() / seq) as i64, seq as i64])
-            .map_err(|e| anyhow!("reshape ids: {e:?}"))?;
-        let out = self.execute(
-            "act_sparsity_b8",
-            &[params.clone(), ids_lit, xla::Literal::scalar(tau)],
-        )?;
-        out[0]
-            .to_vec::<f32>()
-            .map_err(|e| anyhow!("sparsity to_vec: {e:?}"))?
-            .first()
-            .copied()
-            .ok_or_else(|| anyhow!("empty sparsity result"))
-    }
-
-    /// `train_step_b32`: one AdamW step.  Returns
-    /// `(params', m', v', loss)` as literals (params stay as literals so
-    /// the training loop avoids host round-trips of the full buffer).
-    #[allow(clippy::too_many_arguments)]
-    pub fn train_step(
-        &mut self,
-        params: xla::Literal,
-        m: xla::Literal,
-        v: xla::Literal,
-        step: f32,
-        ids: &[i32],
-        labels: &[i32],
-        lr: f32,
-    ) -> Result<(xla::Literal, xla::Literal, xla::Literal, f32)> {
-        let seq = self.manifest.seq;
-        let batch = labels.len();
-        if ids.len() != batch * seq {
-            bail!("ids length {} != batch {batch} * seq {seq}", ids.len());
-        }
-        let ids_lit = xla::Literal::vec1(ids)
-            .reshape(&[batch as i64, seq as i64])
-            .map_err(|e| anyhow!("reshape ids: {e:?}"))?;
-        let labels_lit = xla::Literal::vec1(labels);
-        let mut out = self.execute(
-            "train_step_b32",
-            &[
-                params,
-                m,
-                v,
-                xla::Literal::scalar(step),
-                ids_lit,
-                labels_lit,
-                xla::Literal::scalar(lr),
-            ],
-        )?;
-        if out.len() != 4 {
-            bail!("train_step returned {} outputs, want 4", out.len());
-        }
-        let loss = out[3]
-            .to_vec::<f32>()
-            .map_err(|e| anyhow!("loss to_vec: {e:?}"))?[0];
-        let v2 = out.remove(2);
-        let m2 = out.remove(1);
-        let p2 = out.remove(0);
-        Ok((p2, m2, v2, loss))
-    }
-
-    /// `dynatran_prune_256x256`: the standalone L1 Pallas kernel.
-    pub fn dynatran_prune(
-        &mut self,
-        x: &[f32],
-        tau: f32,
-    ) -> Result<(Vec<f32>, Vec<f32>)> {
-        if x.len() != 256 * 256 {
-            bail!("prune artifact is fixed at 256x256");
-        }
-        let x_lit = xla::Literal::vec1(x)
-            .reshape(&[256, 256])
-            .map_err(|e| anyhow!("reshape x: {e:?}"))?;
-        let out = self.execute(
-            "dynatran_prune_256x256",
-            &[x_lit, xla::Literal::scalar(tau)],
-        )?;
-        let pruned = out[0]
-            .to_vec::<f32>()
-            .map_err(|e| anyhow!("pruned to_vec: {e:?}"))?;
-        let mask = out[1]
-            .to_vec::<f32>()
-            .map_err(|e| anyhow!("mask to_vec: {e:?}"))?;
-        Ok((pruned, mask))
     }
 }
 
@@ -401,5 +246,24 @@ mod tests {
     fn missing_manifest_is_a_clear_error() {
         let err = Manifest::load("/nonexistent/dir").unwrap_err();
         assert!(err.to_string().contains("make artifacts"));
+    }
+
+    #[test]
+    fn synthetic_manifest_matches_aot_layout() {
+        // The default AOT export (bert-tiny-synth, vocab 1024, seq 64,
+        // 2 classes) has 536,066 parameters; the synthetic layout must
+        // agree so checkpoints are interchangeable between backends.
+        let model = TransformerConfig::bert_tiny_synth(1024, 64);
+        let m = Manifest::synthetic(&model, 2);
+        assert_eq!(m.param_count, 536_066);
+        assert_eq!(m.param_specs.len(), 2 + 2 * 16 + 2);
+        assert_eq!(m.param_specs[0].0, "embed.word");
+        assert_eq!(m.param_specs[0].1, vec![1024, 128]);
+        let (name, shape, std) = &m.param_specs[2 + 8];
+        assert_eq!(name, "layer0.ln1.gamma");
+        assert_eq!(shape, &vec![128]);
+        assert!(*std < 0.0, "layer-norm gains init to one");
+        assert_eq!(m.param_specs.last().unwrap().0, "cls.b");
+        assert!(m.artifacts.is_empty());
     }
 }

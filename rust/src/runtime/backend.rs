@@ -1,0 +1,81 @@
+//! Pluggable execution backends for the functional half of the stack.
+//!
+//! [`ExecBackend`] abstracts the five artifact entry points over typed
+//! *host* tensors (flat `f32`/`i32` slices), so the coordinator layer —
+//! batcher, eval sweeps, trainer — is written once against the trait and
+//! runs identically on:
+//!
+//! * [`reference::ReferenceBackend`] — a pure-Rust executor that runs the
+//!   BERT-Tiny-shaped encoder natively (forward, activation-sparsity
+//!   probe, backprop + AdamW).  Hermetic: no artifacts, no native XLA.
+//!   The default whenever PJRT artifacts are absent.
+//! * [`pjrt::PjrtBackend`] — the original AOT-HLO path: compiles the
+//!   `python/compile/aot.py` artifacts through the PJRT client (the
+//!   in-tree `xla` crate is a stub unless real bindings are swapped in —
+//!   DESIGN.md §Substitutions).
+//!
+//! `runtime::Runtime` is a thin dispatcher over a boxed backend; see
+//! DESIGN.md §Substitutions "Reference executor vs PJRT" for what is
+//! bit-exact between the two and what is approximate.
+
+use anyhow::Result;
+
+pub mod pjrt;
+pub mod reference;
+
+/// One execution backend: the five typed entry points the artifacts
+/// export, over host tensors.
+///
+/// Shape contract (from the backend's manifest): `ids` is row-major
+/// `[batch * seq]`, `params`/`m`/`v` are the flat parameter buffer of
+/// `manifest.param_count` f32s in `param_specs` order, logits come back
+/// row-major `[batch * classes]`.
+pub trait ExecBackend {
+    /// Short stable name for logs and bench labels ("reference", "pjrt").
+    fn name(&self) -> &'static str;
+
+    /// Classification logits for a batch at DynaTran threshold `tau`.
+    fn classify(
+        &mut self,
+        batch: usize,
+        params: &[f32],
+        ids: &[i32],
+        tau: f32,
+    ) -> Result<Vec<f32>>;
+
+    /// Classification logits under SpAtten-style top-k attention pruning
+    /// at `keep_frac` (batch inferred from `ids.len()`).
+    fn classify_topk(
+        &mut self,
+        params: &[f32],
+        ids: &[i32],
+        keep_frac: f32,
+    ) -> Result<Vec<f32>>;
+
+    /// Mean post-DynaTran activation sparsity over a forward pass.
+    fn activation_sparsity(
+        &mut self,
+        params: &[f32],
+        ids: &[i32],
+        tau: f32,
+    ) -> Result<f32>;
+
+    /// One AdamW step (batch inferred from `labels.len()`); updates
+    /// `params`/`m`/`v` in place and returns the scalar loss.  `step` is
+    /// the pre-increment step counter for bias correction.
+    #[allow(clippy::too_many_arguments)]
+    fn train_step(
+        &mut self,
+        params: &mut [f32],
+        m: &mut [f32],
+        v: &mut [f32],
+        step: f32,
+        ids: &[i32],
+        labels: &[i32],
+        lr: f32,
+    ) -> Result<f32>;
+
+    /// The standalone DynaTran prune kernel: returns `(pruned, mask)`
+    /// with mask = 1.0 at pruned positions (paper Sec. III-B6).
+    fn dynatran_prune(&mut self, x: &[f32], tau: f32) -> Result<(Vec<f32>, Vec<f32>)>;
+}

@@ -1,0 +1,229 @@
+//! The PJRT/HLO execution backend: compiles the AOT artifacts exported
+//! by `python/compile/aot.py` through the PJRT CPU client and dispatches
+//! the five entry points to the fixed-shape executables.
+//!
+//! Still gated on native bindings: the in-tree `xla` crate is a stub
+//! whose `compile` errors (DESIGN.md §Substitutions), so this backend
+//! constructs fine (manifest-only flows work) but execution reports the
+//! missing native library until real xla-rs bindings are swapped in.
+//! Host tensors cross the trait boundary as flat slices; literals are
+//! built here, immediately before dispatch.
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::runtime::artifacts::Manifest;
+use crate::runtime::backend::ExecBackend;
+
+/// PJRT client + lazily compiled executables over one artifact manifest.
+pub struct PjrtBackend {
+    pub client: xla::PjRtClient,
+    manifest: Manifest,
+    compiled: HashMap<String, xla::PjRtLoadedExecutable>,
+}
+
+impl PjrtBackend {
+    /// Create a backend over `<dir>/manifest.json`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<PjrtBackend> {
+        Self::from_manifest(Manifest::load(dir)?)
+    }
+
+    pub fn from_manifest(manifest: Manifest) -> Result<PjrtBackend> {
+        let client =
+            xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT CPU client: {e:?}"))?;
+        Ok(PjrtBackend { client, manifest, compiled: HashMap::new() })
+    }
+
+    /// Compile (once) and return the executable for `name`.
+    ///
+    /// HLO *text* is the interchange format: jax >= 0.5 serialized protos
+    /// carry 64-bit instruction ids that xla_extension 0.5.1 rejects; the
+    /// text parser reassigns ids (see python/compile/aot.py).
+    pub fn executable(&mut self, name: &str) -> Result<&xla::PjRtLoadedExecutable> {
+        if !self.compiled.contains_key(name) {
+            let art = self
+                .manifest
+                .artifacts
+                .get(name)
+                .ok_or_else(|| anyhow!("unknown artifact '{name}'"))?;
+            let path = self.manifest.dir.join(&art.file);
+            let path_str = path
+                .to_str()
+                .ok_or_else(|| anyhow!("non-utf8 path {path:?}"))?;
+            let proto = xla::HloModuleProto::from_text_file(path_str)
+                .map_err(|e| anyhow!("parsing {path:?}: {e:?}"))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .map_err(|e| anyhow!("compiling {name}: {e:?}"))?;
+            self.compiled.insert(name.to_string(), exe);
+        }
+        Ok(&self.compiled[name])
+    }
+
+    /// Execute artifact `name` on literal inputs; returns the tuple
+    /// elements as literals (lowering always uses return_tuple=True).
+    pub fn execute(&mut self, name: &str, args: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let expected = self
+            .manifest
+            .artifacts
+            .get(name)
+            .map(|a| a.args.len())
+            .unwrap_or(0);
+        if expected != args.len() {
+            bail!(
+                "artifact '{name}' expects {expected} args, got {}",
+                args.len()
+            );
+        }
+        let exe = self.executable(name)?;
+        let result = exe
+            .execute::<xla::Literal>(args)
+            .map_err(|e| anyhow!("executing {name}: {e:?}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetching {name} result: {e:?}"))?;
+        result
+            .to_tuple()
+            .map_err(|e| anyhow!("untupling {name} result: {e:?}"))
+    }
+
+    fn ids_literal(&self, ids: &[i32], batch: usize) -> Result<xla::Literal> {
+        let seq = self.manifest.seq;
+        xla::Literal::vec1(ids)
+            .reshape(&[batch as i64, seq as i64])
+            .map_err(|e| anyhow!("reshape ids: {e:?}"))
+    }
+}
+
+impl ExecBackend for PjrtBackend {
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+
+    /// `classify_b{B}`: logits for a batch of token ids at DynaTran
+    /// threshold `tau`.
+    fn classify(
+        &mut self,
+        batch: usize,
+        params: &[f32],
+        ids: &[i32],
+        tau: f32,
+    ) -> Result<Vec<f32>> {
+        let seq = self.manifest.seq;
+        if ids.len() != batch * seq {
+            bail!("ids length {} != batch {batch} * seq {seq}", ids.len());
+        }
+        let name = format!("classify_b{batch}");
+        let ids_lit = self.ids_literal(ids, batch)?;
+        let out = self.execute(
+            &name,
+            &[xla::Literal::vec1(params), ids_lit, xla::Literal::scalar(tau)],
+        )?;
+        out[0]
+            .to_vec::<f32>()
+            .map_err(|e| anyhow!("logits to_vec: {e:?}"))
+    }
+
+    /// `classify_topk_b32`: logits under top-k pruning at `keep_frac`.
+    fn classify_topk(&mut self, params: &[f32], ids: &[i32], keep_frac: f32) -> Result<Vec<f32>> {
+        let batch = ids.len() / self.manifest.seq;
+        let ids_lit = self.ids_literal(ids, batch)?;
+        let out = self.execute(
+            "classify_topk_b32",
+            &[xla::Literal::vec1(params), ids_lit, xla::Literal::scalar(keep_frac)],
+        )?;
+        out[0]
+            .to_vec::<f32>()
+            .map_err(|e| anyhow!("logits to_vec: {e:?}"))
+    }
+
+    /// `act_sparsity_b8`: mean post-DynaTran activation sparsity at tau.
+    fn activation_sparsity(&mut self, params: &[f32], ids: &[i32], tau: f32) -> Result<f32> {
+        let batch = ids.len() / self.manifest.seq;
+        let ids_lit = self.ids_literal(ids, batch)?;
+        let out = self.execute(
+            "act_sparsity_b8",
+            &[xla::Literal::vec1(params), ids_lit, xla::Literal::scalar(tau)],
+        )?;
+        out[0]
+            .to_vec::<f32>()
+            .map_err(|e| anyhow!("sparsity to_vec: {e:?}"))?
+            .first()
+            .copied()
+            .ok_or_else(|| anyhow!("empty sparsity result"))
+    }
+
+    /// `train_step_b32`: one AdamW step.  The updated `(params, m, v)`
+    /// buffers are copied back into the caller's slices.
+    fn train_step(
+        &mut self,
+        params: &mut [f32],
+        m: &mut [f32],
+        v: &mut [f32],
+        step: f32,
+        ids: &[i32],
+        labels: &[i32],
+        lr: f32,
+    ) -> Result<f32> {
+        let seq = self.manifest.seq;
+        let batch = labels.len();
+        if ids.len() != batch * seq {
+            bail!("ids length {} != batch {batch} * seq {seq}", ids.len());
+        }
+        let ids_lit = self.ids_literal(ids, batch)?;
+        let out = self.execute(
+            "train_step_b32",
+            &[
+                xla::Literal::vec1(params),
+                xla::Literal::vec1(m),
+                xla::Literal::vec1(v),
+                xla::Literal::scalar(step),
+                ids_lit,
+                xla::Literal::vec1(labels),
+                xla::Literal::scalar(lr),
+            ],
+        )?;
+        if out.len() != 4 {
+            bail!("train_step returned {} outputs, want 4", out.len());
+        }
+        let p2 = out[0]
+            .to_vec::<f32>()
+            .map_err(|e| anyhow!("params to_vec: {e:?}"))?;
+        let m2 = out[1].to_vec::<f32>().map_err(|e| anyhow!("m to_vec: {e:?}"))?;
+        let v2 = out[2].to_vec::<f32>().map_err(|e| anyhow!("v to_vec: {e:?}"))?;
+        if p2.len() != params.len() || m2.len() != m.len() || v2.len() != v.len() {
+            bail!("train_step output sizes disagree with inputs");
+        }
+        params.copy_from_slice(&p2);
+        m.copy_from_slice(&m2);
+        v.copy_from_slice(&v2);
+        let loss = out[3]
+            .to_vec::<f32>()
+            .map_err(|e| anyhow!("loss to_vec: {e:?}"))?[0];
+        Ok(loss)
+    }
+
+    /// `dynatran_prune_256x256`: the standalone L1 Pallas kernel.
+    fn dynatran_prune(&mut self, x: &[f32], tau: f32) -> Result<(Vec<f32>, Vec<f32>)> {
+        if x.len() != 256 * 256 {
+            bail!("prune artifact is fixed at 256x256");
+        }
+        let x_lit = xla::Literal::vec1(x)
+            .reshape(&[256, 256])
+            .map_err(|e| anyhow!("reshape x: {e:?}"))?;
+        let out = self.execute(
+            "dynatran_prune_256x256",
+            &[x_lit, xla::Literal::scalar(tau)],
+        )?;
+        let pruned = out[0]
+            .to_vec::<f32>()
+            .map_err(|e| anyhow!("pruned to_vec: {e:?}"))?;
+        let mask = out[1]
+            .to_vec::<f32>()
+            .map_err(|e| anyhow!("mask to_vec: {e:?}"))?;
+        Ok((pruned, mask))
+    }
+}

@@ -1,15 +1,201 @@
-//! PJRT runtime: loads the AOT-compiled HLO text artifacts produced by
-//! `python/compile/aot.py` and executes them on the CPU PJRT client.
+//! The functional half of the stack (the simulator is the timing half):
+//! classification forward passes with runtime DynaTran tau / top-k
+//! keep-fraction knobs, activation-sparsity probes, AdamW training
+//! steps, and the standalone DynaTran prune kernel.
 //!
-//! This is the *functional* half of the stack (the simulator is the
-//! timing half): classification forward passes (with the DynaTran tau or
-//! top-k keep-fraction as runtime scalars), activation-sparsity probes,
-//! AdamW training steps, and the standalone Pallas DynaTran kernel.
-//! Python never runs here — artifacts are compiled once at build time
-//! (`make artifacts`) and this module is pure Rust + PJRT.
+//! [`Runtime`] is a thin dispatcher over a pluggable [`ExecBackend`]:
+//!
+//! * the **reference backend** (`backend::reference`) executes the
+//!   encoder natively in Rust — hermetic, always available, and the
+//!   default when no AOT artifacts are present;
+//! * the **PJRT backend** (`backend::pjrt`) compiles and runs the HLO
+//!   text artifacts from `python/compile/aot.py` (gated on real xla
+//!   bindings — DESIGN.md §Substitutions).
+//!
+//! Selection: `Runtime::load_default()` honours `ACCELTRAN_BACKEND`
+//! (`reference` | `pjrt`); unset, it uses PJRT when
+//! `artifacts/manifest.json` exists and falls back to the reference
+//! executor otherwise — which is what lets every example, bench and the
+//! serving coordinator run end-to-end out of the box.
 
 pub mod artifacts;
+pub mod backend;
 pub mod params;
+pub mod tensor;
 
-pub use artifacts::{Artifact, Manifest, Runtime};
+use std::path::Path;
+
+use anyhow::{bail, Result};
+
+pub use artifacts::{Artifact, Manifest};
+pub use backend::pjrt::PjrtBackend;
+pub use backend::reference::ReferenceBackend;
+pub use backend::ExecBackend;
 pub use params::ParamStore;
+
+use crate::model::TransformerConfig;
+
+/// The functional runtime: one manifest (model shape + parameter
+/// layout) plus the execution backend that honours it.
+pub struct Runtime {
+    pub manifest: Manifest,
+    backend: Box<dyn ExecBackend>,
+}
+
+impl Runtime {
+    /// Wrap an explicit backend (the constructor everything else
+    /// funnels through).
+    pub fn with_backend(manifest: Manifest, backend: Box<dyn ExecBackend>) -> Runtime {
+        Runtime { manifest, backend }
+    }
+
+    /// Pure-Rust reference runtime over the default synthetic model
+    /// (BERT-Tiny shape, vocab 1024, seq 64, 2 classes — the same shape
+    /// `python/compile/aot.py` exports).
+    pub fn reference() -> Runtime {
+        Self::reference_for(&TransformerConfig::bert_tiny_synth(1024, 64), 2)
+            .expect("the default synthetic shape is self-consistent")
+    }
+
+    /// Pure-Rust reference runtime for an arbitrary encoder shape.
+    /// Errors when the shape is inconsistent (e.g. `hidden` not
+    /// divisible by `heads`).
+    pub fn reference_for(model: &TransformerConfig, classes: usize) -> Result<Runtime> {
+        let manifest = Manifest::synthetic(model, classes);
+        let backend = ReferenceBackend::new(&manifest)?;
+        Ok(Runtime::with_backend(manifest, Box::new(backend)))
+    }
+
+    /// PJRT runtime over `<dir>/manifest.json`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Runtime> {
+        let manifest = Manifest::load(&dir)?;
+        let backend = PjrtBackend::from_manifest(manifest.clone())?;
+        Ok(Runtime::with_backend(manifest, Box::new(backend)))
+    }
+
+    /// Default runtime: `$ACCELTRAN_BACKEND` picks explicitly
+    /// (`reference` | `pjrt`); unset, PJRT when artifacts exist,
+    /// otherwise the reference executor.
+    pub fn load_default() -> Result<Runtime> {
+        let dir = Manifest::default_dir();
+        match std::env::var("ACCELTRAN_BACKEND").unwrap_or_default().as_str() {
+            "pjrt" => Self::load(dir),
+            "reference" | "ref" => Ok(Self::reference()),
+            "" => {
+                if dir.join("manifest.json").exists() {
+                    Self::load(dir)
+                } else {
+                    Ok(Self::reference())
+                }
+            }
+            other => bail!("ACCELTRAN_BACKEND must be 'pjrt' or 'reference', got '{other}'"),
+        }
+    }
+
+    /// Which backend this runtime dispatches to ("reference" / "pjrt").
+    pub fn backend_name(&self) -> &'static str {
+        self.backend.name()
+    }
+
+    // ---- the five typed entry points -------------------------------
+
+    /// Classification logits for a batch at DynaTran threshold `tau`.
+    /// `ids` is row-major `[batch * seq]`; logits come back
+    /// `[batch * classes]`.
+    pub fn classify(
+        &mut self,
+        batch: usize,
+        params: &[f32],
+        ids: &[i32],
+        tau: f32,
+    ) -> Result<Vec<f32>> {
+        self.backend.classify(batch, params, ids, tau)
+    }
+
+    /// Logits under SpAtten-style top-k attention pruning at `keep_frac`.
+    pub fn classify_topk(
+        &mut self,
+        params: &[f32],
+        ids: &[i32],
+        keep_frac: f32,
+    ) -> Result<Vec<f32>> {
+        self.backend.classify_topk(params, ids, keep_frac)
+    }
+
+    /// Mean post-DynaTran activation sparsity over a forward pass at
+    /// `tau` (the rho axis of Figs. 11/12).
+    pub fn activation_sparsity(&mut self, params: &[f32], ids: &[i32], tau: f32) -> Result<f32> {
+        self.backend.activation_sparsity(params, ids, tau)
+    }
+
+    /// One AdamW step over the flat buffers, in place; returns the loss.
+    #[allow(clippy::too_many_arguments)]
+    pub fn train_step(
+        &mut self,
+        params: &mut [f32],
+        m: &mut [f32],
+        v: &mut [f32],
+        step: f32,
+        ids: &[i32],
+        labels: &[i32],
+        lr: f32,
+    ) -> Result<f32> {
+        self.backend.train_step(params, m, v, step, ids, labels, lr)
+    }
+
+    /// The standalone DynaTran prune kernel: `(pruned, mask)` with
+    /// mask = 1.0 at pruned positions.
+    pub fn dynatran_prune(&mut self, x: &[f32], tau: f32) -> Result<(Vec<f32>, Vec<f32>)> {
+        self.backend.dynatran_prune(x, tau)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn reference_runtime_is_always_available() {
+        let mut rt = Runtime::reference();
+        assert_eq!(rt.backend_name(), "reference");
+        assert_eq!(rt.manifest.param_count, 536_066);
+        let params = ParamStore::init(&rt.manifest, 0);
+        let ids: Vec<i32> = (0..rt.manifest.seq).map(|i| (i % 512) as i32).collect();
+        let logits = rt.classify(1, &params.params, &ids, 0.0).unwrap();
+        assert_eq!(logits.len(), rt.manifest.classes);
+        assert!(logits.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn load_default_falls_back_to_reference_without_artifacts() {
+        // Tier-1 runs without artifacts; the fallback is what un-gates
+        // the examples and benches.  (Skip under ACCELTRAN_BACKEND=pjrt
+        // or a checked-out artifacts/ dir.)
+        if std::env::var_os("ACCELTRAN_BACKEND").is_some()
+            || Manifest::default_dir().join("manifest.json").exists()
+        {
+            return;
+        }
+        let rt = Runtime::load_default().unwrap();
+        assert_eq!(rt.backend_name(), "reference");
+    }
+
+    #[test]
+    fn reference_runtime_scales_to_custom_shapes() {
+        let model = TransformerConfig {
+            name: "micro".into(),
+            hidden: 16,
+            layers: 1,
+            heads: 2,
+            ff: 32,
+            vocab: 32,
+            seq: 8,
+        };
+        let mut rt = Runtime::reference_for(&model, 3).unwrap();
+        assert_eq!(rt.manifest.classes, 3);
+        let params = ParamStore::init(&rt.manifest, 1);
+        let ids: Vec<i32> = (0..2 * 8).map(|i| (i % 32) as i32).collect();
+        let logits = rt.classify(2, &params.params, &ids, 0.0).unwrap();
+        assert_eq!(logits.len(), 2 * 3);
+    }
+}

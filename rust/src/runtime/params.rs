@@ -1,8 +1,10 @@
 //! Flat-parameter ownership: initialization, optimizer state, and
 //! persistence for the model parameters the Rust coordinator feeds the
-//! AOT artifacts.
+//! execution backends.
 //!
-//! The layout contract comes from `manifest.json` (`param_specs`):
+//! The layout contract comes from the manifest (`param_specs` — parsed
+//! from `manifest.json` for the PJRT backend, built by
+//! `Manifest::synthetic` for the reference backend):
 //! parameters are concatenated in spec order into one f32 vector; specs
 //! with `init_std > 0` draw `N(0, std^2)`, `init_std == 0` are zeros
 //! (biases), `init_std < 0` are ones (layer-norm gains).  Matches
@@ -11,7 +13,7 @@
 
 use std::path::Path;
 
-use anyhow::{anyhow, bail, Context, Result};
+use anyhow::{bail, Context, Result};
 
 use super::artifacts::Manifest;
 use crate::util::rng::Rng;
@@ -66,35 +68,6 @@ impl ParamStore {
     /// Save params as raw little-endian f32.
     pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
         write_f32(path.as_ref(), &self.params)
-    }
-
-    /// Params as an XLA literal (1-D f32).
-    pub fn params_literal(&self) -> xla::Literal {
-        xla::Literal::vec1(&self.params)
-    }
-
-    pub fn m_literal(&self) -> xla::Literal {
-        xla::Literal::vec1(&self.m)
-    }
-
-    pub fn v_literal(&self) -> xla::Literal {
-        xla::Literal::vec1(&self.v)
-    }
-
-    /// Absorb the literals returned by a train step.
-    pub fn absorb(
-        &mut self,
-        p: &xla::Literal,
-        m: &xla::Literal,
-        v: &xla::Literal,
-    ) -> Result<()> {
-        self.params = p
-            .to_vec::<f32>()
-            .map_err(|e| anyhow!("params to_vec: {e:?}"))?;
-        self.m = m.to_vec::<f32>().map_err(|e| anyhow!("m to_vec: {e:?}"))?;
-        self.v = v.to_vec::<f32>().map_err(|e| anyhow!("v to_vec: {e:?}"))?;
-        self.step += 1.0;
-        Ok(())
     }
 }
 

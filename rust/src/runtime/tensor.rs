@@ -1,0 +1,517 @@
+//! Host-tensor math layer for the pure-Rust reference executor
+//! (`runtime::backend::reference`).
+//!
+//! Row-major f32 matrices as flat slices, shapes passed explicitly.  The
+//! three GEMM variants cover forward (`matmul`), input gradients
+//! (`matmul_nt`, x · Wᵀ), and weight gradients (`matmul_tn`, Xᵀ · dY)
+//! without ever materializing a transpose.  `matmul` and `matmul_tn`
+//! (the row-broadcast forms) skip zero multiplicands in their inner
+//! accumulation — the software mirror of the accelerator's
+//! ineffectual-MAC skipping, and the reason DynaTran-pruned inference
+//! speeds up on this backend too; `matmul_nt` is a dense dot-product
+//! loop, where a per-element branch would defeat vectorization for no
+//! row-level reuse.
+//!
+//! All three GEMMs split their output across scoped threads for large
+//! problems (`matmul`/`matmul_nt` by input rows, `matmul_tn` by output
+//! rows); chunking never splits a single output element's accumulation,
+//! so results are bitwise identical to the single-threaded loops.
+
+/// Problems below this many MACs stay single-threaded (thread spawn
+/// overhead dominates under ~1e6 MACs on commodity cores).
+const PAR_THRESHOLD: usize = 1 << 21;
+
+/// Worker count for row-parallel GEMMs: `ACCELTRAN_THREADS` if set,
+/// otherwise available parallelism capped at 8.
+fn worker_count() -> usize {
+    if let Ok(v) = std::env::var("ACCELTRAN_THREADS") {
+        if let Ok(n) = v.parse::<usize>() {
+            return n.max(1);
+        }
+    }
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1).min(8)
+}
+
+fn row_chunk(rows: usize, workers: usize) -> usize {
+    let per = (rows + workers - 1) / workers;
+    per.max(1)
+}
+
+/// `out = x · w` for row-major `x: m x k`, `w: k x n`.
+pub fn matmul(x: &[f32], w: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+    assert_eq!(x.len(), m * k, "matmul: x shape");
+    assert_eq!(w.len(), k * n, "matmul: w shape");
+    let mut out = vec![0.0f32; m * n];
+    let workers = if m * k * n >= PAR_THRESHOLD { worker_count() } else { 1 };
+    if workers <= 1 || m < 2 * workers {
+        matmul_rows(x, w, &mut out, k, n);
+    } else {
+        let per = row_chunk(m, workers);
+        std::thread::scope(|scope| {
+            for (xc, oc) in x.chunks(per * k).zip(out.chunks_mut(per * n)) {
+                scope.spawn(move || matmul_rows(xc, w, oc, k, n));
+            }
+        });
+    }
+    out
+}
+
+/// Row-major kernel: `out[i, :] += x[i, kk] * w[kk, :]`, skipping zero
+/// `x` entries (ineffectual-MAC elision on pruned activations).
+fn matmul_rows(x: &[f32], w: &[f32], out: &mut [f32], k: usize, n: usize) {
+    for (xr, or) in x.chunks_exact(k).zip(out.chunks_exact_mut(n)) {
+        for (kk, &a) in xr.iter().enumerate() {
+            if a != 0.0 {
+                let wr = &w[kk * n..kk * n + n];
+                for (o, &b) in or.iter_mut().zip(wr) {
+                    *o += a * b;
+                }
+            }
+        }
+    }
+}
+
+/// `out = x · wᵀ` for `x: m x n`, `w: k x n`; result is `m x k`.
+/// (Backward pass: `dX = dY · Wᵀ`; also attention scores `Q · Kᵀ`.)
+pub fn matmul_nt(x: &[f32], w: &[f32], m: usize, n: usize, k: usize) -> Vec<f32> {
+    assert_eq!(x.len(), m * n, "matmul_nt: x shape");
+    assert_eq!(w.len(), k * n, "matmul_nt: w shape");
+    let mut out = vec![0.0f32; m * k];
+    let workers = if m * n * k >= PAR_THRESHOLD { worker_count() } else { 1 };
+    if workers <= 1 || m < 2 * workers {
+        matmul_nt_rows(x, w, &mut out, n, k);
+    } else {
+        let per = row_chunk(m, workers);
+        std::thread::scope(|scope| {
+            for (xc, oc) in x.chunks(per * n).zip(out.chunks_mut(per * k)) {
+                scope.spawn(move || matmul_nt_rows(xc, w, oc, n, k));
+            }
+        });
+    }
+    out
+}
+
+fn matmul_nt_rows(x: &[f32], w: &[f32], out: &mut [f32], n: usize, k: usize) {
+    for (xr, or) in x.chunks_exact(n).zip(out.chunks_exact_mut(k)) {
+        for (kk, o) in or.iter_mut().enumerate() {
+            let wr = &w[kk * n..kk * n + n];
+            let mut acc = 0.0f32;
+            for (&a, &b) in xr.iter().zip(wr) {
+                acc += a * b;
+            }
+            *o = acc;
+        }
+    }
+}
+
+/// `out = xᵀ · y` for `x: m x k`, `y: m x n`; result is `k x n`.
+/// (Backward pass: `dW = Xᵀ · dY`.)
+pub fn matmul_tn(x: &[f32], y: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+    assert_eq!(x.len(), m * k, "matmul_tn: x shape");
+    assert_eq!(y.len(), m * n, "matmul_tn: y shape");
+    let mut out = vec![0.0f32; k * n];
+    let workers = if m * k * n >= PAR_THRESHOLD { worker_count() } else { 1 };
+    if workers <= 1 || k < 2 * workers {
+        matmul_tn_cols(x, y, &mut out, m, k, n, 0, k);
+    } else {
+        let per = row_chunk(k, workers);
+        std::thread::scope(|scope| {
+            for (ci, oc) in out.chunks_mut(per * n).enumerate() {
+                let k0 = ci * per;
+                let kc = oc.len() / n;
+                scope.spawn(move || matmul_tn_cols(x, y, oc, m, k, n, k0, kc));
+            }
+        });
+    }
+    out
+}
+
+/// Accumulate `out[kk - k0, :] += x[i, kk] * y[i, :]` over all rows `i`
+/// for `kk` in `[k0, k0 + kc)`.
+fn matmul_tn_cols(
+    x: &[f32],
+    y: &[f32],
+    out: &mut [f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    k0: usize,
+    kc: usize,
+) {
+    for i in 0..m {
+        let xr = &x[i * k + k0..i * k + k0 + kc];
+        let yr = &y[i * n..i * n + n];
+        for (kk, &a) in xr.iter().enumerate() {
+            if a != 0.0 {
+                let or = &mut out[kk * n..kk * n + n];
+                for (o, &b) in or.iter_mut().zip(yr) {
+                    *o += a * b;
+                }
+            }
+        }
+    }
+}
+
+/// `x[i, :] += bias` for every row of `x: m x n`.
+pub fn add_bias(x: &mut [f32], bias: &[f32]) {
+    for row in x.chunks_exact_mut(bias.len()) {
+        for (v, &b) in row.iter_mut().zip(bias) {
+            *v += b;
+        }
+    }
+}
+
+/// Column sums of `x: m x n` (bias gradients).
+pub fn col_sums(x: &[f32], n: usize) -> Vec<f32> {
+    let mut out = vec![0.0f32; n];
+    for row in x.chunks_exact(n) {
+        for (o, &v) in out.iter_mut().zip(row) {
+            *o += v;
+        }
+    }
+    out
+}
+
+/// Numerically-stable softmax over each length-`n` row, in place.
+pub fn softmax_rows(x: &mut [f32], n: usize) {
+    for row in x.chunks_exact_mut(n) {
+        let mut max = f32::NEG_INFINITY;
+        for &v in row.iter() {
+            max = max.max(v);
+        }
+        let mut sum = 0.0f32;
+        for v in row.iter_mut() {
+            *v = (*v - max).exp();
+            sum += *v;
+        }
+        let inv = 1.0 / sum;
+        for v in row.iter_mut() {
+            *v *= inv;
+        }
+    }
+}
+
+/// Softmax backward over rows: given probabilities `p` and upstream
+/// `dp`, returns `dA` where `dA = p ∘ (dp − Σ_j dp_j p_j)` per row.
+pub fn softmax_backward_rows(p: &[f32], dp: &[f32], n: usize) -> Vec<f32> {
+    let mut out = vec![0.0f32; p.len()];
+    for ((pr, dpr), or) in
+        p.chunks_exact(n).zip(dp.chunks_exact(n)).zip(out.chunks_exact_mut(n))
+    {
+        let mut dot = 0.0f32;
+        for (&pv, &dv) in pr.iter().zip(dpr) {
+            dot += pv * dv;
+        }
+        for ((o, &pv), &dv) in or.iter_mut().zip(pr).zip(dpr) {
+            *o = pv * (dv - dot);
+        }
+    }
+    out
+}
+
+pub const LN_EPS: f32 = 1e-5;
+
+/// Layer-norm forward over length-`n` rows.  Writes `gamma ∘ norm + beta`
+/// into `out`, and (for the backward pass) the normalized rows into
+/// `norm` and per-row `1/sqrt(var + eps)` into `inv_std`.
+pub fn layernorm_rows(
+    x: &[f32],
+    gamma: &[f32],
+    beta: &[f32],
+    n: usize,
+    out: &mut [f32],
+    norm: &mut [f32],
+    inv_std: &mut [f32],
+) {
+    for (i, (xr, (or, nr))) in x
+        .chunks_exact(n)
+        .zip(out.chunks_exact_mut(n).zip(norm.chunks_exact_mut(n)))
+        .enumerate()
+    {
+        let mut mean = 0.0f32;
+        for &v in xr.iter() {
+            mean += v;
+        }
+        mean /= n as f32;
+        let mut var = 0.0f32;
+        for &v in xr.iter() {
+            let d = v - mean;
+            var += d * d;
+        }
+        var /= n as f32;
+        let istd = 1.0 / (var + LN_EPS).sqrt();
+        inv_std[i] = istd;
+        for (j, &v) in xr.iter().enumerate() {
+            let nv = (v - mean) * istd;
+            nr[j] = nv;
+            or[j] = nv * gamma[j] + beta[j];
+        }
+    }
+}
+
+/// Layer-norm backward.  Inputs are the cached `norm`/`inv_std` from the
+/// forward pass; returns `dx` and accumulates `dgamma`/`dbeta`.
+pub fn layernorm_backward_rows(
+    dy: &[f32],
+    norm: &[f32],
+    inv_std: &[f32],
+    gamma: &[f32],
+    n: usize,
+    dgamma: &mut [f32],
+    dbeta: &mut [f32],
+) -> Vec<f32> {
+    let mut dx = vec![0.0f32; dy.len()];
+    for (i, ((dyr, nr), dxr)) in dy
+        .chunks_exact(n)
+        .zip(norm.chunks_exact(n))
+        .zip(dx.chunks_exact_mut(n))
+        .enumerate()
+    {
+        let mut m1 = 0.0f32; // mean of dnorm
+        let mut m2 = 0.0f32; // mean of dnorm ∘ norm
+        for (j, (&dv, &nv)) in dyr.iter().zip(nr).enumerate() {
+            dgamma[j] += dv * nv;
+            dbeta[j] += dv;
+            let dn = dv * gamma[j];
+            m1 += dn;
+            m2 += dn * nv;
+        }
+        m1 /= n as f32;
+        m2 /= n as f32;
+        let istd = inv_std[i];
+        for (j, ((dxv, &dv), &nv)) in
+            dxr.iter_mut().zip(dyr).zip(nr).enumerate()
+        {
+            let dn = dv * gamma[j];
+            *dxv = istd * (dn - m1 - nv * m2);
+        }
+    }
+    dx
+}
+
+/// Abramowitz & Stegun 7.1.26 rational approximation of `erf`
+/// (max absolute error 1.5e-7 — well inside f32 noise for this model).
+pub fn erf(x: f32) -> f32 {
+    let sign = if x < 0.0 { -1.0 } else { 1.0 };
+    let x = x.abs();
+    let t = 1.0 / (1.0 + 0.327_591_1 * x);
+    let poly = t
+        * (0.254_829_592
+            + t * (-0.284_496_736
+                + t * (1.421_413_741 + t * (-1.453_152_027 + t * 1.061_405_429))));
+    sign * (1.0 - poly * (-x * x).exp())
+}
+
+/// Standard normal CDF `Φ(x)`.
+fn phi_cdf(x: f32) -> f32 {
+    0.5 * (1.0 + erf(x * std::f32::consts::FRAC_1_SQRT_2))
+}
+
+/// Exact (erf-based) GeLU: `x · Φ(x)` — matches the Python reference
+/// oracle (`jax.nn.gelu(approximate=False)`), not the tanh approximation.
+pub fn gelu(x: f32) -> f32 {
+    x * phi_cdf(x)
+}
+
+/// GeLU derivative: `Φ(x) + x · φ(x)`.
+pub fn gelu_derivative(x: f32) -> f32 {
+    const INV_SQRT_2PI: f32 = 0.398_942_28;
+    phi_cdf(x) + x * INV_SQRT_2PI * (-0.5 * x * x).exp()
+}
+
+/// Fraction of exactly-zero elements.
+pub fn zero_fraction(x: &[f32]) -> f64 {
+    if x.is_empty() {
+        return 0.0;
+    }
+    x.iter().filter(|&&v| v == 0.0).count() as f64 / x.len() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn assert_close(got: &[f32], want: &[f32], tol: f32) {
+        assert_eq!(got.len(), want.len());
+        for (i, (g, w)) in got.iter().zip(want).enumerate() {
+            assert!((g - w).abs() <= tol, "[{i}]: got {g}, want {w}");
+        }
+    }
+
+    #[test]
+    fn matmul_small_known() {
+        // [1 2; 3 4] x [5 6; 7 8] = [19 22; 43 50]
+        let x = [1.0, 2.0, 3.0, 4.0];
+        let w = [5.0, 6.0, 7.0, 8.0];
+        assert_close(&matmul(&x, &w, 2, 2, 2), &[19.0, 22.0, 43.0, 50.0], 1e-6);
+    }
+
+    #[test]
+    fn matmul_variants_agree_with_explicit_transposes() {
+        let mut rng = crate::util::rng::Rng::new(3);
+        let (m, k, n) = (7, 5, 6);
+        let x = rng.normal_vec(m * k, 1.0);
+        let w = rng.normal_vec(k * n, 1.0);
+        let y = matmul(&x, &w, m, k, n);
+
+        // nt: y · wᵀ should equal matmul against the materialized wᵀ.
+        let mut wt = vec![0.0f32; n * k];
+        for kk in 0..k {
+            for j in 0..n {
+                wt[j * k + kk] = w[kk * n + j];
+            }
+        }
+        assert_close(&matmul_nt(&y, &w, m, n, k), &matmul(&y, &wt, m, n, k), 1e-4);
+
+        // tn: xᵀ · y should equal matmul against the materialized xᵀ.
+        let mut xt = vec![0.0f32; k * m];
+        for i in 0..m {
+            for kk in 0..k {
+                xt[kk * m + i] = x[i * k + kk];
+            }
+        }
+        assert_close(&matmul_tn(&x, &y, m, k, n), &matmul(&xt, &y, k, m, n), 1e-4);
+    }
+
+    #[test]
+    fn parallel_matmul_matches_serial() {
+        let mut rng = crate::util::rng::Rng::new(4);
+        // Large enough to cross PAR_THRESHOLD: 256 * 128 * 128 = 4.2M MACs.
+        let (m, k, n) = (256, 128, 128);
+        let x = rng.normal_vec(m * k, 1.0);
+        let w = rng.normal_vec(k * n, 1.0);
+        let par = matmul(&x, &w, m, k, n);
+        let mut serial = vec![0.0f32; m * n];
+        matmul_rows(&x, &w, &mut serial, k, n);
+        assert_eq!(par, serial, "row-chunked parallel GEMM must be bitwise exact");
+    }
+
+    #[test]
+    fn softmax_rows_normalize() {
+        let mut x = vec![1.0f32, 2.0, 3.0, -1.0, 0.0, 1.0];
+        softmax_rows(&mut x, 3);
+        for row in x.chunks(3) {
+            let s: f32 = row.iter().sum();
+            assert!((s - 1.0).abs() < 1e-6);
+            assert!(row.windows(2).all(|w| w[0] < w[1]), "monotone inputs stay ordered");
+        }
+    }
+
+    #[test]
+    fn softmax_backward_matches_finite_difference() {
+        let a = [0.3f32, -0.7, 1.1, 0.2];
+        let dp = [0.5f32, -0.2, 0.1, 0.4];
+        let n = a.len();
+        let p = {
+            let mut p = a.to_vec();
+            softmax_rows(&mut p, n);
+            p
+        };
+        let da = softmax_backward_rows(&p, &dp, n);
+        let eps = 1e-3f32;
+        for j in 0..n {
+            let mut ap = a.to_vec();
+            ap[j] += eps;
+            softmax_rows(&mut ap, n);
+            let mut am = a.to_vec();
+            am[j] -= eps;
+            softmax_rows(&mut am, n);
+            let mut fd = 0.0f32;
+            for t in 0..n {
+                fd += dp[t] * (ap[t] - am[t]) / (2.0 * eps);
+            }
+            assert!((da[j] - fd).abs() < 1e-3, "j={j}: analytic {} fd {fd}", da[j]);
+        }
+    }
+
+    #[test]
+    fn layernorm_rows_are_normalized() {
+        let x = [1.0f32, 2.0, 3.0, 4.0, 10.0, 10.0, 10.0, 14.0];
+        let gamma = [1.0f32; 4];
+        let beta = [0.0f32; 4];
+        let mut out = vec![0.0f32; 8];
+        let mut norm = vec![0.0f32; 8];
+        let mut inv_std = vec![0.0f32; 2];
+        layernorm_rows(&x, &gamma, &beta, 4, &mut out, &mut norm, &mut inv_std);
+        for row in out.chunks(4) {
+            let mean: f32 = row.iter().sum::<f32>() / 4.0;
+            let var: f32 = row.iter().map(|v| (v - mean) * (v - mean)).sum::<f32>() / 4.0;
+            assert!(mean.abs() < 1e-5, "mean {mean}");
+            assert!((var - 1.0).abs() < 1e-2, "var {var}");
+        }
+        assert_eq!(out, norm, "identity affine leaves norm unchanged");
+    }
+
+    #[test]
+    fn layernorm_backward_matches_finite_difference() {
+        let x = [0.5f32, -1.0, 2.0, 0.1, 0.4, 1.5];
+        let n = 3;
+        let gamma = [1.2f32, 0.8, -0.5];
+        let beta = [0.1f32, 0.0, -0.2];
+        let dy = [0.3f32, -0.6, 0.9, 0.2, 0.5, -0.4];
+        let fwd = |x: &[f32]| {
+            let mut out = vec![0.0f32; x.len()];
+            let mut norm = vec![0.0f32; x.len()];
+            let mut istd = vec![0.0f32; x.len() / n];
+            layernorm_rows(x, &gamma, &beta, n, &mut out, &mut norm, &mut istd);
+            (out, norm, istd)
+        };
+        let (_, norm, istd) = fwd(&x);
+        let mut dg = vec![0.0f32; n];
+        let mut db = vec![0.0f32; n];
+        let dx = layernorm_backward_rows(&dy, &norm, &istd, &gamma, n, &mut dg, &mut db);
+        let eps = 1e-3f32;
+        for j in 0..x.len() {
+            let mut xp = x.to_vec();
+            xp[j] += eps;
+            let mut xm = x.to_vec();
+            xm[j] -= eps;
+            let (yp, _, _) = fwd(&xp);
+            let (ym, _, _) = fwd(&xm);
+            let mut fd = 0.0f32;
+            for t in 0..x.len() {
+                fd += dy[t] * (yp[t] - ym[t]) / (2.0 * eps);
+            }
+            assert!((dx[j] - fd).abs() < 2e-3, "j={j}: analytic {} fd {fd}", dx[j]);
+        }
+        // dbeta is just the column sum of dy
+        assert_close(&db, &col_sums(&dy, n), 1e-6);
+    }
+
+    #[test]
+    fn erf_reference_values() {
+        // erf(0)=0, erf(1)=0.8427008, erf(-1)=-erf(1), erf(2)=0.9953223
+        assert!(erf(0.0).abs() < 1e-7);
+        assert!((erf(1.0) - 0.842_700_8).abs() < 1e-5);
+        assert!((erf(-1.0) + 0.842_700_8).abs() < 1e-5);
+        assert!((erf(2.0) - 0.995_322_3).abs() < 1e-5);
+    }
+
+    #[test]
+    fn gelu_reference_values_and_derivative() {
+        // gelu(0)=0; gelu(1)=0.8413447; gelu(-1)=-0.15865525 (erf-based).
+        assert!(gelu(0.0).abs() < 1e-7);
+        assert!((gelu(1.0) - 0.841_344_7).abs() < 1e-4);
+        assert!((gelu(-1.0) + 0.158_655_25).abs() < 1e-4);
+        // derivative vs central difference
+        for &x in &[-2.0f32, -0.5, 0.0, 0.3, 1.7] {
+            let eps = 1e-3;
+            let fd = (gelu(x + eps) - gelu(x - eps)) / (2.0 * eps);
+            assert!((gelu_derivative(x) - fd).abs() < 1e-3, "x={x}");
+        }
+    }
+
+    #[test]
+    fn bias_and_colsum_roundtrip() {
+        let mut x = vec![0.0f32; 6];
+        add_bias(&mut x, &[1.0, 2.0, 3.0]);
+        assert_eq!(x, vec![1.0, 2.0, 3.0, 1.0, 2.0, 3.0]);
+        assert_eq!(col_sums(&x, 3), vec![2.0, 4.0, 6.0]);
+    }
+
+    #[test]
+    fn zero_fraction_counts() {
+        assert_eq!(zero_fraction(&[0.0, 1.0, 0.0, 2.0]), 0.5);
+        assert_eq!(zero_fraction(&[]), 0.0);
+    }
+}

@@ -242,4 +242,51 @@ mod tests {
             assert!(w[1].1 >= w[0].1);
         }
     }
+
+    #[test]
+    fn transfer_function_roundtrip_is_monotone_property() {
+        // Property over random profiles: (a) both lookup directions are
+        // monotone non-decreasing, and (b) the threshold-calculator
+        // round-trip rho -> tau_for_sparsity -> sparsity_at lands back on
+        // rho wherever rho lies inside the profiled range.  These are
+        // structural guarantees of the piecewise-linear table, so they
+        // must hold for *any* activation distribution the profiler sees.
+        prop::check(44, 60, |g| {
+            let n = g.usize_in(500, 4000);
+            let std = g.f32_in(0.2, 2.0);
+            let data = g.normal_vec(n, std);
+            let tau_max = g.f32_in(0.5, 4.0);
+            let tf = TransferFunction::profile("prop", &data, tau_max, 48);
+
+            // (a) monotone in both directions
+            let mut last_rho = -1.0f64;
+            let mut last_tau = -1.0f32;
+            for i in 0..=20 {
+                let tau = tau_max * i as f32 / 20.0;
+                let rho = tf.sparsity_at(tau);
+                assert!(rho >= last_rho - 1e-12, "sparsity_at not monotone");
+                last_rho = rho;
+                let target = i as f64 / 20.0;
+                let t = tf.tau_for_sparsity(target);
+                assert!(t >= last_tau - 1e-6, "tau_for_sparsity not monotone");
+                last_tau = t;
+            }
+
+            // (b) round-trip identity inside the profiled rho range
+            let lo = tf.samples.first().unwrap().1;
+            let hi = tf.samples.last().unwrap().1;
+            for i in 0..=10 {
+                let rho = lo + (hi - lo) * i as f64 / 10.0;
+                let tau = tf.tau_for_sparsity(rho);
+                let back = tf.sparsity_at(tau);
+                // interpolation is exact on the table except where a
+                // flat segment makes the inverse a set; allow the table
+                // quantization as slack.
+                assert!(
+                    (back - rho).abs() < 0.08,
+                    "roundtrip rho {rho} -> tau {tau} -> {back}"
+                );
+            }
+        });
+    }
 }

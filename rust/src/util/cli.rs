@@ -15,6 +15,12 @@ pub struct Args {
     pub positional: Vec<String>,
 }
 
+/// Environment-variable override with a default — the bench harnesses'
+/// problem-size knobs (`ACCELTRAN_TRAIN_STEPS`, `ACCELTRAN_EVAL_EXAMPLES`).
+pub fn env_usize(name: &str, default: usize) -> usize {
+    std::env::var(name).ok().and_then(|s| s.parse().ok()).unwrap_or(default)
+}
+
 impl Args {
     /// Parse from an iterator of argument strings (without argv[0]).
     /// The first non-flag token becomes the subcommand when

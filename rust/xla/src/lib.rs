@@ -11,8 +11,9 @@
 //!   storage + shape), so parameter stores, batching, golden-file I/O,
 //!   and every compile-time consumer work unchanged.
 //! * **Stubbed** — [`PjRtClient::compile`] returns an error: no HLO can
-//!   execute without the native backend.  Callers already gate every
-//!   execution path on artifact availability, so tier-1 builds and
+//!   execute without the native backend.  The `acceltran` runtime only
+//!   selects its PJRT backend when artifacts are present (its pure-Rust
+//!   reference executor is the default otherwise), so tier-1 builds and
 //!   tests stay hermetic and green.
 //!
 //! Swapping in the real bindings is a one-line change in
