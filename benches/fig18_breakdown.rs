@@ -5,16 +5,20 @@
 //! synthesis results — the area panel reproduces Fig. 18(a) by
 //! construction, which doubles as a regression test on the constants).
 //! Power shares come from *simulation*: the energy ledger of a real
-//! BERT-Tiny run, so the power panel is a genuine measurement of the
-//! modeled workload (paper: MAC 39.3%, softmax 49.9%).
+//! BERT-Tiny run driven by a measured sparsity trace (tau = 0.04
+//! capture on the fine-tuned reference model, 50% MP weight sparsity
+//! overlaid — DESIGN.md "Measured vs assumed sparsity"), so the power
+//! panel is a genuine measurement of the modeled workload (paper: MAC
+//! 39.3%, softmax 49.9%).
 //!
 //! Run with: `cargo bench --bench fig18_breakdown`
 
+use acceltran::coordinator;
 use acceltran::model::TransformerConfig;
-use acceltran::sim::engine::{simulate, SparsityProfile};
+use acceltran::sim::engine::simulate_with;
 use acceltran::sim::scheduler::Policy;
 use acceltran::sim::tech::AreaBreakdown;
-use acceltran::sim::AcceleratorConfig;
+use acceltran::sim::{AcceleratorConfig, SparsitySource};
 use acceltran::util::json::Json;
 use acceltran::util::table::Table;
 
@@ -44,9 +48,17 @@ fn main() {
     println!("total compute area: {total:.2} mm^2 (paper: 55.12 mm^2)\n");
 
     // ---- (b) power: energy shares of a simulated BERT-Tiny run ---------
+    // measured activation sparsity, assumed 50% MP weight sparsity
     let model = TransformerConfig::bert_tiny();
-    let r = simulate(&cfg, &model, 512, Policy::Staggered,
-                     SparsityProfile::paper_default());
+    let trace = coordinator::measured_trace(0.04, true)
+        .expect("measured-trace capture")
+        .with_assumed_weight_rho(0.5);
+    println!(
+        "power panel driven by measured trace: mean act sparsity {:.3}\n",
+        trace.mean_act_rho()
+    );
+    let source = SparsitySource::Trace(trace);
+    let r = simulate_with(&cfg, &model, 512, Policy::Staggered, &source);
     let e = &r.energy;
     let compute = e.compute_pj();
     let mut t = Table::new(["module", "energy share", "paper power share"]);

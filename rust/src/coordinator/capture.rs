@@ -1,0 +1,252 @@
+//! Measured-sparsity capture: run the functional model over an
+//! evaluation set and aggregate the per-activation observations into a
+//! [`SparsityTrace`] the simulator consumes — the pipeline that closes
+//! the loop between the serving/accuracy half and the timing half
+//! (paper Figs. 17-19 feed measured sparsity, not assumed scalars).
+//!
+//! Layers of the pipeline, lowest first:
+//!
+//! * [`measure_weight_rho`] — static zero fractions of the checkpoint's
+//!   weight matrices, grouped by trace class.
+//! * [`capture_trace`] — classify the eval set at a DynaTran `tau`
+//!   through `Runtime::classify_traced`, fold every
+//!   [`crate::trace::HookRecord`] into a [`TraceBuilder`], probe the
+//!   inherent (tau = 0) sparsity, and record accuracy — all in the same
+//!   pass the trace describes.
+//! * [`measured_trace`] — the turnkey driver the benches and the
+//!   `acceltran trace` subcommand share: fine-tune (cached via
+//!   `trainer::ensure_trained`), build the eval set, capture.
+//!
+//! Problem size honours `ACCELTRAN_TRAIN_STEPS` /
+//! `ACCELTRAN_EVAL_EXAMPLES` like every other experiment driver.
+
+use std::path::Path;
+
+use anyhow::Result;
+
+use crate::nlp::sentiment::SentimentTask;
+use crate::nlp::Dataset;
+use crate::runtime::{Manifest, Runtime};
+use crate::trace::{require_records, SparsityTrace, TraceBuilder, WeightRho};
+use crate::util::cli::env_usize;
+
+/// Measured zero fractions of the checkpoint's weight matrices, grouped
+/// the way M-OPs stream them (biases and layer-norm affines are not
+/// weight-buffer traffic and are excluded).  A freshly fine-tuned
+/// checkpoint is dense (~0 everywhere); movement-pruned checkpoints
+/// report their real sparsity.
+pub fn measure_weight_rho(manifest: &Manifest, params: &[f32]) -> WeightRho {
+    // (zeros, total) per class: embedding, wqkv, wo, wf1, wf2
+    let mut acc = [(0usize, 0usize); 5];
+    let mut off = 0usize;
+    for (name, shape, _std) in &manifest.param_specs {
+        let len: usize = shape.iter().product();
+        let slice = &params[off..off + len];
+        off += len;
+        let class = if name.starts_with("embed.") {
+            Some(0)
+        } else if name.ends_with(".attn.wq")
+            || name.ends_with(".attn.wk")
+            || name.ends_with(".attn.wv")
+        {
+            Some(1)
+        } else if name.ends_with(".attn.wo") {
+            Some(2)
+        } else if name.ends_with(".ffn.w1") {
+            Some(3)
+        } else if name.ends_with(".ffn.w2") {
+            Some(4)
+        } else {
+            None
+        };
+        if let Some(c) = class {
+            acc[c].0 += slice.iter().filter(|&&v| v == 0.0).count();
+            acc[c].1 += len;
+        }
+    }
+    let frac = |(z, n): (usize, usize)| if n == 0 { 0.0 } else { z as f64 / n as f64 };
+    WeightRho {
+        embedding: frac(acc[0]),
+        wqkv: frac(acc[1]),
+        wo: frac(acc[2]),
+        wf1: frac(acc[3]),
+        wf2: frac(acc[4]),
+    }
+}
+
+/// Classify `ds` at DynaTran threshold `tau` while capturing sparsity
+/// observations; returns the aggregated [`SparsityTrace`] (accuracy over
+/// the same examples rides along in `eval_accuracy`).  Errors when the
+/// runtime's backend has no traced inference path.
+///
+/// Unlike the eval loops (which pad the tail batch to a fixed exported
+/// shape), batches here are *exact-fill*: padding rows would re-enter
+/// the element-weighted aggregation and bias the measured sparsity
+/// toward whichever example padded the tail.  The traced path requires
+/// a flexible-batch backend (the reference executor) anyway.
+pub fn capture_trace(
+    rt: &mut Runtime,
+    params: &[f32],
+    ds: &Dataset,
+    tau: f32,
+    max_examples: usize,
+) -> Result<SparsityTrace> {
+    let classes = rt.manifest.classes;
+    let n = ds.examples.len().min(max_examples.max(1));
+    let mut builder = TraceBuilder::new(rt.manifest.layers);
+    let mut correct = 0usize;
+    let mut scored = 0usize;
+    let batch = 32usize;
+    let mut i = 0usize;
+    while i < n {
+        let fill = batch.min(n - i);
+        let mut ids = Vec::with_capacity(fill * ds.seq);
+        for b in 0..fill {
+            ids.extend_from_slice(&ds.examples[i + b].ids);
+        }
+        let (logits, records) = rt.classify_traced(fill, params, &ids, tau)?;
+        require_records(&records, rt.backend_name())?;
+        builder.add_all(&records);
+        for b in 0..fill {
+            let row = &logits[b * classes..(b + 1) * classes];
+            let pred = row
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .map(|(i, _)| i as i32)
+                .unwrap_or(0);
+            if pred == ds.examples[i + b].label {
+                correct += 1;
+            }
+            scored += 1;
+        }
+        i += fill;
+    }
+
+    // inherent sparsity: natural zeros with DynaTran off (tau = 0),
+    // probed on the first few examples like the eval sparsity probe
+    let probe = 8.min(n);
+    let mut probe_ids = Vec::with_capacity(probe * ds.seq);
+    for b in 0..probe {
+        probe_ids.extend_from_slice(&ds.examples[b].ids);
+    }
+    let (_, probe_records) = rt.classify_traced(probe, params, &probe_ids, 0.0)?;
+    let mut inherent_builder = TraceBuilder::new(rt.manifest.layers);
+    inherent_builder.add_all(&probe_records);
+
+    let weight = measure_weight_rho(&rt.manifest, params);
+    Ok(builder.finish(
+        rt.manifest.model_name.clone(),
+        rt.backend_name(),
+        tau as f64,
+        scored,
+        correct as f64 / scored.max(1) as f64,
+        inherent_builder.mean(),
+        weight,
+    ))
+}
+
+/// Capture at `tau` over *the* shared eval set — the seed-7 sentiment
+/// task, dataset variant 2, the same set every accuracy bench sweeps.
+/// This is the single place that eval-set contract lives; the benches,
+/// `measured_trace`, and the `acceltran trace` subcommand all go
+/// through here so their traces describe the same operating point.
+pub fn measured_trace_with(
+    rt: &mut Runtime,
+    store: &crate::runtime::ParamStore,
+    tau: f32,
+    examples: usize,
+) -> Result<SparsityTrace> {
+    let task = SentimentTask::new(rt.manifest.vocab, rt.manifest.seq, 7);
+    let ds = task.dataset(examples, 2);
+    capture_trace(rt, &store.params, &ds, tau, examples)
+}
+
+/// Turnkey measured-trace pipeline: fine-tune the synthetic-sentiment
+/// model (cached under `reports/trained_params.bin`, shrunk by
+/// `ACCELTRAN_TRAIN_STEPS`), then [`measured_trace_with`] over the
+/// shared eval set (shrunk by `ACCELTRAN_EVAL_EXAMPLES`).  This is what
+/// the fig17/18/20 benches run.
+pub fn measured_trace(tau: f32, verbose: bool) -> Result<SparsityTrace> {
+    let mut rt = Runtime::load_default()?;
+    let store = super::trainer::ensure_trained(
+        &mut rt,
+        Path::new("reports/trained_params.bin"),
+        200,
+        verbose,
+    )?;
+    let examples = env_usize("ACCELTRAN_EVAL_EXAMPLES", 512);
+    measured_trace_with(&mut rt, &store, tau, examples)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::TransformerConfig;
+    use crate::runtime::ParamStore;
+
+    fn tiny_runtime() -> Runtime {
+        let model = TransformerConfig {
+            name: "tiny-test".into(),
+            hidden: 32,
+            layers: 2,
+            heads: 2,
+            ff: 64,
+            vocab: 64,
+            seq: 16,
+        };
+        Runtime::reference_for(&model, 2).unwrap()
+    }
+
+    #[test]
+    fn capture_aggregates_per_layer_cells() {
+        let mut rt = tiny_runtime();
+        let params = ParamStore::init(&rt.manifest, 0).params;
+        let task = SentimentTask::new(rt.manifest.vocab, rt.manifest.seq, 3);
+        let ds = task.dataset(12, 1);
+        let t = capture_trace(&mut rt, &params, &ds, 0.05, 12).unwrap();
+        assert_eq!(t.layers.len(), 2);
+        assert_eq!(t.backend, "reference");
+        assert_eq!(t.examples, 12);
+        assert!((0.0..=1.0).contains(&t.eval_accuracy));
+        for l in &t.layers {
+            for h in crate::trace::ActHook::ALL {
+                assert!((0.0..=1.0).contains(&l.get(h)));
+            }
+        }
+        // random normal init + biases-in-play: the pruned cells must
+        // actually show zeros at a meaningful tau
+        assert!(t.mean_act_rho() > 0.0, "{t:?}");
+        // the checkpoint is dense — measured weight sparsity ~ 0
+        assert!(t.weight.wqkv < 0.01 && t.weight.wf1 < 0.01);
+    }
+
+    #[test]
+    fn capture_sparsity_is_monotone_in_tau() {
+        let mut rt = tiny_runtime();
+        let params = ParamStore::init(&rt.manifest, 0).params;
+        let task = SentimentTask::new(rt.manifest.vocab, rt.manifest.seq, 3);
+        let ds = task.dataset(8, 2);
+        let lo = capture_trace(&mut rt, &params, &ds, 0.01, 8).unwrap();
+        let hi = capture_trace(&mut rt, &params, &ds, 1.0, 8).unwrap();
+        assert!(hi.mean_act_rho() > lo.mean_act_rho());
+        // inherent probe is tau-independent: same value both captures
+        assert_eq!(lo.inherent_act_rho, hi.inherent_act_rho);
+    }
+
+    #[test]
+    fn weight_rho_counts_real_zeros() {
+        let rt = tiny_runtime();
+        let mut params = ParamStore::init(&rt.manifest, 0).params;
+        let dense = measure_weight_rho(&rt.manifest, &params);
+        assert!(dense.wqkv < 0.01, "normal init has no exact zeros");
+        // zero out the whole buffer: every weight class reads 1.0
+        for v in params.iter_mut() {
+            *v = 0.0;
+        }
+        let zeroed = measure_weight_rho(&rt.manifest, &params);
+        assert_eq!(zeroed.wqkv, 1.0);
+        assert_eq!(zeroed.wf2, 1.0);
+        assert_eq!(zeroed.embedding, 1.0);
+    }
+}

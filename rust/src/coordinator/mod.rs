@@ -12,11 +12,17 @@
 //!   fractions (the Figs. 11/12/14 drivers).
 //! * [`trainer`] — the end-to-end training driver: AdamW steps through
 //!   the runtime's `train_step`, loss-curve logging, checkpoints.
+//! * [`capture`] — measured-sparsity capture: classify an eval set
+//!   while recording per-activation sparsity, aggregate into a
+//!   `trace::SparsityTrace`, and hand it to the simulator (the
+//!   trace-driven Figs. 17-20 pipeline).
 
 pub mod batcher;
+pub mod capture;
 pub mod eval;
 pub mod trainer;
 
 pub use batcher::{BatchServer, Request, Response, ServerStats};
+pub use capture::{capture_trace, measured_trace, measured_trace_with};
 pub use eval::{evaluate_accuracy, sweep_dynatran, sweep_topk, EvalReport};
 pub use trainer::{train, TrainLog};

@@ -26,6 +26,10 @@
 //!   throughput comparison.
 //! * [`nlp`] — synthetic sentiment + span tasks standing in for SST-2 /
 //!   SQuAD (see DESIGN.md §Substitutions).
+//! * [`trace`] — measured-sparsity traces: the interchange format that
+//!   feeds real per-op activation sparsities captured by a runtime
+//!   backend into the cycle-accurate simulator (DESIGN.md "Measured vs
+//!   assumed sparsity").
 //! * [`util`] — zero-dependency substrates (PRNG, JSON, CLI, property
 //!   testing, tables, bench timing) built from scratch for this image.
 
@@ -35,6 +39,7 @@ pub mod nlp;
 pub mod pruning;
 pub mod runtime;
 pub mod sim;
+pub mod trace;
 pub mod util;
 
 /// Crate-wide result type.

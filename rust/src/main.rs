@@ -10,6 +10,8 @@
 //!   train     train the synthetic-sentiment model through the runtime
 //!   serve     batched serving demo over the runtime
 //!   eval      accuracy/sparsity sweep (Figs. 11/12)
+//!   trace     capture a measured sparsity trace and run the simulator
+//!             on it (the trace-driven Figs. 17-20 pipeline)
 //!
 //! The functional subcommands (train/serve/eval) run on the pure-Rust
 //! reference backend out of the box; set `ACCELTRAN_BACKEND=pjrt` (with
@@ -39,6 +41,7 @@ fn main() {
         Some("train") => cmd_train(&args),
         Some("serve") => cmd_serve(&args),
         Some("eval") => cmd_eval(&args),
+        Some("trace") => cmd_trace(&args),
         _ => {
             print_usage();
             Ok(())
@@ -68,9 +71,12 @@ fn print_usage() {
            train     [--steps 200 --lr 1e-3 --examples 4096 --save path]\n\
            serve     [--requests 256 --tau 0.04]\n\
            eval      [--taus 0,0.02,0.05 --examples 512 --params path]\n\
+           trace     [--tau 0.04 --examples 512 --params path]\n\
+                     [--out reports/sparsity_trace.json --no-sim]\n\
+                     [--preset edge --model bert-tiny --seq 128]\n\
          \n\
-         train/serve/eval execute on the pure-Rust reference backend by\n\
-         default; ACCELTRAN_BACKEND=pjrt|reference overrides."
+         train/serve/eval/trace execute on the pure-Rust reference\n\
+         backend by default; ACCELTRAN_BACKEND=pjrt|reference overrides."
     );
 }
 
@@ -334,6 +340,80 @@ fn cmd_serve(args: &Args) -> Result<()> {
         s.latency_percentile(50.0),
         s.latency_percentile(99.0)
     );
+    Ok(())
+}
+
+fn cmd_trace(args: &Args) -> Result<()> {
+    let tau = args.get_f64("tau", 0.04) as f32;
+    let out = args.get_or("out", "reports/sparsity_trace.json").to_string();
+    let mut rt = Runtime::load_default()?;
+    println!("trace backend: {}", rt.backend_name());
+    let examples = args.get_usize(
+        "examples",
+        acceltran::util::cli::env_usize("ACCELTRAN_EVAL_EXAMPLES", 512),
+    );
+    let store = match args.get("params") {
+        Some(p) => ParamStore::from_file(&rt.manifest, p)?,
+        None => coordinator::trainer::ensure_trained(
+            &mut rt,
+            std::path::Path::new("reports/trained_params.bin"),
+            args.get_usize("steps", 200),
+            true,
+        )?,
+    };
+    // same shared eval set the fig benches capture over
+    let trace = coordinator::measured_trace_with(&mut rt, &store, tau, examples)?;
+
+    println!(
+        "\ncaptured over {} examples at tau={tau}: mean act sparsity {:.3}, \
+         inherent {:.3}, accuracy {:.4}",
+        trace.examples,
+        trace.mean_act_rho(),
+        trace.inherent_act_rho,
+        trace.eval_accuracy
+    );
+    let mut t = Table::new([
+        "layer", "input", "q", "k", "v", "scores", "context", "proj", "ffn_in",
+        "gelu", "ffn_out",
+    ]);
+    for (i, l) in trace.layers.iter().enumerate() {
+        t.row([
+            i.to_string(),
+            format!("{:.3}", l.input),
+            format!("{:.3}", l.q),
+            format!("{:.3}", l.k),
+            format!("{:.3}", l.v),
+            format!("{:.3}", l.scores),
+            format!("{:.3}", l.context),
+            format!("{:.3}", l.proj_out),
+            format!("{:.3}", l.ffn_in),
+            format!("{:.3}", l.gelu),
+            format!("{:.3}", l.ffn_out),
+        ]);
+    }
+    t.print();
+    trace.save(&out)?;
+    println!("wrote {out}");
+
+    if !args.has("no-sim") {
+        // hand the measured trace to the cycle-accurate engine
+        let cfg = preset_from(args)?;
+        let model = model_from(args)?;
+        let seq = args.get_usize("seq", 128);
+        let source = acceltran::sim::SparsitySource::Trace(trace);
+        let r = acceltran::sim::simulate_with(
+            &cfg,
+            &model,
+            seq,
+            Policy::Staggered,
+            &source,
+        );
+        println!(
+            "\ntrace-driven simulation ({} x {} @ seq={seq}):",
+            cfg.name, model.name
+        );
+        println!("{}", r.to_json(&cfg).to_string_pretty());
+    }
     Ok(())
 }
 

@@ -8,4 +8,4 @@ pub mod memreq;
 pub mod ops;
 
 pub use config::TransformerConfig;
-pub use ops::{OpGraph, OpKind, OpNode};
+pub use ops::{OpGraph, OpKind, OpNode, TraceClass};

@@ -23,6 +23,49 @@ pub enum OpKind {
     Add,
 }
 
+/// Stable functional identity of an op, shared by the functional half
+/// (trace capture hooks in `runtime::backend::reference`) and the timing
+/// half (per-op sparsity resolution in `sim::engine`).
+///
+/// Labels like `"l0.h1.C-OP-4.qkt"` are human-facing; the *class* is the
+/// machine-facing key a [`crate::trace::SparsityTrace`] is resolved
+/// against, derived from the label's final dot-segment (which is part of
+/// the op-graph contract and covered by tests below).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum TraceClass {
+    /// M-OP-0: word + position embedding load.
+    Embedding,
+    /// M-OP-1..3: fused Q/K/V weight load.
+    WqkvLoad,
+    /// M-OP-4: attention output-projection weight load.
+    WoLoad,
+    /// M-OP-5: first feed-forward weight load.
+    Wf1Load,
+    /// M-OP-6: second feed-forward weight load.
+    Wf2Load,
+    /// C-OP-1..3: Q/K/V projections (weight x hidden-state input).
+    Qkv,
+    /// C-OP-4: attention scores Q K^T (activation x activation).
+    AttnScore,
+    /// C-OP-5: softmax over score rows.
+    Softmax,
+    /// C-OP-6: context S V (dense probabilities x pruned values).
+    AttnContext,
+    /// C-OP-7: per-head output projection.
+    AttnProj,
+    /// C-OP-8: post-attention residual add + layer-norm.
+    AddNorm1,
+    /// C-OP-11: post-FFN residual add + layer-norm.
+    AddNorm2,
+    /// C-OP-9: first feed-forward matmul (GeLU fused on its output).
+    Ffn1,
+    /// C-OP-10: second feed-forward matmul (consumes post-GeLU acts).
+    Ffn2,
+    /// Forward-compatibility catch-all for labels this inventory does
+    /// not know; resolves to the trace's mean sparsity.
+    Other,
+}
+
 /// One node of the transformer op graph.
 #[derive(Clone, Debug)]
 pub struct OpNode {
@@ -41,6 +84,36 @@ pub struct OpNode {
     pub dims: OpDims,
     /// Graph predecessors (must complete before this op may issue).
     pub deps: Vec<usize>,
+}
+
+impl OpNode {
+    /// The op's stable [`TraceClass`], derived from the label's final
+    /// dot-segment (e.g. `"l0.h1.C-OP-4.qkt"` -> `AttnScore`).
+    pub fn trace_class(&self) -> TraceClass {
+        let tail = self.label.rsplit('.').next().unwrap_or("");
+        match tail {
+            "embeddings" => TraceClass::Embedding,
+            "wqkv" => TraceClass::WqkvLoad,
+            "wo" => TraceClass::WoLoad,
+            "wf1" => TraceClass::Wf1Load,
+            "wf2" => TraceClass::Wf2Load,
+            "q" | "k" | "v" => TraceClass::Qkv,
+            "qkt" => TraceClass::AttnScore,
+            "softmax" => TraceClass::Softmax,
+            "sv" => TraceClass::AttnContext,
+            "proj" => TraceClass::AttnProj,
+            "ffn1" => TraceClass::Ffn1,
+            "ffn2" => TraceClass::Ffn2,
+            "add" | "ln" => {
+                if self.label.contains("C-OP-8") {
+                    TraceClass::AddNorm1
+                } else {
+                    TraceClass::AddNorm2
+                }
+            }
+            _ => TraceClass::Other,
+        }
+    }
 }
 
 /// Shapes the scheduler needs to tile an op.
@@ -405,6 +478,42 @@ mod tests {
             .find(|n| n.label == "l1.h0.C-OP-1.q")
             .unwrap();
         assert!(q1.deps.contains(&ln0));
+    }
+
+    #[test]
+    fn every_op_has_a_known_trace_class() {
+        // The stable-identity contract between trace capture and the
+        // simulator: no op of the Table I stream may fall into `Other`.
+        let g = tiny_graph();
+        for n in &g.nodes {
+            assert_ne!(
+                n.trace_class(),
+                TraceClass::Other,
+                "unclassified op '{}'",
+                n.label
+            );
+        }
+    }
+
+    #[test]
+    fn trace_class_counts_match_op_inventory() {
+        let g = tiny_graph();
+        let cfg = &g.config;
+        let count = |c: TraceClass| {
+            g.nodes.iter().filter(|n| n.trace_class() == c).count()
+        };
+        assert_eq!(count(TraceClass::Embedding), 1);
+        assert_eq!(count(TraceClass::WqkvLoad), cfg.layers);
+        assert_eq!(count(TraceClass::Qkv), cfg.layers * cfg.heads * 3);
+        assert_eq!(count(TraceClass::AttnScore), cfg.layers * cfg.heads);
+        assert_eq!(count(TraceClass::AttnContext), cfg.layers * cfg.heads);
+        assert_eq!(count(TraceClass::AttnProj), cfg.layers * cfg.heads);
+        assert_eq!(count(TraceClass::Softmax), cfg.layers * cfg.heads);
+        // add + ln per residual block
+        assert_eq!(count(TraceClass::AddNorm1), cfg.layers * 2);
+        assert_eq!(count(TraceClass::AddNorm2), cfg.layers * 2);
+        assert_eq!(count(TraceClass::Ffn1), cfg.layers);
+        assert_eq!(count(TraceClass::Ffn2), cfg.layers);
     }
 
     #[test]

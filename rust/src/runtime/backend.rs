@@ -20,6 +20,8 @@
 
 use anyhow::Result;
 
+use crate::trace::HookRecord;
+
 pub mod pjrt;
 pub mod reference;
 
@@ -78,4 +80,23 @@ pub trait ExecBackend {
     /// The standalone DynaTran prune kernel: returns `(pruned, mask)`
     /// with mask = 1.0 at pruned positions (paper Sec. III-B6).
     fn dynatran_prune(&mut self, x: &[f32], tau: f32) -> Result<(Vec<f32>, Vec<f32>)>;
+
+    /// Classification logits *plus* the per-activation sparsity
+    /// observations of the forward pass — the measured-sparsity capture
+    /// path that feeds `trace::SparsityTrace` / `sim::SparsitySource`.
+    ///
+    /// Contract: capture must not perturb inference — the logits are
+    /// bitwise identical to [`ExecBackend::classify`] on the same inputs
+    /// (pinned by `rust/tests/backend_conformance.rs`).  The default
+    /// implementation is for backends without a traced path (PJRT): it
+    /// runs plain `classify` and reports no observations.
+    fn classify_traced(
+        &mut self,
+        batch: usize,
+        params: &[f32],
+        ids: &[i32],
+        tau: f32,
+    ) -> Result<(Vec<f32>, Vec<HookRecord>)> {
+        Ok((self.classify(batch, params, ids, tau)?, Vec::new()))
+    }
 }

@@ -22,6 +22,7 @@ use anyhow::{bail, Result};
 use crate::runtime::artifacts::Manifest;
 use crate::runtime::backend::ExecBackend;
 use crate::runtime::tensor as t;
+use crate::trace::{ActHook, HookRecord};
 
 const ADAM_B1: f32 = 0.9;
 const ADAM_B2: f32 = 0.999;
@@ -157,15 +158,18 @@ impl ReferenceBackend {
 
     /// Run the encoder stack; returns the `(batch * seq, hidden)` hidden
     /// states.  When `stats` is set, the zero-fraction of every pruned
-    /// activation matrix is recorded (the Figs. 11/12 rho axis), matching
-    /// `model.py::activation_sparsity` hook-for-hook.
+    /// activation matrix is recorded as a labelled [`HookRecord`]
+    /// (layer + hook identity — the measured-sparsity trace cells),
+    /// matching `model.py::activation_sparsity` hook-for-hook.
+    /// Recording only *reads* the matrices, so a traced forward is
+    /// bitwise identical to an untraced one.
     fn encode(
         &self,
         params: &[f32],
         ids: &[i32],
         batch: usize,
         mode: Prune,
-        mut stats: Option<&mut Vec<f64>>,
+        mut stats: Option<&mut Vec<HookRecord>>,
     ) -> Vec<f32> {
         let Shape { seq, hidden: h, layers, heads: nh, head_dim: hd, ff, .. } = self.shape;
         let bs = batch * seq;
@@ -188,18 +192,18 @@ impl ReferenceBackend {
         for layer in 0..layers {
             let name = |s: &str| format!("layer{layer}.{s}");
             let mut x2 = hidden;
-            prune_hook(&mut x2, mode, &mut stats);
+            prune_hook(&mut x2, mode, layer, ActHook::Input, &mut stats);
 
             // C-OP-1..3: QKV projections.
             let mut q = t::matmul(&x2, self.p(params, &name("attn.wq")), bs, h, h);
             t::add_bias(&mut q, self.p(params, &name("attn.bq")));
-            prune_hook(&mut q, mode, &mut stats);
+            prune_hook(&mut q, mode, layer, ActHook::Q, &mut stats);
             let mut k = t::matmul(&x2, self.p(params, &name("attn.wk")), bs, h, h);
             t::add_bias(&mut k, self.p(params, &name("attn.bk")));
-            prune_hook(&mut k, mode, &mut stats);
+            prune_hook(&mut k, mode, layer, ActHook::K, &mut stats);
             let mut v = t::matmul(&x2, self.p(params, &name("attn.wv")), bs, h, h);
             t::add_bias(&mut v, self.p(params, &name("attn.bv")));
-            prune_hook(&mut v, mode, &mut stats);
+            prune_hook(&mut v, mode, layer, ActHook::V, &mut stats);
 
             // C-OP-4: attention scores, all heads folded into one matrix
             // so the pruning hook sees (batch * heads * seq, seq) like the
@@ -219,7 +223,7 @@ impl ReferenceBackend {
             }
             match mode {
                 Prune::TopK(keep_frac) => topk_rows_quantile(&mut att, seq, keep_frac),
-                _ => prune_hook(&mut att, mode, &mut stats),
+                _ => prune_hook(&mut att, mode, layer, ActHook::Scores, &mut stats),
             }
 
             // C-OP-5..6: softmax + probabilities x values.
@@ -233,12 +237,12 @@ impl ReferenceBackend {
                     scatter_head(&mut pcat, &o, b, head, seq, h, hd);
                 }
             }
-            prune_hook(&mut pcat, mode, &mut stats);
+            prune_hook(&mut pcat, mode, layer, ActHook::Context, &mut stats);
 
             // C-OP-7: output projection.
             let mut mha = t::matmul(&pcat, self.p(params, &name("attn.wo")), bs, h, h);
             t::add_bias(&mut mha, self.p(params, &name("attn.bo")));
-            prune_hook(&mut mha, mode, &mut stats);
+            prune_hook(&mut mha, mode, layer, ActHook::ProjOut, &mut stats);
 
             // C-OP-8: residual + layer-norm.
             let mut r1 = mha;
@@ -260,16 +264,16 @@ impl ReferenceBackend {
 
             // C-OP-9..10: feed-forward with GeLU.
             let mut xp = x_ln1.clone();
-            prune_hook(&mut xp, mode, &mut stats);
+            prune_hook(&mut xp, mode, layer, ActHook::FfnIn, &mut stats);
             let mut f1 = t::matmul(&xp, self.p(params, &name("ffn.w1")), bs, h, ff);
             t::add_bias(&mut f1, self.p(params, &name("ffn.b1")));
             for val in f1.iter_mut() {
                 *val = t::gelu(*val);
             }
-            prune_hook(&mut f1, mode, &mut stats);
+            prune_hook(&mut f1, mode, layer, ActHook::Gelu, &mut stats);
             let mut f2 = t::matmul(&f1, self.p(params, &name("ffn.w2")), bs, ff, h);
             t::add_bias(&mut f2, self.p(params, &name("ffn.b2")));
-            prune_hook(&mut f2, mode, &mut stats);
+            prune_hook(&mut f2, mode, layer, ActHook::FfnOut, &mut stats);
 
             // C-OP-11: second residual (from the *unpruned* x_ln1) + norm.
             let mut r2 = f2;
@@ -293,16 +297,19 @@ impl ReferenceBackend {
         hidden
     }
 
-    /// Logits from the `[CLS]` (position-0) hidden state.
+    /// Logits from the `[CLS]` (position-0) hidden state.  `stats`
+    /// threads the optional trace-capture recorder through; it never
+    /// affects the computed logits.
     fn classify_mode(
         &self,
         params: &[f32],
         ids: &[i32],
         batch: usize,
         mode: Prune,
+        stats: Option<&mut Vec<HookRecord>>,
     ) -> Vec<f32> {
         let Shape { seq, hidden: h, classes, .. } = self.shape;
-        let hidden = self.encode(params, ids, batch, mode, None);
+        let hidden = self.encode(params, ids, batch, mode, stats);
         let mut pooled = vec![0.0f32; batch * h];
         for b in 0..batch {
             pooled[b * h..b * h + h].copy_from_slice(&hidden[b * seq * h..b * seq * h + h]);
@@ -638,7 +645,7 @@ impl ExecBackend for ReferenceBackend {
         tau: f32,
     ) -> Result<Vec<f32>> {
         self.check_inputs(params, ids, batch)?;
-        Ok(self.classify_mode(params, ids, batch, Prune::DynaTran(tau)))
+        Ok(self.classify_mode(params, ids, batch, Prune::DynaTran(tau), None))
     }
 
     fn classify_topk(&mut self, params: &[f32], ids: &[i32], keep_frac: f32) -> Result<Vec<f32>> {
@@ -648,7 +655,26 @@ impl ExecBackend for ReferenceBackend {
         }
         let batch = ids.len() / seq;
         self.check_inputs(params, ids, batch)?;
-        Ok(self.classify_mode(params, ids, batch, Prune::TopK(keep_frac)))
+        Ok(self.classify_mode(params, ids, batch, Prune::TopK(keep_frac), None))
+    }
+
+    fn classify_traced(
+        &mut self,
+        batch: usize,
+        params: &[f32],
+        ids: &[i32],
+        tau: f32,
+    ) -> Result<(Vec<f32>, Vec<HookRecord>)> {
+        self.check_inputs(params, ids, batch)?;
+        let mut records = Vec::new();
+        let logits = self.classify_mode(
+            params,
+            ids,
+            batch,
+            Prune::DynaTran(tau),
+            Some(&mut records),
+        );
+        Ok((logits, records))
     }
 
     fn activation_sparsity(&mut self, params: &[f32], ids: &[i32], tau: f32) -> Result<f32> {
@@ -663,7 +689,9 @@ impl ExecBackend for ReferenceBackend {
         if stats.is_empty() {
             return Ok(0.0);
         }
-        Ok((stats.iter().sum::<f64>() / stats.len() as f64) as f32)
+        // unweighted mean over the per-matrix fractions (the Figs. 11/12
+        // rho axis — same statistic as before hooks carried identities)
+        Ok((stats.iter().map(|r| r.zero_frac).sum::<f64>() / stats.len() as f64) as f32)
     }
 
     fn train_step(
@@ -710,8 +738,16 @@ impl ExecBackend for ReferenceBackend {
 }
 
 /// DynaTran hook on one activation matrix: threshold in place (DynaTran
-/// mode only), then record its zero-fraction when profiling.
-fn prune_hook(x: &mut [f32], mode: Prune, stats: &mut Option<&mut Vec<f64>>) {
+/// mode only), then record its zero-fraction — labelled with the
+/// `(layer, hook)` identity the sparsity trace aggregates by — when
+/// profiling.  Recording reads the matrix; it never modifies it.
+fn prune_hook(
+    x: &mut [f32],
+    mode: Prune,
+    layer: usize,
+    hook: ActHook,
+    stats: &mut Option<&mut Vec<HookRecord>>,
+) {
     if let Prune::DynaTran(tau) = mode {
         if tau > 0.0 {
             for v in x.iter_mut() {
@@ -721,7 +757,12 @@ fn prune_hook(x: &mut [f32], mode: Prune, stats: &mut Option<&mut Vec<f64>>) {
             }
         }
         if let Some(st) = stats.as_mut() {
-            st.push(t::zero_fraction(x));
+            st.push(HookRecord {
+                layer,
+                hook,
+                zero_frac: t::zero_fraction(x),
+                elems: x.len(),
+            });
         }
     }
 }
@@ -881,6 +922,25 @@ mod tests {
         assert!((0.0..=1.0).contains(&lo));
         assert!(hi > 0.9, "everything pruned at huge tau, got {hi}");
         assert!(hi >= lo);
+    }
+
+    #[test]
+    fn traced_classify_matches_plain_and_labels_every_hook() {
+        let manifest = micro_manifest();
+        let mut be = micro_backend();
+        let params = ParamStore::init(&manifest, 6).params;
+        let ids = micro_ids(2, 21);
+        let plain = be.classify(2, &params, &ids, 0.05).unwrap();
+        let (traced, records) = be.classify_traced(2, &params, &ids, 0.05).unwrap();
+        assert_eq!(plain, traced, "capture must not perturb logits");
+        // one record per (layer, hook): 1 layer x 10 hooks
+        assert_eq!(records.len(), 10);
+        for (rec, hook) in records.iter().zip(ActHook::ALL) {
+            assert_eq!(rec.hook, hook, "hook order contract");
+            assert_eq!(rec.layer, 0);
+            assert!((0.0..=1.0).contains(&rec.zero_frac));
+            assert!(rec.elems > 0);
+        }
     }
 
     #[test]

@@ -112,6 +112,20 @@ impl Runtime {
         self.backend.classify(batch, params, ids, tau)
     }
 
+    /// Classification logits plus the forward pass's per-activation
+    /// sparsity observations (measured-sparsity trace capture).  Logits
+    /// are bitwise identical to [`Runtime::classify`]; backends without
+    /// a traced path return no observations.
+    pub fn classify_traced(
+        &mut self,
+        batch: usize,
+        params: &[f32],
+        ids: &[i32],
+        tau: f32,
+    ) -> Result<(Vec<f32>, Vec<crate::trace::HookRecord>)> {
+        self.backend.classify_traced(batch, params, ids, tau)
+    }
+
     /// Logits under SpAtten-style top-k attention pruning at `keep_frac`.
     pub fn classify_topk(
         &mut self,

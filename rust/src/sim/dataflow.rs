@@ -271,6 +271,40 @@ mod tests {
     }
 
     #[test]
+    fn every_dataflow_covers_random_op_dims_exactly_once() {
+        // Tiling/dataflow contract for the whole op language: for a
+        // random `OpDims` (matmul, elementwise or load) under random
+        // tile sizes, every one of the 24 loop orders streams each tile
+        // of the grid exactly once, within the grid's extents.
+        use crate::model::ops::OpDims;
+        use crate::sim::tiling::tile_op;
+        prop::check(22, 30, |g| {
+            let dims = match g.usize_in(0, 2) {
+                0 => OpDims::MatMul {
+                    m: g.usize_in(1, 40),
+                    k: g.usize_in(1, 40),
+                    n: g.usize_in(1, 40),
+                },
+                1 => OpDims::Elem { m: g.usize_in(1, 60), n: g.usize_in(1, 60) },
+                _ => OpDims::Load { elems: g.usize_in(1, 4000) },
+            };
+            let ts = [4usize, 8, 16];
+            let grid =
+                tile_op(&dims, 1, *g.pick(&ts), *g.pick(&ts), *g.pick(&ts));
+            for df in Dataflow::all() {
+                let mut seen = std::collections::HashSet::new();
+                df.for_each_tile(&grid, |b, i, j, k| {
+                    assert!(b < grid.nb && i < grid.ni && j < grid.nj && k < grid.nk,
+                            "{df} out of extent: ({b},{i},{j},{k}) for {dims:?}");
+                    assert!(seen.insert((b, i, j, k)),
+                            "{df} revisited ({b},{i},{j},{k}) for {dims:?}");
+                });
+                assert_eq!(seen.len(), grid.total_tiles(), "{df} for {dims:?}");
+            }
+        });
+    }
+
+    #[test]
     fn bijk_with_k_inner_reuses_nothing_but_symmetry_holds() {
         // With one lane, [b,i,j,k] changes k fastest -> both operands
         // change every step (k in both ids) => zero reuse; [b,i,k,j]

@@ -30,10 +30,11 @@ use crate::sim::sparsity::effectual_fraction;
 use crate::sim::stats::{EnergyLedger, StallCounters, Trace, TraceSample};
 use crate::sim::tech;
 use crate::sim::tiling;
+use crate::trace::SparsityTrace;
 use crate::util::json::Json;
 
 /// Runtime sparsity operating point fed to the timing model.
-#[derive(Clone, Copy, Debug)]
+#[derive(Clone, Copy, Debug, PartialEq)]
 pub struct SparsityProfile {
     /// Static weight sparsity (e.g. 0.5 from movement pruning).
     pub weight_rho: f64,
@@ -56,11 +57,48 @@ impl SparsityProfile {
     }
 }
 
+/// Where each tiled op's sparsity operating point comes from.
+///
+/// The paper's headline figures feed *measured* per-operation sparsity
+/// into the timing model; [`SparsitySource::Trace`] does exactly that by
+/// resolving a per-op [`SparsityProfile`] from a captured
+/// [`SparsityTrace`] via the op's stable
+/// [`crate::model::TraceClass`].  [`SparsitySource::Uniform`] is the
+/// legacy 3-scalar fallback: one profile applied to every op (what every
+/// pre-trace call site uses, bit-identical to the old behavior).
+#[derive(Clone, Debug)]
+pub enum SparsitySource {
+    /// One hand-picked profile for every op.
+    Uniform(SparsityProfile),
+    /// Per-op profiles resolved from a measured trace.
+    Trace(SparsityTrace),
+}
+
+impl SparsitySource {
+    /// Short name for reports ("uniform" / "trace").
+    pub fn name(&self) -> &'static str {
+        match self {
+            SparsitySource::Uniform(_) => "uniform",
+            SparsitySource::Trace(_) => "trace",
+        }
+    }
+
+    /// Resolve the operating point of one op.
+    pub fn profile_for(&self, node: &crate::model::ops::OpNode) -> SparsityProfile {
+        match self {
+            SparsitySource::Uniform(p) => *p,
+            SparsitySource::Trace(t) => t.profile_for(node),
+        }
+    }
+}
+
 /// Final simulation report.
 #[derive(Clone, Debug)]
 pub struct SimResult {
     pub config_name: String,
     pub model_name: String,
+    /// Which sparsity source drove the run ("uniform" / "trace").
+    pub sparsity_source: String,
     pub batch: usize,
     pub seq: usize,
     pub total_cycles: u64,
@@ -100,6 +138,7 @@ impl SimResult {
         Json::obj(vec![
             ("config", Json::str(self.config_name.clone())),
             ("model", Json::str(self.model_name.clone())),
+            ("sparsity_source", Json::str(self.sparsity_source.clone())),
             ("batch", Json::num(self.batch as f64)),
             ("seq", Json::num(self.seq as f64)),
             ("total_cycles", Json::num(self.total_cycles as f64)),
@@ -156,7 +195,9 @@ pub struct Engine<'g> {
     pub cfg: AcceleratorConfig,
     graph: &'g OpGraph,
     sched: Schedule,
-    sparsity: SparsityProfile,
+    /// Name of the sparsity source the per-op profiles were resolved
+    /// from (the profiles themselves live in the schedule records).
+    sparsity_source: &'static str,
     // resources
     free_lanes: usize,
     free_softmax: usize,
@@ -217,11 +258,25 @@ struct OpCost {
 }
 
 impl<'g> Engine<'g> {
+    /// Uniform-profile construction (the legacy entry point): every op
+    /// runs at the same 3-scalar operating point.
     pub fn new(
         cfg: AcceleratorConfig,
         graph: &'g OpGraph,
         policy: Policy,
         sparsity: SparsityProfile,
+    ) -> Engine<'g> {
+        Self::with_source(cfg, graph, policy, &SparsitySource::Uniform(sparsity))
+    }
+
+    /// Construct with an explicit [`SparsitySource`] — the measured-trace
+    /// path resolves one [`SparsityProfile`] per op here, once, before
+    /// any cost is computed.
+    pub fn with_source(
+        cfg: AcceleratorConfig,
+        graph: &'g OpGraph,
+        policy: Policy,
+        source: &SparsitySource,
     ) -> Engine<'g> {
         let grids: Vec<_> = graph
             .nodes
@@ -255,7 +310,9 @@ impl<'g> Engine<'g> {
                 rep.reuse_instances() as f64 / (2 * rep.tiles) as f64
             })
             .collect();
-        let sched = Schedule::new(graph, policy, grids);
+        let profiles: Vec<SparsityProfile> =
+            graph.nodes.iter().map(|n| source.profile_for(n)).collect();
+        let sched = Schedule::new(graph, policy, grids, profiles);
         let lane_model = MacLane::new(cfg.multipliers_per_lane);
         let softmax_model = SoftmaxModule { elems_per_cycle: cfg.special_elems_per_cycle };
         let layernorm_model =
@@ -289,7 +346,7 @@ impl<'g> Engine<'g> {
             graph,
             sched,
             cfg,
-            sparsity,
+            sparsity_source: source.name(),
         };
         // Whole-model weight residency is intentionally NOT inferred:
         // the paper streams per-layer weights each batch (Fig. 17 shows
@@ -301,12 +358,27 @@ impl<'g> Engine<'g> {
         engine
     }
 
-    /// Effectual-MAC fraction for a matmul under the current profile.
-    fn eff_frac(&self) -> f64 {
+    /// Effectual-MAC fraction for op `id` under its resolved profile.
+    fn eff_frac(&self, id: usize) -> f64 {
+        let p = self.sched.ops[id].profile;
         if self.cfg.dynatran_enabled {
-            effectual_fraction(self.sparsity.weight_rho, self.sparsity.act_rho)
+            effectual_fraction(p.weight_rho, p.act_rho)
         } else {
-            effectual_fraction(self.sparsity.weight_rho, self.sparsity.inherent_act_rho)
+            effectual_fraction(p.weight_rho, p.inherent_act_rho)
+        }
+    }
+
+    /// Activation sparsity of op `id`'s stored output under the current
+    /// ablation switches (dense without the mask pipeline; inherent
+    /// zeros only without DynaTran).
+    fn act_rho(&self, id: usize) -> f64 {
+        let p = self.sched.ops[id].profile;
+        if !self.cfg.sparsity_modules {
+            0.0
+        } else if self.cfg.dynatran_enabled {
+            p.act_rho
+        } else {
+            p.inherent_act_rho
         }
     }
 
@@ -346,6 +418,7 @@ impl<'g> Engine<'g> {
         SimResult {
             config_name: self.cfg.name.clone(),
             model_name: self.graph.config.name.clone(),
+            sparsity_source: self.sparsity_source.to_string(),
             batch: self.graph.batch,
             seq: self.graph.seq,
             total_cycles: total,
@@ -547,23 +620,18 @@ impl<'g> Engine<'g> {
     /// Precompute the per-tile cost vector (§Perf: called once from
     /// `new`; the issue loop then only multiplies by the batch size).
     fn build_op_costs(&self) -> Vec<OpCost> {
-        let eff_frac = self.eff_frac();
-        let w_keep = if self.cfg.sparsity_modules {
-            1.0 - self.sparsity.weight_rho
-        } else {
-            1.0
-        };
-        let a_rho = if !self.cfg.sparsity_modules {
-            0.0
-        } else if self.cfg.dynatran_enabled {
-            self.sparsity.act_rho
-        } else {
-            self.sparsity.inherent_act_rho
-        };
         self.graph
             .nodes
             .iter()
             .map(|node| {
+                // per-op operating point (measured trace or uniform)
+                let eff_frac = self.eff_frac(node.id);
+                let w_keep = if self.cfg.sparsity_modules {
+                    1.0 - self.sched.ops[node.id].profile.weight_rho
+                } else {
+                    1.0
+                };
+                let a_rho = self.act_rho(node.id);
                 let grid = &self.sched.ops[node.id].grid;
                 // compute cost per tile by resource class
                 let per = match node.kind {
@@ -676,8 +744,8 @@ impl<'g> Engine<'g> {
         if !self.cfg.sparsity_modules {
             return dense.ceil() as usize;
         }
-        let compressed =
-            dense * (1.0 - self.sparsity.weight_rho) + elems as f64 / 8.0;
+        let weight_rho = self.sched.ops[id].profile.weight_rho;
+        let compressed = dense * (1.0 - weight_rho) + elems as f64 / 8.0;
         compressed.ceil() as usize
     }
 
@@ -702,13 +770,9 @@ impl<'g> Engine<'g> {
                     )
             }
             _ => {
-                let a_rho = if !self.cfg.sparsity_modules {
-                    0.0 // dense storage without the mask pipeline
-                } else if self.cfg.dynatran_enabled {
-                    self.sparsity.act_rho
-                } else {
-                    self.sparsity.inherent_act_rho
-                };
+                // dense storage without the mask pipeline; per-op
+                // measured sparsity otherwise (see `act_rho`)
+                let a_rho = self.act_rho(id);
                 let full = (node.dims.out_elems() as f64
                     * tech::ELEM_BYTES
                     * (1.0 - a_rho))
@@ -824,13 +888,7 @@ impl<'g> Engine<'g> {
                     )
             }
             _ => {
-                let a_rho = if !self.cfg.sparsity_modules {
-                    0.0
-                } else if self.cfg.dynatran_enabled {
-                    self.sparsity.act_rho
-                } else {
-                    self.sparsity.inherent_act_rho
-                };
+                let a_rho = self.act_rho(id);
                 let full = (node.dims.out_elems() as f64
                     * tech::ELEM_BYTES
                     * (1.0 - a_rho))
@@ -884,7 +942,8 @@ fn elem_cols(dims: &OpDims) -> usize {
     }
 }
 
-/// Convenience: simulate `model` on `cfg` at the given sparsity.
+/// Convenience: simulate `model` on `cfg` at one uniform sparsity
+/// operating point (the legacy fallback path).
 pub fn simulate(
     cfg: &AcceleratorConfig,
     model: &crate::model::TransformerConfig,
@@ -892,8 +951,21 @@ pub fn simulate(
     policy: Policy,
     sparsity: SparsityProfile,
 ) -> SimResult {
+    simulate_with(cfg, model, seq, policy, &SparsitySource::Uniform(sparsity))
+}
+
+/// Simulate `model` on `cfg` drawing each op's sparsity from `source` —
+/// pass `SparsitySource::Trace` to drive the timing model from measured
+/// per-op activation sparsities (the Figs. 17-20 path).
+pub fn simulate_with(
+    cfg: &AcceleratorConfig,
+    model: &crate::model::TransformerConfig,
+    seq: usize,
+    policy: Policy,
+    source: &SparsitySource,
+) -> SimResult {
     let graph = OpGraph::build(model, cfg.batch, seq);
-    Engine::new(cfg.clone(), &graph, policy, sparsity).run()
+    Engine::with_source(cfg.clone(), &graph, policy, source).run()
 }
 
 #[cfg(test)]
@@ -1033,8 +1105,90 @@ mod tests {
     fn result_json_is_complete() {
         let (cfg, r) = edge_sim(64, SparsityProfile::paper_default());
         let j = r.to_json(&cfg);
+        assert_eq!(j.get("sparsity_source").unwrap().as_str(), Some("uniform"));
         for key in ["throughput_seq_s", "energy_mj_per_seq", "total_cycles"] {
             assert!(j.get(key).is_some(), "missing {key}");
         }
+    }
+
+    fn flat_trace(rho: f64) -> crate::trace::SparsityTrace {
+        use crate::trace::{LayerActRho, SparsityTrace, WeightRho};
+        let l = LayerActRho {
+            input: rho,
+            q: rho,
+            k: rho,
+            v: rho,
+            scores: rho,
+            context: rho,
+            proj_out: rho,
+            ffn_in: rho,
+            gelu: rho,
+            ffn_out: rho,
+        };
+        SparsityTrace {
+            model: "flat".into(),
+            backend: "test".into(),
+            tau: 0.04,
+            examples: 1,
+            eval_accuracy: 0.5,
+            inherent_act_rho: 0.05,
+            weight: WeightRho {
+                embedding: 0.0,
+                wqkv: 0.5,
+                wo: 0.5,
+                wf1: 0.5,
+                wf2: 0.5,
+            },
+            layers: vec![l; 2],
+        }
+    }
+
+    #[test]
+    fn trace_source_drives_per_op_profiles() {
+        // A sparser measured trace must simulate faster and cheaper than
+        // a denser one, and the result must name its source.
+        let model = TransformerConfig::bert_tiny();
+        let cfg = AcceleratorConfig::edge();
+        let lo = simulate_with(
+            &cfg,
+            &model,
+            128,
+            Policy::Staggered,
+            &SparsitySource::Trace(flat_trace(0.1)),
+        );
+        let hi = simulate_with(
+            &cfg,
+            &model,
+            128,
+            Policy::Staggered,
+            &SparsitySource::Trace(flat_trace(0.6)),
+        );
+        assert_eq!(lo.sparsity_source, "trace");
+        assert!(
+            hi.total_cycles < lo.total_cycles,
+            "sparser trace must be faster: {} vs {}",
+            hi.total_cycles,
+            lo.total_cycles
+        );
+        assert!(hi.energy.total_pj() < lo.energy.total_pj());
+    }
+
+    #[test]
+    fn uniform_source_is_identical_to_legacy_entry_point() {
+        // `simulate` and an explicit Uniform source are the same run.
+        let model = TransformerConfig::bert_tiny();
+        let cfg = AcceleratorConfig::edge();
+        let p = SparsityProfile::paper_default();
+        let a = simulate(&cfg, &model, 64, Policy::Staggered, p);
+        let b = simulate_with(
+            &cfg,
+            &model,
+            64,
+            Policy::Staggered,
+            &SparsitySource::Uniform(p),
+        );
+        assert_eq!(a.total_cycles, b.total_cycles);
+        assert_eq!(a.stalls, b.stalls);
+        assert_eq!(a.energy.total_pj().to_bits(), b.energy.total_pj().to_bits());
     }
 }

@@ -28,4 +28,6 @@ pub mod tech;
 pub mod tiling;
 
 pub use config::{AcceleratorConfig, MemoryKind};
-pub use engine::{simulate, Engine, SimResult, SparsityProfile};
+pub use engine::{
+    simulate, simulate_with, Engine, SimResult, SparsityProfile, SparsitySource,
+};

@@ -13,6 +13,7 @@
 //!   kept as the ablation baseline.
 
 use crate::model::ops::{OpGraph, OpKind};
+use crate::sim::engine::SparsityProfile;
 use crate::sim::tiling::TileGrid;
 
 /// Scheduling policy for ready compute ops.
@@ -45,6 +46,11 @@ pub struct OpSched {
     pub tiles_remaining: usize,
     pub tiles_inflight: usize,
     pub grid: TileGrid,
+    /// Sparsity operating point resolved for this op — a per-op value
+    /// from a measured `trace::SparsityTrace`, or one shared uniform
+    /// profile (the legacy 3-scalar fallback).  The engine's cost model
+    /// reads it per tiled op.
+    pub profile: SparsityProfile,
     /// Successor op ids (reverse edges).
     pub succs: Vec<usize>,
     /// Cycle at which the op became ready / finished (reporting).
@@ -69,8 +75,14 @@ pub struct Schedule {
 }
 
 impl Schedule {
-    pub fn new(graph: &OpGraph, policy: Policy, grids: Vec<TileGrid>) -> Schedule {
+    pub fn new(
+        graph: &OpGraph,
+        policy: Policy,
+        grids: Vec<TileGrid>,
+        profiles: Vec<SparsityProfile>,
+    ) -> Schedule {
         assert_eq!(graph.nodes.len(), grids.len());
+        assert_eq!(graph.nodes.len(), profiles.len());
         let n = graph.nodes.len();
         let mut succs: Vec<Vec<usize>> = vec![Vec::new(); n];
         for node in &graph.nodes {
@@ -79,7 +91,7 @@ impl Schedule {
             }
         }
         let mut ops = Vec::with_capacity(n);
-        for (node, grid) in graph.nodes.iter().zip(grids) {
+        for ((node, grid), profile) in graph.nodes.iter().zip(grids).zip(profiles) {
             ops.push(OpSched {
                 state: if node.deps.is_empty() {
                     OpState::Ready
@@ -90,6 +102,7 @@ impl Schedule {
                 tiles_remaining: grid.total_tiles(),
                 tiles_inflight: 0,
                 grid,
+                profile,
                 succs: std::mem::take(&mut succs[node.id]),
                 ready_at: 0,
                 done_at: 0,
@@ -268,7 +281,8 @@ mod tests {
             .iter()
             .map(|n| tiling::tile_op(&n.dims, 1, 16, 16, 16))
             .collect();
-        let s = Schedule::new(&graph, policy, grids);
+        let profiles = vec![SparsityProfile::paper_default(); graph.nodes.len()];
+        let s = Schedule::new(&graph, policy, grids, profiles);
         (graph, s)
     }
 

@@ -215,6 +215,61 @@ mod tests {
     }
 
     #[test]
+    fn mask_and_filter_support_invariants() {
+        // Fig. 8 gate-level contract under random tiles: the output mask
+        // is the NAND of the keep views, the filtered operands live on
+        // exactly the common support, and re-expanding the elementwise
+        // products through the post-compute module reproduces the dense
+        // Hadamard product bit-for-bit.
+        prop::check(34, 200, |g| {
+            let n = g.usize_in(1, 256);
+            let wd = random_sparse(g.rng(), n, g.f32_in(0.0, 1.0) as f64);
+            let ad = random_sparse(g.rng(), n, g.f32_in(0.0, 1.0) as f64);
+            let w = CompressedTile::compress(&wd);
+            let a = CompressedTile::compress(&ad);
+            let pair = precompute_align(&w, &a);
+            assert_eq!(pair.out_mask.len(), n);
+            let mut common = 0usize;
+            for i in 0..n {
+                let keep_w = wd[i] != 0.0;
+                let keep_a = ad[i] != 0.0;
+                assert_eq!(pair.out_mask[i], !(keep_w && keep_a), "idx {i}");
+                common += (keep_w && keep_a) as usize;
+            }
+            assert_eq!(pair.w.len(), common);
+            assert_eq!(pair.a.len(), common);
+            // post-compute re-expansion of the products == dense products
+            let products: Vec<f32> =
+                pair.w.iter().zip(&pair.a).map(|(&x, &y)| x * y).collect();
+            let expanded = CompressedTile {
+                values: products,
+                mask: pair.out_mask.clone(),
+            }
+            .decompress();
+            let dense: Vec<f32> =
+                wd.iter().zip(&ad).map(|(&x, &y)| x * y).collect();
+            assert_eq!(expanded, dense);
+        });
+    }
+
+    #[test]
+    fn effectual_fraction_stays_in_unit_interval() {
+        // Closed form and measurement both live in [0, 1] under random
+        // tiles and random operating points.
+        prop::check(35, 200, |g| {
+            let rho_w = g.f32_in(0.0, 1.0) as f64;
+            let rho_a = g.f32_in(0.0, 1.0) as f64;
+            let f = effectual_fraction(rho_w, rho_a);
+            assert!((0.0..=1.0).contains(&f), "closed form {f}");
+            let n = g.usize_in(1, 200);
+            let w = CompressedTile::compress(&random_sparse(g.rng(), n, rho_w));
+            let a = CompressedTile::compress(&random_sparse(g.rng(), n, rho_a));
+            let measured = effectual_macs(&w, &a) as f64 / n as f64;
+            assert!((0.0..=1.0).contains(&measured), "measured {measured}");
+        });
+    }
+
+    #[test]
     fn effectual_macs_never_exceed_min_nnz() {
         prop::check(33, 100, |g| {
             let n = g.usize_in(1, 128);

@@ -1,0 +1,592 @@
+//! Measured-sparsity traces: the bridge between the functional half
+//! (the `runtime` backends, which observe real per-activation zero
+//! fractions during inference) and the timing half (the `sim` engine,
+//! which needs a sparsity operating point per tiled op).
+//!
+//! The paper's headline results (Figs. 17-19, Table IV) feed *measured*
+//! per-operation activation sparsity into the accelerator model rather
+//! than a hand-picked scalar.  This module defines that interchange
+//! format:
+//!
+//! * [`HookRecord`] / [`ActHook`] — one observation from a pruning hook
+//!   during a traced forward pass (`ExecBackend::classify_traced`).
+//! * [`TraceBuilder`] — element-weighted aggregation of observations
+//!   over a whole evaluation set, per `(layer, hook)` cell.
+//! * [`SparsityTrace`] — the serializable result: per-layer activation
+//!   sparsities at each hook, measured weight-matrix sparsities, the
+//!   inherent (tau = 0) activation sparsity, and eval metadata.  It
+//!   resolves a per-op [`SparsityProfile`] for any
+//!   [`crate::model::OpNode`] via its stable
+//!   [`crate::model::TraceClass`] — which is what
+//!   `sim::SparsitySource::Trace` feeds the engine.
+//!
+//! Traces serialize to JSON (`save`/`load`) through `util::json`; the
+//! writer is deterministic (sorted keys, round-trip float formatting),
+//! so identical captures produce byte-identical files — pinned by
+//! `rust/tests/determinism.rs`.
+
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::model::ops::{OpNode, TraceClass};
+use crate::sim::engine::SparsityProfile;
+use crate::util::json::Json;
+
+/// The ten activation matrices a traced forward pass observes per
+/// encoder layer, in hook order (mirrors the `prune_hook` call sites of
+/// `runtime::backend::reference::ReferenceBackend::encode`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum ActHook {
+    /// Hidden state entering the layer (input of C-OP-1..3).
+    Input,
+    /// Q projection output (left operand of C-OP-4).
+    Q,
+    /// K projection output (right operand of C-OP-4).
+    K,
+    /// V projection output (right operand of C-OP-6).
+    V,
+    /// Pre-softmax attention scores (output of C-OP-4).
+    Scores,
+    /// Concatenated head contexts (input of C-OP-7).
+    Context,
+    /// Attention output projection result (input of C-OP-8's add).
+    ProjOut,
+    /// Pruned layer-norm output entering the FFN (input of C-OP-9).
+    FfnIn,
+    /// Post-GeLU first-FFN output (input of C-OP-10).
+    Gelu,
+    /// Second-FFN output (input of C-OP-11's add).
+    FfnOut,
+}
+
+impl ActHook {
+    /// All hooks in capture order.
+    pub const ALL: [ActHook; 10] = [
+        ActHook::Input,
+        ActHook::Q,
+        ActHook::K,
+        ActHook::V,
+        ActHook::Scores,
+        ActHook::Context,
+        ActHook::ProjOut,
+        ActHook::FfnIn,
+        ActHook::Gelu,
+        ActHook::FfnOut,
+    ];
+
+    /// Stable JSON key for this hook.
+    pub fn name(self) -> &'static str {
+        match self {
+            ActHook::Input => "input",
+            ActHook::Q => "q",
+            ActHook::K => "k",
+            ActHook::V => "v",
+            ActHook::Scores => "scores",
+            ActHook::Context => "context",
+            ActHook::ProjOut => "proj_out",
+            ActHook::FfnIn => "ffn_in",
+            ActHook::Gelu => "gelu",
+            ActHook::FfnOut => "ffn_out",
+        }
+    }
+
+    fn index(self) -> usize {
+        Self::ALL.iter().position(|&h| h == self).unwrap()
+    }
+}
+
+/// One activation-matrix observation from a traced forward pass.
+#[derive(Clone, Copy, Debug)]
+pub struct HookRecord {
+    /// Encoder layer the matrix belongs to.
+    pub layer: usize,
+    /// Which of the layer's activation matrices was observed.
+    pub hook: ActHook,
+    /// Zero fraction of the matrix after the DynaTran threshold.
+    pub zero_frac: f64,
+    /// Matrix elements (the observation's weight in aggregation).
+    pub elems: usize,
+}
+
+/// Per-layer measured activation sparsity, one value per [`ActHook`].
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct LayerActRho {
+    pub input: f64,
+    pub q: f64,
+    pub k: f64,
+    pub v: f64,
+    pub scores: f64,
+    pub context: f64,
+    pub proj_out: f64,
+    pub ffn_in: f64,
+    pub gelu: f64,
+    pub ffn_out: f64,
+}
+
+impl LayerActRho {
+    /// Read the value recorded for one hook.
+    pub fn get(&self, hook: ActHook) -> f64 {
+        match hook {
+            ActHook::Input => self.input,
+            ActHook::Q => self.q,
+            ActHook::K => self.k,
+            ActHook::V => self.v,
+            ActHook::Scores => self.scores,
+            ActHook::Context => self.context,
+            ActHook::ProjOut => self.proj_out,
+            ActHook::FfnIn => self.ffn_in,
+            ActHook::Gelu => self.gelu,
+            ActHook::FfnOut => self.ffn_out,
+        }
+    }
+
+    fn set(&mut self, hook: ActHook, v: f64) {
+        match hook {
+            ActHook::Input => self.input = v,
+            ActHook::Q => self.q = v,
+            ActHook::K => self.k = v,
+            ActHook::V => self.v = v,
+            ActHook::Scores => self.scores = v,
+            ActHook::Context => self.context = v,
+            ActHook::ProjOut => self.proj_out = v,
+            ActHook::FfnIn => self.ffn_in = v,
+            ActHook::Gelu => self.gelu = v,
+            ActHook::FfnOut => self.ffn_out = v,
+        }
+    }
+
+    /// Unweighted mean over the layer's hooks.
+    pub fn mean(&self) -> f64 {
+        ActHook::ALL.iter().map(|&h| self.get(h)).sum::<f64>() / ActHook::ALL.len() as f64
+    }
+
+    fn to_json(self) -> Json {
+        Json::Obj(
+            ActHook::ALL
+                .iter()
+                .map(|&h| (h.name().to_string(), Json::num(self.get(h))))
+                .collect(),
+        )
+    }
+
+    fn from_json(j: &Json) -> Result<LayerActRho> {
+        let mut out = LayerActRho::default();
+        for h in ActHook::ALL {
+            let v = j
+                .get(h.name())
+                .and_then(Json::as_f64)
+                .ok_or_else(|| anyhow!("trace layer entry missing '{}'", h.name()))?;
+            out.set(h, v);
+        }
+        Ok(out)
+    }
+}
+
+/// Measured static weight-matrix sparsity per weight class.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct WeightRho {
+    /// Word + position embedding tables (M-OP-0).
+    pub embedding: f64,
+    /// Fused Q/K/V projection weights (M-OP-1..3).
+    pub wqkv: f64,
+    /// Attention output projection (M-OP-4).
+    pub wo: f64,
+    /// First feed-forward matrix (M-OP-5).
+    pub wf1: f64,
+    /// Second feed-forward matrix (M-OP-6).
+    pub wf2: f64,
+}
+
+impl WeightRho {
+    fn to_json(self) -> Json {
+        Json::obj(vec![
+            ("embedding", Json::num(self.embedding)),
+            ("wqkv", Json::num(self.wqkv)),
+            ("wo", Json::num(self.wo)),
+            ("wf1", Json::num(self.wf1)),
+            ("wf2", Json::num(self.wf2)),
+        ])
+    }
+
+    fn from_json(j: &Json) -> Result<WeightRho> {
+        let f = |k: &str| -> Result<f64> {
+            j.get(k)
+                .and_then(Json::as_f64)
+                .ok_or_else(|| anyhow!("trace weight_rho missing '{k}'"))
+        };
+        Ok(WeightRho {
+            embedding: f("embedding")?,
+            wqkv: f("wqkv")?,
+            wo: f("wo")?,
+            wf1: f("wf1")?,
+            wf2: f("wf2")?,
+        })
+    }
+}
+
+/// A measured sparsity trace: everything the simulator needs to resolve
+/// a per-op operating point, plus capture metadata.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SparsityTrace {
+    /// Model name from the capturing runtime's manifest.
+    pub model: String,
+    /// Backend that produced the observations ("reference" / "pjrt").
+    pub backend: String,
+    /// DynaTran threshold the trace was captured at.
+    pub tau: f64,
+    /// Evaluation examples the trace aggregates over.
+    pub examples: usize,
+    /// Classification accuracy over those examples at this tau (the
+    /// fig19 accuracy axis, captured in the same pass).
+    pub eval_accuracy: f64,
+    /// Mean activation sparsity with DynaTran disabled (tau = 0 probe):
+    /// natural zeros only, the Table IV "w/o DynaTran" operating point.
+    pub inherent_act_rho: f64,
+    /// Measured weight-matrix sparsity per class.
+    pub weight: WeightRho,
+    /// Per-encoder-layer activation sparsities.
+    pub layers: Vec<LayerActRho>,
+}
+
+impl SparsityTrace {
+    /// Element-weighted mean activation sparsity over every hook cell —
+    /// the trace's summary scalar (fig19's x axis).
+    pub fn mean_act_rho(&self) -> f64 {
+        if self.layers.is_empty() {
+            return 0.0;
+        }
+        self.layers.iter().map(LayerActRho::mean).sum::<f64>() / self.layers.len() as f64
+    }
+
+    /// Overlay an assumed static weight sparsity on every weight class
+    /// (activations stay measured).  The deployment flow applies
+    /// movement pruning to the weights *after* fine-tuning; the captured
+    /// checkpoint itself is dense, so benches reproducing the paper's
+    /// MP operating point raise the weight classes to `rho` here
+    /// (DESIGN.md "Measured vs assumed sparsity").
+    pub fn with_assumed_weight_rho(mut self, rho: f64) -> SparsityTrace {
+        self.weight.wqkv = self.weight.wqkv.max(rho);
+        self.weight.wo = self.weight.wo.max(rho);
+        self.weight.wf1 = self.weight.wf1.max(rho);
+        self.weight.wf2 = self.weight.wf2.max(rho);
+        self
+    }
+
+    /// The measured per-layer sparsities for a sim-side layer index.
+    /// Models deeper than the captured trace cycle through the measured
+    /// layer pattern (e.g. a 12-layer BERT-Base simulation over a
+    /// 2-layer captured trace repeats the pattern six times).
+    fn layer(&self, layer: usize) -> LayerActRho {
+        if self.layers.is_empty() {
+            return LayerActRho::default();
+        }
+        let idx = if layer == usize::MAX { 0 } else { layer % self.layers.len() };
+        self.layers[idx]
+    }
+
+    /// Resolve the sparsity operating point of one op.
+    ///
+    /// The `(weight_rho, act_rho)` pair maps onto the engine's two
+    /// operand sides: the "weight" side is whatever streams from the
+    /// weight buffer position of the tiled matmul (a true weight matrix
+    /// for projections/FFN, the Q operand for C-OP-4, the dense
+    /// post-softmax probabilities for C-OP-6), the "act" side the
+    /// activation operand.  Effectual-MAC fraction stays the closed form
+    /// `(1 - rho_w)(1 - rho_a)` either way.
+    pub fn profile_for(&self, node: &OpNode) -> SparsityProfile {
+        let l = self.layer(node.layer);
+        let (weight_rho, act_rho) = match node.trace_class() {
+            TraceClass::Embedding => (self.weight.embedding, 0.0),
+            TraceClass::WqkvLoad => (self.weight.wqkv, 0.0),
+            TraceClass::WoLoad => (self.weight.wo, 0.0),
+            TraceClass::Wf1Load => (self.weight.wf1, 0.0),
+            TraceClass::Wf2Load => (self.weight.wf2, 0.0),
+            TraceClass::Qkv => (self.weight.wqkv, l.input),
+            TraceClass::AttnScore => (l.q, l.k),
+            TraceClass::Softmax => (0.0, l.scores),
+            // post-softmax probabilities are dense (pruning happened on
+            // the pre-softmax scores); only the V operand is sparse
+            TraceClass::AttnContext => (0.0, l.v),
+            TraceClass::AttnProj => (self.weight.wo, l.context),
+            TraceClass::AddNorm1 => (0.0, l.proj_out),
+            TraceClass::AddNorm2 => (0.0, l.ffn_out),
+            TraceClass::Ffn1 => (self.weight.wf1, l.ffn_in),
+            TraceClass::Ffn2 => (self.weight.wf2, l.gelu),
+            TraceClass::Other => (0.0, self.mean_act_rho()),
+        };
+        SparsityProfile {
+            weight_rho,
+            act_rho,
+            inherent_act_rho: self.inherent_act_rho,
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("model", Json::str(self.model.clone())),
+            ("backend", Json::str(self.backend.clone())),
+            ("tau", Json::num(self.tau)),
+            ("examples", Json::num(self.examples as f64)),
+            ("eval_accuracy", Json::num(self.eval_accuracy)),
+            ("inherent_act_rho", Json::num(self.inherent_act_rho)),
+            ("mean_act_rho", Json::num(self.mean_act_rho())),
+            ("weight_rho", self.weight.to_json()),
+            (
+                "layers",
+                Json::arr(self.layers.iter().map(|l| l.to_json())),
+            ),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<SparsityTrace> {
+        let s = |k: &str| -> Result<String> {
+            j.get(k)
+                .and_then(Json::as_str)
+                .map(str::to_string)
+                .ok_or_else(|| anyhow!("trace missing '{k}'"))
+        };
+        let f = |k: &str| -> Result<f64> {
+            j.get(k)
+                .and_then(Json::as_f64)
+                .ok_or_else(|| anyhow!("trace missing '{k}'"))
+        };
+        let layers = j
+            .get("layers")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("trace missing 'layers'"))?
+            .iter()
+            .map(LayerActRho::from_json)
+            .collect::<Result<Vec<_>>>()?;
+        Ok(SparsityTrace {
+            model: s("model")?,
+            backend: s("backend")?,
+            tau: f("tau")?,
+            examples: f("examples")? as usize,
+            eval_accuracy: f("eval_accuracy")?,
+            inherent_act_rho: f("inherent_act_rho")?,
+            weight: WeightRho::from_json(
+                j.get("weight_rho")
+                    .ok_or_else(|| anyhow!("trace missing 'weight_rho'"))?,
+            )?,
+            layers,
+        })
+    }
+
+    /// Write the trace as pretty JSON (deterministic byte-for-byte for
+    /// identical traces).
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
+        let path = path.as_ref();
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir).ok();
+        }
+        std::fs::write(path, self.to_json().to_string_pretty())
+            .with_context(|| format!("writing trace {path:?}"))
+    }
+
+    pub fn load(path: impl AsRef<Path>) -> Result<SparsityTrace> {
+        let path = path.as_ref();
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading trace {path:?}"))?;
+        let j = Json::parse(&text).map_err(|e| anyhow!("{path:?}: {e}"))?;
+        Self::from_json(&j)
+    }
+}
+
+/// Element-weighted `(layer, hook)` aggregation of [`HookRecord`]s into
+/// a [`SparsityTrace`].
+#[derive(Clone, Debug)]
+pub struct TraceBuilder {
+    /// Per layer, per hook: (sum of zero_frac * elems, sum of elems).
+    cells: Vec<[(f64, f64); 10]>,
+}
+
+impl TraceBuilder {
+    pub fn new(layers: usize) -> TraceBuilder {
+        TraceBuilder { cells: vec![[(0.0, 0.0); 10]; layers] }
+    }
+
+    /// Fold one observation in.  Records for layers beyond the declared
+    /// count are ignored (defensive; capture and manifest agree in
+    /// practice).
+    pub fn add(&mut self, rec: &HookRecord) {
+        if let Some(layer) = self.cells.get_mut(rec.layer) {
+            let cell = &mut layer[rec.hook.index()];
+            cell.0 += rec.zero_frac * rec.elems as f64;
+            cell.1 += rec.elems as f64;
+        }
+    }
+
+    pub fn add_all(&mut self, recs: &[HookRecord]) {
+        for r in recs {
+            self.add(r);
+        }
+    }
+
+    /// True when no observation has been folded in.
+    pub fn is_empty(&self) -> bool {
+        self.cells.iter().all(|l| l.iter().all(|&(_, n)| n == 0.0))
+    }
+
+    /// Element-weighted mean over every recorded cell.
+    pub fn mean(&self) -> f64 {
+        let (sum, n) = self
+            .cells
+            .iter()
+            .flatten()
+            .fold((0.0, 0.0), |(s, n), &(cs, cn)| (s + cs, n + cn));
+        if n == 0.0 {
+            0.0
+        } else {
+            sum / n
+        }
+    }
+
+    /// Finalize into a trace (cells with no observations resolve to 0).
+    #[allow(clippy::too_many_arguments)]
+    pub fn finish(
+        self,
+        model: impl Into<String>,
+        backend: impl Into<String>,
+        tau: f64,
+        examples: usize,
+        eval_accuracy: f64,
+        inherent_act_rho: f64,
+        weight: WeightRho,
+    ) -> SparsityTrace {
+        let layers = self
+            .cells
+            .iter()
+            .map(|cells| {
+                let mut l = LayerActRho::default();
+                for (hook, &(sum, n)) in ActHook::ALL.iter().zip(cells.iter()) {
+                    l.set(*hook, if n == 0.0 { 0.0 } else { sum / n });
+                }
+                l
+            })
+            .collect();
+        SparsityTrace {
+            model: model.into(),
+            backend: backend.into(),
+            tau,
+            examples,
+            eval_accuracy,
+            inherent_act_rho,
+            weight,
+            layers,
+        }
+    }
+}
+
+/// Bail-with-context helper for callers that require capture support.
+pub fn require_records(records: &[HookRecord], backend: &str) -> Result<()> {
+    if records.is_empty() {
+        bail!(
+            "backend '{backend}' returned no sparsity observations — \
+             trace capture needs a backend with a traced inference path \
+             (the reference executor)"
+        );
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{OpGraph, TransformerConfig};
+
+    fn sample_trace(layers: usize) -> SparsityTrace {
+        let mut b = TraceBuilder::new(layers);
+        for layer in 0..layers {
+            for (i, hook) in ActHook::ALL.into_iter().enumerate() {
+                b.add(&HookRecord {
+                    layer,
+                    hook,
+                    zero_frac: 0.05 * (i as f64 + 1.0) + 0.01 * layer as f64,
+                    elems: 64 + i,
+                });
+            }
+        }
+        b.finish(
+            "bert-tiny-synth",
+            "reference",
+            0.04,
+            128,
+            0.875,
+            0.08,
+            WeightRho { embedding: 0.0, wqkv: 0.01, wo: 0.02, wf1: 0.03, wf2: 0.04 },
+        )
+    }
+
+    #[test]
+    fn builder_weights_by_elems() {
+        let mut b = TraceBuilder::new(1);
+        b.add(&HookRecord { layer: 0, hook: ActHook::Q, zero_frac: 1.0, elems: 30 });
+        b.add(&HookRecord { layer: 0, hook: ActHook::Q, zero_frac: 0.0, elems: 10 });
+        let t = b.finish("m", "reference", 0.0, 1, 0.5, 0.0, WeightRho::default());
+        assert!((t.layers[0].q - 0.75).abs() < 1e-12);
+    }
+
+    #[test]
+    fn json_roundtrip_is_exact() {
+        let t = sample_trace(2);
+        let j = t.to_json();
+        let back = SparsityTrace::from_json(&j).unwrap();
+        assert_eq!(t, back);
+        // and through the textual form (round-trip float formatting)
+        let text = j.to_string_pretty();
+        let reparsed = SparsityTrace::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(t, reparsed);
+    }
+
+    #[test]
+    fn profile_resolution_covers_every_op() {
+        let t = sample_trace(2);
+        let g = OpGraph::build(&TransformerConfig::bert_tiny(), 1, 64);
+        for n in &g.nodes {
+            let p = t.profile_for(n);
+            assert!((0.0..=1.0).contains(&p.weight_rho), "{}", n.label);
+            assert!((0.0..=1.0).contains(&p.act_rho), "{}", n.label);
+            assert_eq!(p.inherent_act_rho, t.inherent_act_rho);
+        }
+        // spot checks: FFN2 reads the post-GeLU hook; QKV reads the input
+        let ffn2 = g.nodes.iter().find(|n| n.label == "l1.C-OP-10.ffn2").unwrap();
+        assert_eq!(t.profile_for(ffn2).act_rho, t.layers[1].gelu);
+        assert_eq!(t.profile_for(ffn2).weight_rho, t.weight.wf2);
+        let q0 = g.nodes.iter().find(|n| n.label == "l0.h0.C-OP-1.q").unwrap();
+        assert_eq!(t.profile_for(q0).act_rho, t.layers[0].input);
+    }
+
+    #[test]
+    fn deeper_models_cycle_the_layer_pattern() {
+        let t = sample_trace(2);
+        let g = OpGraph::build(&TransformerConfig::bert_base(), 1, 64);
+        let q_at = |layer: usize| {
+            let label = format!("l{layer}.h0.C-OP-1.q");
+            let n = g.nodes.iter().find(|n| n.label == label).unwrap();
+            t.profile_for(n).act_rho
+        };
+        assert_eq!(q_at(0), q_at(2));
+        assert_eq!(q_at(1), q_at(11));
+        assert_ne!(q_at(0), q_at(1));
+    }
+
+    #[test]
+    fn assumed_weight_rho_only_raises() {
+        let t = sample_trace(1).with_assumed_weight_rho(0.5);
+        assert_eq!(t.weight.wqkv, 0.5);
+        assert_eq!(t.weight.wf2, 0.5);
+        // embeddings stay measured (MP prunes encoder weights only)
+        assert_eq!(t.weight.embedding, 0.0);
+        let t2 = t.clone().with_assumed_weight_rho(0.1);
+        assert_eq!(t2.weight.wqkv, 0.5, "overlay must never lower");
+    }
+
+    #[test]
+    fn empty_builder_is_detected() {
+        let b = TraceBuilder::new(2);
+        assert!(b.is_empty());
+        assert_eq!(b.mean(), 0.0);
+        assert!(require_records(&[], "pjrt").is_err());
+    }
+}

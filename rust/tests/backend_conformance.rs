@@ -1,0 +1,160 @@
+//! Cross-backend conformance: the contracts that keep the functional
+//! half's backends interchangeable and the measured-sparsity capture
+//! path honest.
+//!
+//! Un-gated portion (runs in tier-1 on the pure-Rust reference
+//! executor):
+//!
+//! * checkpoints round-trip bit-exactly through `ParamStore` + the
+//!   `Manifest` layout, across backend instances;
+//! * trace capture (`classify_traced`) never perturbs logits — the
+//!   capture-on and capture-off forwards are bitwise identical — and
+//!   labels every `(layer, hook)` cell.
+//!
+//! The PJRT variant at the bottom additionally needs AOT artifacts and
+//! a real PJRT backend (the in-tree `xla` crate is a stub — DESIGN.md
+//! §Substitutions): set `ACCELTRAN_PJRT_TESTS=1` with artifacts in
+//! place; otherwise it skips, keeping `cargo test` hermetic.
+
+use std::path::PathBuf;
+
+use acceltran::model::TransformerConfig;
+use acceltran::runtime::{ParamStore, Runtime};
+use acceltran::trace::ActHook;
+
+/// Tiny encoder so debug-mode `cargo test` stays fast.
+fn tiny_model() -> TransformerConfig {
+    TransformerConfig {
+        name: "conformance-tiny".into(),
+        hidden: 32,
+        layers: 2,
+        heads: 2,
+        ff: 64,
+        vocab: 64,
+        seq: 16,
+    }
+}
+
+fn tiny_runtime() -> Runtime {
+    Runtime::reference_for(&tiny_model(), 2).unwrap()
+}
+
+fn sample_ids(rt: &Runtime, batch: usize) -> Vec<i32> {
+    (0..batch * rt.manifest.seq)
+        .map(|i| ((i * 7 + 3) % rt.manifest.vocab) as i32)
+        .collect()
+}
+
+#[test]
+fn checkpoint_roundtrips_bit_exactly_across_backend_instances() {
+    let mut rt = tiny_runtime();
+    let store = ParamStore::init(&rt.manifest, 11);
+    let ids = sample_ids(&rt, 3);
+    let before = rt.classify(3, &store.params, &ids, 0.03).unwrap();
+
+    // write -> read back through the Manifest layout contract
+    let path: PathBuf = std::env::temp_dir()
+        .join(format!("acceltran_conformance_{}.bin", std::process::id()));
+    store.save(&path).unwrap();
+    let loaded = ParamStore::from_file(&rt.manifest, &path).unwrap();
+    std::fs::remove_file(&path).ok();
+    assert_eq!(store.params, loaded.params, "raw f32 round-trip");
+
+    // a *fresh* backend instance over the same manifest must classify
+    // the loaded checkpoint bit-for-bit like the writer did
+    let mut rt2 = tiny_runtime();
+    let after = rt2.classify(3, &loaded.params, &ids, 0.03).unwrap();
+    assert_eq!(before, after, "backend instances must be interchangeable");
+}
+
+#[test]
+fn trace_capture_does_not_perturb_logits() {
+    let mut rt = tiny_runtime();
+    let params = ParamStore::init(&rt.manifest, 5).params;
+    let ids = sample_ids(&rt, 4);
+    for tau in [0.0f32, 0.05, 0.3] {
+        let plain = rt.classify(4, &params, &ids, tau).unwrap();
+        let (traced, records) = rt.classify_traced(4, &params, &ids, tau).unwrap();
+        assert_eq!(plain, traced, "tau={tau}: capture must be bitwise inert");
+        // full hook inventory: layers x 10 hooks, labelled in order
+        assert_eq!(records.len(), rt.manifest.layers * ActHook::ALL.len());
+        for (i, rec) in records.iter().enumerate() {
+            assert_eq!(rec.layer, i / ActHook::ALL.len());
+            assert_eq!(rec.hook, ActHook::ALL[i % ActHook::ALL.len()]);
+            assert!((0.0..=1.0).contains(&rec.zero_frac));
+            assert!(rec.elems > 0);
+        }
+    }
+}
+
+#[test]
+fn repeated_traced_runs_are_identical() {
+    // The capture path itself is deterministic: same inputs, same
+    // records (the trace-file determinism test builds on this).
+    let mut rt = tiny_runtime();
+    let params = ParamStore::init(&rt.manifest, 9).params;
+    let ids = sample_ids(&rt, 2);
+    let (la, ra) = rt.classify_traced(2, &params, &ids, 0.04).unwrap();
+    let (lb, rb) = rt.classify_traced(2, &params, &ids, 0.04).unwrap();
+    assert_eq!(la, lb);
+    assert_eq!(ra.len(), rb.len());
+    for (a, b) in ra.iter().zip(&rb) {
+        assert_eq!(a.zero_frac.to_bits(), b.zero_frac.to_bits());
+        assert_eq!(a.elems, b.elems);
+    }
+}
+
+// ---- PJRT conformance (gated) ----------------------------------------
+
+fn artifacts_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+fn have_artifacts() -> bool {
+    std::env::var_os("ACCELTRAN_PJRT_TESTS").is_some()
+        && artifacts_dir().join("manifest.json").exists()
+}
+
+#[test]
+fn pjrt_classifies_like_the_reference_backend() {
+    if !have_artifacts() {
+        eprintln!(
+            "skipping: needs ACCELTRAN_PJRT_TESTS=1, a real PJRT backend, \
+             and artifacts from python/compile/aot.py"
+        );
+        return;
+    }
+    let mut pjrt = Runtime::load(artifacts_dir()).unwrap();
+    // the reference backend over the *same* manifest shape
+    let model = TransformerConfig::bert_tiny_synth(
+        pjrt.manifest.vocab,
+        pjrt.manifest.seq,
+    );
+    let mut reference = Runtime::reference_for(&model, pjrt.manifest.classes).unwrap();
+    assert_eq!(pjrt.manifest.param_count, reference.manifest.param_count);
+    let store = ParamStore::init(&pjrt.manifest, 0);
+    let ids = sample_ids(&pjrt, 2);
+    let a = pjrt.classify(2, &store.params, &ids, 0.02).unwrap();
+    let b = reference.classify(2, &store.params, &ids, 0.02).unwrap();
+    assert_eq!(a.len(), b.len());
+    // f32-close (reduction orders differ — DESIGN.md "Reference executor
+    // vs PJRT") and classification-identical
+    for (x, y) in a.iter().zip(&b) {
+        assert!((x - y).abs() < 1e-3, "pjrt {x} vs reference {y}");
+    }
+    let argmax = |row: &[f32]| {
+        row.iter()
+            .enumerate()
+            .max_by(|p, q| p.1.partial_cmp(q.1).unwrap())
+            .map(|(i, _)| i)
+            .unwrap()
+    };
+    let classes = pjrt.manifest.classes;
+    for i in 0..2 {
+        assert_eq!(
+            argmax(&a[i * classes..(i + 1) * classes]),
+            argmax(&b[i * classes..(i + 1) * classes]),
+            "row {i} classification must agree"
+        );
+    }
+}

@@ -1,0 +1,111 @@
+//! End-to-end determinism of the measured-sparsity pipeline: capturing
+//! a trace twice over the same inputs must yield *byte-identical*
+//! `SparsityTrace` JSON, and feeding it to `sim::simulate_with` twice
+//! must yield identical `SimResult`s — which catches, among other
+//! things, the scoped-thread GEMM chunking in `runtime/tensor.rs`
+//! leaking nondeterminism into the capture forward passes.
+
+use acceltran::coordinator::capture::capture_trace;
+use acceltran::model::TransformerConfig;
+use acceltran::nlp::sentiment::SentimentTask;
+use acceltran::runtime::{ParamStore, Runtime};
+use acceltran::sim::engine::simulate_with;
+use acceltran::sim::scheduler::Policy;
+use acceltran::sim::{AcceleratorConfig, SimResult, SparsitySource};
+use acceltran::trace::SparsityTrace;
+
+fn tiny_model() -> TransformerConfig {
+    TransformerConfig {
+        name: "determinism-tiny".into(),
+        hidden: 32,
+        layers: 2,
+        heads: 2,
+        ff: 64,
+        vocab: 64,
+        seq: 16,
+    }
+}
+
+/// One full capture: fixed seed params, fixed dataset, fixed tau.
+fn capture_once() -> SparsityTrace {
+    let mut rt = Runtime::reference_for(&tiny_model(), 2).unwrap();
+    let params = ParamStore::init(&rt.manifest, 4).params;
+    let task = SentimentTask::new(rt.manifest.vocab, rt.manifest.seq, 5);
+    let ds = task.dataset(12, 3);
+    capture_trace(&mut rt, &params, &ds, 0.04, 12).unwrap()
+}
+
+fn assert_results_identical(a: &SimResult, b: &SimResult) {
+    assert_eq!(a.total_cycles, b.total_cycles);
+    assert_eq!(a.stalls, b.stalls);
+    for (x, y) in [
+        (a.energy.mac_pj, b.energy.mac_pj),
+        (a.energy.softmax_pj, b.energy.softmax_pj),
+        (a.energy.layernorm_pj, b.energy.layernorm_pj),
+        (a.energy.dynatran_pj, b.energy.dynatran_pj),
+        (a.energy.sparsity_pj, b.energy.sparsity_pj),
+        (a.energy.buffer_pj, b.energy.buffer_pj),
+        (a.energy.memory_pj, b.energy.memory_pj),
+        (a.energy.leakage_pj, b.energy.leakage_pj),
+        (a.mac_utilization, b.mac_utilization),
+        (a.dma_utilization, b.dma_utilization),
+    ] {
+        assert_eq!(x.to_bits(), y.to_bits(), "{x} vs {y}");
+    }
+}
+
+#[test]
+fn trace_capture_is_byte_identical_across_runs() {
+    let a = capture_once();
+    let b = capture_once();
+    assert_eq!(a, b, "structural equality");
+    let ja = a.to_json().to_string_pretty();
+    let jb = b.to_json().to_string_pretty();
+    assert_eq!(ja.as_bytes(), jb.as_bytes(), "serialized bytes");
+    // ...and the bytes round-trip losslessly
+    let reparsed =
+        SparsityTrace::from_json(&acceltran::util::json::Json::parse(&ja).unwrap())
+            .unwrap();
+    assert_eq!(a, reparsed);
+}
+
+#[test]
+fn trace_driven_simulation_is_deterministic() {
+    let trace = capture_once();
+    let source = SparsitySource::Trace(trace);
+    let mut cfg = AcceleratorConfig::edge();
+    cfg.pes = 16; // small machine: stalls exercised, run stays fast
+    let model = tiny_model();
+    let a = simulate_with(&cfg, &model, 16, Policy::Staggered, &source);
+    let b = simulate_with(&cfg, &model, 16, Policy::Staggered, &source);
+    assert_eq!(a.sparsity_source, "trace");
+    assert_results_identical(&a, &b);
+}
+
+#[test]
+fn capture_then_simulate_pipeline_is_deterministic_end_to_end() {
+    // the full loop twice: capture -> serialize -> parse -> simulate
+    let run = || {
+        let trace = capture_once();
+        let text = trace.to_json().to_string_pretty();
+        let parsed = SparsityTrace::from_json(
+            &acceltran::util::json::Json::parse(&text).unwrap(),
+        )
+        .unwrap();
+        let cfg = AcceleratorConfig::edge();
+        (
+            text,
+            simulate_with(
+                &cfg,
+                &tiny_model(),
+                16,
+                Policy::Staggered,
+                &SparsitySource::Trace(parsed),
+            ),
+        )
+    };
+    let (ta, ra) = run();
+    let (tb, rb) = run();
+    assert_eq!(ta, tb);
+    assert_results_identical(&ra, &rb);
+}

@@ -1,0 +1,199 @@
+//! Golden regression pin for the cycle-accurate perf model: a tiny
+//! fixed accelerator config + a fixed measured-style sparsity trace must
+//! keep producing the exact same `SimResult` (cycles, stall breakdown,
+//! energy ledger, utilizations).  Any perf-model change that bends the
+//! fig curves now fails tier-1 here instead of drifting silently.
+//!
+//! The golden lives at `rust/tests/goldens/sim_golden.json`.  On the
+//! first run in a fresh checkout (file absent) the test *seeds* it from
+//! the current model and passes with a loud note — commit the generated
+//! file to arm the pin.  To intentionally rebaseline after a deliberate
+//! perf-model change, delete the file, rerun, and commit the new one.
+//! (The engine uses only IEEE-deterministic arithmetic — no libm — so
+//! the pinned floats are portable across hosts.)
+
+use std::path::PathBuf;
+
+use acceltran::model::TransformerConfig;
+use acceltran::sim::engine::simulate_with;
+use acceltran::sim::scheduler::Policy;
+use acceltran::sim::{AcceleratorConfig, SimResult, SparsitySource};
+use acceltran::trace::{LayerActRho, SparsityTrace, WeightRho};
+use acceltran::util::json::Json;
+
+/// The fixed design point: a shrunken Edge so the run is fast and both
+/// stall classes are exercised.
+fn golden_cfg() -> AcceleratorConfig {
+    let mut cfg = AcceleratorConfig::edge();
+    cfg.pes = 16;
+    cfg.act_buffer_bytes = 1 << 20;
+    cfg.weight_buffer_bytes = 2 << 20;
+    cfg.mask_buffer_bytes = 1 << 18;
+    cfg
+}
+
+fn golden_model() -> TransformerConfig {
+    TransformerConfig {
+        name: "golden-tiny".into(),
+        hidden: 32,
+        layers: 2,
+        heads: 2,
+        ff: 64,
+        vocab: 1000,
+        seq: 64,
+    }
+}
+
+/// A fixed two-layer trace with distinct values in every cell, standing
+/// in for a measured capture (hand-written so the pin is independent of
+/// the functional half).
+fn golden_trace() -> SparsityTrace {
+    SparsityTrace {
+        model: "golden-tiny".into(),
+        backend: "fixture".into(),
+        tau: 0.04,
+        examples: 64,
+        eval_accuracy: 0.875,
+        inherent_act_rho: 0.05,
+        weight: WeightRho {
+            embedding: 0.0,
+            wqkv: 0.5,
+            wo: 0.45,
+            wf1: 0.55,
+            wf2: 0.5,
+        },
+        layers: vec![
+            LayerActRho {
+                input: 0.30,
+                q: 0.42,
+                k: 0.40,
+                v: 0.38,
+                scores: 0.62,
+                context: 0.35,
+                proj_out: 0.33,
+                ffn_in: 0.28,
+                gelu: 0.58,
+                ffn_out: 0.31,
+            },
+            LayerActRho {
+                input: 0.34,
+                q: 0.46,
+                k: 0.44,
+                v: 0.41,
+                scores: 0.68,
+                context: 0.39,
+                proj_out: 0.36,
+                ffn_in: 0.32,
+                gelu: 0.63,
+                ffn_out: 0.35,
+            },
+        ],
+    }
+}
+
+fn run_golden() -> SimResult {
+    simulate_with(
+        &golden_cfg(),
+        &golden_model(),
+        64,
+        Policy::Staggered,
+        &SparsitySource::Trace(golden_trace()),
+    )
+}
+
+fn result_to_json(r: &SimResult) -> Json {
+    Json::obj(vec![
+        ("total_cycles", Json::num(r.total_cycles as f64)),
+        ("compute_resource", Json::num(r.stalls.compute_resource as f64)),
+        ("compute_operand", Json::num(r.stalls.compute_operand as f64)),
+        ("memory_buffer_full", Json::num(r.stalls.memory_buffer_full as f64)),
+        (
+            "memory_pending_compute",
+            Json::num(r.stalls.memory_pending_compute as f64),
+        ),
+        ("mac_pj", Json::num(r.energy.mac_pj)),
+        ("softmax_pj", Json::num(r.energy.softmax_pj)),
+        ("layernorm_pj", Json::num(r.energy.layernorm_pj)),
+        ("dynatran_pj", Json::num(r.energy.dynatran_pj)),
+        ("sparsity_pj", Json::num(r.energy.sparsity_pj)),
+        ("buffer_pj", Json::num(r.energy.buffer_pj)),
+        ("memory_pj", Json::num(r.energy.memory_pj)),
+        ("leakage_pj", Json::num(r.energy.leakage_pj)),
+        ("mac_utilization", Json::num(r.mac_utilization)),
+        ("softmax_utilization", Json::num(r.softmax_utilization)),
+        ("dma_utilization", Json::num(r.dma_utilization)),
+    ])
+}
+
+fn golden_path() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("tests/goldens/sim_golden.json")
+}
+
+#[test]
+fn sim_result_matches_pinned_golden() {
+    let r = run_golden();
+    // the run must be non-trivial for the pin to mean anything
+    assert!(r.total_cycles > 1000, "degenerate run: {} cycles", r.total_cycles);
+    assert!(r.energy.total_pj() > 0.0);
+
+    // unconditional: re-running reproduces the exact result (the pin's
+    // own precondition, checked even before a golden is committed)
+    let r2 = run_golden();
+    assert_eq!(r.total_cycles, r2.total_cycles);
+    assert_eq!(r.stalls, r2.stalls);
+    assert_eq!(r.energy.total_pj().to_bits(), r2.energy.total_pj().to_bits());
+
+    let current = result_to_json(&r);
+    let path = golden_path();
+    let Ok(text) = std::fs::read_to_string(&path) else {
+        // first run in a fresh tree: seed the golden and arm the pin by
+        // committing the file
+        std::fs::create_dir_all(path.parent().unwrap()).unwrap();
+        std::fs::write(&path, current.to_string_pretty()).unwrap();
+        eprintln!(
+            "sim_golden: seeded {} — commit it to pin the perf model",
+            path.display()
+        );
+        return;
+    };
+    let golden = Json::parse(&text).expect("golden file parses");
+    for key in [
+        "total_cycles",
+        "compute_resource",
+        "compute_operand",
+        "memory_buffer_full",
+        "memory_pending_compute",
+    ] {
+        let want = golden.get(key).and_then(Json::as_f64).expect(key) as u64;
+        let got = current.get(key).and_then(Json::as_f64).unwrap() as u64;
+        assert_eq!(
+            got, want,
+            "perf-model drift on '{key}' (delete {} to rebaseline \
+             after an intentional change)",
+            path.display()
+        );
+    }
+    for key in [
+        "mac_pj",
+        "softmax_pj",
+        "layernorm_pj",
+        "dynatran_pj",
+        "sparsity_pj",
+        "buffer_pj",
+        "memory_pj",
+        "leakage_pj",
+        "mac_utilization",
+        "softmax_utilization",
+        "dma_utilization",
+    ] {
+        let want = golden.get(key).and_then(Json::as_f64).expect(key);
+        let got = current.get(key).and_then(Json::as_f64).unwrap();
+        let tol = 1e-9 * want.abs().max(1e-12);
+        assert!(
+            (got - want).abs() <= tol,
+            "perf-model drift on '{key}': {got} vs pinned {want} \
+             (delete {} to rebaseline)",
+            path.display()
+        );
+    }
+}
