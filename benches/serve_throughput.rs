@@ -1,0 +1,150 @@
+//! Serving-throughput sweep: request throughput of the concurrent
+//! serving engine (`coordinator::serve`) at 1 / 2 / 4 workers over the
+//! reference backend — the measurement behind EXPERIMENTS.md §Perf's
+//! serve rows and the PR's ≥2x-at-4-workers acceptance bar.
+//!
+//! Each worker is pinned to a single intra-op thread
+//! (`ACCELTRAN_THREADS=1`) so the sweep isolates *pool* scaling: without
+//! the pin a lone worker's row-parallel GEMMs already fan out across
+//! cores and the comparison conflates the two parallelism axes.
+//!
+//! Knobs: `ACCELTRAN_SERVE_REQUESTS` (default 256) shrinks the wave;
+//! `ACCELTRAN_BENCH_NO_ASSERT=1` turns the scaling assertion into a
+//! warning (for constrained CI runners).
+//!
+//! Run with: `cargo bench --bench serve_throughput`
+
+use std::time::{Duration, Instant};
+
+use acceltran::coordinator::{ServeConfig, ServePool};
+use acceltran::nlp::sentiment::SentimentTask;
+use acceltran::runtime::{ParamStore, Runtime};
+use acceltran::util::cli::env_usize;
+use acceltran::util::json::Json;
+
+/// One measured wave: submit every request, drain, return req/s plus
+/// dispatch accounting.
+fn wave(
+    rt: &Runtime,
+    params: &[f32],
+    reqs: &[Vec<i32>],
+    workers: usize,
+    tau: f32,
+) -> (f64, u64, f64) {
+    let cfg = ServeConfig {
+        workers,
+        slo: Duration::from_millis(10),
+        sim: None,
+    };
+    let pool = ServePool::start(rt, params, &cfg).unwrap();
+    let t0 = Instant::now();
+    for ids in reqs {
+        pool.submit(ids.clone(), tau);
+    }
+    let (report, responses) = pool.finish().unwrap();
+    let dt = t0.elapsed().as_secs_f64();
+    assert_eq!(responses.len(), reqs.len(), "every request must be served");
+    assert_eq!(report.requests as usize, reqs.len());
+    (
+        reqs.len() as f64 / dt,
+        report.stats.dispatches,
+        report.stats.padded_row_fraction(),
+    )
+}
+
+fn main() {
+    // one core per worker: measure pool scaling, not GEMM scaling
+    std::env::set_var("ACCELTRAN_THREADS", "1");
+    let n = env_usize("ACCELTRAN_SERVE_REQUESTS", 256);
+    let tau = 0.04f32;
+    let rt = Runtime::load_default().unwrap();
+    let vocab = rt.manifest.vocab;
+    let seq = rt.manifest.seq;
+    let params = ParamStore::init(&rt.manifest, 0).params;
+    let task = SentimentTask::new(vocab, seq, 11);
+    let ds = task.dataset(n, 5);
+    let reqs: Vec<Vec<i32>> = ds.examples.iter().map(|e| e.ids.clone()).collect();
+    let cores = std::thread::available_parallelism().map(|c| c.get()).unwrap_or(1);
+    println!(
+        "== serve throughput: {n} requests x {{1,2,4}} workers \
+         ['{}' backend, {cores} cores, tau={tau}] ==\n",
+        rt.backend_name()
+    );
+
+    // warm-up wave (page in params, prime allocator)
+    wave(&rt, &params, &reqs[..reqs.len().min(64)], 1, tau);
+
+    let sweep = [1usize, 2, 4];
+    let mut rps = Vec::new();
+    let mut report = Vec::new();
+    for &workers in &sweep {
+        // median of 3 waves per point
+        let mut runs: Vec<(f64, u64, f64)> = (0..3)
+            .map(|_| wave(&rt, &params, &reqs, workers, tau))
+            .collect();
+        runs.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+        let (med_rps, dispatches, padded) = runs[1];
+        println!(
+            "{workers} worker(s): {med_rps:>9.1} req/s (median of 3) | \
+             {dispatches} dispatches | {:.1}% padded rows",
+            100.0 * padded
+        );
+        rps.push(med_rps);
+        report.push(Json::obj(vec![
+            ("workers", Json::num(workers as f64)),
+            ("requests", Json::num(n as f64)),
+            ("median_rps", Json::num(med_rps)),
+            ("dispatches", Json::num(dispatches as f64)),
+            ("padded_row_fraction", Json::num(padded)),
+        ]));
+    }
+
+    let speedup_2 = rps[1] / rps[0];
+    let speedup_4 = rps[2] / rps[0];
+    println!(
+        "\nscaling vs 1 worker: 2w {speedup_2:.2}x, 4w {speedup_4:.2}x"
+    );
+    // paste-ready EXPERIMENTS.md §Perf rows (fill in date + commit)
+    println!("\nEXPERIMENTS.md §Perf rows:");
+    for (i, &workers) in sweep.iter().enumerate() {
+        println!(
+            "| <date> | <commit> | serve_throughput ({workers}w, {n} req) | \
+             {:.1} req/s | ACCELTRAN_THREADS=1, reference backend |",
+            rps[i]
+        );
+    }
+
+    std::fs::create_dir_all("reports").ok();
+    std::fs::write(
+        "reports/serve_throughput.json",
+        Json::obj(vec![
+            ("backend", Json::str("reference")),
+            ("requests", Json::num(n as f64)),
+            ("cores", Json::num(cores as f64)),
+            ("speedup_2w", Json::num(speedup_2)),
+            ("speedup_4w", Json::num(speedup_4)),
+            ("sweep", Json::arr(report)),
+        ])
+        .to_string_pretty(),
+    )
+    .unwrap();
+    println!("\nwrote reports/serve_throughput.json");
+
+    // acceptance bar: >=2x request throughput at 4 workers vs 1 on the
+    // reference backend.  `available_parallelism` counts LOGICAL cpus,
+    // and 4 single-threaded workers on a 2-core/4-thread SMT host
+    // cannot reach 2x — so the hard assert only arms at >=8 logical
+    // (>=4 physical on any common SMT config); below that it warns.
+    if cores >= 8 && std::env::var_os("ACCELTRAN_BENCH_NO_ASSERT").is_none() {
+        assert!(
+            speedup_4 >= 2.0,
+            "4-worker speedup {speedup_4:.2}x < 2x on a {cores}-logical-cpu \
+             host (set ACCELTRAN_BENCH_NO_ASSERT=1 to downgrade to a warning)"
+        );
+    } else if speedup_4 < 2.0 {
+        println!(
+            "warning: 4-worker speedup {speedup_4:.2}x < 2x \
+             ({cores} logical cpus available)"
+        );
+    }
+}

@@ -1,26 +1,41 @@
-//! Serving scenario: stream classification requests through the dynamic
-//! batcher with DynaTran on vs off, reporting throughput and latency
-//! percentiles — the coordinator-level view of the paper's dynamic
-//! inference story.  Runs out of the box on the reference backend; uses
-//! PJRT artifacts when present.
+//! Serving scenario: stream classification requests through the
+//! concurrent serving engine — a pool of workers (one forked backend
+//! each) draining a shared queue under deadline-aware dynamic batching —
+//! and compare worker counts and DynaTran on vs off.  Runs out of the
+//! box on the reference backend; uses PJRT artifacts when present.
 //!
 //! Run with: `cargo run --release --example serve -- [n_requests]`
+//!
+//! The per-worker host parallelism interacts with the reference
+//! backend's own row-parallel GEMMs: set `ACCELTRAN_THREADS=1` to give
+//! each worker one core and see pure pool scaling (the
+//! `serve_throughput` bench does exactly that).
 
-use acceltran::coordinator::BatchServer;
+use std::time::Duration;
+
+use acceltran::coordinator::{ServeConfig, ServePool, ServeReport};
 use acceltran::nlp::sentiment::SentimentTask;
 use acceltran::runtime::{ParamStore, Runtime};
 use anyhow::Result;
 
-fn run_wave(server: &mut BatchServer, reqs: &[(Vec<i32>, f32)]) -> Result<f64> {
-    let t0 = std::time::Instant::now();
-    let mut served = 0usize;
+fn run_wave(
+    rt: &Runtime,
+    params: &[f32],
+    reqs: &[(Vec<i32>, f32)],
+    workers: usize,
+) -> Result<ServeReport> {
+    let cfg = ServeConfig {
+        workers,
+        slo: Duration::from_millis(10),
+        sim: None,
+    };
+    let pool = ServePool::start(rt, params, &cfg)?;
     for (ids, tau) in reqs {
-        server.submit(ids.clone(), *tau);
-        served += server.step()?.len();
+        pool.submit(ids.clone(), *tau);
     }
-    served += server.drain()?.len();
-    assert_eq!(served, reqs.len());
-    Ok(served as f64 / t0.elapsed().as_secs_f64())
+    let (report, responses) = pool.finish()?;
+    assert_eq!(responses.len(), reqs.len());
+    Ok(report)
 }
 
 fn main() -> Result<()> {
@@ -31,33 +46,47 @@ fn main() -> Result<()> {
     let rt = Runtime::load_default()?;
     let vocab = rt.manifest.vocab;
     let seq = rt.manifest.seq;
-    println!("serving on the '{}' backend", rt.backend_name());
+    println!("serving on the '{}' backend\n", rt.backend_name());
     let params = ParamStore::init(&rt.manifest, 0).params;
-    let mut server = BatchServer::new(rt, params);
 
     let task = SentimentTask::new(vocab, seq, 11);
     let ds = task.dataset(n, 5);
 
+    // 1. pool scaling at a fixed operating point
+    println!("-- worker-pool scaling (tau=0.05, {n} requests) --");
+    for workers in [1usize, 2, 4] {
+        let reqs: Vec<(Vec<i32>, f32)> =
+            ds.examples.iter().map(|e| (e.ids.clone(), 0.05)).collect();
+        let r = run_wave(&rt, &params, &reqs, workers)?;
+        println!(
+            "{workers} worker(s): {:>8.1} req/s | total latency p50 {:>7} us \
+             p99 {:>7} us | {} dispatches, {:.1}% padded, high-water {}",
+            r.throughput_rps(),
+            r.total_latency.percentile_us(50.0),
+            r.total_latency.percentile_us(99.0),
+            r.stats.dispatches,
+            100.0 * r.stats.padded_row_fraction(),
+            r.stats.queue_depth_high_water
+        );
+    }
+
+    // 2. DynaTran on vs off on the full pool (the dynamic-inference story)
+    println!("\n-- DynaTran off vs on (4 workers) --");
     for (label, tau) in [("DynaTran off (tau=0)", 0.0f32), ("DynaTran on (tau=0.05)", 0.05)] {
         let reqs: Vec<(Vec<i32>, f32)> =
             ds.examples.iter().map(|e| (e.ids.clone(), tau)).collect();
-        let rps = run_wave(&mut server, &reqs)?;
-        let s = &server.stats;
+        let r = run_wave(&rt, &params, &reqs, 4)?;
         println!(
-            "{label:<24} {rps:>8.1} req/s | dispatch latency mean {:?} p50 {:?} p99 {:?} | \
-             {} dispatches, {:.1}% padded rows, queue high-water {}",
-            s.mean_latency(),
-            s.latency_percentile(50.0),
-            s.latency_percentile(99.0),
-            s.dispatches,
-            100.0 * s.padded_row_fraction(),
-            s.queue_depth_high_water
+            "{label:<24} {:>8.1} req/s | compute p50 {:>7} us  queue p50 {:>7} us",
+            r.throughput_rps(),
+            r.compute_latency.percentile_us(50.0),
+            r.queue_latency.percentile_us(50.0)
         );
-        server.stats = Default::default();
     }
     println!(
-        "\n(functional host-CPU numbers; the ASIC-level serving speedups are\n\
-         produced by the simulator — see `acceltran simulate` and benches/)"
+        "\n(functional host-CPU numbers; `acceltran serve --sim-in-loop` adds\n\
+         the modeled-accelerator latency per batch, and the ASIC-level\n\
+         serving speedups come from the simulator — see benches/)"
     );
     Ok(())
 }

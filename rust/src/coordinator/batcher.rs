@@ -1,4 +1,6 @@
-//! Request router + dynamic batcher.
+//! Request router + dynamic batcher (the single-threaded half of the
+//! serving story behind the paper's Sec. V-E throughput comparison;
+//! [`super::serve`] drives the same policy from a worker pool).
 //!
 //! The runtime backends export fixed batch shapes (1, 8, 32 for the AOT
 //! artifacts; the reference executor accepts the same shapes).  The
@@ -7,6 +9,14 @@
 //! and discarded), amortizing the per-dispatch overhead exactly like the
 //! serving-side dynamic batching of vLLM-style routers, scaled to this
 //! repo's single-process setting.
+//!
+//! Flushing is **deadline-aware**: every request carries an SLO budget,
+//! fixed at submit time as `deadline = enqueued_at + slo`.  A batch
+//! dispatches the moment the largest shape fills, or as soon as the
+//! nearest deadline anywhere in the queue expires — whichever comes
+//! first (fill-or-deadline).  A request older than its SLO budget
+//! therefore forces a flush even under-filled, which is what bounds
+//! tail latency under a trickle of traffic.
 
 use std::collections::VecDeque;
 use std::time::{Duration, Instant};
@@ -15,8 +25,17 @@ use anyhow::Result;
 
 use crate::runtime::Runtime;
 
-/// Exported batch shapes, largest first.
-const BATCH_SHAPES: &[usize] = &[32, 8, 1];
+/// Exported batch shapes, largest first (the shapes
+/// `python/compile/aot.py` AOT-lowers; the reference executor accepts
+/// any batch but the batcher sticks to these so both backends see the
+/// same dispatch stream).
+pub(crate) const BATCH_SHAPES: &[usize] = &[32, 8, 1];
+
+/// The largest exported batch shape (a full batch dispatches
+/// immediately, no deadline consulted).
+pub(crate) fn largest_shape() -> usize {
+    BATCH_SHAPES[0]
+}
 
 /// One classification request.
 #[derive(Clone, Debug)]
@@ -27,6 +46,10 @@ pub struct Request {
     /// DynaTran threshold for this request's dynamic-inference level.
     pub tau: f32,
     pub enqueued_at: Instant,
+    /// Flush-by time: `enqueued_at + slo`.  Once any queued request
+    /// passes this instant the batcher dispatches even an under-filled
+    /// batch.
+    pub deadline: Instant,
 }
 
 /// One completed response.
@@ -62,6 +85,18 @@ impl ServerStats {
         self.latencies_us.push(latency.as_micros() as u64);
     }
 
+    /// Fold another worker's counters into this one (high-water takes
+    /// the max — the worker-pool merge in [`super::serve`]).
+    pub fn merge(&mut self, other: &ServerStats) {
+        self.served += other.served;
+        self.dispatches += other.dispatches;
+        self.padded_rows += other.padded_rows;
+        self.rows_dispatched += other.rows_dispatched;
+        self.queue_depth_high_water =
+            self.queue_depth_high_water.max(other.queue_depth_high_water);
+        self.latencies_us.extend_from_slice(&other.latencies_us);
+    }
+
     /// Fraction of dispatched rows that were padding (wasted compute);
     /// 0.0 before the first dispatch.
     pub fn padded_row_fraction(&self) -> f64 {
@@ -71,7 +106,7 @@ impl ServerStats {
         self.padded_rows as f64 / self.rows_dispatched as f64
     }
 
-    /// Latency percentile over *dispatch* latencies, p in [0, 100].
+    /// Latency percentile over *dispatch* latencies, p in `0..=100`.
     pub fn latency_percentile(&self, p: f64) -> Duration {
         if self.latencies_us.is_empty() {
             return Duration::ZERO;
@@ -96,7 +131,7 @@ impl ServerStats {
 /// [`BatchServer::choose_shape`]): the largest shape that fills
 /// completely when that avoids padding waste, otherwise the smallest
 /// covering shape for the sub-8 tail.
-fn flush_shape(n: usize) -> usize {
+pub(crate) fn flush_shape(n: usize) -> usize {
     let full = BATCH_SHAPES.iter().copied().filter(|&b| b <= n).max().unwrap_or(1);
     if full >= 8 || full == n {
         return full;
@@ -109,6 +144,67 @@ fn flush_shape(n: usize) -> usize {
         .unwrap_or(BATCH_SHAPES[0])
 }
 
+/// The fill-or-deadline dispatch policy, pure so both the
+/// single-threaded [`BatchServer`] and the worker pool in
+/// [`super::serve`] share it (and so it unit-tests without a clock):
+/// dispatch the largest exported shape the moment it fills; otherwise
+/// dispatch only once the *nearest* deadline anywhere in the queue has
+/// passed (or the queue is force-drained), preferring
+/// completely-filled shapes and padding only the final sub-8 tail.
+///
+/// `nearest_deadline` must be the minimum over the whole queue, not the
+/// head's: batching is FIFO, so when a tight-SLO request sits behind a
+/// lax one, flushing dispatches the head requests — and the urgent
+/// request rides along (or becomes the head of an immediately
+/// flushable remainder).
+pub(crate) fn dispatch_shape(
+    n: usize,
+    nearest_deadline: Option<Instant>,
+    now: Instant,
+    force: bool,
+) -> Option<usize> {
+    if n == 0 {
+        return None;
+    }
+    if n >= largest_shape() {
+        return Some(largest_shape());
+    }
+    if force || nearest_deadline.map(|d| now >= d).unwrap_or(false) {
+        return Some(flush_shape(n));
+    }
+    None
+}
+
+/// Minimum deadline over a request queue (linear scan; queue depths
+/// here are at most a few hundred, and uniform-SLO traffic keeps
+/// deadlines near-sorted anyway).
+pub(crate) fn nearest_deadline(queue: &VecDeque<Request>) -> Option<Instant> {
+    queue.iter().map(|r| r.deadline).min()
+}
+
+/// Assemble a claimed batch for dispatch: concatenate the requests'
+/// token ids row-major, pad the tail with copies of the last request
+/// (computed and discarded), and resolve the batch tau conservatively
+/// (min over the batch = least pruning any member asked for).  Shared
+/// by [`BatchServer`] and the worker pool in [`super::serve`] so the
+/// two engines cannot drift apart on padding or tau policy.  Request
+/// lengths are validated at submit; the debug assert guards the queue
+/// invariant itself.
+pub(crate) fn assemble_batch(reqs: &[Request], shape: usize, seq: usize) -> (Vec<i32>, f32) {
+    debug_assert!(!reqs.is_empty() && reqs.len() <= shape);
+    let fill = reqs.len();
+    let mut ids = Vec::with_capacity(shape * seq);
+    for r in reqs {
+        debug_assert_eq!(r.ids.len(), seq, "request {} seq mismatch", r.id);
+        ids.extend_from_slice(&r.ids);
+    }
+    for _ in fill..shape {
+        ids.extend_from_slice(&reqs[fill - 1].ids);
+    }
+    let tau = reqs.iter().map(|r| r.tau).fold(f32::INFINITY, f32::min);
+    (ids, tau)
+}
+
 /// The batching server.
 pub struct BatchServer {
     runtime: Runtime,
@@ -116,7 +212,9 @@ pub struct BatchServer {
     queue: VecDeque<Request>,
     pub stats: ServerStats,
     next_id: u64,
-    /// Maximum queue dwell before a partial batch is flushed.
+    /// Default SLO budget stamped onto requests at submit time
+    /// (`deadline = enqueued_at + max_wait`); [`BatchServer::submit_with_slo`]
+    /// overrides per request.
     pub max_wait: Duration,
 }
 
@@ -132,15 +230,37 @@ impl BatchServer {
         }
     }
 
-    /// Enqueue a request; returns its id.
+    /// Enqueue a request under the server's default SLO budget
+    /// (`max_wait`); returns its id.
     pub fn submit(&mut self, ids: Vec<i32>, tau: f32) -> u64 {
+        let slo = self.max_wait;
+        self.submit_with_slo(ids, tau, slo)
+    }
+
+    /// Enqueue a request with an explicit SLO budget: the batcher will
+    /// flush an under-filled batch rather than let this request dwell
+    /// past `enqueued_at + slo`.
+    ///
+    /// Panics when `ids.len()` disagrees with the runtime's `seq` —
+    /// rejecting the bad request here keeps it from poisoning a whole
+    /// batch at dispatch time.
+    pub fn submit_with_slo(&mut self, ids: Vec<i32>, tau: f32, slo: Duration) -> u64 {
+        let seq = self.runtime.manifest.seq;
+        assert_eq!(
+            ids.len(),
+            seq,
+            "request has {} ids, runtime expects seq={seq}",
+            ids.len()
+        );
         let id = self.next_id;
         self.next_id += 1;
+        let enqueued_at = Instant::now();
         self.queue.push_back(Request {
             id,
             ids,
             tau,
-            enqueued_at: Instant::now(),
+            enqueued_at,
+            deadline: enqueued_at + slo,
         });
         self.stats.queue_depth_high_water =
             self.stats.queue_depth_high_water.max(self.queue.len() as u64);
@@ -151,51 +271,31 @@ impl BatchServer {
         self.queue.len()
     }
 
-    /// Pick the batch shape for the current queue: dispatch the largest
-    /// exported shape once it fills; otherwise keep accumulating until
-    /// the oldest request has dwelled past `max_wait`, then flush —
-    /// preferring a completely-filled shape (8 then covers an 11-deep
-    /// queue with zero padding where covering it with 32 would pad 21
-    /// rows) and padding only the final sub-8 tail.
-    fn choose_shape(&self) -> Option<usize> {
-        let n = self.queue.len();
-        if n == 0 {
-            return None;
-        }
-        let largest = BATCH_SHAPES[0];
-        if n >= largest {
-            return Some(largest);
-        }
-        let oldest = self.queue.front().unwrap().enqueued_at;
-        if oldest.elapsed() >= self.max_wait {
-            return Some(flush_shape(n));
-        }
-        None
+    /// Pick the batch shape for the current queue via the shared
+    /// fill-or-deadline policy ([`dispatch_shape`]).
+    fn choose_shape(&self, force: bool) -> Option<usize> {
+        dispatch_shape(
+            self.queue.len(),
+            nearest_deadline(&self.queue),
+            Instant::now(),
+            force,
+        )
     }
 
     /// Serve at most one batch; returns the responses (empty if the
     /// batcher decided to keep waiting).
     pub fn step(&mut self) -> Result<Vec<Response>> {
-        let Some(batch) = self.choose_shape() else {
+        self.step_inner(false)
+    }
+
+    fn step_inner(&mut self, force: bool) -> Result<Vec<Response>> {
+        let Some(batch) = self.choose_shape(force) else {
             return Ok(Vec::new());
         };
         let fill = batch.min(self.queue.len());
         let reqs: Vec<Request> = (0..fill).map(|_| self.queue.pop_front().unwrap()).collect();
         let seq = self.runtime.manifest.seq;
-        let mut ids = Vec::with_capacity(batch * seq);
-        for r in &reqs {
-            assert_eq!(r.ids.len(), seq, "request seq mismatch");
-            ids.extend_from_slice(&r.ids);
-        }
-        // pad with copies of the last request
-        for _ in fill..batch {
-            let last = &reqs[fill - 1];
-            ids.extend_from_slice(&last.ids);
-        }
-        // per-batch tau: requests are grouped FIFO; use the max tau so no
-        // request gets *more* pruning than it asked for... conservative
-        // choice is min (least pruning = most accurate).
-        let tau = reqs.iter().map(|r| r.tau).fold(f32::INFINITY, f32::min);
+        let (ids, tau) = assemble_batch(&reqs, batch, seq);
         let t0 = Instant::now();
         let logits = self.runtime.classify(batch, &self.params, &ids, tau)?;
         let elapsed = t0.elapsed();
@@ -213,16 +313,12 @@ impl BatchServer {
         Ok(out)
     }
 
-    /// Drain the queue completely.
+    /// Drain the queue completely, flushing regardless of deadlines.
     pub fn drain(&mut self) -> Result<Vec<Response>> {
         let mut out = Vec::new();
-        // force flush regardless of dwell time
-        let saved = self.max_wait;
-        self.max_wait = Duration::ZERO;
         while self.pending() > 0 {
-            out.extend(self.step()?);
+            out.extend(self.step_inner(true)?);
         }
-        self.max_wait = saved;
         Ok(out)
     }
 
@@ -235,19 +331,17 @@ impl BatchServer {
 mod tests {
     use super::*;
 
-    // Shape-choice logic is pure; test it without a runtime via a probe
-    // mirroring the policy exactly.
+    // Shape-choice logic is pure; drive `dispatch_shape` directly with a
+    // synthetic clock.
     fn choose(n: usize, waited: bool) -> Option<usize> {
-        if n == 0 {
-            return None;
-        }
-        if n >= BATCH_SHAPES[0] {
-            return Some(BATCH_SHAPES[0]);
-        }
-        if waited {
-            return Some(flush_shape(n));
-        }
-        None
+        let now = Instant::now();
+        let deadline = if waited {
+            // oldest request's deadline already passed
+            now.checked_sub(Duration::from_millis(1)).unwrap_or(now)
+        } else {
+            now + Duration::from_secs(60)
+        };
+        dispatch_shape(n, (n > 0).then_some(deadline), now, false)
     }
 
     #[test]
@@ -275,6 +369,24 @@ mod tests {
     }
 
     #[test]
+    fn force_flushes_without_a_deadline() {
+        // drain-time semantics: dispatch whatever is queued regardless
+        // of how recently it arrived
+        let now = Instant::now();
+        let far = now + Duration::from_secs(60);
+        assert_eq!(dispatch_shape(5, Some(far), now, true), Some(8));
+        assert_eq!(dispatch_shape(1, Some(far), now, true), Some(1));
+        assert_eq!(dispatch_shape(0, None, now, true), None);
+    }
+
+    #[test]
+    fn deadline_at_now_flushes() {
+        // boundary: `now >= deadline` flushes (not strictly-greater)
+        let now = Instant::now();
+        assert_eq!(dispatch_shape(3, Some(now), now, false), Some(8));
+    }
+
+    #[test]
     fn flush_shape_minimizes_padding() {
         // total padding across a full drain of n requests
         let drain_padding = |mut n: usize| {
@@ -296,6 +408,32 @@ mod tests {
         for n in 1..=40 {
             assert!(drain_padding(n) <= 7, "n={n}");
         }
+    }
+
+    #[test]
+    fn assemble_batch_pads_with_last_and_takes_min_tau() {
+        let now = Instant::now();
+        let mk = |id: u64, tau: f32, v: i32| Request {
+            id,
+            ids: vec![v; 4],
+            tau,
+            enqueued_at: now,
+            deadline: now,
+        };
+        let reqs = vec![mk(0, 0.05, 1), mk(1, 0.02, 2), mk(2, 0.08, 3)];
+        let (ids, tau) = assemble_batch(&reqs, 8, 4);
+        assert_eq!(ids.len(), 8 * 4);
+        assert_eq!(&ids[..4], &[1; 4]);
+        assert_eq!(&ids[4..8], &[2; 4]);
+        // padded tail rows replicate the last real request
+        assert_eq!(&ids[8..12], &[3; 4]);
+        assert_eq!(&ids[28..32], &[3; 4]);
+        // conservative tau: least pruning any member asked for
+        assert_eq!(tau, 0.02);
+        // exact fill: no padding, same fold
+        let (ids, tau) = assemble_batch(&reqs[..1], 1, 4);
+        assert_eq!(ids, vec![1; 4]);
+        assert_eq!(tau, 0.05);
     }
 
     #[test]
@@ -322,5 +460,24 @@ mod tests {
         assert_eq!(s.padded_rows, 5);
         assert_eq!(s.rows_dispatched, 16);
         assert!((s.padded_row_fraction() - 5.0 / 16.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn stats_merge_sums_counters_and_maxes_high_water() {
+        let mut a = ServerStats::default();
+        a.record(Duration::from_micros(100), 8, 8);
+        a.queue_depth_high_water = 12;
+        let mut b = ServerStats::default();
+        b.record(Duration::from_micros(300), 3, 8);
+        b.record(Duration::from_micros(500), 8, 8);
+        b.queue_depth_high_water = 7;
+        a.merge(&b);
+        assert_eq!(a.served, 19);
+        assert_eq!(a.dispatches, 3);
+        assert_eq!(a.padded_rows, 5);
+        assert_eq!(a.rows_dispatched, 24);
+        assert_eq!(a.queue_depth_high_water, 12);
+        assert_eq!(a.latency_percentile(100.0), Duration::from_micros(500));
+        assert_eq!(a.mean_latency(), Duration::from_micros(300));
     }
 }

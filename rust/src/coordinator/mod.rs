@@ -5,8 +5,14 @@
 //!
 //! * [`batcher`] — request router + dynamic batcher: incoming classify
 //!   requests are queued, grouped to the nearest exported batch shape
-//!   (b1 / b8 / b32, padding with replicas), executed on the runtime, and
-//!   answered with per-request logits and latency accounting.
+//!   (b1 / b8 / b32, padding with replicas), flushed on fill-or-deadline,
+//!   and answered with per-request logits and latency accounting.
+//! * [`serve`] — the concurrent serving engine: N worker threads (one
+//!   forked backend each) drain the shared queue under the same
+//!   batching policy, stream per-request latencies into allocation-free
+//!   histograms, and — in sim-in-the-loop mode — cost every dispatched
+//!   batch on the cycle-accurate engine as well (the AccelTran-Server
+//!   vs Energon serving comparison of Sec. V-E).
 //! * [`eval`] — evaluation loops over `nlp` datasets: accuracy / F1 /
 //!   activation-sparsity sweeps across DynaTran tau and top-k keep
 //!   fractions (the Figs. 11/12/14 drivers).
@@ -20,9 +26,13 @@
 pub mod batcher;
 pub mod capture;
 pub mod eval;
+pub mod serve;
 pub mod trainer;
 
 pub use batcher::{BatchServer, Request, Response, ServerStats};
 pub use capture::{capture_trace, measured_trace, measured_trace_with};
 pub use eval::{evaluate_accuracy, sweep_dynatran, sweep_topk, EvalReport};
+pub use serve::{
+    LatencyHistogram, ServeConfig, ServePool, ServeReport, ShapeModel, SimInLoop,
+};
 pub use trainer::{train, TrainLog};

@@ -16,9 +16,12 @@
 //!   AdamW; the hermetic default), and the PJRT backend that executes
 //!   the AOT HLO artifacts from `python/compile/aot.py` (gated on real
 //!   xla bindings — see DESIGN.md §Substitutions).
-//! * [`coordinator`] — request router + dynamic batcher + evaluation
-//!   loops tying the functional model (runtime) and the timing model
-//!   (sim) together behind one serving API.
+//! * [`coordinator`] — the serving and experiment layer tying the
+//!   functional model (runtime) and the timing model (sim) together:
+//!   dynamic batcher, the concurrent worker-pool serving engine
+//!   ([`coordinator::serve`]) with deadline-aware batching, streaming
+//!   latency histograms and sim-in-the-loop batch costing, plus the
+//!   evaluation / training / trace-capture drivers.
 //! * [`model`] — transformer architecture descriptions (Table I op
 //!   inventory, Fig. 1 memory analytics) shared by sim and runtime.
 //! * [`pruning`] — host-side DynaTran / top-k / magnitude pruning over f32

@@ -8,7 +8,8 @@
 //!   sweep     design-space exploration (Fig. 16 stall surface)
 //!   dataflow  compare the 24 dataflows on a matmul (Fig. 15)
 //!   train     train the synthetic-sentiment model through the runtime
-//!   serve     batched serving demo over the runtime
+//!   serve     concurrent serving over a worker pool with deadline-aware
+//!             batching (optionally sim-in-the-loop costed)
 //!   eval      accuracy/sparsity sweep (Figs. 11/12)
 //!   trace     capture a measured sparsity trace and run the simulator
 //!             on it (the trace-driven Figs. 17-20 pipeline)
@@ -17,14 +18,16 @@
 //! reference backend out of the box; set `ACCELTRAN_BACKEND=pjrt` (with
 //! artifacts present) to dispatch to the AOT/PJRT path instead.
 
-use acceltran::coordinator::{self, BatchServer};
+use std::time::Duration;
+
+use acceltran::coordinator::{self, ServeConfig, ServePool, SimInLoop};
 use acceltran::model::{memreq::MemReq, OpGraph, TransformerConfig};
 use acceltran::nlp::sentiment::SentimentTask;
 use acceltran::runtime::{ParamStore, Runtime};
 use acceltran::sim::engine::{simulate, SparsityProfile};
 use acceltran::sim::scheduler::Policy;
 use acceltran::sim::tech::AreaBreakdown;
-use acceltran::sim::{dataflow, tiling, AcceleratorConfig};
+use acceltran::sim::{dataflow, tiling, AcceleratorConfig, SparsitySource};
 use acceltran::util::cli::Args;
 use acceltran::util::table::{eng, Table};
 use anyhow::{anyhow, Result};
@@ -69,7 +72,10 @@ fn print_usage() {
            sweep     --model bert-tiny [--seq 128]\n\
            dataflow  [--m 64 --k 64 --n 64 --lanes 4]\n\
            train     [--steps 200 --lr 1e-3 --examples 4096 --save path]\n\
-           serve     [--requests 256 --tau 0.04]\n\
+           serve     [--requests 256 --tau 0.04 --workers 4 --slo-ms 25]\n\
+                     [--params path --report reports/serve_report.json]\n\
+                     [--sim-in-loop --preset edge --model bert-tiny\n\
+                      --sim-seq 128 --sim-trace reports/sparsity_trace.json]\n\
            eval      [--taus 0,0.02,0.05 --examples 512 --params path]\n\
            trace     [--tau 0.04 --examples 512 --params path]\n\
                      [--out reports/sparsity_trace.json --no-sim]\n\
@@ -309,37 +315,61 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let seq = rt.manifest.seq;
     let n = args.get_usize("requests", 256);
     let tau = args.get_f64("tau", 0.04) as f32;
+    let workers = args.get_usize("workers", 4);
+    let slo = Duration::from_millis(args.get_u64("slo-ms", 25));
     let params = match args.get("params") {
         Some(p) => ParamStore::from_file(&rt.manifest, p)?.params,
         None => ParamStore::init(&rt.manifest, 0).params,
     };
-    let mut server = BatchServer::new(rt, params);
+    // sim-in-the-loop: cost every dispatched batch shape on the
+    // cycle-accurate engine, preferring a measured trace (PR-4 pipeline)
+    let sim = if args.has("sim-in-loop") {
+        let accel = preset_from(args)?;
+        let model = model_from(args)?;
+        let sim_seq = args.get_usize("sim-seq", 128);
+        let trace_path = args.get_or("sim-trace", "reports/sparsity_trace.json");
+        let source = match acceltran::trace::SparsityTrace::load(trace_path) {
+            Ok(t) => {
+                println!("sim-in-the-loop: measured trace {trace_path}");
+                SparsitySource::Trace(t)
+            }
+            // a trace that exists but fails to load is an error, not a
+            // silent fallback — the user thinks they are simulating on
+            // measured sparsity
+            Err(e) if std::path::Path::new(trace_path).exists() => {
+                return Err(e.context(format!("loading sim trace {trace_path}")));
+            }
+            Err(_) => {
+                println!(
+                    "sim-in-the-loop: uniform fallback profile (no trace at \
+                     {trace_path}; run `acceltran trace` to capture one)"
+                );
+                SparsitySource::Uniform(SparsityProfile::paper_default())
+            }
+        };
+        Some(SimInLoop { accel, model, seq: sim_seq, source })
+    } else {
+        None
+    };
+    println!(
+        "serving {n} requests on {workers} worker(s), slo {slo:?}, tau {tau} \
+         ['{}' backend]",
+        rt.backend_name()
+    );
+    // synthesize the request wave before the pool starts: wall time (and
+    // the reported req/s) must measure serving, not dataset generation
     let task = SentimentTask::new(vocab, seq, 7);
     let ds = task.dataset(n, 3);
-    let t0 = std::time::Instant::now();
-    let mut served = 0usize;
+    let cfg = ServeConfig { workers, slo, sim };
+    let pool = ServePool::start(&rt, &params, &cfg)?;
     for ex in &ds.examples {
-        server.submit(ex.ids.clone(), tau);
-        served += server.step()?.len();
+        pool.submit(ex.ids.clone(), tau);
     }
-    served += server.drain()?.len();
-    let dt = t0.elapsed();
-    let s = &server.stats;
-    println!(
-        "served {served} requests in {dt:?} ({:.1} req/s), {} dispatches, \
-         {} padded rows ({:.1}%), queue high-water {}",
-        served as f64 / dt.as_secs_f64(),
-        s.dispatches,
-        s.padded_rows,
-        100.0 * s.padded_row_fraction(),
-        s.queue_depth_high_water
-    );
-    println!(
-        "dispatch latency: mean {:?}  p50 {:?}  p99 {:?}",
-        s.mean_latency(),
-        s.latency_percentile(50.0),
-        s.latency_percentile(99.0)
-    );
+    let (report, _responses) = pool.finish()?;
+    report.print_summary();
+    let path = args.get_or("report", "reports/serve_report.json");
+    report.save(path)?;
+    println!("wrote {path}");
     Ok(())
 }
 

@@ -18,8 +18,9 @@
 //! DESIGN.md §Substitutions "Reference executor vs PJRT" for what is
 //! bit-exact between the two and what is approximate.
 
-use anyhow::Result;
+use anyhow::{bail, Result};
 
+use crate::runtime::artifacts::Manifest;
 use crate::trace::HookRecord;
 
 pub mod pjrt;
@@ -32,7 +33,14 @@ pub mod reference;
 /// `[batch * seq]`, `params`/`m`/`v` are the flat parameter buffer of
 /// `manifest.param_count` f32s in `param_specs` order, logits come back
 /// row-major `[batch * classes]`.
-pub trait ExecBackend {
+///
+/// `Send` is a supertrait: the serving worker pool
+/// (`coordinator::serve`) moves one forked backend instance into each
+/// worker thread.  Both in-tree backends are plain owned data and
+/// satisfy it automatically; a future backend wrapping a non-`Send`
+/// native handle should construct that handle lazily inside
+/// [`ExecBackend::fork`]'s result instead of sharing it.
+pub trait ExecBackend: Send {
     /// Short stable name for logs and bench labels ("reference", "pjrt").
     fn name(&self) -> &'static str;
 
@@ -98,5 +106,21 @@ pub trait ExecBackend {
         tau: f32,
     ) -> Result<(Vec<f32>, Vec<HookRecord>)> {
         Ok((self.classify(batch, params, ids, tau)?, Vec::new()))
+    }
+
+    /// Build an independent sibling of this backend over `manifest` —
+    /// the worker-pool entry point (`coordinator::serve` forks one
+    /// backend per worker so classify calls never contend on `&mut
+    /// self`).  Backends are stateless with respect to parameters
+    /// (buffers cross the trait boundary per call), so a fork is a
+    /// fresh construction, not a copy of any mutable state.  The
+    /// default refuses, for backends that wrap an unshareable native
+    /// resource.
+    fn fork(&self, manifest: &Manifest) -> Result<Box<dyn ExecBackend>> {
+        let _ = manifest;
+        bail!(
+            "backend '{}' does not support worker-pool forking",
+            self.name()
+        )
     }
 }

@@ -103,6 +103,14 @@ impl ExecBackend for PjrtBackend {
         "pjrt"
     }
 
+    /// Fork for the serving worker pool: a fresh PJRT client over the
+    /// same manifest.  Each worker compiles its own executables (the
+    /// compiled cache is per-instance), trading one-time compile work
+    /// for contention-free dispatch.
+    fn fork(&self, manifest: &Manifest) -> Result<Box<dyn ExecBackend>> {
+        Ok(Box::new(PjrtBackend::from_manifest(manifest.clone())?))
+    }
+
     /// `classify_b{B}`: logits for a batch of token ids at DynaTran
     /// threshold `tau`.
     fn classify(

@@ -637,6 +637,13 @@ impl ExecBackend for ReferenceBackend {
         "reference"
     }
 
+    /// Forking is a fresh construction over the same manifest: the
+    /// executor holds only the (immutable) shape and parameter-offset
+    /// table, so siblings are fully independent.
+    fn fork(&self, manifest: &Manifest) -> Result<Box<dyn ExecBackend>> {
+        Ok(Box::new(ReferenceBackend::new(manifest)?))
+    }
+
     fn classify(
         &mut self,
         batch: usize,

@@ -97,6 +97,19 @@ impl Runtime {
         self.backend.name()
     }
 
+    /// An independent sibling runtime over the same manifest and backend
+    /// kind — the worker-pool constructor (`coordinator::serve` forks
+    /// one runtime per worker thread; `ExecBackend: Send` is what lets
+    /// the fork move across the spawn).  Parameters are *not* part of a
+    /// runtime (they cross the call boundary as slices), so forks share
+    /// nothing mutable.
+    pub fn fork(&self) -> Result<Runtime> {
+        Ok(Runtime {
+            manifest: self.manifest.clone(),
+            backend: self.backend.fork(&self.manifest)?,
+        })
+    }
+
     // ---- the five typed entry points -------------------------------
 
     /// Classification logits for a batch at DynaTran threshold `tau`.
@@ -192,6 +205,22 @@ mod tests {
         }
         let rt = Runtime::load_default().unwrap();
         assert_eq!(rt.backend_name(), "reference");
+    }
+
+    #[test]
+    fn fork_produces_an_equivalent_independent_runtime() {
+        let mut rt = Runtime::reference();
+        let mut forked = rt.fork().unwrap();
+        assert_eq!(forked.backend_name(), "reference");
+        assert_eq!(forked.manifest.param_count, rt.manifest.param_count);
+        let params = ParamStore::init(&rt.manifest, 0).params;
+        let ids: Vec<i32> = (0..rt.manifest.seq).map(|i| (i % 512) as i32).collect();
+        let a = rt.classify(1, &params, &ids, 0.02).unwrap();
+        let b = forked.classify(1, &params, &ids, 0.02).unwrap();
+        assert_eq!(a, b, "fork must be functionally identical");
+        // runtimes are Send: the worker pool moves forks into threads
+        fn assert_send<T: Send>(_: &T) {}
+        assert_send(&forked);
     }
 
     #[test]

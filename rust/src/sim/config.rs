@@ -1,4 +1,17 @@
 //! Accelerator design-point configuration (paper Table II).
+//!
+//! One [`AcceleratorConfig`] captures everything the engine needs to
+//! price a run: compute provisioning (PEs, MAC lanes, softmax /
+//! layer-norm modules), the three on-chip buffers, the main-memory
+//! technology ([`MemoryKind`]: LP-DDR3 for Edge, monolithic-3D RRAM for
+//! Server — the Table IV memory ablation swaps them), tile shape and
+//! dataflow, clock, and the ablation switches (`dynatran_enabled`,
+//! `sparsity_modules`, `low_power`) behind Table III's LP mode and
+//! Table IV's rows.  The three presets — `edge`, `server`, `edge_lp` —
+//! are the paper's design points; `acceltran config --preset …` prints
+//! any of them with the Table III area/power summary, and
+//! `acceltran sweep` perturbs PEs/buffers around them for the Fig. 16
+//! stall surface.
 
 use super::dataflow::Dataflow;
 

@@ -9,8 +9,9 @@
 //! to run them; otherwise they skip, keeping `cargo test` hermetic.
 
 use std::path::PathBuf;
+use std::time::Duration;
 
-use acceltran::coordinator::{self, BatchServer};
+use acceltran::coordinator::{self, BatchServer, ServeConfig, ServePool};
 use acceltran::model::TransformerConfig;
 use acceltran::nlp::sentiment::SentimentTask;
 use acceltran::runtime::{ParamStore, Runtime};
@@ -82,6 +83,119 @@ fn drain_pads_only_the_sub_batch_tail() {
     // the first 8 responses rode the full batch, the tail rode an 8-shape
     assert_eq!(responses[0].batch, 8);
     assert_eq!(responses[10].batch, 8);
+}
+
+#[test]
+fn batch_server_deadline_flushes_underfilled_batch() {
+    // A request older than its SLO budget must force a flush even when
+    // no exported shape has filled (3 requests never fill an 8-shape).
+    let rt = tiny_runtime();
+    let seq = rt.manifest.seq;
+    let params = ParamStore::init(&rt.manifest, 0).params;
+    let mut server = BatchServer::new(rt, params);
+    // generous SLO so the immediate step below rarely races the deadline
+    server.max_wait = Duration::from_millis(150);
+    for i in 0..3 {
+        server.submit(vec![(i % 4) as i32; seq], 0.0);
+    }
+    let early = server.step().unwrap();
+    let flushed = if early.is_empty() {
+        // normal path: deadlines have not passed yet, the batcher waits;
+        // sleep past them and the step must flush under-filled
+        assert_eq!(server.pending(), 3);
+        std::thread::sleep(Duration::from_millis(180));
+        server.step().unwrap()
+    } else {
+        // pathological scheduler stall (>150 ms between submit and
+        // step): the deadline already expired, which still exercises
+        // exactly the under-filled deadline flush under test
+        early
+    };
+    assert_eq!(flushed.len(), 3, "expired SLO must force the flush");
+    assert_eq!(flushed[0].batch, 8, "3 requests pad up to the covering shape");
+    assert_eq!(server.stats.padded_rows, 5);
+    assert_eq!(server.pending(), 0);
+}
+
+#[test]
+fn batch_server_per_request_slo_overrides_default() {
+    // submit_with_slo: a generous default but one urgent request — the
+    // urgent deadline (at the queue head) drives the flush timing
+    let rt = tiny_runtime();
+    let seq = rt.manifest.seq;
+    let params = ParamStore::init(&rt.manifest, 0).params;
+    let mut server = BatchServer::new(rt, params);
+    server.max_wait = Duration::from_secs(3600); // default: effectively never
+    server.submit_with_slo(vec![1i32; seq], 0.0, Duration::from_millis(2));
+    server.submit(vec![2i32; seq], 0.0);
+    std::thread::sleep(Duration::from_millis(6));
+    let out = server.step().unwrap();
+    assert_eq!(out.len(), 2, "urgent head request must flush the queue");
+}
+
+#[test]
+fn urgent_request_behind_lax_head_still_flushes() {
+    // the nearest deadline in the queue drives the flush even when the
+    // queue HEAD has an hour of budget left: batching is FIFO, so the
+    // flush dispatches the lax head and the urgent request rides along
+    let rt = tiny_runtime();
+    let seq = rt.manifest.seq;
+    let params = ParamStore::init(&rt.manifest, 0).params;
+    let mut server = BatchServer::new(rt, params);
+    server.max_wait = Duration::from_secs(3600);
+    server.submit(vec![2i32; seq], 0.0); // lax, at the head
+    server.submit_with_slo(vec![1i32; seq], 0.0, Duration::from_millis(2));
+    std::thread::sleep(Duration::from_millis(6));
+    let out = server.step().unwrap();
+    assert_eq!(
+        out.len(),
+        2,
+        "a tight SLO behind a lax head must still force the flush"
+    );
+}
+
+#[test]
+fn serve_pool_matches_batch_server_accounting() {
+    // the concurrent engine over the same tiny runtime: every request
+    // answered once, merged stats self-consistent
+    let rt = tiny_runtime();
+    let classes = rt.manifest.classes;
+    let vocab = rt.manifest.vocab;
+    let seq = rt.manifest.seq;
+    let params = ParamStore::init(&rt.manifest, 0).params;
+    let cfg = ServeConfig {
+        workers: 2,
+        slo: Duration::from_millis(5),
+        sim: None,
+    };
+    let pool = ServePool::start(&rt, &params, &cfg).unwrap();
+    let task = SentimentTask::new(vocab, seq, 3);
+    let ds = task.dataset(50, 1);
+    let mut ids: Vec<u64> = Vec::new();
+    for ex in &ds.examples {
+        ids.push(pool.submit(ex.ids.clone(), 0.02));
+    }
+    let (report, responses) = pool.finish().unwrap();
+    assert_eq!(responses.len(), 50);
+    let mut got: Vec<u64> = responses.iter().map(|r| r.id).collect();
+    got.sort_unstable();
+    assert_eq!(got, ids);
+    for r in &responses {
+        assert_eq!(r.logits.len(), classes);
+        assert!(r.logits.iter().all(|v| v.is_finite()));
+    }
+    let s = &report.stats;
+    assert_eq!(s.served, 50);
+    assert_eq!(s.rows_dispatched, s.served + s.padded_rows);
+    assert!(s.dispatches < 50, "batching must group requests");
+    assert!(s.queue_depth_high_water >= 1 && s.queue_depth_high_water <= 50);
+    // host-measured histograms carry one sample per request
+    assert_eq!(report.total_latency.count(), 50);
+    assert_eq!(report.compute_latency.count(), 50);
+    // and the report serializes
+    let json = report.to_json();
+    assert!(json.get("throughput_rps").is_some());
+    assert!(json.path(&["latency_us", "total"]).is_some());
 }
 
 #[test]
