@@ -18,6 +18,7 @@ use std::time::{Duration, Instant};
 
 use acceltran::coordinator::{ServeConfig, ServePool};
 use acceltran::nlp::sentiment::SentimentTask;
+use acceltran::runtime::tensor::{gemm_stats_reset, gemm_stats_snapshot};
 use acceltran::runtime::{ParamStore, Runtime};
 use acceltran::util::cli::env_usize;
 use acceltran::util::json::Json;
@@ -78,16 +79,22 @@ fn main() {
     let mut rps = Vec::new();
     let mut report = Vec::new();
     for &workers in &sweep {
-        // median of 3 waves per point
+        // median of 3 waves per point; the tiled-GEMM accumulator spans
+        // all 3 (tile stats are rate-independent, so aggregating is fine)
+        gemm_stats_reset();
         let mut runs: Vec<(f64, u64, f64)> = (0..3)
             .map(|_| wave(&rt, &params, &reqs, workers, tau))
             .collect();
+        let gemm = gemm_stats_snapshot();
         runs.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
         let (med_rps, dispatches, padded) = runs[1];
         println!(
             "{workers} worker(s): {med_rps:>9.1} req/s (median of 3) | \
-             {dispatches} dispatches | {:.1}% padded rows",
-            100.0 * padded
+             {dispatches} dispatches | {:.1}% padded rows | \
+             effectual tiles {:.3} / MACs {:.3}",
+            100.0 * padded,
+            gemm.effectual_tile_fraction(),
+            gemm.effectual_mac_fraction()
         );
         rps.push(med_rps);
         report.push(Json::obj(vec![
@@ -96,6 +103,14 @@ fn main() {
             ("median_rps", Json::num(med_rps)),
             ("dispatches", Json::num(dispatches as f64)),
             ("padded_row_fraction", Json::num(padded)),
+            (
+                "effectual_tile_fraction",
+                Json::num(gemm.effectual_tile_fraction()),
+            ),
+            (
+                "effectual_mac_fraction",
+                Json::num(gemm.effectual_mac_fraction()),
+            ),
         ]));
     }
 

@@ -391,8 +391,12 @@ fn cmd_trace(args: &Args) -> Result<()> {
             true,
         )?,
     };
-    // same shared eval set the fig benches capture over
+    // same shared eval set the fig benches capture over; scope the host
+    // tiled-GEMM accumulator to the capture so the block-sparsity line
+    // below describes exactly this run
+    acceltran::runtime::tensor::gemm_stats_reset();
     let trace = coordinator::measured_trace_with(&mut rt, &store, tau, examples)?;
+    let gemm = acceltran::runtime::tensor::gemm_stats_snapshot();
 
     println!(
         "\ncaptured over {} examples at tau={tau}: mean act sparsity {:.3}, \
@@ -401,6 +405,14 @@ fn cmd_trace(args: &Args) -> Result<()> {
         trace.mean_act_rho(),
         trace.inherent_act_rho,
         trace.eval_accuracy
+    );
+    println!(
+        "host gemm (blocked path): effectual tiles {:.3}, effectual MACs \
+         {:.3}, tile-skipped MACs {:.3} of {}",
+        gemm.effectual_tile_fraction(),
+        gemm.effectual_mac_fraction(),
+        gemm.tile_skipped_mac_fraction(),
+        gemm.macs
     );
     let mut t = Table::new([
         "layer", "input", "q", "k", "v", "scores", "context", "proj", "ffn_in",

@@ -33,6 +33,107 @@ pub fn dynatran_prune_inplace(values: &mut [f32], tau: f32) -> usize {
     pruned_count
 }
 
+use crate::runtime::tensor::{GEMM_KC, GEMM_MR};
+
+/// Per-tile zero bitmap over a row-major `rows x cols` activation,
+/// using the host GEMM's broadcast-operand tile geometry
+/// (`GEMM_MR x GEMM_KC`): the mask → tile-bitmap handoff between
+/// DynaTran pruning and the blocked microkernel.  `zero[rt * depth_blocks
+/// + pc]` is true iff row tile `rt` of depth block `pc` is entirely zero
+/// — exactly the tiles `runtime::tensor::matmul_ex` will skip when this
+/// matrix is its left operand (pinned by a cross-check in
+/// `tests/gemm_oracle.rs`).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct TileMap {
+    /// Row tiles (`ceil(rows / GEMM_MR)`).
+    pub row_tiles: usize,
+    /// Depth blocks (`ceil(cols / GEMM_KC)`).
+    pub depth_blocks: usize,
+    /// `row_tiles * depth_blocks` flags, row-tile-major.
+    pub zero: Vec<bool>,
+}
+
+impl TileMap {
+    /// Scan a pruned activation into its tile bitmap.
+    pub fn from_matrix(values: &[f32], rows: usize, cols: usize) -> TileMap {
+        assert_eq!(values.len(), rows * cols, "TileMap: shape");
+        let row_tiles = (rows + GEMM_MR - 1) / GEMM_MR;
+        let depth_blocks = (cols + GEMM_KC - 1) / GEMM_KC;
+        let mut zero = vec![true; row_tiles * depth_blocks];
+        for r in 0..rows {
+            let row = &values[r * cols..(r + 1) * cols];
+            let rt = r / GEMM_MR;
+            for pc in 0..depth_blocks {
+                if zero[rt * depth_blocks + pc] {
+                    let c0 = pc * GEMM_KC;
+                    let cl = (cols - c0).min(GEMM_KC);
+                    if row[c0..c0 + cl].iter().any(|&v| v != 0.0) {
+                        zero[rt * depth_blocks + pc] = false;
+                    }
+                }
+            }
+        }
+        TileMap { row_tiles, depth_blocks, zero }
+    }
+
+    /// Total tiles in the map.
+    pub fn tiles(&self) -> usize {
+        self.zero.len()
+    }
+
+    /// Fully-zero (skippable) tiles.
+    pub fn zero_tiles(&self) -> usize {
+        self.zero.iter().filter(|&&z| z).count()
+    }
+
+    /// Share of tiles the microkernel must still compute (1.0 for an
+    /// empty map).
+    pub fn effectual_tile_fraction(&self) -> f64 {
+        if self.zero.is_empty() {
+            1.0
+        } else {
+            1.0 - self.zero_tiles() as f64 / self.tiles() as f64
+        }
+    }
+}
+
+/// Fused DynaTran prune + tile-map build: prune `values` in place at
+/// threshold `tau` (same semantics as [`dynatran_prune_inplace`]) and
+/// return the pruned-element count alongside the [`TileMap`] the blocked
+/// GEMM will observe on this matrix.  One pass over the data instead of
+/// prune-then-rescan.
+pub fn dynatran_prune_tiled(
+    values: &mut [f32],
+    tau: f32,
+    rows: usize,
+    cols: usize,
+) -> (usize, TileMap) {
+    assert_eq!(values.len(), rows * cols, "dynatran_prune_tiled: shape");
+    let row_tiles = (rows + GEMM_MR - 1) / GEMM_MR;
+    let depth_blocks = (cols + GEMM_KC - 1) / GEMM_KC;
+    let mut zero = vec![true; row_tiles * depth_blocks];
+    let mut pruned_count = 0usize;
+    for r in 0..rows {
+        let rt = r / GEMM_MR;
+        let row = &mut values[r * cols..(r + 1) * cols];
+        for pc in 0..depth_blocks {
+            let c0 = pc * GEMM_KC;
+            let cl = (cols - c0).min(GEMM_KC);
+            let mut any = false;
+            for v in row[c0..c0 + cl].iter_mut() {
+                let keep = v.abs() >= tau;
+                *v = if keep { *v } else { 0.0 };
+                pruned_count += !keep as usize;
+                any |= *v != 0.0;
+            }
+            if any {
+                zero[rt * depth_blocks + pc] = false;
+            }
+        }
+    }
+    (pruned_count, TileMap { row_tiles, depth_blocks, zero })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -45,5 +146,38 @@ mod tests {
         let (b, mask) = pruned(&data, 0.25);
         assert_eq!(a, b);
         assert_eq!(n, mask.iter().filter(|&&m| m).count());
+    }
+
+    #[test]
+    fn fused_prune_matches_inplace_then_scan() {
+        let mut rng = crate::util::rng::Rng::new(7);
+        let (rows, cols) = (11, 300); // ragged in both tile dimensions
+        let data = rng.normal_vec(rows * cols, 0.05);
+        let mut a = data.clone();
+        let mut b = data.clone();
+        let na = dynatran_prune_inplace(&mut a, 0.04);
+        let (nb, map) = dynatran_prune_tiled(&mut b, 0.04, rows, cols);
+        assert_eq!(a, b, "fused prune must produce the identical matrix");
+        assert_eq!(na, nb);
+        assert_eq!(map, TileMap::from_matrix(&a, rows, cols));
+        assert_eq!(map.row_tiles, 3);
+        assert_eq!(map.depth_blocks, 3);
+        assert_eq!(map.tiles(), 9);
+    }
+
+    #[test]
+    fn tile_map_flags_structured_zero_rows() {
+        // rows 0..4 zeroed => the whole first row tile is skippable
+        let (rows, cols) = (8, 130);
+        let mut m = vec![1.0f32; rows * cols];
+        for v in m[..4 * cols].iter_mut() {
+            *v = 0.0;
+        }
+        let map = TileMap::from_matrix(&m, rows, cols);
+        assert_eq!(map.row_tiles, 2);
+        assert_eq!(map.depth_blocks, 2);
+        assert_eq!(map.zero_tiles(), 2);
+        assert_eq!(map.zero, vec![true, true, false, false]);
+        assert!((map.effectual_tile_fraction() - 0.5).abs() < 1e-12);
     }
 }

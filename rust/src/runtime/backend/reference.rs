@@ -14,6 +14,13 @@
 //! real workloads: the Figs. 11/12/14 sweeps, the serving batcher, and
 //! `train_step` fine-tuning all execute here by default when PJRT
 //! artifacts are absent.
+//!
+//! Every GEMM here (QKV/output projections, attention scores and
+//! context, both FFN layers, and all of backprop's `matmul_tn` /
+//! `matmul_nt` gradients) routes through the block-sparse tiled
+//! microkernel in `runtime::tensor` (DESIGN.md "Host microkernel"); the
+//! dispatch is shape-based and bitwise-transparent, so this file only
+//! ever calls the plain `matmul*` entry points.
 
 use std::collections::HashMap;
 
@@ -757,11 +764,12 @@ fn prune_hook(
 ) {
     if let Prune::DynaTran(tau) = mode {
         if tau > 0.0 {
-            for v in x.iter_mut() {
-                if v.abs() < tau {
-                    *v = 0.0;
-                }
-            }
+            // Shared branchless DynaTran primitive — one definition of
+            // "pruned to zero" for the hooks, the benches, and the
+            // tile-bitmap handoff (`pruning::dynatran_prune_tiled`), so
+            // the zeros the blocked GEMM skips downstream are exactly
+            // the zeros recorded here.
+            crate::pruning::dynatran_prune_inplace(x, tau);
         }
         if let Some(st) = stats.as_mut() {
             st.push(HookRecord {

@@ -4,22 +4,57 @@
 //! Row-major f32 matrices as flat slices, shapes passed explicitly.  The
 //! three GEMM variants cover forward (`matmul`), input gradients
 //! (`matmul_nt`, x · Wᵀ), and weight gradients (`matmul_tn`, Xᵀ · dY)
-//! without ever materializing a transpose.  `matmul` and `matmul_tn`
-//! (the row-broadcast forms) skip zero multiplicands in their inner
-//! accumulation — the software mirror of the accelerator's
-//! ineffectual-MAC skipping, and the reason DynaTran-pruned inference
-//! speeds up on this backend too; `matmul_nt` is a dense dot-product
-//! loop, where a per-element branch would defeat vectorization for no
-//! row-level reuse.
+//! without ever materializing a transpose.
 //!
-//! All three GEMMs split their output across scoped threads for large
-//! problems (`matmul`/`matmul_nt` by input rows, `matmul_tn` by output
-//! rows); chunking never splits a single output element's accumulation,
-//! so results are bitwise identical to the single-threaded loops.
+//! # Host microkernel (DESIGN.md "Host microkernel")
+//!
+//! Since the block-sparse GEMM rewrite the hot path is a cache-blocked,
+//! autovectorizable microkernel instead of the original scalar loops:
+//! the streamed operand is packed once per call into `KC x NR` panels,
+//! the broadcast operand into `MR x KC` tiles, and a branchless
+//! register-tile inner loop accumulates `MR x NR` outputs over each
+//! depth block.  On top of the dense tiling sits *block-granular*
+//! sparsity — the software mirror of AccelTran's ineffectual-tile
+//! skipping: while packing the broadcast operand, a per-tile zero bitmap
+//! is built (one `all-zero?` bit per `MR x KC` tile), and fully-zero
+//! tiles are skipped for every output panel they would have touched.
+//! DynaTran-pruned activations (`pruning::dynatran_prune_inplace`
+//! upstream) therefore skip whole tiles — pruned-token rows, collapsed
+//! attention columns — instead of paying a per-element branch per MAC.
+//! A [`BlockSparsity`] summary (effectual-tile and effectual-MAC
+//! fractions) is returned by the `_ex` variants and aggregated into a
+//! process-wide accumulator ([`gemm_stats_snapshot`]) so benches,
+//! serving sweeps, and trace captures can report both numbers.
+//!
+//! Determinism contract: every kernel accumulates each output element in
+//! strictly ascending reduction order with plain (non-FMA-contracted)
+//! f32 mul-adds, macro-tile threading splits only whole `MR`-aligned
+//! row groups, and skipped contributions are exact `±0.0` products — so
+//! tiled, scalar, serial, and row-chunk-parallel runs are all *bitwise
+//! identical* for finite inputs (pinned by `tests/gemm_oracle.rs` and
+//! `tests/determinism.rs`).  Problems under [`TILE_THRESHOLD`] MACs take
+//! the original scalar path, where packing overhead would dominate.
+
+/// Rows per register tile of the broadcast operand (the A side).
+pub const GEMM_MR: usize = 4;
+/// Columns per packed panel of the streamed operand (the B side); the
+/// inner loop keeps an `MR x NR` f32 accumulator block in registers.
+pub const GEMM_NR: usize = 16;
+/// Depth (reduction) block: one `MR x KC` A-tile and `KC x NR` B-panel
+/// pair stays resident in L1 while the microkernel runs.
+pub const GEMM_KC: usize = 128;
+/// Column macro-block: B panels are packed `NC` columns at a time so the
+/// packed working set stays inside L2.
+pub const GEMM_NC: usize = 256;
 
 /// Problems below this many MACs stay single-threaded (thread spawn
 /// overhead dominates under ~1e6 MACs on commodity cores).
 const PAR_THRESHOLD: usize = 1 << 21;
+
+/// Problems below this many MACs skip the tiled path entirely: packing
+/// costs more than it saves on tiny matrices (micro tests, per-head
+/// attention at toy sequence lengths).
+const TILE_THRESHOLD: usize = 1 << 14;
 
 /// Worker count for row-parallel GEMMs: `ACCELTRAN_THREADS` if set,
 /// otherwise available parallelism capped at 8.
@@ -37,11 +72,545 @@ fn row_chunk(rows: usize, workers: usize) -> usize {
     per.max(1)
 }
 
-/// `out = x · w` for row-major `x: m x k`, `w: k x n`.
+// ---------------------------------------------------------------------------
+// Block-sparsity accounting
+// ---------------------------------------------------------------------------
+
+/// Block-granular sparsity summary of one (or many, when aggregated)
+/// tiled GEMM calls, over the *broadcast* operand — the activation side
+/// on the forward path.  `effectual_tile_fraction` is the hardware-tile
+/// analogue of the paper's effectual-MAC fraction: the share of
+/// `GEMM_MR x GEMM_KC` tiles that contained at least one nonzero and
+/// therefore had to be computed.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct BlockSparsity {
+    /// `MR x KC` tiles examined in the broadcast operand.
+    pub tiles: u64,
+    /// Tiles that were entirely zero and skipped for every output panel.
+    pub zero_tiles: u64,
+    /// Dense MAC count of the call(s): `rows * depth * cols`.
+    pub macs: u64,
+    /// MACs elided by whole-tile skipping (`<= macs`).
+    pub tile_skipped_macs: u64,
+    /// Elements examined in the broadcast operand (`rows * depth`).
+    pub elems: u64,
+    /// Exactly-zero elements among them (element-granular sparsity).
+    pub zero_elems: u64,
+}
+
+impl BlockSparsity {
+    /// Fraction of tiles that had to be computed (1.0 when no tiles were
+    /// examined — an empty accumulator reads as fully dense).
+    pub fn effectual_tile_fraction(&self) -> f64 {
+        if self.tiles == 0 {
+            1.0
+        } else {
+            1.0 - self.zero_tiles as f64 / self.tiles as f64
+        }
+    }
+
+    /// Element-granular effectual-MAC fraction: the share of MACs whose
+    /// broadcast-operand element was nonzero (the paper's rho axis,
+    /// measured on the host kernel's inputs).
+    pub fn effectual_mac_fraction(&self) -> f64 {
+        if self.elems == 0 {
+            1.0
+        } else {
+            1.0 - self.zero_elems as f64 / self.elems as f64
+        }
+    }
+
+    /// Fraction of the dense MAC count actually elided by tile skipping
+    /// (what the block-granular path saved, as opposed to what element
+    /// granularity *could* have saved).
+    pub fn tile_skipped_mac_fraction(&self) -> f64 {
+        if self.macs == 0 {
+            0.0
+        } else {
+            self.tile_skipped_macs as f64 / self.macs as f64
+        }
+    }
+
+    /// Fold another summary into this one (chunk merge, call aggregate).
+    pub fn absorb(&mut self, other: &BlockSparsity) {
+        self.tiles += other.tiles;
+        self.zero_tiles += other.zero_tiles;
+        self.macs += other.macs;
+        self.tile_skipped_macs += other.tile_skipped_macs;
+        self.elems += other.elems;
+        self.zero_elems += other.zero_elems;
+    }
+}
+
+mod gemm_counters {
+    use std::sync::atomic::AtomicU64;
+
+    pub(super) static TILES: AtomicU64 = AtomicU64::new(0);
+    pub(super) static ZERO_TILES: AtomicU64 = AtomicU64::new(0);
+    pub(super) static MACS: AtomicU64 = AtomicU64::new(0);
+    pub(super) static TILE_SKIPPED_MACS: AtomicU64 = AtomicU64::new(0);
+    pub(super) static ELEMS: AtomicU64 = AtomicU64::new(0);
+    pub(super) static ZERO_ELEMS: AtomicU64 = AtomicU64::new(0);
+}
+
+/// Reset the process-wide tiled-GEMM accumulator (scope a measurement:
+/// reset, run the workload, [`gemm_stats_snapshot`]).
+pub fn gemm_stats_reset() {
+    use std::sync::atomic::Ordering::Relaxed;
+    gemm_counters::TILES.store(0, Relaxed);
+    gemm_counters::ZERO_TILES.store(0, Relaxed);
+    gemm_counters::MACS.store(0, Relaxed);
+    gemm_counters::TILE_SKIPPED_MACS.store(0, Relaxed);
+    gemm_counters::ELEMS.store(0, Relaxed);
+    gemm_counters::ZERO_ELEMS.store(0, Relaxed);
+}
+
+/// Aggregate [`BlockSparsity`] over every tiled GEMM call in the process
+/// since the last [`gemm_stats_reset`].  Scalar-path (sub-threshold)
+/// calls do not contribute; the accumulator describes the tiled hot
+/// path that serving and capture run on.
+pub fn gemm_stats_snapshot() -> BlockSparsity {
+    use std::sync::atomic::Ordering::Relaxed;
+    BlockSparsity {
+        tiles: gemm_counters::TILES.load(Relaxed),
+        zero_tiles: gemm_counters::ZERO_TILES.load(Relaxed),
+        macs: gemm_counters::MACS.load(Relaxed),
+        tile_skipped_macs: gemm_counters::TILE_SKIPPED_MACS.load(Relaxed),
+        elems: gemm_counters::ELEMS.load(Relaxed),
+        zero_elems: gemm_counters::ZERO_ELEMS.load(Relaxed),
+    }
+}
+
+fn gemm_stats_add(s: &BlockSparsity) {
+    use std::sync::atomic::Ordering::Relaxed;
+    gemm_counters::TILES.fetch_add(s.tiles, Relaxed);
+    gemm_counters::ZERO_TILES.fetch_add(s.zero_tiles, Relaxed);
+    gemm_counters::MACS.fetch_add(s.macs, Relaxed);
+    gemm_counters::TILE_SKIPPED_MACS.fetch_add(s.tile_skipped_macs, Relaxed);
+    gemm_counters::ELEMS.fetch_add(s.elems, Relaxed);
+    gemm_counters::ZERO_ELEMS.fetch_add(s.zero_elems, Relaxed);
+}
+
+// ---------------------------------------------------------------------------
+// Blocked microkernel
+// ---------------------------------------------------------------------------
+
+/// One GEMM operand viewed through its logical indices: `at(r, c)` reads
+/// logical element `(r, c)` regardless of whether the stored matrix is
+/// the logical one (`trans = false`, row-major with leading dimension
+/// `ld`) or its transpose (`trans = true` — the `matmul_nt` B side and
+/// `matmul_tn` A side, which never materialize the transpose).
+#[derive(Clone, Copy)]
+struct OperandView<'a> {
+    data: &'a [f32],
+    ld: usize,
+    trans: bool,
+}
+
+impl OperandView<'_> {
+    #[inline(always)]
+    fn at(&self, r: usize, c: usize) -> f32 {
+        if self.trans {
+            self.data[c * self.ld + r]
+        } else {
+            self.data[r * self.ld + c]
+        }
+    }
+}
+
+/// The register-tile inner loop: accumulate an `mr x nrr` corner of a
+/// full `GEMM_MR x GEMM_NR` accumulator block over one depth block.
+///
+/// `at` is a packed A tile (`pl x GEMM_MR`, depth-major), `bp` a packed
+/// B panel (`pl x GEMM_NR`, depth-major, zero-padded past `nrr`), `c`
+/// the output tile's top-left element with row stride `ldc`.  The
+/// accumulator is *loaded from* `c` and stored back, so calls over
+/// successive depth blocks extend one strictly-ascending-k summation
+/// per element — bitwise identical to the scalar loops.  The compute
+/// loop is branchless and fixed-shape (`GEMM_MR x GEMM_NR`); padded
+/// lanes compute on zeros and are never stored.
+#[inline]
+fn microkernel(
+    at: &[f32],
+    bp: &[f32],
+    c: &mut [f32],
+    ldc: usize,
+    pl: usize,
+    mr: usize,
+    nrr: usize,
+) {
+    let mut acc = [[0.0f32; GEMM_NR]; GEMM_MR];
+    for i in 0..mr {
+        for j in 0..nrr {
+            acc[i][j] = c[i * ldc + j];
+        }
+    }
+    for pp in 0..pl {
+        let av = &at[pp * GEMM_MR..pp * GEMM_MR + GEMM_MR];
+        let bv = &bp[pp * GEMM_NR..pp * GEMM_NR + GEMM_NR];
+        for i in 0..GEMM_MR {
+            let ai = av[i];
+            for j in 0..GEMM_NR {
+                acc[i][j] += ai * bv[j];
+            }
+        }
+    }
+    for i in 0..mr {
+        for j in 0..nrr {
+            c[i * ldc + j] = acc[i][j];
+        }
+    }
+}
+
+/// Pack the streamed operand into `KC x NR` panels, grouped by
+/// `(depth block, column macro-block)`.  Returns the packed buffer and
+/// the flat offset of each `(pc, jc)` group (`pc * num_jc + jc` order);
+/// within a group, panel `jr` starts at `offset + jr * pl * GEMM_NR`.
+/// Ragged edges are zero-padded to full `NR` width so the microkernel's
+/// inner loop never branches on column bounds.
+fn pack_b(b: &OperandView, depth: usize, cols: usize) -> (Vec<f32>, Vec<usize>) {
+    let num_pc = (depth + GEMM_KC - 1) / GEMM_KC;
+    let num_jc = (cols + GEMM_NC - 1) / GEMM_NC;
+    let mut offs = Vec::with_capacity(num_pc * num_jc);
+    let mut total = 0usize;
+    for pc in 0..num_pc {
+        let pl = (depth - pc * GEMM_KC).min(GEMM_KC);
+        for jc in 0..num_jc {
+            let ncl = (cols - jc * GEMM_NC).min(GEMM_NC);
+            let panels = (ncl + GEMM_NR - 1) / GEMM_NR;
+            offs.push(total);
+            total += pl * panels * GEMM_NR;
+        }
+    }
+    let mut buf = vec![0.0f32; total];
+    let mut group = 0usize;
+    for pc in 0..num_pc {
+        let p0 = pc * GEMM_KC;
+        let pl = (depth - p0).min(GEMM_KC);
+        for jc in 0..num_jc {
+            let j0 = jc * GEMM_NC;
+            let ncl = (cols - j0).min(GEMM_NC);
+            let panels = (ncl + GEMM_NR - 1) / GEMM_NR;
+            let base = offs[group];
+            group += 1;
+            for jr in 0..panels {
+                let jj0 = j0 + jr * GEMM_NR;
+                let nrr = (ncl - jr * GEMM_NR).min(GEMM_NR);
+                let pbase = base + jr * pl * GEMM_NR;
+                for pp in 0..pl {
+                    let row = pbase + pp * GEMM_NR;
+                    for jj in 0..nrr {
+                        buf[row + jj] = b.at(p0 + pp, jj0 + jj);
+                    }
+                }
+            }
+        }
+    }
+    (buf, offs)
+}
+
+/// Compute one chunk of output rows (`r0 .. r0 + rows_c`): pack the
+/// chunk's A tiles per depth block (building the zero-tile bitmap and
+/// the element-sparsity counts as a side effect of the same pass), then
+/// sweep column macro-blocks, skipping fully-zero tiles outright.
+#[allow(clippy::too_many_arguments)]
+fn gemm_chunk(
+    a: &OperandView,
+    bbuf: &[f32],
+    boffs: &[usize],
+    out: &mut [f32],
+    r0: usize,
+    rows_c: usize,
+    cols: usize,
+    depth: usize,
+    stats: &mut BlockSparsity,
+) {
+    let num_jc = (cols + GEMM_NC - 1) / GEMM_NC;
+    let ntiles = (rows_c + GEMM_MR - 1) / GEMM_MR;
+    let mut apack = vec![0.0f32; ntiles * GEMM_KC * GEMM_MR];
+    let mut tile_zero = vec![false; ntiles];
+    for (pc, p0) in (0..depth).step_by(GEMM_KC).enumerate() {
+        let pl = (depth - p0).min(GEMM_KC);
+        for t in 0..ntiles {
+            let i0 = t * GEMM_MR;
+            let mr = (rows_c - i0).min(GEMM_MR);
+            let base = t * pl * GEMM_MR;
+            let mut any = false;
+            let mut zeros = 0usize;
+            for pp in 0..pl {
+                let dst = base + pp * GEMM_MR;
+                for i in 0..GEMM_MR {
+                    let v = if i < mr { a.at(r0 + i0 + i, p0 + pp) } else { 0.0 };
+                    zeros += (i < mr && v == 0.0) as usize;
+                    any |= v != 0.0;
+                    apack[dst + i] = v;
+                }
+            }
+            tile_zero[t] = !any;
+            stats.tiles += 1;
+            stats.elems += (mr * pl) as u64;
+            stats.zero_elems += zeros as u64;
+            if !any {
+                stats.zero_tiles += 1;
+                stats.tile_skipped_macs += (mr * pl * cols) as u64;
+            }
+        }
+        for jc in 0..num_jc {
+            let j0 = jc * GEMM_NC;
+            let ncl = (cols - j0).min(GEMM_NC);
+            let panels = (ncl + GEMM_NR - 1) / GEMM_NR;
+            let block = boffs[pc * num_jc + jc];
+            for t in 0..ntiles {
+                if tile_zero[t] {
+                    continue;
+                }
+                let i0 = t * GEMM_MR;
+                let mr = (rows_c - i0).min(GEMM_MR);
+                let at = &apack[t * pl * GEMM_MR..(t + 1) * pl * GEMM_MR];
+                for jr in 0..panels {
+                    let nrr = (ncl - jr * GEMM_NR).min(GEMM_NR);
+                    let bp = &bbuf[block + jr * pl * GEMM_NR..][..pl * GEMM_NR];
+                    let c0 = i0 * cols + j0 + jr * GEMM_NR;
+                    microkernel(at, bp, &mut out[c0..], cols, pl, mr, nrr);
+                }
+            }
+        }
+    }
+}
+
+/// Blocked GEMM driver shared by all three variants: pack B once, then
+/// split output rows across scoped threads in `GEMM_MR`-aligned chunks
+/// (alignment keeps the tile partition — and therefore the
+/// [`BlockSparsity`] counts — independent of the worker count; the
+/// *results* are bitwise worker-count-independent regardless, because
+/// chunking never splits an output element's accumulation).
+fn gemm_blocked(
+    a: OperandView,
+    b: OperandView,
+    rows: usize,
+    cols: usize,
+    depth: usize,
+    force_workers: Option<usize>,
+) -> (Vec<f32>, BlockSparsity) {
+    let mut out = vec![0.0f32; rows * cols];
+    if rows == 0 || cols == 0 || depth == 0 {
+        return (out, BlockSparsity::default());
+    }
+    let (bbuf, boffs) = pack_b(&b, depth, cols);
+    let mut stats = BlockSparsity {
+        macs: rows as u64 * cols as u64 * depth as u64,
+        ..BlockSparsity::default()
+    };
+    let workers = force_workers
+        .unwrap_or_else(|| if rows * cols * depth >= PAR_THRESHOLD { worker_count() } else { 1 })
+        .max(1);
+    let per = {
+        let rough = row_chunk(rows, workers);
+        ((rough + GEMM_MR - 1) / GEMM_MR) * GEMM_MR
+    };
+    if per >= rows {
+        gemm_chunk(&a, &bbuf, &boffs, &mut out, 0, rows, cols, depth, &mut stats);
+    } else {
+        let nchunks = (rows + per - 1) / per;
+        let mut slots = vec![BlockSparsity::default(); nchunks];
+        std::thread::scope(|scope| {
+            for (ci, (oc, slot)) in out.chunks_mut(per * cols).zip(slots.iter_mut()).enumerate() {
+                let a = &a;
+                let bbuf = &bbuf;
+                let boffs = &boffs;
+                scope.spawn(move || {
+                    let rows_c = oc.len() / cols;
+                    gemm_chunk(a, bbuf, boffs, oc, ci * per, rows_c, cols, depth, slot);
+                });
+            }
+        });
+        for s in &slots {
+            stats.absorb(s);
+        }
+    }
+    gemm_stats_add(&stats);
+    (out, stats)
+}
+
+// ---------------------------------------------------------------------------
+// Public GEMM API
+// ---------------------------------------------------------------------------
+
+/// `out = x · w` for row-major `x: m x k`, `w: k x n`.  Dispatches to
+/// the blocked microkernel above [`TILE_THRESHOLD`] MACs, the scalar
+/// loops below it; both produce bitwise-identical results.
 pub fn matmul(x: &[f32], w: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
     assert_eq!(x.len(), m * k, "matmul: x shape");
     assert_eq!(w.len(), k * n, "matmul: w shape");
+    if m * k * n < TILE_THRESHOLD {
+        return matmul_scalar(x, w, m, k, n);
+    }
+    matmul_ex(x, w, m, k, n).0
+}
+
+/// [`matmul`] through the blocked kernel unconditionally, returning the
+/// call's [`BlockSparsity`] summary alongside the product.
+pub fn matmul_ex(x: &[f32], w: &[f32], m: usize, k: usize, n: usize) -> (Vec<f32>, BlockSparsity) {
+    assert_eq!(x.len(), m * k, "matmul: x shape");
+    assert_eq!(w.len(), k * n, "matmul: w shape");
+    gemm_blocked(
+        OperandView { data: x, ld: k, trans: false },
+        OperandView { data: w, ld: n, trans: false },
+        m,
+        n,
+        k,
+        None,
+    )
+}
+
+/// [`matmul_ex`] with a forced worker count (determinism tests pin
+/// serial vs parallel without racing on `ACCELTRAN_THREADS`).
+#[doc(hidden)]
+pub fn matmul_ex_threads(
+    x: &[f32],
+    w: &[f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    workers: usize,
+) -> (Vec<f32>, BlockSparsity) {
+    assert_eq!(x.len(), m * k, "matmul: x shape");
+    assert_eq!(w.len(), k * n, "matmul: w shape");
+    gemm_blocked(
+        OperandView { data: x, ld: k, trans: false },
+        OperandView { data: w, ld: n, trans: false },
+        m,
+        n,
+        k,
+        Some(workers),
+    )
+}
+
+/// `out = x · wᵀ` for `x: m x n`, `w: k x n`; result is `m x k`.
+/// (Backward pass: `dX = dY · Wᵀ`; also attention scores `Q · Kᵀ`.)
+pub fn matmul_nt(x: &[f32], w: &[f32], m: usize, n: usize, k: usize) -> Vec<f32> {
+    assert_eq!(x.len(), m * n, "matmul_nt: x shape");
+    assert_eq!(w.len(), k * n, "matmul_nt: w shape");
+    if m * n * k < TILE_THRESHOLD {
+        return matmul_nt_scalar(x, w, m, n, k);
+    }
+    matmul_nt_ex(x, w, m, n, k).0
+}
+
+/// [`matmul_nt`] through the blocked kernel unconditionally, with the
+/// call's [`BlockSparsity`] summary.
+pub fn matmul_nt_ex(
+    x: &[f32],
+    w: &[f32],
+    m: usize,
+    n: usize,
+    k: usize,
+) -> (Vec<f32>, BlockSparsity) {
+    assert_eq!(x.len(), m * n, "matmul_nt: x shape");
+    assert_eq!(w.len(), k * n, "matmul_nt: w shape");
+    gemm_blocked(
+        OperandView { data: x, ld: n, trans: false },
+        OperandView { data: w, ld: n, trans: true },
+        m,
+        k,
+        n,
+        None,
+    )
+}
+
+/// [`matmul_nt_ex`] with a forced worker count (determinism tests).
+#[doc(hidden)]
+pub fn matmul_nt_ex_threads(
+    x: &[f32],
+    w: &[f32],
+    m: usize,
+    n: usize,
+    k: usize,
+    workers: usize,
+) -> (Vec<f32>, BlockSparsity) {
+    assert_eq!(x.len(), m * n, "matmul_nt: x shape");
+    assert_eq!(w.len(), k * n, "matmul_nt: w shape");
+    gemm_blocked(
+        OperandView { data: x, ld: n, trans: false },
+        OperandView { data: w, ld: n, trans: true },
+        m,
+        k,
+        n,
+        Some(workers),
+    )
+}
+
+/// `out = xᵀ · y` for `x: m x k`, `y: m x n`; result is `k x n`.
+/// (Backward pass: `dW = Xᵀ · dY`.)
+pub fn matmul_tn(x: &[f32], y: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+    assert_eq!(x.len(), m * k, "matmul_tn: x shape");
+    assert_eq!(y.len(), m * n, "matmul_tn: y shape");
+    if m * k * n < TILE_THRESHOLD {
+        return matmul_tn_scalar(x, y, m, k, n);
+    }
+    matmul_tn_ex(x, y, m, k, n).0
+}
+
+/// [`matmul_tn`] through the blocked kernel unconditionally, with the
+/// call's [`BlockSparsity`] summary (the broadcast operand here is
+/// `xᵀ`, so tile sparsity tracks zero *columns* of `x`).
+pub fn matmul_tn_ex(
+    x: &[f32],
+    y: &[f32],
+    m: usize,
+    k: usize,
+    n: usize,
+) -> (Vec<f32>, BlockSparsity) {
+    assert_eq!(x.len(), m * k, "matmul_tn: x shape");
+    assert_eq!(y.len(), m * n, "matmul_tn: y shape");
+    gemm_blocked(
+        OperandView { data: x, ld: k, trans: true },
+        OperandView { data: y, ld: n, trans: false },
+        k,
+        n,
+        m,
+        None,
+    )
+}
+
+/// [`matmul_tn_ex`] with a forced worker count (determinism tests).
+#[doc(hidden)]
+pub fn matmul_tn_ex_threads(
+    x: &[f32],
+    y: &[f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    workers: usize,
+) -> (Vec<f32>, BlockSparsity) {
+    assert_eq!(x.len(), m * k, "matmul_tn: x shape");
+    assert_eq!(y.len(), m * n, "matmul_tn: y shape");
+    gemm_blocked(
+        OperandView { data: x, ld: k, trans: true },
+        OperandView { data: y, ld: n, trans: false },
+        k,
+        n,
+        m,
+        Some(workers),
+    )
+}
+
+// ---------------------------------------------------------------------------
+// Scalar reference kernels (the pre-rewrite implementation, kept as the
+// bitwise baseline for tests and the "pre" row of BENCH_gemm.json)
+// ---------------------------------------------------------------------------
+
+/// The original scalar `matmul` (per-element zero skip + row-chunk
+/// threading).  Bitwise identical to the blocked kernel for finite
+/// inputs; kept public as the property-test baseline and the "pre"
+/// kernel in `benches/perf_hotpath.rs`.
+pub fn matmul_scalar(x: &[f32], w: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+    assert_eq!(x.len(), m * k, "matmul: x shape");
+    assert_eq!(w.len(), k * n, "matmul: w shape");
     let mut out = vec![0.0f32; m * n];
+    if m == 0 || k == 0 || n == 0 {
+        return out;
+    }
     let workers = if m * k * n >= PAR_THRESHOLD { worker_count() } else { 1 };
     if workers <= 1 || m < 2 * workers {
         matmul_rows(x, w, &mut out, k, n);
@@ -71,12 +640,14 @@ fn matmul_rows(x: &[f32], w: &[f32], out: &mut [f32], k: usize, n: usize) {
     }
 }
 
-/// `out = x · wᵀ` for `x: m x n`, `w: k x n`; result is `m x k`.
-/// (Backward pass: `dX = dY · Wᵀ`; also attention scores `Q · Kᵀ`.)
-pub fn matmul_nt(x: &[f32], w: &[f32], m: usize, n: usize, k: usize) -> Vec<f32> {
+/// The original scalar `matmul_nt` (dense dot-product loop).
+pub fn matmul_nt_scalar(x: &[f32], w: &[f32], m: usize, n: usize, k: usize) -> Vec<f32> {
     assert_eq!(x.len(), m * n, "matmul_nt: x shape");
     assert_eq!(w.len(), k * n, "matmul_nt: w shape");
     let mut out = vec![0.0f32; m * k];
+    if m == 0 || n == 0 || k == 0 {
+        return out;
+    }
     let workers = if m * n * k >= PAR_THRESHOLD { worker_count() } else { 1 };
     if workers <= 1 || m < 2 * workers {
         matmul_nt_rows(x, w, &mut out, n, k);
@@ -104,12 +675,15 @@ fn matmul_nt_rows(x: &[f32], w: &[f32], out: &mut [f32], n: usize, k: usize) {
     }
 }
 
-/// `out = xᵀ · y` for `x: m x k`, `y: m x n`; result is `k x n`.
-/// (Backward pass: `dW = Xᵀ · dY`.)
-pub fn matmul_tn(x: &[f32], y: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+/// The original scalar `matmul_tn` (per-element zero skip, output rows
+/// split across threads).
+pub fn matmul_tn_scalar(x: &[f32], y: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
     assert_eq!(x.len(), m * k, "matmul_tn: x shape");
     assert_eq!(y.len(), m * n, "matmul_tn: y shape");
     let mut out = vec![0.0f32; k * n];
+    if m == 0 || k == 0 || n == 0 {
+        return out;
+    }
     let workers = if m * k * n >= PAR_THRESHOLD { worker_count() } else { 1 };
     if workers <= 1 || k < 2 * workers {
         matmul_tn_cols(x, y, &mut out, m, k, n, 0, k);
@@ -344,6 +918,11 @@ mod tests {
         let x = [1.0, 2.0, 3.0, 4.0];
         let w = [5.0, 6.0, 7.0, 8.0];
         assert_close(&matmul(&x, &w, 2, 2, 2), &[19.0, 22.0, 43.0, 50.0], 1e-6);
+        let (blocked, stats) = matmul_ex(&x, &w, 2, 2, 2);
+        assert_close(&blocked, &[19.0, 22.0, 43.0, 50.0], 1e-6);
+        assert_eq!(stats.tiles, 1);
+        assert_eq!(stats.zero_tiles, 0);
+        assert_eq!(stats.macs, 8);
     }
 
     #[test]
@@ -362,6 +941,7 @@ mod tests {
             }
         }
         assert_close(&matmul_nt(&y, &w, m, n, k), &matmul(&y, &wt, m, n, k), 1e-4);
+        assert_close(&matmul_nt_ex(&y, &w, m, n, k).0, &matmul(&y, &wt, m, n, k), 1e-4);
 
         // tn: xᵀ · y should equal matmul against the materialized xᵀ.
         let mut xt = vec![0.0f32; k * m];
@@ -371,6 +951,7 @@ mod tests {
             }
         }
         assert_close(&matmul_tn(&x, &y, m, k, n), &matmul(&xt, &y, k, m, n), 1e-4);
+        assert_close(&matmul_tn_ex(&x, &y, m, k, n).0, &matmul(&xt, &y, k, m, n), 1e-4);
     }
 
     #[test]
@@ -384,6 +965,72 @@ mod tests {
         let mut serial = vec![0.0f32; m * n];
         matmul_rows(&x, &w, &mut serial, k, n);
         assert_eq!(par, serial, "row-chunked parallel GEMM must be bitwise exact");
+    }
+
+    #[test]
+    fn blocked_matches_scalar_bitwise_across_block_edges() {
+        // shapes straddling MR/NR/KC/NC boundaries on purpose
+        let mut rng = crate::util::rng::Rng::new(41);
+        for &(m, k, n) in &[(1, 1, 1), (5, 3, 17), (4, 128, 16), (9, 129, 31), (33, 260, 19)] {
+            let x = rng.normal_vec(m * k, 1.0);
+            let w = rng.normal_vec(k * n, 1.0);
+            let scalar = matmul_scalar(&x, &w, m, k, n);
+            let (blocked, stats) = matmul_ex(&x, &w, m, k, n);
+            assert_eq!(blocked, scalar, "({m},{k},{n})");
+            assert_eq!(stats.macs, (m * k * n) as u64);
+            assert_eq!(stats.elems, (m * k) as u64);
+        }
+    }
+
+    #[test]
+    fn zero_tiles_are_skipped_and_counted() {
+        // rows [0, 8) zeroed: with MR = 4 that is the first two row tiles
+        // of every depth block
+        let (m, k, n) = (12, 200, 24);
+        let mut rng = crate::util::rng::Rng::new(42);
+        let mut x = rng.normal_vec(m * k, 1.0);
+        for v in x[..8 * k].iter_mut() {
+            *v = 0.0;
+        }
+        let w = rng.normal_vec(k * n, 1.0);
+        let scalar = matmul_scalar(&x, &w, m, k, n);
+        let (blocked, stats) = matmul_ex(&x, &w, m, k, n);
+        assert_eq!(blocked, scalar, "tile skipping must not change the result");
+        // 3 row tiles x 2 depth blocks (200 = 128 + 72); tiles over rows
+        // 0-3 and 4-7 are zero in both depth blocks
+        assert_eq!(stats.tiles, 6);
+        assert_eq!(stats.zero_tiles, 4);
+        assert_eq!(stats.tile_skipped_macs, (8 * k * n) as u64);
+        assert!((stats.effectual_tile_fraction() - 1.0 / 3.0).abs() < 1e-12);
+        assert!(stats.effectual_mac_fraction() < 0.4);
+    }
+
+    #[test]
+    fn stats_accumulator_aggregates_calls() {
+        // Delta-based and >=, not ==: the accumulator is process-global
+        // and other tests in this binary run concurrently (none of them
+        // reset it, so counters only grow under our feet).
+        let mut rng = crate::util::rng::Rng::new(43);
+        let x = rng.normal_vec(8 * 40, 1.0);
+        let w = rng.normal_vec(40 * 8, 1.0);
+        let before = gemm_stats_snapshot();
+        let (_, a) = matmul_ex(&x, &w, 8, 40, 8);
+        let (_, b) = matmul_ex(&x, &w, 8, 40, 8);
+        let after = gemm_stats_snapshot();
+        assert!(after.tiles >= before.tiles + a.tiles + b.tiles);
+        assert!(after.macs >= before.macs + a.macs + b.macs);
+        assert!(after.elems >= before.elems + a.elems + b.elems);
+        assert_eq!(a.macs, 8 * 40 * 8);
+        assert_eq!(a, b, "identical calls produce identical summaries");
+    }
+
+    #[test]
+    fn degenerate_dims_return_zeros() {
+        assert!(matmul(&[], &[], 0, 0, 0).is_empty());
+        assert_eq!(matmul(&[], &[], 3, 0, 2), vec![0.0; 6]);
+        assert_eq!(matmul_ex(&[], &[], 3, 0, 2).0, vec![0.0; 6]);
+        assert_eq!(matmul_nt_ex(&[], &[1.0, 2.0], 0, 2, 1).0, Vec::<f32>::new());
+        assert_eq!(matmul_tn_ex(&[], &[], 0, 2, 3).0, vec![0.0; 6]);
     }
 
     #[test]

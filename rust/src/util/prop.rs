@@ -50,6 +50,20 @@ impl Gen {
     }
 }
 
+/// Case-count knob: returns `ACCELTRAN_PROPTEST_CASES` when set (CI runs
+/// property suites at elevated counts), else `default`.  Zero or
+/// unparsable values fall back to the default.
+pub fn cases(default: usize) -> usize {
+    if let Ok(v) = std::env::var("ACCELTRAN_PROPTEST_CASES") {
+        if let Ok(n) = v.parse::<usize>() {
+            if n > 0 {
+                return n;
+            }
+        }
+    }
+    default
+}
+
 /// Run `cases` property checks.  The property panics (e.g. via `assert!`)
 /// to signal failure; this wrapper enriches the panic with replay info.
 pub fn check<F: FnMut(&mut Gen)>(seed: u64, cases: usize, mut property: F) {

@@ -8,11 +8,16 @@
 use acceltran::coordinator::capture::capture_trace;
 use acceltran::model::TransformerConfig;
 use acceltran::nlp::sentiment::SentimentTask;
+use acceltran::pruning::dynatran_prune_inplace;
+use acceltran::runtime::tensor::{
+    matmul_ex_threads, matmul_nt_ex_threads, matmul_scalar, matmul_tn_ex_threads,
+};
 use acceltran::runtime::{ParamStore, Runtime};
 use acceltran::sim::engine::simulate_with;
 use acceltran::sim::scheduler::Policy;
 use acceltran::sim::{AcceleratorConfig, SimResult, SparsitySource};
 use acceltran::trace::SparsityTrace;
+use acceltran::util::rng::Rng;
 
 fn tiny_model() -> TransformerConfig {
     TransformerConfig {
@@ -52,6 +57,59 @@ fn assert_results_identical(a: &SimResult, b: &SimResult) {
     ] {
         assert_eq!(x.to_bits(), y.to_bits(), "{x} vs {y}");
     }
+}
+
+/// Kernel-level pin: the blocked GEMM must be bit-identical serial vs
+/// parallel (the `_ex_threads` hooks force the worker count without
+/// racing on `ACCELTRAN_THREADS`, which other tests in this process may
+/// read) and across reruns, for all three variants — the
+/// by-construction guarantee from DESIGN.md "Host microkernel",
+/// checked rather than trusted.
+#[test]
+fn blocked_gemm_is_bitwise_thread_count_invariant() {
+    let mut rng = Rng::new(90);
+    // big enough that 4 workers actually get multiple MR-chunks each
+    let (m, k, n) = (67, 190, 53);
+    let x = rng.normal_vec(m * k, 1.0);
+    let w = rng.normal_vec(k * n, 1.0);
+    let y = rng.normal_vec(m * n, 1.0);
+
+    let (mm1, s1) = matmul_ex_threads(&x, &w, m, k, n, 1);
+    let (mm4, s4) = matmul_ex_threads(&x, &w, m, k, n, 4);
+    assert_eq!(mm1, mm4, "matmul: 1 vs 4 workers");
+    assert_eq!(s1, s4, "matmul: BlockSparsity must not depend on worker count");
+    let (rerun, _) = matmul_ex_threads(&x, &w, m, k, n, 4);
+    assert_eq!(mm4, rerun, "matmul: rerun vs rerun");
+
+    let (nt1, t1) = matmul_nt_ex_threads(&y, &w, m, n, k, 1);
+    let (nt4, t4) = matmul_nt_ex_threads(&y, &w, m, n, k, 4);
+    assert_eq!(nt1, nt4, "matmul_nt: 1 vs 4 workers");
+    assert_eq!(t1, t4, "matmul_nt: stats invariant");
+
+    let (tn1, u1) = matmul_tn_ex_threads(&x, &y, m, k, n, 1);
+    let (tn4, u4) = matmul_tn_ex_threads(&x, &y, m, k, n, 4);
+    assert_eq!(tn1, tn4, "matmul_tn: 1 vs 4 workers");
+    assert_eq!(u1, u4, "matmul_tn: stats invariant");
+}
+
+/// Regression pin from the kernel rewrite: a DynaTran-pruned activation
+/// through the tiled kernel (serial and parallel) matches the original
+/// un-tiled scalar kernel bit-for-bit — tile skipping over pruned zeros
+/// is an exact no-op on the result.
+#[test]
+fn pruned_activation_tiled_matches_untiled_bitwise() {
+    let mut rng = Rng::new(91);
+    let (m, k, n) = (48, 256, 64);
+    let mut x = rng.normal_vec(m * k, 0.05);
+    let w = rng.normal_vec(k * n, 1.0);
+    dynatran_prune_inplace(&mut x, 0.04);
+    let untiled = matmul_scalar(&x, &w, m, k, n);
+    let (tiled_serial, stats) = matmul_ex_threads(&x, &w, m, k, n, 1);
+    let (tiled_par, _) = matmul_ex_threads(&x, &w, m, k, n, 4);
+    assert_eq!(tiled_serial, untiled, "tiled(1) vs original scalar");
+    assert_eq!(tiled_par, untiled, "tiled(4) vs original scalar");
+    // sanity: the pruning actually produced element sparsity to skip
+    assert!(stats.effectual_mac_fraction() < 0.8, "fixture should be sparse");
 }
 
 #[test]

@@ -1,0 +1,345 @@
+//! Property-test oracle suite pinning the block-sparse tiled GEMM
+//! microkernel (`runtime::tensor`, DESIGN.md "Host microkernel").
+//!
+//! Three layers of defense:
+//!
+//! 1. **Value correctness** — every variant (`matmul`, `matmul_nt`,
+//!    `matmul_tn`), both dispatch paths (scalar and blocked), against a
+//!    trivially-correct f64 triple-loop oracle kept in this file, over
+//!    randomized shapes that straddle every block boundary (MR=4,
+//!    NR=16, KC=128, NC=256), plus 1x1 and degenerate 0-dim edges.
+//! 2. **Bitwise agreement** — the blocked kernel must return *exactly*
+//!    (`assert_eq!` on f32 bits) what the pre-rewrite scalar kernels
+//!    return, including on DynaTran-pruned and structured-sparse
+//!    inputs where whole tiles are skipped.
+//! 3. **Stats invariants** — `BlockSparsity` counts must be internally
+//!    consistent and agree with `pruning::TileMap`, the mask ->
+//!    tile-bitmap handoff.
+//!
+//! Case counts scale with `ACCELTRAN_PROPTEST_CASES` (CI tier1 runs the
+//! suite elevated); failures print a per-case replay seed.
+
+use acceltran::pruning::{dynatran_prune_inplace, dynatran_prune_tiled, TileMap};
+use acceltran::runtime::tensor::{
+    matmul, matmul_ex, matmul_nt, matmul_nt_ex, matmul_nt_scalar, matmul_scalar, matmul_tn,
+    matmul_tn_ex, matmul_tn_scalar, BlockSparsity, GEMM_KC, GEMM_MR,
+};
+use acceltran::util::prop::{self, Gen};
+
+// ---------------------------------------------------------------------------
+// The oracle: f64 triple loops, no blocking, no skipping, no threads.
+// ---------------------------------------------------------------------------
+
+fn oracle_mm(x: &[f32], w: &[f32], m: usize, k: usize, n: usize) -> Vec<f64> {
+    let mut out = vec![0.0f64; m * n];
+    for i in 0..m {
+        for kk in 0..k {
+            let a = x[i * k + kk] as f64;
+            for j in 0..n {
+                out[i * n + j] += a * w[kk * n + j] as f64;
+            }
+        }
+    }
+    out
+}
+
+fn oracle_nt(x: &[f32], w: &[f32], m: usize, n: usize, k: usize) -> Vec<f64> {
+    let mut out = vec![0.0f64; m * k];
+    for i in 0..m {
+        for kk in 0..k {
+            let mut acc = 0.0f64;
+            for j in 0..n {
+                acc += x[i * n + j] as f64 * w[kk * n + j] as f64;
+            }
+            out[i * k + kk] = acc;
+        }
+    }
+    out
+}
+
+fn oracle_tn(x: &[f32], y: &[f32], m: usize, k: usize, n: usize) -> Vec<f64> {
+    let mut out = vec![0.0f64; k * n];
+    for i in 0..m {
+        for kk in 0..k {
+            let a = x[i * k + kk] as f64;
+            for j in 0..n {
+                out[kk * n + j] += a * y[i * n + j] as f64;
+            }
+        }
+    }
+    out
+}
+
+/// |got - want| <= 1e-4 * max(|want|, 1): absolute near zero, relative
+/// away from it — wide enough for f32 resummation error at depth <= 320,
+/// tight enough to catch any indexing or packing bug.
+fn assert_close_oracle(got: &[f32], want: &[f64], what: &str) {
+    assert_eq!(got.len(), want.len(), "{what}: length");
+    for (i, (&g, &w)) in got.iter().zip(want).enumerate() {
+        let tol = 1e-4 * w.abs().max(1.0);
+        assert!(
+            (g as f64 - w).abs() <= tol,
+            "{what}[{i}]: got {g}, oracle {w} (tol {tol})"
+        );
+    }
+}
+
+/// Random dimension: mostly small (hits 0/1 and ragged edges), sometimes
+/// large enough to cross KC=128 / NC=256 and the tiled-dispatch and
+/// parallel thresholds.
+fn dim(g: &mut Gen) -> usize {
+    if g.bool() {
+        g.usize_in(0, 20)
+    } else {
+        g.usize_in(1, 160)
+    }
+}
+
+/// Random operand: dense normals, near-DynaTran-sparse, or all-zero.
+fn operand(g: &mut Gen, len: usize) -> Vec<f32> {
+    match g.usize_in(0, 3) {
+        0 => g.normal_vec(len, 1.0),
+        1 | 2 => {
+            let mut v = g.normal_vec(len, 0.05);
+            dynatran_prune_inplace(&mut v, 0.04);
+            v
+        }
+        _ => vec![0.0; len],
+    }
+}
+
+fn check_stats(s: &BlockSparsity, rows: usize, depth: usize, cols: usize, what: &str) {
+    assert_eq!(s.macs, (rows * depth * cols) as u64, "{what}: macs");
+    assert_eq!(s.elems, (rows * depth) as u64, "{what}: elems");
+    let row_tiles = (rows + GEMM_MR - 1) / GEMM_MR;
+    let depth_blocks = (depth + GEMM_KC - 1) / GEMM_KC;
+    assert_eq!(s.tiles, (row_tiles * depth_blocks) as u64, "{what}: tiles");
+    assert!(s.zero_tiles <= s.tiles, "{what}: zero_tiles <= tiles");
+    assert!(s.zero_elems <= s.elems, "{what}: zero_elems <= elems");
+    assert!(s.tile_skipped_macs <= s.macs, "{what}: skipped <= macs");
+    for f in [
+        s.effectual_tile_fraction(),
+        s.effectual_mac_fraction(),
+        s.tile_skipped_mac_fraction(),
+    ] {
+        assert!((0.0..=1.0).contains(&f), "{what}: fraction {f} out of range");
+    }
+    // tile skipping can never elide more than element granularity sees
+    assert!(
+        s.tile_skipped_mac_fraction() <= 1.0 - s.effectual_mac_fraction() + 1e-12,
+        "{what}: tile skipping outran element sparsity"
+    );
+}
+
+// ---------------------------------------------------------------------------
+// Property: all variants, randomized shapes, oracle + bitwise + stats.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn matmul_matches_oracle_and_scalar_bitwise() {
+    prop::check(0xACCE1, prop::cases(64), |g| {
+        let (m, k, n) = (dim(g), dim(g), dim(g));
+        let x = operand(g, m * k);
+        let w = operand(g, k * n);
+        let want = oracle_mm(&x, &w, m, k, n);
+        let scalar = matmul_scalar(&x, &w, m, k, n);
+        let dispatched = matmul(&x, &w, m, k, n);
+        let (blocked, stats) = matmul_ex(&x, &w, m, k, n);
+        assert_close_oracle(&scalar, &want, "matmul_scalar");
+        assert_close_oracle(&blocked, &want, "matmul_ex");
+        assert_eq!(blocked, scalar, "blocked vs scalar must be bitwise identical");
+        assert_eq!(dispatched, scalar, "dispatch must be bitwise transparent");
+        if m > 0 && k > 0 && n > 0 {
+            check_stats(&stats, m, k, n, "matmul_ex");
+        }
+    });
+}
+
+#[test]
+fn matmul_nt_matches_oracle_and_scalar_bitwise() {
+    prop::check(0xACCE2, prop::cases(64), |g| {
+        let (m, n, k) = (dim(g), dim(g), dim(g));
+        let x = operand(g, m * n);
+        let w = operand(g, k * n);
+        let want = oracle_nt(&x, &w, m, n, k);
+        let scalar = matmul_nt_scalar(&x, &w, m, n, k);
+        let dispatched = matmul_nt(&x, &w, m, n, k);
+        let (blocked, stats) = matmul_nt_ex(&x, &w, m, n, k);
+        assert_close_oracle(&scalar, &want, "matmul_nt_scalar");
+        assert_close_oracle(&blocked, &want, "matmul_nt_ex");
+        assert_eq!(blocked, scalar, "nt: blocked vs scalar bitwise");
+        assert_eq!(dispatched, scalar, "nt: dispatch bitwise");
+        if m > 0 && n > 0 && k > 0 {
+            // nt reduces over n: broadcast operand is x (m rows, depth n)
+            check_stats(&stats, m, n, k, "matmul_nt_ex");
+        }
+    });
+}
+
+#[test]
+fn matmul_tn_matches_oracle_and_scalar_bitwise() {
+    prop::check(0xACCE3, prop::cases(64), |g| {
+        let (m, k, n) = (dim(g), dim(g), dim(g));
+        let x = operand(g, m * k);
+        let y = operand(g, m * n);
+        let want = oracle_tn(&x, &y, m, k, n);
+        let scalar = matmul_tn_scalar(&x, &y, m, k, n);
+        let dispatched = matmul_tn(&x, &y, m, k, n);
+        let (blocked, stats) = matmul_tn_ex(&x, &y, m, k, n);
+        assert_close_oracle(&scalar, &want, "matmul_tn_scalar");
+        assert_close_oracle(&blocked, &want, "matmul_tn_ex");
+        assert_eq!(blocked, scalar, "tn: blocked vs scalar bitwise");
+        assert_eq!(dispatched, scalar, "tn: dispatch bitwise");
+        if m > 0 && k > 0 && n > 0 {
+            // tn's broadcast operand is x-transposed: k rows, depth m
+            check_stats(&stats, k, m, n, "matmul_tn_ex");
+        }
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Edges the random shapes might miss on a short run.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn one_by_one_and_degenerate_dims() {
+    // 1x1 x 1x1
+    let (y, s) = matmul_ex(&[3.0], &[4.0], 1, 1, 1);
+    assert_eq!(y, vec![12.0]);
+    assert_eq!((s.tiles, s.zero_tiles, s.macs), (1, 0, 1));
+    assert_eq!(matmul_nt_ex(&[3.0], &[4.0], 1, 1, 1).0, vec![12.0]);
+    assert_eq!(matmul_tn_ex(&[3.0], &[4.0], 1, 1, 1).0, vec![12.0]);
+
+    // every way a dimension can be zero, all variants
+    for &(m, k, n) in &[(0, 3, 4), (3, 0, 4), (3, 4, 0), (0, 0, 0)] {
+        let x = vec![1.0f32; m * k];
+        let w = vec![1.0f32; k * n];
+        let (out, stats) = matmul_ex(&x, &w, m, k, n);
+        assert_eq!(out, vec![0.0; m * n], "({m},{k},{n})");
+        assert_eq!(out, matmul_scalar(&x, &w, m, k, n));
+        assert_eq!(out, matmul(&x, &w, m, k, n));
+        assert_eq!(stats, BlockSparsity::default(), "empty GEMM records nothing");
+        // nt: x is m x n here, w is k x n, out m x k — reuse shapes
+        let xnt = vec![1.0f32; m * n];
+        let wnt = vec![1.0f32; k * n];
+        assert_eq!(matmul_nt_ex(&xnt, &wnt, m, n, k).0, vec![0.0; m * k]);
+        assert_eq!(matmul_nt_scalar(&xnt, &wnt, m, n, k), vec![0.0; m * k]);
+        let ytn = vec![1.0f32; m * n];
+        assert_eq!(matmul_tn_ex(&x, &ytn, m, k, n).0, vec![0.0; k * n]);
+        assert_eq!(matmul_tn_scalar(&x, &ytn, m, k, n), vec![0.0; k * n]);
+    }
+}
+
+/// Structured sparsity: zero row blocks, zero depth blocks, fully zero,
+/// fully dense — the block-skip path must return exactly what the dense
+/// path returns, with the expected tile accounting.
+#[test]
+fn structured_sparsity_block_skip_is_exact() {
+    let mut g = Gen::replay(0x515);
+    let (m, k, n) = (16, 256, 48); // 4 row tiles x 2 depth blocks
+    let w = g.normal_vec(k * n, 1.0);
+
+    // (a) MR-aligned zero rows: rows 4..12 zeroed => 2 of 4 row tiles skip
+    let mut x = g.normal_vec(m * k, 1.0);
+    for v in x[4 * k..12 * k].iter_mut() {
+        *v = 0.0;
+    }
+    let (out, s) = matmul_ex(&x, &w, m, k, n);
+    assert_eq!(out, matmul_scalar(&x, &w, m, k, n), "zero rows: bitwise");
+    assert_eq!(s.tiles, 8);
+    assert_eq!(s.zero_tiles, 4);
+    assert_eq!(s.tile_skipped_macs, (8 * k * n) as u64);
+    assert!((s.effectual_tile_fraction() - 0.5).abs() < 1e-12);
+
+    // (b) a zero depth block: columns 0..128 of x zeroed in every row
+    let mut x = g.normal_vec(m * k, 1.0);
+    for r in 0..m {
+        for v in x[r * k..r * k + GEMM_KC].iter_mut() {
+            *v = 0.0;
+        }
+    }
+    let (out, s) = matmul_ex(&x, &w, m, k, n);
+    assert_eq!(out, matmul_scalar(&x, &w, m, k, n), "zero depth block: bitwise");
+    assert_eq!(s.zero_tiles, 4, "one depth block zero across 4 row tiles");
+
+    // (c) fully zero activation: everything skips, result is exactly 0
+    let x = vec![0.0f32; m * k];
+    let (out, s) = matmul_ex(&x, &w, m, k, n);
+    assert_eq!(out, vec![0.0; m * n]);
+    assert_eq!(out, matmul_scalar(&x, &w, m, k, n), "fully zero: bitwise");
+    assert_eq!(s.zero_tiles, s.tiles);
+    assert_eq!(s.effectual_tile_fraction(), 0.0);
+    assert_eq!(s.tile_skipped_macs, s.macs);
+
+    // (d) fully dense nonzero: nothing skips
+    let x: Vec<f32> = (0..m * k).map(|i| 1.0 + (i % 7) as f32).collect();
+    let (out, s) = matmul_ex(&x, &w, m, k, n);
+    assert_eq!(out, matmul_scalar(&x, &w, m, k, n), "dense: bitwise");
+    assert_eq!(s.zero_tiles, 0);
+    assert_eq!(s.tile_skipped_macs, 0);
+    assert_eq!(s.effectual_tile_fraction(), 1.0);
+}
+
+// ---------------------------------------------------------------------------
+// DynaTran integration: pruned activations through the tiled kernel.
+// ---------------------------------------------------------------------------
+
+/// The end-to-end sparsity contract: prune with the shared DynaTran
+/// primitive, multiply with the tiled kernel — bitwise equal to the
+/// scalar kernel on the same pruned matrix, and the tile accounting
+/// agrees exactly with the `TileMap` handoff.
+#[test]
+fn dynatran_pruned_tiled_matches_scalar_and_tile_map() {
+    prop::check(0xD1A, prop::cases(32), |g| {
+        let m = g.usize_in(1, 24);
+        let k = g.usize_in(1, 300);
+        let n = g.usize_in(1, 40);
+        let tau = *g.pick(&[0.02f32, 0.04, 0.08, 1.0]);
+        let mut x = g.normal_vec(m * k, 0.05);
+        let w = g.normal_vec(k * n, 1.0);
+        let (pruned_a, map) = {
+            let mut a = x.clone();
+            let r = dynatran_prune_tiled(&mut a, tau, m, k);
+            (a, r.1)
+        };
+        dynatran_prune_inplace(&mut x, tau);
+        assert_eq!(x, pruned_a, "fused and plain prune agree");
+
+        let (blocked, stats) = matmul_ex(&x, &w, m, k, n);
+        assert_eq!(
+            blocked,
+            matmul_scalar(&x, &w, m, k, n),
+            "pruned activation: tiled vs scalar bitwise (tau={tau})"
+        );
+        assert_eq!(
+            stats.zero_tiles as usize,
+            map.zero_tiles(),
+            "kernel zero-tile count vs TileMap handoff (tau={tau})"
+        );
+        assert_eq!(stats.tiles as usize, map.tiles());
+        assert_eq!(map.row_tiles, (m + GEMM_MR - 1) / GEMM_MR);
+        assert_eq!(map.depth_blocks, (k + GEMM_KC - 1) / GEMM_KC);
+        let tf = map.effectual_tile_fraction();
+        assert!(
+            (stats.effectual_tile_fraction() - tf).abs() < 1e-12,
+            "effectual-tile fraction: kernel vs TileMap"
+        );
+        if tau >= 1.0 {
+            // tau=1.0 prunes every normal(0.05) draw: whole matrix zero
+            assert_eq!(stats.zero_tiles, stats.tiles);
+        }
+    });
+}
+
+/// `TileMap::from_matrix` (rescan) and the fused prune build the same
+/// bitmap the kernel observes — three independent code paths, one truth.
+#[test]
+fn tile_map_rescan_agrees_with_fused_build() {
+    prop::check(0x7117, prop::cases(32), |g| {
+        let rows = g.usize_in(1, 20);
+        let cols = g.usize_in(1, 280);
+        let mut v = g.normal_vec(rows * cols, 0.05);
+        let (_, fused) = dynatran_prune_tiled(&mut v, 0.04, rows, cols);
+        assert_eq!(fused, TileMap::from_matrix(&v, rows, cols));
+    });
+}
