@@ -1,7 +1,10 @@
 //! Serving-throughput sweep: request throughput of the concurrent
 //! serving engine (`coordinator::serve`) at 1 / 2 / 4 workers over the
 //! reference backend — the measurement behind EXPERIMENTS.md §Perf's
-//! serve rows and the PR's ≥2x-at-4-workers acceptance bar.
+//! serve rows and the PR's ≥2x-at-4-workers acceptance bar — plus an
+//! HTTP-path wave over the `serve::net` front-end (2 pools × 2
+//! workers, loopback keep-alive clients) that bounds the transport tax:
+//! HTTP req/s must stay ≥0.8× the in-process 4-worker figure.
 //!
 //! Each worker is pinned to a single intra-op thread
 //! (`ACCELTRAN_THREADS=1`) so the sweep isolates *pool* scaling: without
@@ -9,8 +12,8 @@
 //! cores and the comparison conflates the two parallelism axes.
 //!
 //! Knobs: `ACCELTRAN_SERVE_REQUESTS` (default 256) shrinks the wave;
-//! `ACCELTRAN_BENCH_NO_ASSERT=1` turns the scaling assertion into a
-//! warning (for constrained CI runners).
+//! `ACCELTRAN_BENCH_NO_ASSERT=1` turns the scaling assertions into
+//! warnings (for constrained CI runners).
 //!
 //! Run with: `cargo bench --bench serve_throughput`
 
@@ -20,6 +23,7 @@ use acceltran::coordinator::{ServeConfig, ServePool};
 use acceltran::nlp::sentiment::SentimentTask;
 use acceltran::runtime::tensor::{gemm_stats_reset, gemm_stats_snapshot};
 use acceltran::runtime::{ParamStore, Runtime};
+use acceltran::serve::net::{HttpClient, NetConfig, NetServer};
 use acceltran::util::cli::env_usize;
 use acceltran::util::json::Json;
 
@@ -51,6 +55,42 @@ fn wave(
         report.stats.dispatches,
         report.stats.padded_row_fraction(),
     )
+}
+
+/// One HTTP wave: spread `reqs` across `conns` keep-alive loopback
+/// connections against a running front-end; returns req/s (every
+/// response must be a 200).
+fn http_wave(addr: std::net::SocketAddr, reqs: &[Vec<i32>], conns: usize) -> f64 {
+    let bodies: Vec<String> = reqs
+        .iter()
+        .map(|ids| {
+            let arr: Vec<String> = ids.iter().map(|i| i.to_string()).collect();
+            format!(r#"{{"ids": [{}], "tau": 0.04}}"#, arr.join(","))
+        })
+        .collect();
+    let t0 = Instant::now();
+    let mut handles = Vec::new();
+    for c in 0..conns {
+        let mine: Vec<String> = bodies
+            .iter()
+            .skip(c)
+            .step_by(conns)
+            .cloned()
+            .collect();
+        handles.push(std::thread::spawn(move || {
+            let mut client = HttpClient::connect(addr).unwrap();
+            for body in &mine {
+                let resp = client
+                    .request("POST", "/v1/classify", Some(body.as_bytes()))
+                    .unwrap();
+                assert_eq!(resp.status, 200, "HTTP wave hit {}", resp.status);
+            }
+        }));
+    }
+    for h in handles {
+        h.join().unwrap();
+    }
+    reqs.len() as f64 / t0.elapsed().as_secs_f64()
 }
 
 fn main() {
@@ -129,6 +169,40 @@ fn main() {
         );
     }
 
+    // ---- HTTP-path wave: same total worker count (2 pools x 2
+    // workers = 4), loopback keep-alive clients.  The ratio against
+    // the in-process 4-worker median is the transport tax.
+    println!("\n== HTTP front-end: 2 pools x 2 workers, 8 connections ==");
+    let net_cfg = NetConfig {
+        pools: 2,
+        serve: ServeConfig {
+            workers: 2,
+            slo: Duration::from_millis(10),
+            sim: None,
+        },
+        ..NetConfig::default()
+    };
+    let server = NetServer::start(&rt, &params, &net_cfg).unwrap();
+    let addr = server.addr();
+    // warm-up (connection setup, first dispatches)
+    http_wave(addr, &reqs[..reqs.len().min(64)], 4);
+    let mut http_runs: Vec<f64> =
+        (0..3).map(|_| http_wave(addr, &reqs, 8)).collect();
+    http_runs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let http_rps = http_runs[1];
+    let net_report = server.shutdown().unwrap();
+    let http_ratio = http_rps / rps[2];
+    println!(
+        "http: {http_rps:>9.1} req/s (median of 3) | {:.2}x of in-process \
+         4-worker | {} conns accepted, 0 expected 5xx (got {})",
+        http_ratio, net_report.connections, net_report.server_errors
+    );
+    assert_eq!(net_report.server_errors, 0, "bench load must not 5xx");
+    println!(
+        "| <date> | <commit> | serve_throughput (http, 2 pools x 2w, {n} req) | \
+         {http_rps:.1} req/s | loopback HTTP, ratio {http_ratio:.2}x vs in-process 4w |"
+    );
+
     std::fs::create_dir_all("reports").ok();
     std::fs::write(
         "reports/serve_throughput.json",
@@ -138,6 +212,8 @@ fn main() {
             ("cores", Json::num(cores as f64)),
             ("speedup_2w", Json::num(speedup_2)),
             ("speedup_4w", Json::num(speedup_4)),
+            ("http_rps", Json::num(http_rps)),
+            ("http_ratio_vs_4w", Json::num(http_ratio)),
             ("sweep", Json::arr(report)),
         ])
         .to_string_pretty(),
@@ -159,6 +235,23 @@ fn main() {
     } else if speedup_4 < 2.0 {
         println!(
             "warning: 4-worker speedup {speedup_4:.2}x < 2x \
+             ({cores} logical cpus available)"
+        );
+    }
+
+    // HTTP acceptance bar: the wire must not cost more than 20% of the
+    // in-process throughput at the same worker count.  Same arming rule
+    // as above — loopback client threads also need cores to run on.
+    if cores >= 8 && std::env::var_os("ACCELTRAN_BENCH_NO_ASSERT").is_none() {
+        assert!(
+            http_ratio >= 0.8,
+            "HTTP req/s is {http_ratio:.2}x of in-process 4-worker (< 0.8x) \
+             on a {cores}-logical-cpu host (set ACCELTRAN_BENCH_NO_ASSERT=1 \
+             to downgrade to a warning)"
+        );
+    } else if http_ratio < 0.8 {
+        println!(
+            "warning: HTTP ratio {http_ratio:.2}x < 0.8x \
              ({cores} logical cpus available)"
         );
     }

@@ -1,0 +1,219 @@
+//! HTTP serving scenario / load generator for the `serve::net`
+//! front-end, in two modes:
+//!
+//! * **Hermetic** (default): start the HTTP server in-process on a
+//!   loopback port, fire concurrent keep-alive clients at it, scrape
+//!   `/stats` mid-flight, drain, and print both sides' accounting.
+//!
+//!   `cargo run --release --example http_serve -- [--requests 512]`
+//!
+//! * **External** (`--connect ADDR`): drive an already-running
+//!   `acceltran serve --listen ...` — the CI smoke job uses this.  The
+//!   model shape is discovered from `/healthz`, so the generator works
+//!   against any served model.
+//!
+//!   `cargo run --release --example http_serve -- --connect 127.0.0.1:8080`
+//!
+//! Either way a JSON summary lands at `--out` (default
+//! `reports/http_serve.json`).
+
+use acceltran::runtime::{ParamStore, Runtime};
+use acceltran::serve::net::{HttpClient, NetConfig, NetServer};
+use acceltran::util::cli::Args;
+use acceltran::util::json::Json;
+use acceltran::util::rng::Rng;
+use anyhow::{anyhow, Context, Result};
+use std::time::Instant;
+
+/// Model shape a generator needs to build valid requests.
+struct Shape {
+    seq: usize,
+    vocab: usize,
+}
+
+fn shape_from_healthz(addr: &str) -> Result<Shape> {
+    let mut c = HttpClient::connect(addr)
+        .with_context(|| format!("connecting to {addr}"))?;
+    let (status, body) = c.get("/healthz").context("GET /healthz")?;
+    if status != 200 {
+        return Err(anyhow!("/healthz returned {status}"));
+    }
+    let seq = body
+        .path(&["model", "seq"])
+        .and_then(|v| v.as_usize())
+        .ok_or_else(|| anyhow!("/healthz missing model.seq"))?;
+    let vocab = body
+        .path(&["model", "vocab"])
+        .and_then(|v| v.as_usize())
+        .ok_or_else(|| anyhow!("/healthz missing model.vocab"))?;
+    Ok(Shape { seq, vocab })
+}
+
+fn classify_body(rng: &mut Rng, shape: &Shape, tau: f32) -> Json {
+    let ids: Vec<Json> = (0..shape.seq)
+        .map(|_| Json::num(rng.below(shape.vocab as u64) as f64))
+        .collect();
+    Json::obj(vec![
+        ("ids", Json::arr(ids)),
+        ("tau", Json::num(tau as f64)),
+    ])
+}
+
+/// One client connection's worth of load; returns (ok, failed,
+/// per-request latencies in us).
+fn run_client(
+    addr: String,
+    shape: Shape,
+    n: usize,
+    seed: u64,
+    tau: f32,
+) -> Result<(u64, u64, Vec<u64>)> {
+    let mut rng = Rng::new(seed);
+    let mut client = HttpClient::connect(&addr)?;
+    let mut ok = 0u64;
+    let mut failed = 0u64;
+    let mut lat = Vec::with_capacity(n);
+    for _ in 0..n {
+        let body = classify_body(&mut rng, &shape, tau);
+        let t0 = Instant::now();
+        let (status, resp) = client.post_json("/v1/classify", &body)?;
+        lat.push(t0.elapsed().as_micros() as u64);
+        let has_logits = resp
+            .get("logits")
+            .and_then(|l| l.as_arr())
+            .map(|a| !a.is_empty())
+            .unwrap_or(false);
+        if status == 200 && has_logits {
+            ok += 1;
+        } else {
+            failed += 1;
+        }
+    }
+    Ok((ok, failed, lat))
+}
+
+fn percentile(sorted: &[u64], p: f64) -> u64 {
+    if sorted.is_empty() {
+        return 0;
+    }
+    let idx = ((sorted.len() - 1) as f64 * p / 100.0).round() as usize;
+    sorted[idx]
+}
+
+fn main() -> Result<()> {
+    let args = Args::parse(std::env::args().skip(1), false);
+    let total = args.get_usize("requests", 512);
+    let conns = args.get_usize("conns", 4).max(1);
+    let tau = args.get_f64("tau", 0.04) as f32;
+    let out = args.get_or("out", "reports/http_serve.json").to_string();
+
+    // external mode drives a server someone else owns; hermetic mode
+    // owns one in-process and drains it at the end
+    let (addr, server) = match args.get("connect") {
+        Some(a) => (a.to_string(), None),
+        None => {
+            let rt = Runtime::load_default()?;
+            let params = ParamStore::init(&rt.manifest, 0).params;
+            let cfg = NetConfig {
+                pools: args.get_usize("pools", 2),
+                ..NetConfig::default()
+            };
+            let server = NetServer::start(&rt, &params, &cfg)?;
+            println!(
+                "hermetic server on http://{} ({} pools, '{}' backend)",
+                server.addr(),
+                cfg.pools,
+                rt.backend_name()
+            );
+            (server.addr().to_string(), Some(server))
+        }
+    };
+
+    let shape = shape_from_healthz(&addr)?;
+    println!(
+        "target {addr}: seq={} vocab={} — {total} requests over {conns} \
+         connection(s), tau={tau}",
+        shape.seq, shape.vocab
+    );
+
+    let per_conn = total.div_ceil(conns);
+    let t0 = Instant::now();
+    let mut handles = Vec::new();
+    for c in 0..conns {
+        let addr = addr.clone();
+        let shape = Shape { seq: shape.seq, vocab: shape.vocab };
+        let n = per_conn.min(total - (per_conn * c).min(total));
+        handles.push(std::thread::spawn(move || {
+            run_client(addr, shape, n, 0x9e00 + c as u64, tau)
+        }));
+    }
+    // scrape /stats while the load is in flight — this is the endpoint
+    // an operator would watch
+    let mid_stats = HttpClient::connect(&addr)
+        .and_then(|mut c| c.get("/stats"))
+        .ok();
+    let mut ok = 0u64;
+    let mut failed = 0u64;
+    let mut lat: Vec<u64> = Vec::new();
+    for h in handles {
+        let (o, f, l) = h.join().map_err(|_| anyhow!("client panicked"))??;
+        ok += o;
+        failed += f;
+        lat.extend(l);
+    }
+    let wall = t0.elapsed();
+    lat.sort_unstable();
+    let rps = ok as f64 / wall.as_secs_f64();
+    println!(
+        "{ok} ok / {failed} failed in {:.2}s — {rps:.1} req/s | e2e p50 \
+         {} us p99 {} us",
+        wall.as_secs_f64(),
+        percentile(&lat, 50.0),
+        percentile(&lat, 99.0),
+    );
+    if let Some((_, stats)) = &mid_stats {
+        let dispatched = stats
+            .path(&["merged", "rows_dispatched"])
+            .and_then(|v| v.as_f64())
+            .unwrap_or(0.0);
+        println!("mid-flight /stats: {dispatched} rows dispatched");
+    }
+
+    // final /stats from the server's point of view
+    let (_, final_stats) =
+        HttpClient::connect(&addr).and_then(|mut c| c.get("/stats"))?;
+    let summary = Json::obj(vec![
+        ("target", Json::str(addr.clone())),
+        ("requests", Json::num(total as f64)),
+        ("connections", Json::num(conns as f64)),
+        ("ok", Json::num(ok as f64)),
+        ("failed", Json::num(failed as f64)),
+        ("wall_s", Json::num(wall.as_secs_f64())),
+        ("rps", Json::num(rps)),
+        (
+            "latency_us",
+            Json::obj(vec![
+                ("p50", Json::num(percentile(&lat, 50.0) as f64)),
+                ("p90", Json::num(percentile(&lat, 90.0) as f64)),
+                ("p99", Json::num(percentile(&lat, 99.0) as f64)),
+            ]),
+        ),
+        ("server_stats", final_stats),
+    ]);
+    if let Some(dir) = std::path::Path::new(&out).parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    std::fs::write(&out, summary.to_string_pretty())?;
+    println!("wrote {out}");
+
+    if let Some(server) = server {
+        let report = server.shutdown()?;
+        report.print_summary();
+        assert_eq!(
+            report.pool_reports.iter().map(|r| r.requests).sum::<u64>(),
+            ok,
+            "every 200 must correspond to exactly one served request"
+        );
+    }
+    Ok(())
+}

@@ -19,6 +19,7 @@
 //! tail latency under a trickle of traffic.
 
 use std::collections::VecDeque;
+use std::sync::mpsc;
 use std::time::{Duration, Instant};
 
 use anyhow::Result;
@@ -50,6 +51,12 @@ pub struct Request {
     /// passes this instant the batcher dispatches even an under-filled
     /// batch.
     pub deadline: Instant,
+    /// Synchronous completion channel: when set, the worker that serves
+    /// this request sends the [`Response`] here instead of retaining it
+    /// for the end-of-run collection — the per-request delivery path the
+    /// HTTP front-end ([`crate::serve::net`]) rides, which also keeps a
+    /// long-lived server from accumulating every response in memory.
+    pub reply: Option<mpsc::Sender<Response>>,
 }
 
 /// One completed response.
@@ -261,6 +268,7 @@ impl BatchServer {
             tau,
             enqueued_at,
             deadline: enqueued_at + slo,
+            reply: None,
         });
         self.stats.queue_depth_high_water =
             self.stats.queue_depth_high_water.max(self.queue.len() as u64);
@@ -419,6 +427,7 @@ mod tests {
             tau,
             enqueued_at: now,
             deadline: now,
+            reply: None,
         };
         let reqs = vec![mk(0, 0.05, 1), mk(1, 0.02, 2), mk(2, 0.08, 3)];
         let (ids, tau) = assemble_batch(&reqs, 8, 4);

@@ -33,6 +33,7 @@ pub use batcher::{BatchServer, Request, Response, ServerStats};
 pub use capture::{capture_trace, measured_trace, measured_trace_with};
 pub use eval::{evaluate_accuracy, sweep_dynatran, sweep_topk, EvalReport};
 pub use serve::{
-    LatencyHistogram, ServeConfig, ServePool, ServeReport, ShapeModel, SimInLoop,
+    LatencyHistogram, PoolSnapshot, ServeConfig, ServePool, ServeReport,
+    ShapeModel, SimInLoop,
 };
 pub use trainer::{train, TrainLog};

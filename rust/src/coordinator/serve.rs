@@ -22,8 +22,16 @@
 //!    batches from different workers execute genuinely in parallel.
 //! 4. **Histograms** — per-request queue / compute / end-to-end
 //!    latencies stream into fixed-size log-linear [`LatencyHistogram`]s
-//!    (no allocation on the hot path) and merge at shutdown into one
-//!    [`ServeReport`].
+//!    folded into one shared live accumulator per dispatched batch, so a
+//!    running pool can be observed mid-flight ([`ServePool::snapshot`],
+//!    the HTTP `/stats` data source) and [`ServePool::finish`] merely
+//!    freezes the totals into the final [`ServeReport`].
+//!
+//! Responses are retained for the end-of-run collection by default;
+//! requests submitted with a completion channel
+//! ([`ServePool::submit_with_reply`]) are instead delivered per request
+//! the moment their batch completes — the synchronous path the network
+//! front-end ([`crate::serve::net`]) rides.
 //!
 //! **Sim-in-the-loop** ([`SimInLoop`]): each dispatched batch shape is
 //! additionally costed by the cycle-accurate engine
@@ -36,7 +44,7 @@
 
 use std::collections::{HashMap, VecDeque};
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::{mpsc, Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
@@ -334,23 +342,25 @@ struct QueueState {
     high_water: u64,
 }
 
-struct Shared {
-    state: Mutex<QueueState>,
-    work: Condvar,
-    completed: AtomicU64,
-}
-
-/// Everything one worker accumulated over its lifetime, merged into the
-/// final [`ServeReport`] at shutdown.
+/// Accounting every worker folds into after each dispatched batch (one
+/// short lock per *batch*, not per request), so a live observer — the
+/// HTTP `/stats` endpoint via [`ServePool::snapshot`] — sees current
+/// numbers without waiting for [`ServePool::finish`].
 #[derive(Default)]
-struct WorkerOutput {
+struct LiveAccounting {
     stats: ServerStats,
     queue_h: LatencyHistogram,
     compute_h: LatencyHistogram,
     total_h: LatencyHistogram,
     modeled_h: LatencyHistogram,
     deadline_misses: u64,
-    responses: Vec<Response>,
+}
+
+struct Shared {
+    state: Mutex<QueueState>,
+    work: Condvar,
+    completed: AtomicU64,
+    live: Mutex<LiveAccounting>,
 }
 
 /// The concurrent serving engine: start it over a prototype runtime,
@@ -358,12 +368,14 @@ struct WorkerOutput {
 /// the queue, drain, and collect the merged [`ServeReport`].
 pub struct ServePool {
     shared: Arc<Shared>,
-    workers: Vec<JoinHandle<Result<WorkerOutput>>>,
+    workers: Vec<JoinHandle<Result<Vec<Response>>>>,
     next_id: AtomicU64,
     slo: Duration,
     /// Expected token count per request (the manifest's `seq`), checked
     /// at submit so a malformed request cannot poison a worker's batch.
     seq: usize,
+    vocab: usize,
+    classes: usize,
     started: Instant,
     backend: String,
     sim: Option<Arc<SimCache>>,
@@ -384,6 +396,7 @@ impl ServePool {
             }),
             work: Condvar::new(),
             completed: AtomicU64::new(0),
+            live: Mutex::new(LiveAccounting::default()),
         });
         let sim = cfg.sim.clone().map(|spec| {
             Arc::new(SimCache { spec, shapes: Mutex::new(HashMap::new()) })
@@ -420,10 +433,28 @@ impl ServePool {
             next_id: AtomicU64::new(0),
             slo: cfg.slo,
             seq: proto.manifest.seq,
+            vocab: proto.manifest.vocab,
+            classes: proto.manifest.classes,
             started: Instant::now(),
             backend: proto.backend_name().to_string(),
             sim,
         })
+    }
+
+    /// Token count every request must carry (the manifest's `seq`).
+    pub fn seq(&self) -> usize {
+        self.seq
+    }
+
+    /// Vocabulary size of the served model (valid token ids are
+    /// `0..vocab`).
+    pub fn vocab(&self) -> usize {
+        self.vocab
+    }
+
+    /// Logit count per request (`Response::logits.len()`).
+    pub fn classes(&self) -> usize {
+        self.classes
     }
 
     /// Enqueue a request under the pool's default SLO; returns its id.
@@ -439,6 +470,32 @@ impl ServePool {
     /// rejecting the bad request here keeps it from poisoning a whole
     /// worker batch later.
     pub fn submit_with_slo(&self, ids: Vec<i32>, tau: f32, slo: Duration) -> u64 {
+        self.enqueue(ids, tau, slo, None)
+    }
+
+    /// Enqueue under the default SLO with a per-request completion
+    /// channel: the serving worker sends the [`Response`] to `reply` the
+    /// moment the batch completes, and the response is *not* retained
+    /// for [`ServePool::finish`] — the delivery mode the HTTP front-end
+    /// ([`crate::serve::net`]) uses, which keeps a long-lived pool's
+    /// memory flat.  A closed receiver is tolerated (the response is
+    /// dropped; accounting still records it).
+    pub fn submit_with_reply(
+        &self,
+        ids: Vec<i32>,
+        tau: f32,
+        reply: mpsc::Sender<Response>,
+    ) -> u64 {
+        self.enqueue(ids, tau, self.slo, Some(reply))
+    }
+
+    fn enqueue(
+        &self,
+        ids: Vec<i32>,
+        tau: f32,
+        slo: Duration,
+        reply: Option<mpsc::Sender<Response>>,
+    ) -> u64 {
         assert_eq!(
             ids.len(),
             self.seq,
@@ -456,6 +513,7 @@ impl ServePool {
                 tau,
                 enqueued_at,
                 deadline: enqueued_at + slo,
+                reply,
             });
             st.high_water = st.high_water.max(st.queue.len() as u64);
         }
@@ -473,29 +531,49 @@ impl ServePool {
         self.shared.state.lock().unwrap().queue.len()
     }
 
+    /// Live accounting snapshot — current stats and latency histograms
+    /// without closing the pool (the `/stats` endpoint's data source).
+    /// Cheap relative to a dispatch: two short lock acquisitions and a
+    /// fixed-size histogram copy per call.
+    pub fn snapshot(&self) -> PoolSnapshot {
+        let (pending, high_water) = {
+            let st = self.shared.state.lock().unwrap();
+            (st.queue.len(), st.high_water)
+        };
+        let live = self.shared.live.lock().unwrap();
+        let mut stats = live.stats.clone();
+        stats.queue_depth_high_water = high_water;
+        PoolSnapshot {
+            backend: self.backend.clone(),
+            workers: self.workers.len(),
+            submitted: self.next_id.load(Ordering::Relaxed),
+            completed: self.shared.completed.load(Ordering::Relaxed),
+            pending,
+            deadline_misses: live.deadline_misses,
+            queue_latency: live.queue_h.clone(),
+            compute_latency: live.compute_h.clone(),
+            total_latency: live.total_h.clone(),
+            stats,
+            uptime: self.started.elapsed(),
+        }
+    }
+
     /// Close the queue, let the workers drain it (closing force-flushes
     /// under-filled tails), join them, and merge their accounting.
-    /// Returns the aggregate report plus every response (unordered —
-    /// match by `Response::id`).
+    /// Returns the aggregate report plus every *retained* response
+    /// (unordered — match by `Response::id`; responses delivered through
+    /// [`ServePool::submit_with_reply`] channels are not retained).
     pub fn finish(self) -> Result<(ServeReport, Vec<Response>)> {
         {
             self.shared.state.lock().unwrap().closed = true;
         }
         self.shared.work.notify_all();
         let n_workers = self.workers.len();
-        let mut merged = WorkerOutput::default();
+        let mut responses = Vec::new();
         let mut first_err: Option<anyhow::Error> = None;
         for handle in self.workers {
             match handle.join() {
-                Ok(Ok(out)) => {
-                    merged.stats.merge(&out.stats);
-                    merged.queue_h.merge(&out.queue_h);
-                    merged.compute_h.merge(&out.compute_h);
-                    merged.total_h.merge(&out.total_h);
-                    merged.modeled_h.merge(&out.modeled_h);
-                    merged.deadline_misses += out.deadline_misses;
-                    merged.responses.extend(out.responses);
-                }
+                Ok(Ok(out)) => responses.extend(out),
                 Ok(Err(e)) => first_err = first_err.or(Some(e)),
                 Err(_) => {
                     first_err =
@@ -507,6 +585,8 @@ impl ServePool {
             return Err(e.context("serve worker failed"));
         }
         let wall = self.started.elapsed();
+        let mut merged =
+            std::mem::take(&mut *self.shared.live.lock().unwrap());
         merged.stats.queue_depth_high_water =
             self.shared.state.lock().unwrap().high_water;
         let (modeled_latency, modeled_shapes, sim_config) = match &self.sim {
@@ -534,7 +614,71 @@ impl ServePool {
             modeled_shapes,
             sim_config,
         };
-        Ok((report, merged.responses))
+        Ok((report, responses))
+    }
+}
+
+/// Point-in-time view of a running [`ServePool`] from
+/// [`ServePool::snapshot`]: counters plus the three host-measured
+/// latency histograms as of the last dispatched batch.
+#[derive(Clone, Debug)]
+pub struct PoolSnapshot {
+    /// Backend the pool's workers execute on.
+    pub backend: String,
+    /// Worker-thread count.
+    pub workers: usize,
+    /// Requests accepted so far.
+    pub submitted: u64,
+    /// Requests fully served so far.
+    pub completed: u64,
+    /// Requests currently queued (excludes batches in flight).
+    pub pending: usize,
+    /// Served requests whose end-to-end latency exceeded their SLO.
+    pub deadline_misses: u64,
+    /// Merged dispatch accounting (high-water filled from the queue).
+    pub stats: ServerStats,
+    /// Submit-to-claim latency histogram.
+    pub queue_latency: LatencyHistogram,
+    /// Host `classify` wall-time histogram.
+    pub compute_latency: LatencyHistogram,
+    /// Submit-to-response latency histogram.
+    pub total_latency: LatencyHistogram,
+    /// Time since [`ServePool::start`].
+    pub uptime: Duration,
+}
+
+impl PoolSnapshot {
+    /// JSON object mirroring the [`ServeReport`] field names so `/stats`
+    /// consumers and report readers share a schema.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("backend", Json::str(self.backend.clone())),
+            ("workers", Json::num(self.workers as f64)),
+            ("submitted", Json::num(self.submitted as f64)),
+            ("completed", Json::num(self.completed as f64)),
+            ("pending", Json::num(self.pending as f64)),
+            ("deadline_misses", Json::num(self.deadline_misses as f64)),
+            ("dispatches", Json::num(self.stats.dispatches as f64)),
+            ("rows_dispatched", Json::num(self.stats.rows_dispatched as f64)),
+            ("padded_rows", Json::num(self.stats.padded_rows as f64)),
+            (
+                "padded_row_fraction",
+                Json::num(self.stats.padded_row_fraction()),
+            ),
+            (
+                "queue_depth_high_water",
+                Json::num(self.stats.queue_depth_high_water as f64),
+            ),
+            ("uptime_s", Json::num(self.uptime.as_secs_f64())),
+            (
+                "latency_us",
+                Json::obj(vec![
+                    ("queue", self.queue_latency.to_json()),
+                    ("compute", self.compute_latency.to_json()),
+                    ("total", self.total_latency.to_json()),
+                ]),
+            ),
+        ])
     }
 }
 
@@ -543,10 +687,10 @@ fn worker_loop(
     params: Arc<Vec<f32>>,
     shared: Arc<Shared>,
     sim: Option<Arc<SimCache>>,
-) -> Result<WorkerOutput> {
+) -> Result<Vec<Response>> {
     let seq = rt.manifest.seq;
     let classes = rt.manifest.classes;
-    let mut out = WorkerOutput::default();
+    let mut retained: Vec<Response> = Vec::new();
     loop {
         // ---- claim a batch under the queue lock ------------------------
         let picked = {
@@ -582,7 +726,7 @@ fn worker_loop(
             }
         };
         let Some((shape, reqs)) = picked else {
-            return Ok(out);
+            return Ok(retained);
         };
 
         // ---- execute off-lock ------------------------------------------
@@ -599,31 +743,53 @@ fn worker_loop(
         let modeled = sim.as_ref().map(|cache| cache.model_for(shape));
 
         // ---- account ---------------------------------------------------
-        out.stats.record(compute, fill, shape);
+        // fold this batch into the shared live accounting under one
+        // short lock (O(batch) histogram records), then deliver/retain
+        // responses off-lock
         let compute_us = compute.as_micros() as u64;
+        {
+            let mut live = shared.live.lock().unwrap();
+            live.stats.record(compute, fill, shape);
+            for r in &reqs {
+                let queue_us = dequeued
+                    .saturating_duration_since(r.enqueued_at)
+                    .as_micros() as u64;
+                let total = done.saturating_duration_since(r.enqueued_at);
+                live.queue_h.record_us(queue_us);
+                live.compute_h.record_us(compute_us);
+                live.total_h.record_us(total.as_micros() as u64);
+                if let Some(m) = modeled {
+                    // modeled end-to-end: measured queueing + simulated
+                    // accelerator compute for this batch shape
+                    live.modeled_h
+                        .record_us(queue_us + m.latency_us.round() as u64);
+                }
+                if done > r.deadline {
+                    live.deadline_misses += 1;
+                }
+            }
+        }
+        // completed counts BEFORE replies go out: an observer that saw a
+        // response (an HTTP client holding its 200) must never read a
+        // `completed` that excludes it
+        shared.completed.fetch_add(fill as u64, Ordering::Relaxed);
         for (i, r) in reqs.into_iter().enumerate() {
-            let queue_us =
-                dequeued.saturating_duration_since(r.enqueued_at).as_micros() as u64;
             let total = done.saturating_duration_since(r.enqueued_at);
-            out.queue_h.record_us(queue_us);
-            out.compute_h.record_us(compute_us);
-            out.total_h.record_us(total.as_micros() as u64);
-            if let Some(m) = modeled {
-                // modeled end-to-end: measured queueing + simulated
-                // accelerator compute for this batch shape
-                out.modeled_h.record_us(queue_us + m.latency_us.round() as u64);
-            }
-            if done > r.deadline {
-                out.deadline_misses += 1;
-            }
-            out.responses.push(Response {
+            let resp = Response {
                 id: r.id,
                 logits: logits[i * classes..(i + 1) * classes].to_vec(),
                 latency: total,
                 batch: shape,
-            });
+            };
+            match r.reply {
+                // synchronous delivery (HTTP path); a hung-up receiver
+                // just drops the response — accounting already ran
+                Some(tx) => {
+                    let _ = tx.send(resp);
+                }
+                None => retained.push(resp),
+            }
         }
-        shared.completed.fetch_add(fill as u64, Ordering::Relaxed);
     }
 }
 

@@ -22,6 +22,11 @@
 //!   ([`coordinator::serve`]) with deadline-aware batching, streaming
 //!   latency histograms and sim-in-the-loop batch costing, plus the
 //!   evaluation / training / trace-capture drivers.
+//! * [`serve`] — the network-facing layer over the coordinator's
+//!   serving engine: a hand-rolled HTTP/1.1 front-end
+//!   ([`serve::net`]) with typed request validation, a sharded
+//!   power-of-two-choices router over N worker pools, graceful drain
+//!   on SIGTERM/ctrl-c, and a live `/stats` endpoint.
 //! * [`model`] — transformer architecture descriptions (Table I op
 //!   inventory, Fig. 1 memory analytics) shared by sim and runtime.
 //! * [`pruning`] — host-side DynaTran / top-k / magnitude pruning over f32
@@ -41,6 +46,7 @@ pub mod model;
 pub mod nlp;
 pub mod pruning;
 pub mod runtime;
+pub mod serve;
 pub mod sim;
 pub mod trace;
 pub mod util;

@@ -9,7 +9,9 @@
 //!   dataflow  compare the 24 dataflows on a matmul (Fig. 15)
 //!   train     train the synthetic-sentiment model through the runtime
 //!   serve     concurrent serving over a worker pool with deadline-aware
-//!             batching (optionally sim-in-the-loop costed)
+//!             batching (optionally sim-in-the-loop costed); with
+//!             --listen, an HTTP/JSON front-end over sharded pools with
+//!             graceful drain and a live /stats endpoint
 //!   eval      accuracy/sparsity sweep (Figs. 11/12)
 //!   trace     capture a measured sparsity trace and run the simulator
 //!             on it (the trace-driven Figs. 17-20 pipeline)
@@ -24,6 +26,9 @@ use acceltran::coordinator::{self, ServeConfig, ServePool, SimInLoop};
 use acceltran::model::{memreq::MemReq, OpGraph, TransformerConfig};
 use acceltran::nlp::sentiment::SentimentTask;
 use acceltran::runtime::{ParamStore, Runtime};
+use acceltran::serve::net::{
+    install_drain_signals, Limits, NetConfig, NetServer,
+};
 use acceltran::sim::engine::{simulate, SparsityProfile};
 use acceltran::sim::scheduler::Policy;
 use acceltran::sim::tech::AreaBreakdown;
@@ -76,6 +81,9 @@ fn print_usage() {
                      [--params path --report reports/serve_report.json]\n\
                      [--sim-in-loop --preset edge --model bert-tiny\n\
                       --sim-seq 128 --sim-trace reports/sparsity_trace.json]\n\
+                     [--listen 127.0.0.1:8080 --pools 2 --max-batch 32\n\
+                      --read-timeout-ms 2000 --max-body-kb 1024\n\
+                      --addr-file path]  (HTTP mode; drain via SIGTERM)\n\
            eval      [--taus 0,0.02,0.05 --examples 512 --params path]\n\
            trace     [--tau 0.04 --examples 512 --params path]\n\
                      [--out reports/sparsity_trace.json --no-sim]\n\
@@ -310,6 +318,9 @@ fn cmd_train(args: &Args) -> Result<()> {
 }
 
 fn cmd_serve(args: &Args) -> Result<()> {
+    if args.get("listen").is_some() {
+        return cmd_serve_net(args);
+    }
     let rt = Runtime::load_default()?;
     let vocab = rt.manifest.vocab;
     let seq = rt.manifest.seq;
@@ -368,6 +379,58 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let (report, _responses) = pool.finish()?;
     report.print_summary();
     let path = args.get_or("report", "reports/serve_report.json");
+    report.save(path)?;
+    println!("wrote {path}");
+    Ok(())
+}
+
+/// `serve --listen ADDR`: the HTTP/JSON front-end — sharded pools
+/// behind a hand-rolled HTTP/1.1 server, drained gracefully on
+/// SIGTERM / ctrl-c (see `acceltran::serve::net`).
+fn cmd_serve_net(args: &Args) -> Result<()> {
+    let rt = Runtime::load_default()?;
+    let params = match args.get("params") {
+        Some(p) => ParamStore::from_file(&rt.manifest, p)?.params,
+        None => ParamStore::init(&rt.manifest, 0).params,
+    };
+    let pools = args.get_usize("pools", 2);
+    let workers = args.get_usize("workers", 2);
+    let slo = Duration::from_millis(args.get_u64("slo-ms", 25));
+    let limits = Limits {
+        read_timeout: args.get_duration_ms("read-timeout-ms", 2000),
+        max_body_bytes: args.get_usize("max-body-kb", 1024) * 1024,
+        ..Limits::default()
+    };
+    let cfg = NetConfig {
+        listen: args.get_or("listen", "127.0.0.1:8080").to_string(),
+        pools,
+        serve: ServeConfig { workers, slo, sim: None },
+        limits,
+        default_tau: args.get_f64("tau", 0.04) as f32,
+        max_batch: args.get_usize("max-batch", 32),
+        drain_on_signal: true,
+    };
+    install_drain_signals();
+    let server = NetServer::start(&rt, &params, &cfg)?;
+    println!(
+        "listening on http://{} — {pools} pool(s) x {workers} worker(s), \
+         slo {slo:?} ['{}' backend]",
+        server.addr(),
+        rt.backend_name()
+    );
+    // external drivers (the CI smoke job) read the resolved address
+    // from here when the listen port was 0
+    if let Some(path) = args.get("addr-file") {
+        if let Some(dir) = std::path::Path::new(path).parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        std::fs::write(path, server.addr().to_string())?;
+        println!("wrote bound address to {path}");
+    }
+    println!("drain with ctrl-c or SIGTERM");
+    let report = server.run_until_drained()?;
+    report.print_summary();
+    let path = args.get_or("report", "reports/net_report.json");
     report.save(path)?;
     println!("wrote {path}");
     Ok(())

@@ -1,0 +1,16 @@
+//! Network-facing serving layer.
+//!
+//! [`crate::coordinator::serve`] is the in-process serving engine — a
+//! worker pool draining a deadline-batched queue.  This module is what
+//! puts it on the wire: [`net`] wraps one or more `ServePool`s behind a
+//! hand-rolled HTTP/1.1 front-end with a sharded router, graceful
+//! drain, and a live `/stats` endpoint (DESIGN.md "Network front-end").
+//!
+//! The split mirrors the paper's serving framing (Sec. V-E compares
+//! AccelTran-Server against Energon on *sustained* request throughput):
+//! an accelerator only wins if the host front-end keeps it fed at line
+//! rate, so request ingest, validation, and routing live in their own
+//! layer that can be hardened and measured independently of the
+//! execution pools behind it.
+
+pub mod net;

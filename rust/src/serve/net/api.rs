@@ -1,0 +1,387 @@
+//! Typed decode + validation of `POST /v1/classify` bodies.
+//!
+//! Every way a request can be wrong maps to a *specific* [`ApiError`]
+//! with a machine-readable `code` and a 4xx status, serialized as
+//! `{"error":{"code":..,"message":..}}` — a malformed or hostile body
+//! is answered at this layer and never reaches a
+//! [`crate::coordinator::ServePool`].
+//!
+//! Two body shapes are accepted:
+//!
+//! ```json
+//! {"ids": [1, 2, ...], "tau": 0.04}          // single request
+//! {"requests": [{"ids": [...], "tau": 0.1},  // batched: served by ONE
+//!               {"ids": [...]}]}             // pool so they co-batch
+//! ```
+//!
+//! `tau` (the DynaTran activation-pruning threshold) is optional and
+//! per-item; `ids` must be exactly the served model's sequence length
+//! with every id in `[0, vocab)` — shape errors caught here would
+//! otherwise panic a worker thread deep in the embedding gather.
+
+use crate::util::json::Json;
+
+/// A structured request failure: HTTP status, stable machine-readable
+/// code, and a human message.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ApiError {
+    /// HTTP status to answer with (400, 404, 405, 408, 413, 431, 503...).
+    pub status: u16,
+    /// Stable snake_case identifier for programmatic handling.
+    pub code: &'static str,
+    /// Human-readable detail (safe to echo: derived from our own
+    /// validation, never raw client bytes beyond short excerpts).
+    pub message: String,
+}
+
+impl ApiError {
+    /// Construct a 400 with the given code.
+    pub fn bad_request(code: &'static str, message: impl Into<String>) -> ApiError {
+        ApiError { status: 400, code, message: message.into() }
+    }
+
+    /// The `{"error":{...}}` response body.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![(
+            "error",
+            Json::obj(vec![
+                ("code", Json::str(self.code)),
+                ("message", Json::str(self.message.clone())),
+                ("status", Json::num(self.status as f64)),
+            ]),
+        )])
+    }
+}
+
+impl std::fmt::Display for ApiError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{} {}: {}", self.status, self.code, self.message)
+    }
+}
+
+impl std::error::Error for ApiError {}
+
+/// One validated classify item: a full-length token-id row plus its
+/// pruning threshold.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ClassifyItem {
+    /// Token ids, exactly `seq` long, each in `[0, vocab)`.
+    pub ids: Vec<i32>,
+    /// DynaTran pruning threshold in `[0, 1]`.
+    pub tau: f32,
+}
+
+/// A validated classify request body.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ClassifyRequest {
+    /// `{"ids": [...]}` — one row.
+    Single(ClassifyItem),
+    /// `{"requests": [...]}` — 1..=max_batch rows, routed to one pool
+    /// so the batcher can co-schedule them.
+    Batch(Vec<ClassifyItem>),
+}
+
+impl ClassifyRequest {
+    /// Number of rows this request will submit.
+    pub fn len(&self) -> usize {
+        match self {
+            ClassifyRequest::Single(_) => 1,
+            ClassifyRequest::Batch(items) => items.len(),
+        }
+    }
+
+    /// Always false — validation rejects empty batches.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// Model-shape context the decoder validates against.
+#[derive(Debug, Clone, Copy)]
+pub struct ModelShape {
+    /// Required length of every `ids` array.
+    pub seq: usize,
+    /// Exclusive upper bound on token ids.
+    pub vocab: usize,
+}
+
+fn item_from(
+    obj: &Json,
+    shape: ModelShape,
+    default_tau: f32,
+    at: &str,
+) -> Result<ClassifyItem, ApiError> {
+    let map = obj.as_obj().ok_or_else(|| {
+        ApiError::bad_request("bad_type", format!("{at} must be an object"))
+    })?;
+    for key in map.keys() {
+        if key != "ids" && key != "tau" {
+            return Err(ApiError::bad_request(
+                "unknown_field",
+                format!("{at} has unknown field '{key}'"),
+            ));
+        }
+    }
+    let ids_json = obj.get("ids").ok_or_else(|| {
+        ApiError::bad_request("missing_field", format!("{at} is missing 'ids'"))
+    })?;
+    let arr = ids_json.as_arr().ok_or_else(|| {
+        ApiError::bad_request("bad_type", format!("{at}.ids must be an array"))
+    })?;
+    if arr.len() != shape.seq {
+        return Err(ApiError::bad_request(
+            "bad_shape",
+            format!(
+                "{at}.ids must have exactly {} token ids (the served \
+                 model's sequence length), got {}",
+                shape.seq,
+                arr.len()
+            ),
+        ));
+    }
+    let mut ids = Vec::with_capacity(arr.len());
+    for (i, v) in arr.iter().enumerate() {
+        let id = v.as_i64().ok_or_else(|| {
+            ApiError::bad_request(
+                "bad_type",
+                format!("{at}.ids[{i}] must be an integer"),
+            )
+        })?;
+        if id < 0 || id >= shape.vocab as i64 {
+            return Err(ApiError::bad_request(
+                "bad_token_id",
+                format!(
+                    "{at}.ids[{i}] = {id} outside [0, {})",
+                    shape.vocab
+                ),
+            ));
+        }
+        ids.push(id as i32);
+    }
+    let tau = match obj.get("tau") {
+        None => default_tau,
+        Some(v) => {
+            let t = v.as_f64().ok_or_else(|| {
+                ApiError::bad_request(
+                    "bad_type",
+                    format!("{at}.tau must be a number"),
+                )
+            })?;
+            if !t.is_finite() || !(0.0..=1.0).contains(&t) {
+                return Err(ApiError::bad_request(
+                    "bad_tau",
+                    format!("{at}.tau must be a finite number in [0, 1], got {t}"),
+                ));
+            }
+            t as f32
+        }
+    };
+    Ok(ClassifyItem { ids, tau })
+}
+
+/// Decode and validate a classify body against the served model shape.
+///
+/// `max_batch` caps `requests` length; exceeding it is 413 (the client
+/// should split the batch), everything else wrong is 400.
+pub fn decode_classify(
+    body: &[u8],
+    shape: ModelShape,
+    default_tau: f32,
+    max_batch: usize,
+) -> Result<ClassifyRequest, ApiError> {
+    let text = std::str::from_utf8(body).map_err(|_| {
+        ApiError::bad_request("bad_encoding", "body is not valid UTF-8")
+    })?;
+    let root = Json::parse(text).map_err(|e| {
+        ApiError::bad_request("bad_json", format!("body is not valid JSON: {e}"))
+    })?;
+    let map = root.as_obj().ok_or_else(|| {
+        ApiError::bad_request("bad_type", "body must be a JSON object")
+    })?;
+    let has_ids = map.contains_key("ids");
+    let has_requests = map.contains_key("requests");
+    match (has_ids, has_requests) {
+        (true, true) => Err(ApiError::bad_request(
+            "ambiguous_body",
+            "body must have either 'ids' (single) or 'requests' (batch), not both",
+        )),
+        (true, false) => {
+            item_from(&root, shape, default_tau, "request").map(ClassifyRequest::Single)
+        }
+        (false, true) => {
+            for key in map.keys() {
+                if key != "requests" {
+                    return Err(ApiError::bad_request(
+                        "unknown_field",
+                        format!("body has unknown field '{key}'"),
+                    ));
+                }
+            }
+            let arr = map["requests"].as_arr().ok_or_else(|| {
+                ApiError::bad_request("bad_type", "'requests' must be an array")
+            })?;
+            if arr.is_empty() {
+                return Err(ApiError::bad_request(
+                    "empty_batch",
+                    "'requests' must not be empty",
+                ));
+            }
+            if arr.len() > max_batch {
+                return Err(ApiError {
+                    status: 413,
+                    code: "batch_too_large",
+                    message: format!(
+                        "'requests' has {} items, max is {max_batch}; \
+                         split the batch",
+                        arr.len()
+                    ),
+                });
+            }
+            let mut items = Vec::with_capacity(arr.len());
+            for (i, v) in arr.iter().enumerate() {
+                items.push(item_from(
+                    v,
+                    shape,
+                    default_tau,
+                    &format!("requests[{i}]"),
+                )?);
+            }
+            Ok(ClassifyRequest::Batch(items))
+        }
+        (false, false) => Err(ApiError::bad_request(
+            "missing_field",
+            "body must have 'ids' (single) or 'requests' (batch)",
+        )),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SHAPE: ModelShape = ModelShape { seq: 4, vocab: 100 };
+
+    fn decode(body: &str) -> Result<ClassifyRequest, ApiError> {
+        decode_classify(body.as_bytes(), SHAPE, 0.04, 8)
+    }
+
+    #[test]
+    fn single_request_with_default_tau() {
+        let got = decode(r#"{"ids": [1, 2, 3, 4]}"#).unwrap();
+        match got {
+            ClassifyRequest::Single(item) => {
+                assert_eq!(item.ids, vec![1, 2, 3, 4]);
+                assert!((item.tau - 0.04).abs() < 1e-6);
+            }
+            other => panic!("expected Single, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn single_request_with_explicit_tau() {
+        let got = decode(r#"{"ids": [0, 0, 99, 1], "tau": 0.5}"#).unwrap();
+        match got {
+            ClassifyRequest::Single(item) => assert_eq!(item.tau, 0.5),
+            other => panic!("expected Single, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn batch_request_round_trips() {
+        let got = decode(
+            r#"{"requests": [{"ids": [1,2,3,4]}, {"ids": [4,3,2,1], "tau": 0.1}]}"#,
+        )
+        .unwrap();
+        match got {
+            ClassifyRequest::Batch(items) => {
+                assert_eq!(items.len(), 2);
+                assert_eq!(items[1].ids, vec![4, 3, 2, 1]);
+                assert!((items[1].tau - 0.1).abs() < 1e-6);
+            }
+            other => panic!("expected Batch, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn wrong_length_is_bad_shape() {
+        let e = decode(r#"{"ids": [1, 2, 3]}"#).unwrap_err();
+        assert_eq!((e.status, e.code), (400, "bad_shape"));
+        let e = decode(r#"{"ids": [1, 2, 3, 4, 5]}"#).unwrap_err();
+        assert_eq!(e.code, "bad_shape");
+    }
+
+    #[test]
+    fn out_of_vocab_and_negative_ids_rejected() {
+        let e = decode(r#"{"ids": [1, 2, 3, 100]}"#).unwrap_err();
+        assert_eq!((e.status, e.code), (400, "bad_token_id"));
+        let e = decode(r#"{"ids": [-1, 2, 3, 4]}"#).unwrap_err();
+        assert_eq!(e.code, "bad_token_id");
+    }
+
+    #[test]
+    fn non_integer_ids_rejected() {
+        let e = decode(r#"{"ids": [1.5, 2, 3, 4]}"#).unwrap_err();
+        assert_eq!((e.status, e.code), (400, "bad_type"));
+        let e = decode(r#"{"ids": ["a", 2, 3, 4]}"#).unwrap_err();
+        assert_eq!(e.code, "bad_type");
+    }
+
+    #[test]
+    fn bad_tau_rejected() {
+        for body in [
+            r#"{"ids": [1,2,3,4], "tau": -0.1}"#,
+            r#"{"ids": [1,2,3,4], "tau": 1.5}"#,
+            r#"{"ids": [1,2,3,4], "tau": "hot"}"#,
+        ] {
+            let e = decode(body).unwrap_err();
+            assert_eq!(e.status, 400, "{body}");
+        }
+    }
+
+    #[test]
+    fn malformed_json_and_encoding() {
+        let e = decode(r#"{"ids": [1, 2"#).unwrap_err();
+        assert_eq!((e.status, e.code), (400, "bad_json"));
+        let e = decode("not json at all").unwrap_err();
+        assert_eq!(e.code, "bad_json");
+        let e = decode_classify(&[0xff, 0xfe], SHAPE, 0.04, 8).unwrap_err();
+        assert_eq!(e.code, "bad_encoding");
+        let e = decode(r#"[1, 2, 3]"#).unwrap_err();
+        assert_eq!(e.code, "bad_type");
+    }
+
+    #[test]
+    fn unknown_and_ambiguous_fields_rejected() {
+        let e = decode(r#"{"ids": [1,2,3,4], "temperature": 1}"#).unwrap_err();
+        assert_eq!(e.code, "unknown_field");
+        let e = decode(r#"{"ids": [1,2,3,4], "requests": []}"#).unwrap_err();
+        assert_eq!(e.code, "ambiguous_body");
+        let e = decode(r#"{}"#).unwrap_err();
+        assert_eq!(e.code, "missing_field");
+    }
+
+    #[test]
+    fn batch_limits() {
+        let e = decode(r#"{"requests": []}"#).unwrap_err();
+        assert_eq!((e.status, e.code), (400, "empty_batch"));
+        let items: Vec<String> =
+            (0..9).map(|_| r#"{"ids": [1,2,3,4]}"#.to_string()).collect();
+        let body = format!(r#"{{"requests": [{}]}}"#, items.join(","));
+        let e = decode(&body).unwrap_err();
+        assert_eq!((e.status, e.code), (413, "batch_too_large"));
+    }
+
+    #[test]
+    fn error_json_shape() {
+        let e = ApiError::bad_request("bad_shape", "nope");
+        let j = e.to_json();
+        assert_eq!(
+            j.path(&["error", "code"]).and_then(|v| v.as_str()),
+            Some("bad_shape")
+        );
+        assert_eq!(
+            j.path(&["error", "status"]).and_then(|v| v.as_f64()),
+            Some(400.0)
+        );
+    }
+}

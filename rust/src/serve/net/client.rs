@@ -1,0 +1,152 @@
+//! Minimal HTTP/1.1 client for loopback use: the hermetic end-to-end
+//! tests, the `http_serve` load generator, and the transport-overhead
+//! bench.  Speaks exactly the subset the server emits —
+//! `Content-Length`-framed responses over a keep-alive connection — and
+//! connects only to explicitly-given addresses.
+
+use crate::util::json::Json;
+use anyhow::{anyhow, bail, Context, Result};
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpStream, ToSocketAddrs};
+use std::time::Duration;
+
+/// One keep-alive connection to a server.
+pub struct HttpClient {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+}
+
+/// A parsed response: status code, headers (lowercased names), body.
+#[derive(Debug)]
+pub struct HttpResponse {
+    /// Status code from the response line.
+    pub status: u16,
+    /// `(lowercased-name, value)` pairs in arrival order.
+    pub headers: Vec<(String, String)>,
+    /// Response body bytes.
+    pub body: Vec<u8>,
+}
+
+impl HttpResponse {
+    /// Body parsed as JSON.
+    pub fn json(&self) -> Result<Json> {
+        let text = std::str::from_utf8(&self.body)
+            .context("response body is not UTF-8")?;
+        Json::parse(text)
+            .map_err(|e| anyhow!("response body is not JSON: {e}"))
+    }
+}
+
+impl HttpClient {
+    /// Connect with a 10s read timeout (tests and benches must fail,
+    /// not hang, when the server wedges).
+    pub fn connect(addr: impl ToSocketAddrs) -> Result<HttpClient> {
+        let stream = TcpStream::connect(addr).context("connecting")?;
+        stream
+            .set_read_timeout(Some(Duration::from_secs(10)))
+            .context("setting client read timeout")?;
+        let _ = stream.set_nodelay(true);
+        let reader =
+            BufReader::new(stream.try_clone().context("cloning stream")?);
+        Ok(HttpClient { reader, writer: stream })
+    }
+
+    /// Write raw bytes on the connection without reading anything back
+    /// — the fuzz and pipelining tests use this to send hostile or
+    /// back-to-back payloads.
+    pub fn send_raw(&mut self, bytes: &[u8]) -> Result<()> {
+        self.writer.write_all(bytes).context("writing request")?;
+        self.writer.flush().context("flushing request")
+    }
+
+    /// Read one `Content-Length`-framed response off the connection.
+    pub fn read_response(&mut self) -> Result<HttpResponse> {
+        let status_line = self.read_line()?;
+        let mut parts = status_line.split_whitespace();
+        let version = parts.next().unwrap_or("");
+        if !version.starts_with("HTTP/1.") {
+            bail!("bad response line '{status_line}'");
+        }
+        let status: u16 = parts
+            .next()
+            .and_then(|s| s.parse().ok())
+            .ok_or_else(|| anyhow!("bad status in '{status_line}'"))?;
+        let mut headers = Vec::new();
+        loop {
+            let line = self.read_line()?;
+            if line.is_empty() {
+                break;
+            }
+            let (name, value) = line
+                .split_once(':')
+                .ok_or_else(|| anyhow!("bad response header '{line}'"))?;
+            headers.push((
+                name.trim().to_ascii_lowercase(),
+                value.trim().to_string(),
+            ));
+        }
+        let len: usize = headers
+            .iter()
+            .find(|(n, _)| n == "content-length")
+            .map(|(_, v)| v.parse().context("bad content-length"))
+            .transpose()?
+            .unwrap_or(0);
+        let mut body = vec![0u8; len];
+        std::io::Read::read_exact(&mut self.reader, &mut body)
+            .context("reading response body")?;
+        // interim 1xx responses (100 Continue) precede the real one
+        if (100..200).contains(&status) {
+            return self.read_response();
+        }
+        Ok(HttpResponse { status, headers, body })
+    }
+
+    fn read_line(&mut self) -> Result<String> {
+        let mut line = String::new();
+        let n = self
+            .reader
+            .read_line(&mut line)
+            .context("reading response line")?;
+        if n == 0 {
+            bail!("connection closed by server");
+        }
+        while line.ends_with('\n') || line.ends_with('\r') {
+            line.pop();
+        }
+        Ok(line)
+    }
+
+    /// Send one request and read its response.
+    pub fn request(
+        &mut self,
+        method: &str,
+        path: &str,
+        body: Option<&[u8]>,
+    ) -> Result<HttpResponse> {
+        let body = body.unwrap_or(b"");
+        let head = format!(
+            "{method} {path} HTTP/1.1\r\nHost: acceltran\r\nContent-Type: \
+             application/json\r\nContent-Length: {}\r\n\r\n",
+            body.len()
+        );
+        self.writer.write_all(head.as_bytes()).context("writing head")?;
+        self.writer.write_all(body).context("writing body")?;
+        self.writer.flush().context("flushing")?;
+        self.read_response()
+    }
+
+    /// `GET path`, expecting a JSON body.
+    pub fn get(&mut self, path: &str) -> Result<(u16, Json)> {
+        let resp = self.request("GET", path, None)?;
+        let json = resp.json()?;
+        Ok((resp.status, json))
+    }
+
+    /// `POST path` with a JSON body, expecting a JSON response.
+    pub fn post_json(&mut self, path: &str, body: &Json) -> Result<(u16, Json)> {
+        let text = body.to_string_compact();
+        let resp = self.request("POST", path, Some(text.as_bytes()))?;
+        let json = resp.json()?;
+        Ok((resp.status, json))
+    }
+}

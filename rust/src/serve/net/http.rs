@@ -1,0 +1,457 @@
+//! Minimal HTTP/1.1 wire protocol: bounded request parsing and response
+//! writing over any `Read`/`Write` pair (hyper is not vendored; the
+//! subset here — request line, headers, `Content-Length` bodies,
+//! keep-alive — is what `curl`, browsers, and the in-crate
+//! [`super::client`] speak for JSON APIs).
+//!
+//! Every read is bounded: header bytes and count are capped, bodies are
+//! capped *before* allocation, and the caller is expected to arm a
+//! socket read timeout — so a slow-loris or oversized client costs one
+//! connection thread a bounded wait, never a serving worker
+//! (DESIGN.md "Network front-end").
+
+use std::io::{BufRead, Write};
+use std::time::Duration;
+
+/// Hard ceilings for one request (defaults are generous for JSON
+/// classify bodies and hostile-input-safe).
+#[derive(Clone, Debug)]
+pub struct Limits {
+    /// Total request-line + header bytes (431 when exceeded).
+    pub max_header_bytes: usize,
+    /// Header count (431 when exceeded).
+    pub max_headers: usize,
+    /// `Content-Length` ceiling, checked before the body buffer is
+    /// allocated (413 when exceeded).
+    pub max_body_bytes: usize,
+    /// Socket read timeout the connection handler arms; a peer that
+    /// stalls mid-request longer than this gets 408 and the connection
+    /// is closed.
+    pub read_timeout: Duration,
+}
+
+impl Default for Limits {
+    fn default() -> Self {
+        Limits {
+            max_header_bytes: 8 << 10,
+            max_headers: 64,
+            max_body_bytes: 1 << 20,
+            read_timeout: Duration::from_millis(2000),
+        }
+    }
+}
+
+/// Why a request could not be read; the connection handler maps each
+/// variant to a status code (or a silent close).
+#[derive(Debug)]
+pub enum RecvError {
+    /// Clean EOF before any byte of a new request — the peer ended a
+    /// keep-alive session; close silently.
+    Closed,
+    /// The socket read timed out.  `mid_request` distinguishes an idle
+    /// keep-alive connection (close silently) from a peer that stalled
+    /// partway through a request (408).
+    Timeout {
+        /// Whether any bytes of the current request had arrived.
+        mid_request: bool,
+    },
+    /// A limit in [`Limits`] was exceeded; `what` is `"header"` (431)
+    /// or `"body"` (413).
+    TooLarge {
+        /// Which limit tripped.
+        what: &'static str,
+    },
+    /// Not parseable as HTTP/1.x (400).
+    Malformed(String),
+    /// Parseable but outside the supported subset, e.g. chunked
+    /// transfer encoding (501).
+    Unsupported(String),
+    /// Transport error other than a timeout; close silently.
+    Io(std::io::Error),
+}
+
+impl std::fmt::Display for RecvError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            RecvError::Closed => write!(f, "connection closed"),
+            RecvError::Timeout { mid_request } => {
+                write!(f, "read timeout (mid_request={mid_request})")
+            }
+            RecvError::TooLarge { what } => write!(f, "{what} too large"),
+            RecvError::Malformed(m) => write!(f, "malformed request: {m}"),
+            RecvError::Unsupported(m) => write!(f, "unsupported: {m}"),
+            RecvError::Io(e) => write!(f, "io error: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for RecvError {}
+
+fn map_io(e: std::io::Error, mid_request: bool) -> RecvError {
+    match e.kind() {
+        // platform-dependent: unix read timeouts surface as WouldBlock,
+        // windows as TimedOut
+        std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut => {
+            RecvError::Timeout { mid_request }
+        }
+        _ => RecvError::Io(e),
+    }
+}
+
+/// Request line + headers of one request (header names lowercased at
+/// parse time; values trimmed).
+#[derive(Clone, Debug)]
+pub struct HttpHead {
+    /// Verb, as sent (`GET`, `POST`, ...).
+    pub method: String,
+    /// Request target, e.g. `/v1/classify` (query strings are kept
+    /// as-is; the routes this server exposes don't use them).
+    pub path: String,
+    /// `(lowercased-name, value)` pairs in arrival order.
+    pub headers: Vec<(String, String)>,
+}
+
+impl HttpHead {
+    /// First header with this (lowercase) name.
+    pub fn header(&self, name: &str) -> Option<&str> {
+        self.headers
+            .iter()
+            .find(|(n, _)| n == name)
+            .map(|(_, v)| v.as_str())
+    }
+
+    /// Declared body length: 0 when absent, `Err` when present but not
+    /// a decimal integer.
+    pub fn content_length(&self) -> Result<usize, RecvError> {
+        match self.header("content-length") {
+            None => Ok(0),
+            Some(v) => v.trim().parse().map_err(|_| {
+                RecvError::Malformed(format!("bad content-length '{v}'"))
+            }),
+        }
+    }
+
+    /// Whether the peer asked to end the session after this exchange.
+    pub fn wants_close(&self) -> bool {
+        self.header("connection")
+            .map(|v| v.eq_ignore_ascii_case("close"))
+            .unwrap_or(false)
+    }
+
+    /// Whether the peer sent `Expect: 100-continue` and is waiting for
+    /// the interim response before transmitting the body (curl does
+    /// this for larger POST bodies).
+    pub fn expects_continue(&self) -> bool {
+        self.header("expect")
+            .map(|v| v.eq_ignore_ascii_case("100-continue"))
+            .unwrap_or(false)
+    }
+}
+
+/// One `\r\n`-terminated line with the header-byte budget enforced;
+/// `budget` is decremented by the bytes consumed.
+fn read_line(
+    r: &mut impl BufRead,
+    budget: &mut usize,
+    mid_request: bool,
+) -> Result<String, RecvError> {
+    let mut buf: Vec<u8> = Vec::new();
+    loop {
+        let mut byte = [0u8; 1];
+        // byte-at-a-time keeps the logic simple and is fine behind a
+        // BufReader (the syscall count is unchanged)
+        let n = std::io::Read::read(r, &mut byte)
+            .map_err(|e| map_io(e, mid_request || !buf.is_empty()))?;
+        if n == 0 {
+            if buf.is_empty() && !mid_request {
+                return Err(RecvError::Closed);
+            }
+            return Err(RecvError::Malformed("unexpected eof".into()));
+        }
+        if *budget == 0 {
+            return Err(RecvError::TooLarge { what: "header" });
+        }
+        *budget -= 1;
+        if byte[0] == b'\n' {
+            if buf.last() == Some(&b'\r') {
+                buf.pop();
+            }
+            return String::from_utf8(buf)
+                .map_err(|_| RecvError::Malformed("non-utf8 header".into()));
+        }
+        buf.push(byte[0]);
+    }
+}
+
+/// Read one request head (request line + headers) within `limits`.
+/// [`RecvError::Closed`] means the peer cleanly ended the keep-alive
+/// session before starting a request.
+pub fn read_head(
+    r: &mut impl BufRead,
+    limits: &Limits,
+) -> Result<HttpHead, RecvError> {
+    let mut budget = limits.max_header_bytes;
+    // tolerate stray blank line(s) between pipelined requests
+    let mut line = read_line(r, &mut budget, false)?;
+    while line.is_empty() {
+        line = read_line(r, &mut budget, false)?;
+    }
+    let mut parts = line.split_whitespace();
+    let (method, path, version) =
+        match (parts.next(), parts.next(), parts.next(), parts.next()) {
+            (Some(m), Some(p), Some(v), None) => {
+                (m.to_string(), p.to_string(), v)
+            }
+            _ => {
+                return Err(RecvError::Malformed(format!(
+                    "bad request line '{}'",
+                    line.chars().take(80).collect::<String>()
+                )))
+            }
+        };
+    if !version.starts_with("HTTP/1.") {
+        return Err(RecvError::Malformed(format!("bad version '{version}'")));
+    }
+    let mut headers = Vec::new();
+    loop {
+        let line = read_line(r, &mut budget, true)?;
+        if line.is_empty() {
+            break;
+        }
+        if headers.len() >= limits.max_headers {
+            return Err(RecvError::TooLarge { what: "header" });
+        }
+        let Some((name, value)) = line.split_once(':') else {
+            return Err(RecvError::Malformed(format!(
+                "bad header line '{}'",
+                line.chars().take(80).collect::<String>()
+            )));
+        };
+        headers.push((
+            name.trim().to_ascii_lowercase(),
+            value.trim().to_string(),
+        ));
+    }
+    Ok(HttpHead { method, path, headers })
+}
+
+/// Read the request body declared by `head` within `limits`.  Checks
+/// the length cap *before* allocating, and rejects transfer encodings
+/// this server does not speak.
+pub fn read_body(
+    r: &mut impl BufRead,
+    head: &HttpHead,
+    limits: &Limits,
+) -> Result<Vec<u8>, RecvError> {
+    if let Some(te) = head.header("transfer-encoding") {
+        return Err(RecvError::Unsupported(format!(
+            "transfer-encoding '{te}' (send Content-Length)"
+        )));
+    }
+    let len = head.content_length()?;
+    if len > limits.max_body_bytes {
+        return Err(RecvError::TooLarge { what: "body" });
+    }
+    let mut body = vec![0u8; len];
+    std::io::Read::read_exact(r, &mut body).map_err(|e| {
+        if e.kind() == std::io::ErrorKind::UnexpectedEof {
+            RecvError::Malformed("body truncated".into())
+        } else {
+            map_io(e, true)
+        }
+    })?;
+    Ok(body)
+}
+
+/// Canonical reason phrase for the status codes this server emits.
+pub fn reason(status: u16) -> &'static str {
+    match status {
+        100 => "Continue",
+        200 => "OK",
+        400 => "Bad Request",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        408 => "Request Timeout",
+        413 => "Payload Too Large",
+        431 => "Request Header Fields Too Large",
+        500 => "Internal Server Error",
+        501 => "Not Implemented",
+        503 => "Service Unavailable",
+        504 => "Gateway Timeout",
+        _ => "Unknown",
+    }
+}
+
+/// Write one response with an explicit `Content-Length` (the only
+/// framing this server uses) and flush it.
+pub fn write_response(
+    w: &mut impl Write,
+    status: u16,
+    content_type: &str,
+    body: &[u8],
+    keep_alive: bool,
+) -> std::io::Result<()> {
+    write!(
+        w,
+        "HTTP/1.1 {status} {}\r\nServer: acceltran\r\nContent-Type: \
+         {content_type}\r\nContent-Length: {}\r\nConnection: {}\r\n\r\n",
+        reason(status),
+        body.len(),
+        if keep_alive { "keep-alive" } else { "close" },
+    )?;
+    w.write_all(body)?;
+    w.flush()
+}
+
+/// Write the interim `100 Continue` response (no headers, no body).
+pub fn write_continue(w: &mut impl Write) -> std::io::Result<()> {
+    w.write_all(b"HTTP/1.1 100 Continue\r\n\r\n")?;
+    w.flush()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    fn head_of(text: &str) -> Result<HttpHead, RecvError> {
+        read_head(&mut Cursor::new(text.as_bytes()), &Limits::default())
+    }
+
+    #[test]
+    fn parses_request_line_and_headers() {
+        let h = head_of(
+            "POST /v1/classify HTTP/1.1\r\nHost: x\r\nContent-Length: 5\r\n\
+             Content-Type: application/json\r\n\r\nhello",
+        )
+        .unwrap();
+        assert_eq!(h.method, "POST");
+        assert_eq!(h.path, "/v1/classify");
+        assert_eq!(h.header("host"), Some("x"));
+        assert_eq!(h.content_length().unwrap(), 5);
+        assert!(!h.wants_close());
+        assert!(!h.expects_continue());
+    }
+
+    #[test]
+    fn header_names_are_case_insensitive_values_trimmed() {
+        let h = head_of("GET / HTTP/1.1\r\nCONNECTION:   close  \r\n\r\n")
+            .unwrap();
+        assert!(h.wants_close());
+        assert_eq!(h.header("connection"), Some("close"));
+    }
+
+    #[test]
+    fn body_reads_exactly_content_length() {
+        let text = "POST / HTTP/1.1\r\nContent-Length: 4\r\n\r\nabcdEXTRA";
+        let mut r = Cursor::new(text.as_bytes());
+        let limits = Limits::default();
+        let h = read_head(&mut r, &limits).unwrap();
+        let body = read_body(&mut r, &h, &limits).unwrap();
+        assert_eq!(body, b"abcd");
+        // the EXTRA bytes stay buffered for the next (pipelined) request
+        let mut rest = Vec::new();
+        std::io::Read::read_to_end(&mut r, &mut rest).unwrap();
+        assert_eq!(rest, b"EXTRA");
+    }
+
+    #[test]
+    fn clean_eof_is_closed_partial_is_malformed() {
+        assert!(matches!(head_of(""), Err(RecvError::Closed)));
+        assert!(matches!(
+            head_of("GET / HT"),
+            Err(RecvError::Malformed(_))
+        ));
+        assert!(matches!(
+            head_of("GET / HTTP/1.1\r\nHost: x"),
+            Err(RecvError::Malformed(_))
+        ));
+    }
+
+    #[test]
+    fn oversized_header_is_rejected() {
+        let mut limits = Limits::default();
+        limits.max_header_bytes = 64;
+        let long = format!("GET /{} HTTP/1.1\r\n\r\n", "a".repeat(100));
+        let got = read_head(&mut Cursor::new(long.as_bytes()), &limits);
+        assert!(matches!(got, Err(RecvError::TooLarge { what: "header" })));
+        // header *count* cap too
+        let mut limits = Limits::default();
+        limits.max_headers = 2;
+        let many = "GET / HTTP/1.1\r\na: 1\r\nb: 2\r\nc: 3\r\n\r\n";
+        let got = read_head(&mut Cursor::new(many.as_bytes()), &limits);
+        assert!(matches!(got, Err(RecvError::TooLarge { what: "header" })));
+    }
+
+    #[test]
+    fn oversized_body_rejected_before_allocation() {
+        let limits = Limits { max_body_bytes: 8, ..Limits::default() };
+        // content-length lies far past the cap; read_body must refuse
+        // without trying to allocate or read it
+        let text = "POST / HTTP/1.1\r\nContent-Length: 999999999999\r\n\r\n";
+        let mut r = Cursor::new(text.as_bytes());
+        let h = read_head(&mut r, &limits).unwrap();
+        let got = read_body(&mut r, &h, &limits);
+        assert!(matches!(got, Err(RecvError::TooLarge { what: "body" })));
+    }
+
+    #[test]
+    fn chunked_encoding_is_unsupported() {
+        let text = "POST / HTTP/1.1\r\nTransfer-Encoding: chunked\r\n\r\n";
+        let mut r = Cursor::new(text.as_bytes());
+        let h = read_head(&mut r, &Limits::default()).unwrap();
+        assert!(matches!(
+            read_body(&mut r, &h, &Limits::default()),
+            Err(RecvError::Unsupported(_))
+        ));
+    }
+
+    #[test]
+    fn truncated_body_is_malformed() {
+        let text = "POST / HTTP/1.1\r\nContent-Length: 10\r\n\r\nabc";
+        let mut r = Cursor::new(text.as_bytes());
+        let h = read_head(&mut r, &Limits::default()).unwrap();
+        assert!(matches!(
+            read_body(&mut r, &h, &Limits::default()),
+            Err(RecvError::Malformed(_))
+        ));
+    }
+
+    #[test]
+    fn bad_content_length_is_malformed() {
+        let h = head_of("POST / HTTP/1.1\r\nContent-Length: ten\r\n\r\n")
+            .unwrap();
+        assert!(matches!(
+            h.content_length(),
+            Err(RecvError::Malformed(_))
+        ));
+    }
+
+    #[test]
+    fn pipelined_heads_parse_back_to_back() {
+        let two = "GET /a HTTP/1.1\r\n\r\nGET /b HTTP/1.1\r\n\r\n";
+        let mut r = Cursor::new(two.as_bytes());
+        let limits = Limits::default();
+        assert_eq!(read_head(&mut r, &limits).unwrap().path, "/a");
+        assert_eq!(read_head(&mut r, &limits).unwrap().path, "/b");
+        assert!(matches!(read_head(&mut r, &limits), Err(RecvError::Closed)));
+    }
+
+    #[test]
+    fn response_writer_is_parseable() {
+        let mut out = Vec::new();
+        write_response(&mut out, 200, "application/json", b"{}", true)
+            .unwrap();
+        let text = String::from_utf8(out).unwrap();
+        assert!(text.starts_with("HTTP/1.1 200 OK\r\n"), "{text}");
+        assert!(text.contains("Content-Length: 2\r\n"));
+        assert!(text.contains("Connection: keep-alive\r\n"));
+        assert!(text.ends_with("\r\n\r\n{}"));
+        let mut out = Vec::new();
+        write_response(&mut out, 503, "application/json", b"x", false)
+            .unwrap();
+        let text = String::from_utf8(out).unwrap();
+        assert!(text.starts_with("HTTP/1.1 503 Service Unavailable\r\n"));
+        assert!(text.contains("Connection: close\r\n"));
+    }
+}

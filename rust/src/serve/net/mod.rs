@@ -1,0 +1,47 @@
+//! `serve::net` — the HTTP/JSON front-end over the worker-pool serving
+//! engine: a hand-rolled HTTP/1.1 server (`std::net` only; the
+//! anyhow-only dependency policy holds) exposing
+//!
+//! * `POST /v1/classify` — single or batched token-id classification
+//!   with typed validation errors (4xx JSON bodies; a malformed or
+//!   hostile body never reaches a pool),
+//! * `GET /stats` — live serving state: per-pool and merged latency
+//!   histogram percentiles, queue high-water, padded-row fraction, and
+//!   the process-wide block-sparse GEMM effectual-tile/MAC counters,
+//! * `GET /healthz` — liveness plus the model shape a client needs to
+//!   build valid requests.
+//!
+//! Layering, front to back:
+//!
+//! 1. [`http`] — wire protocol: bounded request parsing (header/body
+//!    caps, per-connection read timeouts) and response writing.
+//! 2. [`api`] — typed decode of classify bodies against the served
+//!    model's shape (`seq`, `vocab`), with structured
+//!    [`api::ApiError`]s.
+//! 3. [`router`] — shards accepted requests across N independent
+//!    [`crate::coordinator::ServePool`]s by power-of-two-choices on
+//!    queue depth.
+//! 4. [`server`] — the accept loop, connection threads, and the
+//!    graceful-drain state machine (SIGTERM / ctrl-c → stop accepting,
+//!    flush in-flight work, report).
+//! 5. [`stats`] — counters and the `/stats` document assembly.
+//! 6. [`client`] — a minimal loopback HTTP client for the hermetic
+//!    tests, the `http_serve` example, and the transport-overhead
+//!    bench; it connects only to explicitly-given addresses (no
+//!    redirects, no name resolution beyond `ToSocketAddrs`).
+
+pub mod api;
+pub mod client;
+pub mod http;
+pub mod router;
+pub mod server;
+pub mod stats;
+
+pub use api::{ApiError, ClassifyItem, ClassifyRequest, ModelShape};
+pub use client::{HttpClient, HttpResponse};
+pub use http::{HttpHead, Limits, RecvError};
+pub use router::Router;
+pub use server::{
+    drain_requested, install_drain_signals, NetConfig, NetReport, NetServer,
+};
+pub use stats::NetCounters;

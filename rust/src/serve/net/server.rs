@@ -1,0 +1,682 @@
+//! The HTTP server proper: accept loop, connection threads, request
+//! routing, and the graceful-drain state machine.
+//!
+//! # Drain state machine
+//!
+//! ```text
+//! accepting ──(SIGTERM / ctrl-c / NetServer::shutdown)──▶ draining
+//!   draining: listener closed (new connects refused by the OS),
+//!             in-flight connections answered; new classify bodies
+//!             get 503 {"error":{"code":"draining"}} + Connection: close
+//!   then:     connection threads joined (bounded by the read timeout),
+//!             pools drained via Router::finish (every accepted request
+//!             is served — force-flushed tails included),
+//!             NetReport assembled and returned
+//! ```
+//!
+//! The ordering is what makes drain *lossless*: a classify request is
+//! either rejected with 503 before it touches a pool, or it was
+//! enqueued — and [`crate::coordinator::ServePool::finish`] guarantees
+//! an enqueued request is served.  There is no window where an accepted
+//! request can be dropped.
+//!
+//! # Hardening
+//!
+//! Connection threads arm [`Limits::read_timeout`] on the socket, so a
+//! stalled peer costs one thread a bounded wait (408 mid-request,
+//! silent close when idle); header/body caps bound memory per
+//! connection; reply waits are capped ([`REPLY_WAIT`] → 504).  Serving
+//! workers never block on the network: they hand responses to a
+//! channel and move to the next batch.
+
+use super::api::{self, ApiError, ClassifyRequest, ModelShape};
+use super::http::{self, HttpHead, Limits, RecvError};
+use super::router::Router;
+use super::stats::{stats_json, NetCounters};
+use crate::coordinator::{Response, ServeConfig, ServeReport, ServePool};
+use crate::runtime::Runtime;
+use crate::util::json::Json;
+use anyhow::{anyhow, Context, Result};
+use std::io::{BufReader, BufWriter};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+/// Ceiling on one request's wait for its pool reply.  Far above any
+/// sane SLO — it only trips if a pool wedges, in which case the client
+/// gets 504 instead of a hung connection.
+const REPLY_WAIT: Duration = Duration::from_secs(30);
+
+/// Poll interval of the non-blocking accept loop (a connect is picked
+/// up at most this much late; drain is noticed just as fast).
+const ACCEPT_POLL: Duration = Duration::from_millis(5);
+
+// ---------------------------------------------------------------------------
+// Drain signals (SIGTERM / ctrl-c)
+// ---------------------------------------------------------------------------
+
+static DRAIN_REQUESTED: AtomicBool = AtomicBool::new(false);
+
+#[cfg(unix)]
+extern "C" fn on_drain_signal(_sig: i32) {
+    // async-signal-safe: a single atomic store, nothing else
+    DRAIN_REQUESTED.store(true, Ordering::SeqCst);
+}
+
+/// Route SIGINT (ctrl-c) and SIGTERM into [`drain_requested`] instead
+/// of process death, so `acceltran serve --listen` drains gracefully.
+/// Uses the libc `signal(2)` entry point directly (no signal-handling
+/// crate is vendored); a no-op on non-unix targets.
+pub fn install_drain_signals() {
+    #[cfg(unix)]
+    unsafe {
+        extern "C" {
+            fn signal(signum: i32, handler: usize) -> usize;
+        }
+        let h = on_drain_signal as extern "C" fn(i32) as usize;
+        signal(2, h); // SIGINT
+        signal(15, h); // SIGTERM
+    }
+}
+
+/// Whether a drain signal has arrived since process start.
+pub fn drain_requested() -> bool {
+    DRAIN_REQUESTED.load(Ordering::SeqCst)
+}
+
+// ---------------------------------------------------------------------------
+// Config / report
+// ---------------------------------------------------------------------------
+
+/// Front-end knobs (the serving engine's own knobs ride in `serve`).
+#[derive(Clone, Debug)]
+pub struct NetConfig {
+    /// Bind address, e.g. `127.0.0.1:8080`; port 0 picks a free port
+    /// (the bound address is [`NetServer::addr`]).
+    pub listen: String,
+    /// Pool shards; each gets `serve.workers` workers over its own
+    /// forked backends.
+    pub pools: usize,
+    /// Per-shard serving-engine config.
+    pub serve: ServeConfig,
+    /// Wire-protocol limits and the per-connection read timeout.
+    pub limits: Limits,
+    /// `tau` used when a classify body omits it.
+    pub default_tau: f32,
+    /// Max items in a `{"requests": [...]}` batch (413 beyond).
+    pub max_batch: usize,
+    /// Honor SIGTERM / ctrl-c as drain triggers (off in tests, which
+    /// drive [`NetServer::shutdown`] directly).
+    pub drain_on_signal: bool,
+}
+
+impl Default for NetConfig {
+    fn default() -> Self {
+        NetConfig {
+            listen: "127.0.0.1:0".to_string(),
+            pools: 2,
+            serve: ServeConfig::default(),
+            limits: Limits::default(),
+            default_tau: 0.04,
+            max_batch: 32,
+            drain_on_signal: false,
+        }
+    }
+}
+
+/// What a drained server hands back: front-end counters plus each pool
+/// shard's final [`ServeReport`].
+#[derive(Debug)]
+pub struct NetReport {
+    /// Address the server was bound to.
+    pub listen: String,
+    /// Start-to-drain wall time.
+    pub uptime: Duration,
+    /// TCP connections accepted.
+    pub connections: u64,
+    /// HTTP requests fully read.
+    pub http_requests: u64,
+    /// 2xx responses.
+    pub ok: u64,
+    /// 4xx responses.
+    pub client_errors: u64,
+    /// 5xx responses other than drain rejections.
+    pub server_errors: u64,
+    /// 503s sent while draining.
+    pub drained_rejects: u64,
+    /// Mid-request read timeouts (408s).
+    pub timeouts: u64,
+    /// Final per-shard serving reports, in shard order.
+    pub pool_reports: Vec<ServeReport>,
+}
+
+impl NetReport {
+    /// Total classify requests served across shards.
+    pub fn requests_served(&self) -> u64 {
+        self.pool_reports.iter().map(|r| r.requests).sum()
+    }
+
+    /// JSON document (`server` section + per-shard reports).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("listen", Json::str(self.listen.clone())),
+            ("uptime_s", Json::num(self.uptime.as_secs_f64())),
+            (
+                "server",
+                Json::obj(vec![
+                    ("connections", Json::num(self.connections as f64)),
+                    ("http_requests", Json::num(self.http_requests as f64)),
+                    ("ok", Json::num(self.ok as f64)),
+                    ("client_errors", Json::num(self.client_errors as f64)),
+                    ("server_errors", Json::num(self.server_errors as f64)),
+                    (
+                        "drained_rejects",
+                        Json::num(self.drained_rejects as f64),
+                    ),
+                    ("timeouts", Json::num(self.timeouts as f64)),
+                ]),
+            ),
+            (
+                "pools",
+                Json::arr(self.pool_reports.iter().map(|r| r.to_json())),
+            ),
+        ])
+    }
+
+    /// Write the JSON document, creating parent directories.
+    pub fn save(&self, path: impl AsRef<std::path::Path>) -> Result<()> {
+        let path = path.as_ref();
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)
+                .with_context(|| format!("creating {}", dir.display()))?;
+        }
+        std::fs::write(path, self.to_json().to_string_pretty())
+            .with_context(|| format!("writing {}", path.display()))
+    }
+
+    /// One-screen summary to stdout.
+    pub fn print_summary(&self) {
+        println!(
+            "net: {} up {:.1}s — {} conns, {} http reqs ({} ok / {} 4xx / \
+             {} 5xx / {} drain-rejected / {} timeouts)",
+            self.listen,
+            self.uptime.as_secs_f64(),
+            self.connections,
+            self.http_requests,
+            self.ok,
+            self.client_errors,
+            self.server_errors,
+            self.drained_rejects,
+            self.timeouts,
+        );
+        for (i, r) in self.pool_reports.iter().enumerate() {
+            println!(
+                "  pool {i}: {} served on {} worker(s), p50 {}us p99 {}us \
+                 total, {} deadline misses",
+                r.requests,
+                r.workers,
+                r.total_latency.percentile_us(50.0),
+                r.total_latency.percentile_us(99.0),
+                r.deadline_misses,
+            );
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// The server
+// ---------------------------------------------------------------------------
+
+/// Everything connection threads share.  Lives in one [`Arc`] so the
+/// accept loop, connection threads, and [`NetServer`] see the same
+/// state; reclaimed with `Arc::try_unwrap` once every thread has been
+/// joined (which is what lets [`NetServer::shutdown`] consume the
+/// router and drain the pools).
+struct Ctx {
+    router: Router,
+    counters: NetCounters,
+    limits: Limits,
+    default_tau: f32,
+    max_batch: usize,
+    draining: AtomicBool,
+    started: Instant,
+    listen: String,
+}
+
+impl Ctx {
+    fn state_str(&self) -> &'static str {
+        if self.draining.load(Ordering::SeqCst) {
+            "draining"
+        } else {
+            "accepting"
+        }
+    }
+}
+
+/// A running HTTP front-end.  Construct with [`NetServer::start`],
+/// stop with [`NetServer::shutdown`] (or let a drain signal trigger it
+/// via [`NetServer::run_until_drained`]).
+pub struct NetServer {
+    addr: SocketAddr,
+    ctx: Arc<Ctx>,
+    accept: JoinHandle<Result<()>>,
+    drain_on_signal: bool,
+}
+
+impl NetServer {
+    /// Bind `cfg.listen`, start `cfg.pools` pool shards forked from
+    /// `proto`, and begin accepting.
+    pub fn start(proto: &Runtime, params: &[f32], cfg: &NetConfig) -> Result<NetServer> {
+        let listener = TcpListener::bind(&cfg.listen)
+            .with_context(|| format!("binding {}", cfg.listen))?;
+        let addr = listener.local_addr().context("reading bound address")?;
+        listener
+            .set_nonblocking(true)
+            .context("setting listener non-blocking")?;
+        let mut pools = Vec::with_capacity(cfg.pools.max(1));
+        for i in 0..cfg.pools.max(1) {
+            pools.push(
+                ServePool::start(proto, params, &cfg.serve)
+                    .with_context(|| format!("starting pool shard {i}"))?,
+            );
+        }
+        let ctx = Arc::new(Ctx {
+            router: Router::new(pools),
+            counters: NetCounters::default(),
+            limits: cfg.limits.clone(),
+            default_tau: cfg.default_tau,
+            max_batch: cfg.max_batch,
+            draining: AtomicBool::new(false),
+            started: Instant::now(),
+            listen: addr.to_string(),
+        });
+        let accept_ctx = Arc::clone(&ctx);
+        let drain_on_signal = cfg.drain_on_signal;
+        let accept = std::thread::Builder::new()
+            .name("net-accept".to_string())
+            .spawn(move || accept_loop(listener, accept_ctx, drain_on_signal))
+            .context("spawning accept thread")?;
+        Ok(NetServer { addr, ctx, accept, drain_on_signal })
+    }
+
+    /// The bound address (resolves port 0).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Classify requests served so far across shards.
+    pub fn completed(&self) -> u64 {
+        self.ctx.router.completed_total()
+    }
+
+    /// Begin draining (idempotent; the accept loop notices within one
+    /// poll interval).
+    pub fn begin_drain(&self) {
+        self.ctx.draining.store(true, Ordering::SeqCst);
+    }
+
+    /// Drain and reclaim: stop accepting, join every connection
+    /// thread, flush the pools, and return the final [`NetReport`].
+    pub fn shutdown(self) -> Result<NetReport> {
+        self.begin_drain();
+        match self.accept.join() {
+            Ok(res) => res.context("accept loop failed")?,
+            Err(_) => return Err(anyhow!("accept loop panicked")),
+        }
+        // every connection thread has been joined by the accept loop,
+        // so this Arc is the last one standing
+        let ctx = Arc::try_unwrap(self.ctx)
+            .map_err(|_| anyhow!("context still shared after join"))?;
+        let uptime = ctx.started.elapsed();
+        let c = &ctx.counters;
+        let load = |a: &std::sync::atomic::AtomicU64| a.load(Ordering::Relaxed);
+        let (connections, http_requests, ok, client_errors) = (
+            load(&c.connections),
+            load(&c.http_requests),
+            load(&c.ok),
+            load(&c.client_errors),
+        );
+        let (server_errors, drained_rejects, timeouts) = (
+            load(&c.server_errors),
+            load(&c.drained_rejects),
+            load(&c.timeouts),
+        );
+        let listen = ctx.listen.clone();
+        let pool_reports = ctx.router.finish()?;
+        Ok(NetReport {
+            listen,
+            uptime,
+            connections,
+            http_requests,
+            ok,
+            client_errors,
+            server_errors,
+            drained_rejects,
+            timeouts,
+            pool_reports,
+        })
+    }
+
+    /// Serve until a drain trigger fires (a signal when
+    /// `drain_on_signal`, or [`NetServer::begin_drain`] from another
+    /// handle), then drain and report.
+    pub fn run_until_drained(self) -> Result<NetReport> {
+        while !self.ctx.draining.load(Ordering::SeqCst)
+            && !(self.drain_on_signal && drain_requested())
+        {
+            std::thread::sleep(Duration::from_millis(50));
+        }
+        self.shutdown()
+    }
+}
+
+fn accept_loop(
+    listener: TcpListener,
+    ctx: Arc<Ctx>,
+    drain_on_signal: bool,
+) -> Result<()> {
+    let mut conns: Vec<JoinHandle<()>> = Vec::new();
+    loop {
+        if ctx.draining.load(Ordering::SeqCst) {
+            break;
+        }
+        if drain_on_signal && drain_requested() {
+            ctx.draining.store(true, Ordering::SeqCst);
+            break;
+        }
+        match listener.accept() {
+            Ok((stream, _peer)) => {
+                ctx.counters.connections.fetch_add(1, Ordering::Relaxed);
+                let conn_ctx = Arc::clone(&ctx);
+                match std::thread::Builder::new()
+                    .name("net-conn".to_string())
+                    .spawn(move || handle_connection(stream, conn_ctx))
+                {
+                    Ok(h) => conns.push(h),
+                    Err(_) => {
+                        // thread exhaustion: shed this connection
+                        // rather than kill the server
+                        ctx.counters
+                            .server_errors
+                            .fetch_add(1, Ordering::Relaxed);
+                    }
+                }
+                // reap finished handlers so the vec stays bounded by
+                // the number of LIVE connections
+                conns.retain(|h| !h.is_finished());
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(ACCEPT_POLL);
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+            Err(e) => return Err(e).context("accept failed"),
+        }
+    }
+    // draining: the listener drops here (OS refuses new connects);
+    // join every live connection — bounded by the read timeout, since
+    // idle keep-alive reads give up after it
+    drop(listener);
+    for h in conns {
+        let _ = h.join();
+    }
+    Ok(())
+}
+
+/// Outcome of serving one request on a connection: the response has
+/// been written; `keep` says whether the session may continue.
+struct Served {
+    keep: bool,
+}
+
+fn handle_connection(stream: TcpStream, ctx: Arc<Ctx>) {
+    if stream.set_read_timeout(Some(ctx.limits.read_timeout)).is_err() {
+        return;
+    }
+    let _ = stream.set_nodelay(true);
+    let Ok(read_half) = stream.try_clone() else { return };
+    let mut reader = BufReader::new(read_half);
+    let mut writer = BufWriter::new(stream);
+    loop {
+        let head = match http::read_head(&mut reader, &ctx.limits) {
+            Ok(h) => h,
+            Err(e) => {
+                recv_error_response(&mut writer, &ctx, e);
+                return;
+            }
+        };
+        // curl waits for this before sending larger bodies
+        if head.expects_continue() && http::write_continue(&mut writer).is_err()
+        {
+            return;
+        }
+        let body = match http::read_body(&mut reader, &head, &ctx.limits) {
+            Ok(b) => b,
+            Err(e) => {
+                // over-cap body: consume (bounded) what the peer already
+                // sent before answering — closing a socket with unread
+                // bytes raises an RST that can destroy the in-flight 413
+                if let RecvError::TooLarge { .. } = e {
+                    let len =
+                        head.content_length().unwrap_or(0).min(256 << 10);
+                    drain_bytes(&mut reader, len);
+                }
+                recv_error_response(&mut writer, &ctx, e);
+                return;
+            }
+        };
+        ctx.counters.http_requests.fetch_add(1, Ordering::Relaxed);
+        let served = serve_request(&mut writer, &ctx, &head, &body);
+        match served {
+            Ok(Served { keep: true }) => continue,
+            _ => return,
+        }
+    }
+}
+
+/// Read and discard up to `n` bytes (stops early on EOF / timeout);
+/// bounded cleanup so the TCP close after an error is clean.
+fn drain_bytes(r: &mut impl std::io::Read, mut n: usize) {
+    let mut sink = [0u8; 4096];
+    while n > 0 {
+        let want = n.min(sink.len());
+        match r.read(&mut sink[..want]) {
+            Ok(0) | Err(_) => break,
+            Ok(got) => n -= got,
+        }
+    }
+}
+
+/// Answer a protocol-level receive failure (write a status when the
+/// peer can still be talked to; stay silent on close/idle/transport
+/// errors).  The connection always ends after this.
+fn recv_error_response(
+    writer: &mut impl std::io::Write,
+    ctx: &Ctx,
+    err: RecvError,
+) {
+    let status = match err {
+        RecvError::Closed | RecvError::Io(_) => return,
+        RecvError::Timeout { mid_request: false } => return,
+        RecvError::Timeout { mid_request: true } => {
+            ctx.counters.timeouts.fetch_add(1, Ordering::Relaxed);
+            408
+        }
+        RecvError::TooLarge { what: "body" } => 413,
+        RecvError::TooLarge { .. } => 431,
+        RecvError::Malformed(_) => 400,
+        RecvError::Unsupported(_) => 501,
+    };
+    let api_err = ApiError {
+        status,
+        code: match status {
+            408 => "timeout",
+            413 => "too_large",
+            431 => "headers_too_large",
+            501 => "unsupported",
+            _ => "malformed",
+        },
+        message: err.to_string(),
+    };
+    write_json(writer, ctx, status, &api_err.to_json(), false);
+}
+
+/// Serialize and send one JSON response, recording the outcome class.
+fn write_json(
+    writer: &mut impl std::io::Write,
+    ctx: &Ctx,
+    status: u16,
+    body: &Json,
+    keep: bool,
+) -> bool {
+    ctx.counters.record_status(status);
+    let text = body.to_string_compact();
+    http::write_response(
+        writer,
+        status,
+        "application/json",
+        text.as_bytes(),
+        keep,
+    )
+    .is_ok()
+}
+
+/// Route one fully-read request and write its response.
+fn serve_request(
+    writer: &mut impl std::io::Write,
+    ctx: &Ctx,
+    head: &HttpHead,
+    body: &[u8],
+) -> Result<Served, ()> {
+    let keep = !head.wants_close();
+    let (status, doc, keep) = match (head.method.as_str(), head.path.as_str())
+    {
+        ("GET", "/healthz") => (
+            200,
+            Json::obj(vec![
+                ("status", Json::str("ok")),
+                ("state", Json::str(ctx.state_str())),
+                (
+                    "model",
+                    Json::obj(vec![
+                        ("seq", Json::num(ctx.router.seq() as f64)),
+                        ("vocab", Json::num(ctx.router.vocab() as f64)),
+                        ("classes", Json::num(ctx.router.classes() as f64)),
+                    ]),
+                ),
+                ("pools", Json::num(ctx.router.len() as f64)),
+            ]),
+            keep,
+        ),
+        ("GET", "/stats") => (
+            200,
+            stats_json(
+                ctx.state_str(),
+                &ctx.listen,
+                ctx.started.elapsed(),
+                &ctx.counters,
+                &ctx.router.snapshots(),
+            ),
+            keep,
+        ),
+        ("POST", "/v1/classify") => {
+            if ctx.draining.load(Ordering::SeqCst) {
+                ctx.counters.drained_rejects.fetch_add(1, Ordering::Relaxed);
+                let e = ApiError {
+                    status: 503,
+                    code: "draining",
+                    message: "server is draining; retry elsewhere".into(),
+                };
+                // drain rejections close the connection so clients
+                // re-resolve instead of hammering a dying server
+                (503, e.to_json(), false)
+            } else {
+                match classify(ctx, body) {
+                    Ok(doc) => (200, doc, keep),
+                    Err(e) => (e.status, e.to_json(), keep),
+                }
+            }
+        }
+        ("POST", "/healthz") | ("POST", "/stats")
+        | ("GET" | "PUT" | "DELETE" | "HEAD" | "PATCH", "/v1/classify") => {
+            let e = ApiError {
+                status: 405,
+                code: "method_not_allowed",
+                message: format!("{} not allowed on {}", head.method, head.path),
+            };
+            (405, e.to_json(), keep)
+        }
+        _ => {
+            let e = ApiError {
+                status: 404,
+                code: "not_found",
+                message: format!("no route for {}", head.path),
+            };
+            (404, e.to_json(), keep)
+        }
+    };
+    if write_json(writer, ctx, status, &doc, keep) && keep {
+        Ok(Served { keep: true })
+    } else {
+        Err(())
+    }
+}
+
+fn response_json(r: &Response, shard: usize) -> Json {
+    Json::obj(vec![
+        ("id", Json::num(r.id as f64)),
+        ("pool", Json::num(shard as f64)),
+        ("batch", Json::num(r.batch as f64)),
+        ("latency_us", Json::num(r.latency.as_micros() as f64)),
+        ("logits", Json::arr(r.logits.iter().map(|&l| Json::num(l as f64)))),
+    ])
+}
+
+/// Decode, validate, route to a pool shard, and wait for the replies.
+fn classify(ctx: &Ctx, body: &[u8]) -> Result<Json, ApiError> {
+    let shape =
+        ModelShape { seq: ctx.router.seq(), vocab: ctx.router.vocab() };
+    let req =
+        api::decode_classify(body, shape, ctx.default_tau, ctx.max_batch)?;
+    let wedged = || ApiError {
+        status: 504,
+        code: "reply_timeout",
+        message: format!(
+            "pool did not answer within {REPLY_WAIT:?}; server may be wedged"
+        ),
+    };
+    match req {
+        ClassifyRequest::Single(item) => {
+            let (tx, rx) = mpsc::channel();
+            let (shard, _id) = ctx.router.submit(item.ids, item.tau, tx);
+            let resp = rx.recv_timeout(REPLY_WAIT).map_err(|_| wedged())?;
+            Ok(response_json(&resp, shard))
+        }
+        ClassifyRequest::Batch(items) => {
+            let n = items.len();
+            let rows: Vec<(Vec<i32>, f32)> =
+                items.into_iter().map(|i| (i.ids, i.tau)).collect();
+            let (tx, rx) = mpsc::channel();
+            let (shard, ids) = ctx.router.submit_batch(rows, tx);
+            let mut by_id: Vec<Option<Response>> = (0..n).map(|_| None).collect();
+            for _ in 0..n {
+                let resp = rx.recv_timeout(REPLY_WAIT).map_err(|_| wedged())?;
+                if let Some(slot) = ids.iter().position(|&id| id == resp.id) {
+                    by_id[slot] = Some(resp);
+                }
+            }
+            let responses: Vec<Json> = by_id
+                .into_iter()
+                .map(|r| {
+                    r.map(|r| response_json(&r, shard)).ok_or_else(|| ApiError {
+                        status: 500,
+                        code: "missing_reply",
+                        message: "a batch row produced no response".into(),
+                    })
+                })
+                .collect::<Result<_, _>>()?;
+            Ok(Json::obj(vec![("responses", Json::arr(responses))]))
+        }
+    }
+}

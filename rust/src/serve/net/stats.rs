@@ -1,0 +1,219 @@
+//! Front-end counters and `/stats` document assembly.
+//!
+//! [`NetCounters`] tracks what the HTTP layer itself did (connections,
+//! requests by outcome class); the pools' serving state comes from
+//! [`crate::coordinator::PoolSnapshot`]s, and the block-sparse GEMM
+//! counters from the process-wide
+//! [`crate::runtime::tensor::gemm_stats_snapshot`] accumulator.  All of
+//! it is relaxed atomics and short lock holds — scraping `/stats` never
+//! stalls a serving worker.
+
+use crate::coordinator::{LatencyHistogram, PoolSnapshot};
+use crate::runtime::tensor::gemm_stats_snapshot;
+use crate::util::json::Json;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Duration;
+
+/// Process-lifetime HTTP-layer counters (monotonic, relaxed atomics).
+#[derive(Debug, Default)]
+pub struct NetCounters {
+    /// TCP connections accepted.
+    pub connections: AtomicU64,
+    /// HTTP requests fully read (any outcome).
+    pub http_requests: AtomicU64,
+    /// 2xx responses.
+    pub ok: AtomicU64,
+    /// 4xx responses (validation, routing, size limits).
+    pub client_errors: AtomicU64,
+    /// 5xx responses other than drain rejections.
+    pub server_errors: AtomicU64,
+    /// 503s sent because the server was draining.
+    pub drained_rejects: AtomicU64,
+    /// Connections dropped for stalling mid-request (408 sent).
+    pub timeouts: AtomicU64,
+}
+
+impl NetCounters {
+    /// Bump the outcome-class counter for a response status.
+    pub fn record_status(&self, status: u16) {
+        let c = match status {
+            200..=299 => &self.ok,
+            400..=499 => &self.client_errors,
+            _ => &self.server_errors,
+        };
+        c.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// JSON object for the `/stats` `server` section.
+    pub fn to_json(&self) -> Json {
+        let get = |c: &AtomicU64| Json::num(c.load(Ordering::Relaxed) as f64);
+        Json::obj(vec![
+            ("connections", get(&self.connections)),
+            ("http_requests", get(&self.http_requests)),
+            ("ok", get(&self.ok)),
+            ("client_errors", get(&self.client_errors)),
+            ("server_errors", get(&self.server_errors)),
+            ("drained_rejects", get(&self.drained_rejects)),
+            ("timeouts", get(&self.timeouts)),
+        ])
+    }
+}
+
+/// Assemble the `/stats` response body.
+///
+/// Shape (field names match [`crate::coordinator::ServeReport`] where
+/// the concepts overlap, so report readers and live scrapers share a
+/// schema):
+///
+/// ```json
+/// {
+///   "state": "accepting" | "draining",
+///   "listen": "127.0.0.1:8080",
+///   "uptime_s": 12.3,
+///   "server": { "connections": .., "ok": .., ... },
+///   "pools": [ { per-shard PoolSnapshot }, ... ],
+///   "merged": { "completed": .., "pending": ..,
+///               "padded_row_fraction": ..,
+///               "queue_depth_high_water": ..,
+///               "latency_us": { "queue": .., "compute": .., "total": .. } },
+///   "gemm": { "tiles": .., "effectual_mac_fraction": .., ... }
+/// }
+/// ```
+pub fn stats_json(
+    state: &str,
+    listen: &str,
+    uptime: Duration,
+    counters: &NetCounters,
+    pools: &[PoolSnapshot],
+) -> Json {
+    let mut queue_h = LatencyHistogram::new();
+    let mut compute_h = LatencyHistogram::new();
+    let mut total_h = LatencyHistogram::new();
+    let mut completed = 0u64;
+    let mut submitted = 0u64;
+    let mut pending = 0usize;
+    let mut deadline_misses = 0u64;
+    let mut rows = 0u64;
+    let mut padded = 0u64;
+    let mut high_water = 0u64;
+    for p in pools {
+        queue_h.merge(&p.queue_latency);
+        compute_h.merge(&p.compute_latency);
+        total_h.merge(&p.total_latency);
+        completed += p.completed;
+        submitted += p.submitted;
+        pending += p.pending;
+        deadline_misses += p.deadline_misses;
+        rows += p.stats.rows_dispatched;
+        padded += p.stats.padded_rows;
+        high_water = high_water.max(p.stats.queue_depth_high_water);
+    }
+    let padded_frac =
+        if rows == 0 { 0.0 } else { padded as f64 / rows as f64 };
+    let gemm = gemm_stats_snapshot();
+    Json::obj(vec![
+        ("state", Json::str(state)),
+        ("listen", Json::str(listen)),
+        ("uptime_s", Json::num(uptime.as_secs_f64())),
+        ("server", counters.to_json()),
+        (
+            "pools",
+            Json::arr(pools.iter().map(|p| p.to_json())),
+        ),
+        (
+            "merged",
+            Json::obj(vec![
+                ("submitted", Json::num(submitted as f64)),
+                ("completed", Json::num(completed as f64)),
+                ("pending", Json::num(pending as f64)),
+                ("deadline_misses", Json::num(deadline_misses as f64)),
+                ("rows_dispatched", Json::num(rows as f64)),
+                ("padded_rows", Json::num(padded as f64)),
+                ("padded_row_fraction", Json::num(padded_frac)),
+                (
+                    "queue_depth_high_water",
+                    Json::num(high_water as f64),
+                ),
+                (
+                    "latency_us",
+                    Json::obj(vec![
+                        ("queue", queue_h.to_json()),
+                        ("compute", compute_h.to_json()),
+                        ("total", total_h.to_json()),
+                    ]),
+                ),
+            ]),
+        ),
+        (
+            "gemm",
+            Json::obj(vec![
+                ("tiles", Json::num(gemm.tiles as f64)),
+                ("zero_tiles", Json::num(gemm.zero_tiles as f64)),
+                ("macs", Json::num(gemm.macs as f64)),
+                (
+                    "tile_skipped_macs",
+                    Json::num(gemm.tile_skipped_macs as f64),
+                ),
+                (
+                    "effectual_tile_fraction",
+                    Json::num(gemm.effectual_tile_fraction()),
+                ),
+                (
+                    "effectual_mac_fraction",
+                    Json::num(gemm.effectual_mac_fraction()),
+                ),
+            ]),
+        ),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn record_status_classifies() {
+        let c = NetCounters::default();
+        c.record_status(200);
+        c.record_status(201);
+        c.record_status(400);
+        c.record_status(413);
+        c.record_status(500);
+        assert_eq!(c.ok.load(Ordering::Relaxed), 2);
+        assert_eq!(c.client_errors.load(Ordering::Relaxed), 2);
+        assert_eq!(c.server_errors.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn stats_json_empty_pools_is_well_formed() {
+        let c = NetCounters::default();
+        c.connections.fetch_add(3, Ordering::Relaxed);
+        let j = stats_json(
+            "accepting",
+            "127.0.0.1:0",
+            Duration::from_millis(1500),
+            &c,
+            &[],
+        );
+        assert_eq!(
+            j.get("state").and_then(|v| v.as_str()),
+            Some("accepting")
+        );
+        assert_eq!(
+            j.path(&["server", "connections"]).and_then(|v| v.as_f64()),
+            Some(3.0)
+        );
+        assert_eq!(
+            j.path(&["merged", "completed"]).and_then(|v| v.as_f64()),
+            Some(0.0)
+        );
+        assert_eq!(
+            j.path(&["merged", "padded_row_fraction"])
+                .and_then(|v| v.as_f64()),
+            Some(0.0)
+        );
+        // must serialize and re-parse cleanly (non-finite would break)
+        let text = j.to_string_compact();
+        assert!(Json::parse(&text).is_ok(), "{text}");
+    }
+}

@@ -82,6 +82,12 @@ impl Args {
             .unwrap_or(default)
     }
 
+    /// Millisecond flag as a [`std::time::Duration`] (`--read-timeout-ms
+    /// 2000` style knobs on the serve subcommand).
+    pub fn get_duration_ms(&self, key: &str, default_ms: u64) -> std::time::Duration {
+        std::time::Duration::from_millis(self.get_u64(key, default_ms))
+    }
+
     pub fn has(&self, switch: &str) -> bool {
         self.switches.iter().any(|s| s == switch)
     }
@@ -122,6 +128,19 @@ mod tests {
         assert_eq!(a.get_or("missing", "d"), "d");
         assert_eq!(a.get_usize("n", 3), 3);
         assert!(!a.has("quiet"));
+    }
+
+    #[test]
+    fn duration_helper() {
+        let a = parse("serve --read-timeout-ms 250");
+        assert_eq!(
+            a.get_duration_ms("read-timeout-ms", 2000),
+            std::time::Duration::from_millis(250)
+        );
+        assert_eq!(
+            a.get_duration_ms("slo-ms", 25),
+            std::time::Duration::from_millis(25)
+        );
     }
 
     #[test]

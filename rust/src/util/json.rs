@@ -4,6 +4,12 @@
 //! `goldens.py` (which is, in fact, all of JSON minus exotic number forms)
 //! and serializes experiment reports.  Numbers are held as `f64`;
 //! integer-valued access helpers round-trip exactly for |n| < 2^53.
+//!
+//! Since the HTTP front-end ([`crate::serve::net`]) made untrusted
+//! bytes a real input class, the parser also *rejects* duplicate object
+//! keys (rather than silently picking one — a classic smuggling vector)
+//! and the writer serializes non-finite `f64` as `null` so emitted
+//! documents are always valid JSON.
 
 use std::collections::BTreeMap;
 use std::fmt::Write as _;
@@ -59,6 +65,26 @@ impl Json {
     pub fn as_f64(&self) -> Option<f64> {
         match self {
             Json::Num(n) => Some(*n),
+            _ => None,
+        }
+    }
+
+    /// Exactly-integer-valued number within `i64` range; `None` for
+    /// fractional values, non-finite values, other types, or |n| ≥ 2^53
+    /// (past which `f64` stops round-tripping integers) — the strict
+    /// accessor typed request decoding (token ids) wants.
+    pub fn as_i64(&self) -> Option<i64> {
+        let n = self.as_f64()?;
+        if n.is_finite() && n.fract() == 0.0 && n.abs() < 9e15 {
+            Some(n as i64)
+        } else {
+            None
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Json::Bool(b) => Some(*b),
             _ => None,
         }
     }
@@ -134,7 +160,12 @@ impl Json {
             Json::Null => out.push_str("null"),
             Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
             Json::Num(n) => {
-                if n.fract() == 0.0 && n.abs() < 9e15 {
+                if !n.is_finite() {
+                    // JSON has no NaN/Infinity literal; emitting `NaN`
+                    // would produce invalid JSON, so serialize as null
+                    // (the same choice serde_json's default makes)
+                    out.push_str("null");
+                } else if n.fract() == 0.0 && n.abs() < 9e15 {
                     let _ = write!(out, "{}", *n as i64);
                 } else {
                     let _ = write!(out, "{n}");
@@ -383,7 +414,13 @@ impl<'a> Parser<'a> {
             self.eat(b':')?;
             self.skip_ws();
             let val = self.value()?;
-            map.insert(key, val);
+            // RFC 8259 leaves duplicate-key behavior undefined; with the
+            // HTTP layer feeding adversarial bodies in here, silently
+            // keeping one of the two values is a smuggling vector —
+            // reject instead
+            if map.insert(key.clone(), val).is_some() {
+                return Err(self.err(&format!("duplicate object key '{key}'")));
+            }
             self.skip_ws();
             match self.peek() {
                 Some(b',') => self.i += 1,
@@ -466,6 +503,43 @@ mod tests {
             let j = Json::parse(&text).unwrap();
             assert!(j.path(&["model", "param_count"]).unwrap().as_usize().unwrap() > 0);
         }
+    }
+
+    #[test]
+    fn rejects_duplicate_object_keys() {
+        // adversarial-input regression: two values under one key must
+        // not silently resolve to either
+        let err = Json::parse(r#"{"a": 1, "a": 2}"#).unwrap_err();
+        assert!(err.msg.contains("duplicate object key 'a'"), "{err}");
+        // nested objects are checked too
+        assert!(Json::parse(r#"{"x": {"b": 1, "b": 1}}"#).is_err());
+        // distinct keys still parse
+        assert!(Json::parse(r#"{"a": 1, "b": 2}"#).is_ok());
+    }
+
+    #[test]
+    fn non_finite_serializes_as_null() {
+        for v in [f64::NAN, f64::INFINITY, f64::NEG_INFINITY] {
+            let j = Json::obj(vec![("v", Json::num(v))]);
+            let text = j.to_string_compact();
+            assert_eq!(text, r#"{"v":null}"#, "{v}");
+            // and the output round-trips as valid JSON
+            assert_eq!(
+                Json::parse(&text).unwrap().get("v"),
+                Some(&Json::Null)
+            );
+        }
+    }
+
+    #[test]
+    fn i64_and_bool_accessors() {
+        assert_eq!(Json::parse("42").unwrap().as_i64(), Some(42));
+        assert_eq!(Json::parse("-3").unwrap().as_i64(), Some(-3));
+        assert_eq!(Json::parse("1.5").unwrap().as_i64(), None);
+        assert_eq!(Json::parse("1e300").unwrap().as_i64(), None);
+        assert_eq!(Json::parse("\"7\"").unwrap().as_i64(), None);
+        assert_eq!(Json::parse("true").unwrap().as_bool(), Some(true));
+        assert_eq!(Json::parse("1").unwrap().as_bool(), None);
     }
 
     #[test]
