@@ -396,8 +396,12 @@ fn cmd_serve_net(args: &Args) -> Result<()> {
     let pools = args.get_usize("pools", 2);
     let workers = args.get_usize("workers", 2);
     let slo = Duration::from_millis(args.get_u64("slo-ms", 25));
+    let read_timeout = args.get_duration_ms("read-timeout-ms", 2000);
     let limits = Limits {
-        read_timeout: args.get_duration_ms("read-timeout-ms", 2000),
+        read_timeout,
+        // whole-request wall clock scales with the per-read knob so one
+        // flag tunes both; 4x leaves room for legitimately slow links
+        max_request_time: read_timeout * 4,
         max_body_bytes: args.get_usize("max-body-kb", 1024) * 1024,
         ..Limits::default()
     };

@@ -5,13 +5,17 @@
 //! [`super::client`] speak for JSON APIs).
 //!
 //! Every read is bounded: header bytes and count are capped, bodies are
-//! capped *before* allocation, and the caller is expected to arm a
-//! socket read timeout — so a slow-loris or oversized client costs one
-//! connection thread a bounded wait, never a serving worker
-//! (DESIGN.md "Network front-end").
+//! capped *before* allocation, and each request is read under a
+//! wall-clock budget ([`RequestTimer`], armed alongside the caller's
+//! per-read socket timeout) — so a slow-loris or oversized client costs
+//! one connection thread a bounded wait, never a serving worker
+//! (DESIGN.md "Network front-end").  The socket timeout alone is not
+//! enough: it resets on every successful read, so a peer dripping one
+//! byte per interval would otherwise hold a thread for
+//! `max_header_bytes × read_timeout`.
 
 use std::io::{BufRead, Write};
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 /// Hard ceilings for one request (defaults are generous for JSON
 /// classify bodies and hostile-input-safe).
@@ -28,6 +32,12 @@ pub struct Limits {
     /// stalls mid-request longer than this gets 408 and the connection
     /// is closed.
     pub read_timeout: Duration,
+    /// Wall-clock budget for reading one full request (head + body),
+    /// counted from its first byte.  The per-read socket timeout resets
+    /// on every successful read, so on its own it lets a peer drip one
+    /// byte per interval ~forever; this cap bounds the whole request
+    /// (408 when exceeded).
+    pub max_request_time: Duration,
 }
 
 impl Default for Limits {
@@ -37,7 +47,36 @@ impl Default for Limits {
             max_headers: 64,
             max_body_bytes: 1 << 20,
             read_timeout: Duration::from_millis(2000),
+            max_request_time: Duration::from_millis(8000),
         }
+    }
+}
+
+/// Wall-clock budget for one request, shared between the head and body
+/// reads.  The clock starts at the request's *first byte* (an idle
+/// keep-alive connection waiting for a request is governed by the
+/// socket timeout instead), and every subsequent read ticks it; once
+/// `max_request_time` has elapsed the request fails with
+/// [`RecvError::Timeout`] no matter how steadily the peer drips bytes.
+pub struct RequestTimer {
+    budget: Duration,
+    started: Option<Instant>,
+}
+
+impl RequestTimer {
+    /// Fresh timer for one request, budgeted by `limits`.
+    pub fn new(limits: &Limits) -> RequestTimer {
+        RequestTimer { budget: limits.max_request_time, started: None }
+    }
+
+    /// Record read progress; fails once the budget is spent.  The first
+    /// call starts the clock.
+    fn tick(&mut self, mid_request: bool) -> Result<(), RecvError> {
+        let started = *self.started.get_or_insert_with(Instant::now);
+        if started.elapsed() > self.budget {
+            return Err(RecvError::Timeout { mid_request });
+        }
+        Ok(())
     }
 }
 
@@ -121,9 +160,24 @@ impl HttpHead {
     }
 
     /// Declared body length: 0 when absent, `Err` when present but not
-    /// a decimal integer.
+    /// a decimal integer — or when the header appears more than once.
+    /// Duplicate `Content-Length` headers (even agreeing ones) are a
+    /// classic request-smuggling desync vector behind a front proxy
+    /// that resolves the conflict differently, so they are rejected
+    /// outright, mirroring the JSON layer's duplicate-key rejection.
     pub fn content_length(&self) -> Result<usize, RecvError> {
-        match self.header("content-length") {
+        let mut found: Option<&str> = None;
+        for (n, v) in &self.headers {
+            if n == "content-length" {
+                if found.is_some() {
+                    return Err(RecvError::Malformed(
+                        "multiple content-length headers".into(),
+                    ));
+                }
+                found = Some(v);
+            }
+        }
+        match found {
             None => Ok(0),
             Some(v) => v.trim().parse().map_err(|_| {
                 RecvError::Malformed(format!("bad content-length '{v}'"))
@@ -149,10 +203,13 @@ impl HttpHead {
 }
 
 /// One `\r\n`-terminated line with the header-byte budget enforced;
-/// `budget` is decremented by the bytes consumed.
+/// `budget` is decremented by the bytes consumed.  Every byte ticks
+/// `timer`, so a peer dripping header bytes under the socket timeout
+/// still runs out of wall clock.
 fn read_line(
     r: &mut impl BufRead,
     budget: &mut usize,
+    timer: &mut RequestTimer,
     mid_request: bool,
 ) -> Result<String, RecvError> {
     let mut buf: Vec<u8> = Vec::new();
@@ -168,6 +225,7 @@ fn read_line(
             }
             return Err(RecvError::Malformed("unexpected eof".into()));
         }
+        timer.tick(mid_request || !buf.is_empty())?;
         if *budget == 0 {
             return Err(RecvError::TooLarge { what: "header" });
         }
@@ -189,12 +247,13 @@ fn read_line(
 pub fn read_head(
     r: &mut impl BufRead,
     limits: &Limits,
+    timer: &mut RequestTimer,
 ) -> Result<HttpHead, RecvError> {
     let mut budget = limits.max_header_bytes;
     // tolerate stray blank line(s) between pipelined requests
-    let mut line = read_line(r, &mut budget, false)?;
+    let mut line = read_line(r, &mut budget, timer, false)?;
     while line.is_empty() {
-        line = read_line(r, &mut budget, false)?;
+        line = read_line(r, &mut budget, timer, false)?;
     }
     let mut parts = line.split_whitespace();
     let (method, path, version) =
@@ -214,7 +273,7 @@ pub fn read_head(
     }
     let mut headers = Vec::new();
     loop {
-        let line = read_line(r, &mut budget, true)?;
+        let line = read_line(r, &mut budget, timer, true)?;
         if line.is_empty() {
             break;
         }
@@ -235,14 +294,16 @@ pub fn read_head(
     Ok(HttpHead { method, path, headers })
 }
 
-/// Read the request body declared by `head` within `limits`.  Checks
-/// the length cap *before* allocating, and rejects transfer encodings
-/// this server does not speak.
-pub fn read_body(
-    r: &mut impl BufRead,
+/// Validate `head`'s body declaration against `limits` without reading
+/// anything: rejects transfer encodings this server does not speak and
+/// a `Content-Length` past the cap, returning the declared length.
+/// Shared by [`read_body`] and the connection handler's
+/// `Expect: 100-continue` path — an oversized body must be refused
+/// *before* the interim `100 Continue` invites the peer to transmit it.
+pub fn check_body_limits(
     head: &HttpHead,
     limits: &Limits,
-) -> Result<Vec<u8>, RecvError> {
+) -> Result<usize, RecvError> {
     if let Some(te) = head.header("transfer-encoding") {
         return Err(RecvError::Unsupported(format!(
             "transfer-encoding '{te}' (send Content-Length)"
@@ -252,14 +313,37 @@ pub fn read_body(
     if len > limits.max_body_bytes {
         return Err(RecvError::TooLarge { what: "body" });
     }
+    Ok(len)
+}
+
+/// Chunk size for body reads — small enough that the request timer is
+/// ticked often, large enough that a full-size body costs few reads.
+const BODY_CHUNK: usize = 64 << 10;
+
+/// Read the request body declared by `head` within `limits`.  Checks
+/// the length cap *before* allocating, rejects transfer encodings this
+/// server does not speak, and ticks `timer` between chunks so a
+/// dripped body runs out of wall clock.
+pub fn read_body(
+    r: &mut impl BufRead,
+    head: &HttpHead,
+    limits: &Limits,
+    timer: &mut RequestTimer,
+) -> Result<Vec<u8>, RecvError> {
+    let len = check_body_limits(head, limits)?;
     let mut body = vec![0u8; len];
-    std::io::Read::read_exact(r, &mut body).map_err(|e| {
-        if e.kind() == std::io::ErrorKind::UnexpectedEof {
-            RecvError::Malformed("body truncated".into())
-        } else {
-            map_io(e, true)
+    let mut off = 0;
+    while off < len {
+        let end = (off + BODY_CHUNK).min(len);
+        match std::io::Read::read(r, &mut body[off..end]) {
+            Ok(0) => {
+                return Err(RecvError::Malformed("body truncated".into()))
+            }
+            Ok(n) => off += n,
+            Err(e) => return Err(map_io(e, true)),
         }
-    })?;
+        timer.tick(true)?;
+    }
     Ok(body)
 }
 
@@ -314,8 +398,16 @@ mod tests {
     use super::*;
     use std::io::Cursor;
 
+    fn timer() -> RequestTimer {
+        RequestTimer::new(&Limits::default())
+    }
+
     fn head_of(text: &str) -> Result<HttpHead, RecvError> {
-        read_head(&mut Cursor::new(text.as_bytes()), &Limits::default())
+        read_head(
+            &mut Cursor::new(text.as_bytes()),
+            &Limits::default(),
+            &mut timer(),
+        )
     }
 
     #[test]
@@ -346,8 +438,8 @@ mod tests {
         let text = "POST / HTTP/1.1\r\nContent-Length: 4\r\n\r\nabcdEXTRA";
         let mut r = Cursor::new(text.as_bytes());
         let limits = Limits::default();
-        let h = read_head(&mut r, &limits).unwrap();
-        let body = read_body(&mut r, &h, &limits).unwrap();
+        let h = read_head(&mut r, &limits, &mut timer()).unwrap();
+        let body = read_body(&mut r, &h, &limits, &mut timer()).unwrap();
         assert_eq!(body, b"abcd");
         // the EXTRA bytes stay buffered for the next (pipelined) request
         let mut rest = Vec::new();
@@ -373,13 +465,13 @@ mod tests {
         let mut limits = Limits::default();
         limits.max_header_bytes = 64;
         let long = format!("GET /{} HTTP/1.1\r\n\r\n", "a".repeat(100));
-        let got = read_head(&mut Cursor::new(long.as_bytes()), &limits);
+        let got = read_head(&mut Cursor::new(long.as_bytes()), &limits, &mut timer());
         assert!(matches!(got, Err(RecvError::TooLarge { what: "header" })));
         // header *count* cap too
         let mut limits = Limits::default();
         limits.max_headers = 2;
         let many = "GET / HTTP/1.1\r\na: 1\r\nb: 2\r\nc: 3\r\n\r\n";
-        let got = read_head(&mut Cursor::new(many.as_bytes()), &limits);
+        let got = read_head(&mut Cursor::new(many.as_bytes()), &limits, &mut timer());
         assert!(matches!(got, Err(RecvError::TooLarge { what: "header" })));
     }
 
@@ -390,8 +482,8 @@ mod tests {
         // without trying to allocate or read it
         let text = "POST / HTTP/1.1\r\nContent-Length: 999999999999\r\n\r\n";
         let mut r = Cursor::new(text.as_bytes());
-        let h = read_head(&mut r, &limits).unwrap();
-        let got = read_body(&mut r, &h, &limits);
+        let h = read_head(&mut r, &limits, &mut timer()).unwrap();
+        let got = read_body(&mut r, &h, &limits, &mut timer());
         assert!(matches!(got, Err(RecvError::TooLarge { what: "body" })));
     }
 
@@ -399,9 +491,9 @@ mod tests {
     fn chunked_encoding_is_unsupported() {
         let text = "POST / HTTP/1.1\r\nTransfer-Encoding: chunked\r\n\r\n";
         let mut r = Cursor::new(text.as_bytes());
-        let h = read_head(&mut r, &Limits::default()).unwrap();
+        let h = read_head(&mut r, &Limits::default(), &mut timer()).unwrap();
         assert!(matches!(
-            read_body(&mut r, &h, &Limits::default()),
+            read_body(&mut r, &h, &Limits::default(), &mut timer()),
             Err(RecvError::Unsupported(_))
         ));
     }
@@ -410,9 +502,9 @@ mod tests {
     fn truncated_body_is_malformed() {
         let text = "POST / HTTP/1.1\r\nContent-Length: 10\r\n\r\nabc";
         let mut r = Cursor::new(text.as_bytes());
-        let h = read_head(&mut r, &Limits::default()).unwrap();
+        let h = read_head(&mut r, &Limits::default(), &mut timer()).unwrap();
         assert!(matches!(
-            read_body(&mut r, &h, &Limits::default()),
+            read_body(&mut r, &h, &Limits::default(), &mut timer()),
             Err(RecvError::Malformed(_))
         ));
     }
@@ -432,9 +524,133 @@ mod tests {
         let two = "GET /a HTTP/1.1\r\n\r\nGET /b HTTP/1.1\r\n\r\n";
         let mut r = Cursor::new(two.as_bytes());
         let limits = Limits::default();
-        assert_eq!(read_head(&mut r, &limits).unwrap().path, "/a");
-        assert_eq!(read_head(&mut r, &limits).unwrap().path, "/b");
-        assert!(matches!(read_head(&mut r, &limits), Err(RecvError::Closed)));
+        assert_eq!(read_head(&mut r, &limits, &mut timer()).unwrap().path, "/a");
+        assert_eq!(read_head(&mut r, &limits, &mut timer()).unwrap().path, "/b");
+        assert!(matches!(
+            read_head(&mut r, &limits, &mut timer()),
+            Err(RecvError::Closed)
+        ));
+    }
+
+    #[test]
+    fn duplicate_content_length_is_rejected() {
+        // differing values: the textbook smuggling desync
+        let h = head_of(
+            "POST / HTTP/1.1\r\nContent-Length: 4\r\nContent-Length: 9\r\n\r\n",
+        )
+        .unwrap();
+        assert!(matches!(h.content_length(), Err(RecvError::Malformed(_))));
+        // agreeing duplicates are rejected too — a front proxy may
+        // collapse or reorder them differently than we would
+        let h = head_of(
+            "POST / HTTP/1.1\r\nContent-Length: 4\r\nContent-Length: 4\r\n\r\n",
+        )
+        .unwrap();
+        assert!(matches!(h.content_length(), Err(RecvError::Malformed(_))));
+        // ...and read_body refuses the request without reading a byte
+        let text = "POST / HTTP/1.1\r\nContent-Length: 4\r\n\
+                    Content-Length: 4\r\n\r\nabcd";
+        let mut r = Cursor::new(text.as_bytes());
+        let h = read_head(&mut r, &Limits::default(), &mut timer()).unwrap();
+        assert!(matches!(
+            read_body(&mut r, &h, &Limits::default(), &mut timer()),
+            Err(RecvError::Malformed(_))
+        ));
+    }
+
+    #[test]
+    fn check_body_limits_refuses_before_reading() {
+        let limits = Limits { max_body_bytes: 8, ..Limits::default() };
+        let h = head_of("POST / HTTP/1.1\r\nContent-Length: 9\r\n\r\n")
+            .unwrap();
+        assert!(matches!(
+            check_body_limits(&h, &limits),
+            Err(RecvError::TooLarge { what: "body" })
+        ));
+        let h = head_of(
+            "POST / HTTP/1.1\r\nTransfer-Encoding: chunked\r\n\r\n",
+        )
+        .unwrap();
+        assert!(matches!(
+            check_body_limits(&h, &limits),
+            Err(RecvError::Unsupported(_))
+        ));
+        let h = head_of("POST / HTTP/1.1\r\nContent-Length: 8\r\n\r\n")
+            .unwrap();
+        assert_eq!(check_body_limits(&h, &limits).unwrap(), 8);
+    }
+
+    /// Yields one byte per read with a fixed delay — a loopback
+    /// slow-loris that never trips a per-read socket timeout.
+    struct DripReader {
+        data: Vec<u8>,
+        pos: usize,
+        delay: Duration,
+    }
+
+    impl std::io::Read for DripReader {
+        fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+            if self.pos >= self.data.len() {
+                return Ok(0);
+            }
+            std::thread::sleep(self.delay);
+            buf[0] = self.data[self.pos];
+            self.pos += 1;
+            Ok(1)
+        }
+    }
+
+    #[test]
+    fn slow_loris_drip_hits_wall_clock_deadline() {
+        // each 2ms byte-read succeeds, so a per-read timeout would
+        // never fire — the request timer must cut the drip off as a
+        // mid-request timeout (408), not let it run to completion
+        let limits = Limits {
+            max_request_time: Duration::from_millis(20),
+            ..Limits::default()
+        };
+        let drip = DripReader {
+            data: format!("GET /{} HTTP/1.1\r\n\r\n", "a".repeat(512))
+                .into_bytes(),
+            pos: 0,
+            delay: Duration::from_millis(2),
+        };
+        let mut r = std::io::BufReader::new(drip);
+        let mut t = RequestTimer::new(&limits);
+        let got = read_head(&mut r, &limits, &mut t);
+        assert!(
+            matches!(got, Err(RecvError::Timeout { mid_request: true })),
+            "{got:?}"
+        );
+    }
+
+    #[test]
+    fn dripped_body_hits_wall_clock_deadline() {
+        let limits = Limits {
+            max_request_time: Duration::from_millis(20),
+            ..Limits::default()
+        };
+        // head arrives instantly (and starts the shared clock); only
+        // the body drips
+        let head = "POST / HTTP/1.1\r\nContent-Length: 512\r\n\r\n";
+        let mut t = RequestTimer::new(&limits);
+        let h = read_head(
+            &mut Cursor::new(head.as_bytes()),
+            &limits,
+            &mut t,
+        )
+        .unwrap();
+        let drip = DripReader {
+            data: vec![b'x'; 512],
+            pos: 0,
+            delay: Duration::from_millis(2),
+        };
+        let mut r = std::io::BufReader::new(drip);
+        let got = read_body(&mut r, &h, &limits, &mut t);
+        assert!(
+            matches!(got, Err(RecvError::Timeout { mid_request: true })),
+            "{got:?}"
+        );
     }
 
     #[test]

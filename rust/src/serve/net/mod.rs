@@ -14,7 +14,8 @@
 //! Layering, front to back:
 //!
 //! 1. [`http`] — wire protocol: bounded request parsing (header/body
-//!    caps, per-connection read timeouts) and response writing.
+//!    caps, per-connection read/write timeouts, a wall-clock budget
+//!    per request) and response writing.
 //! 2. [`api`] — typed decode of classify bodies against the served
 //!    model's shape (`seq`, `vocab`), with structured
 //!    [`api::ApiError`]s.

@@ -8,7 +8,8 @@
 //!   draining: listener closed (new connects refused by the OS),
 //!             in-flight connections answered; new classify bodies
 //!             get 503 {"error":{"code":"draining"}} + Connection: close
-//!   then:     connection threads joined (bounded by the read timeout),
+//!   then:     connection threads joined (bounded by the socket
+//!             read/write timeouts and the per-request budget),
 //!             pools drained via Router::finish (every accepted request
 //!             is served — force-flushed tails included),
 //!             NetReport assembled and returned
@@ -22,12 +23,18 @@
 //!
 //! # Hardening
 //!
-//! Connection threads arm [`Limits::read_timeout`] on the socket, so a
-//! stalled peer costs one thread a bounded wait (408 mid-request,
-//! silent close when idle); header/body caps bound memory per
-//! connection; reply waits are capped ([`REPLY_WAIT`] → 504).  Serving
-//! workers never block on the network: they hand responses to a
-//! channel and move to the next batch.
+//! Connection threads arm [`Limits::read_timeout`] on the socket for
+//! both reads *and* writes, so a stalled peer costs one thread a
+//! bounded wait (408 mid-request, silent close when idle) and a peer
+//! that stops reading responses is dropped instead of blocking
+//! `write_all` forever — which is what keeps the drain join bounded.
+//! A per-request wall-clock budget ([`Limits::max_request_time`])
+//! bounds byte-dripping slow-loris clients that would otherwise reset
+//! the socket timeout on every byte; header/body caps bound memory per
+//! connection; oversized bodies are refused before `100 Continue`
+//! invites them; reply waits are capped ([`REPLY_WAIT`] → 504).
+//! Serving workers never block on the network: they hand responses to
+//! a channel and move to the next batch.
 
 use super::api::{self, ApiError, ClassifyRequest, ModelShape};
 use super::http::{self, HttpHead, Limits, RecvError};
@@ -415,8 +422,10 @@ fn accept_loop(
         }
     }
     // draining: the listener drops here (OS refuses new connects);
-    // join every live connection — bounded by the read timeout, since
-    // idle keep-alive reads give up after it
+    // join every live connection — bounded because idle keep-alive
+    // reads give up after the read timeout, dripped requests exhaust
+    // the per-request budget, and stalled response writes hit the
+    // write timeout
     drop(listener);
     for h in conns {
         let _ = h.join();
@@ -434,24 +443,49 @@ fn handle_connection(stream: TcpStream, ctx: Arc<Ctx>) {
     if stream.set_read_timeout(Some(ctx.limits.read_timeout)).is_err() {
         return;
     }
+    // a peer that sends requests but stops reading responses would
+    // otherwise block write_all forever once its receive window fills,
+    // wedging this thread — and with it the drain join — indefinitely;
+    // a timed-out write is treated as a dead connection (silent close),
+    // keeping drain bounded
+    if stream.set_write_timeout(Some(ctx.limits.read_timeout)).is_err() {
+        return;
+    }
     let _ = stream.set_nodelay(true);
     let Ok(read_half) = stream.try_clone() else { return };
     let mut reader = BufReader::new(read_half);
     let mut writer = BufWriter::new(stream);
     loop {
-        let head = match http::read_head(&mut reader, &ctx.limits) {
-            Ok(h) => h,
-            Err(e) => {
+        // per-request wall-clock budget: the socket timeout resets on
+        // every successful read, so on its own a byte-dripping peer
+        // could hold this thread for hours
+        let mut timer = http::RequestTimer::new(&ctx.limits);
+        let head =
+            match http::read_head(&mut reader, &ctx.limits, &mut timer) {
+                Ok(h) => h,
+                Err(e) => {
+                    recv_error_response(&mut writer, &ctx, e);
+                    return;
+                }
+            };
+        // curl waits for this before sending larger bodies — but an
+        // oversized or unsupported body declaration is refused *here*,
+        // before the interim response invites the peer to transmit it
+        if head.expects_continue() {
+            if let Err(e) = http::check_body_limits(&head, &ctx.limits) {
                 recv_error_response(&mut writer, &ctx, e);
                 return;
             }
-        };
-        // curl waits for this before sending larger bodies
-        if head.expects_continue() && http::write_continue(&mut writer).is_err()
-        {
-            return;
+            if http::write_continue(&mut writer).is_err() {
+                return;
+            }
         }
-        let body = match http::read_body(&mut reader, &head, &ctx.limits) {
+        let body = match http::read_body(
+            &mut reader,
+            &head,
+            &ctx.limits,
+            &mut timer,
+        ) {
             Ok(b) => b,
             Err(e) => {
                 // over-cap body: consume (bounded) what the peer already

@@ -235,6 +235,59 @@ fn oversized_body_is_rejected_by_limit() {
 }
 
 #[test]
+fn expect_continue_oversized_is_refused_before_invite() {
+    let (server, _params, _rt) = start_server(|c| {
+        c.limits.max_body_bytes = 256;
+    });
+    // raw socket: the test must see exactly what comes back, including
+    // whether a "100 Continue" interim response was (wrongly) sent
+    let mut stream = std::net::TcpStream::connect(server.addr()).unwrap();
+    stream
+        .set_read_timeout(Some(std::time::Duration::from_secs(10)))
+        .unwrap();
+    use std::io::{Read, Write};
+    // declares a body far over the cap and waits for the invite; the
+    // server must answer 413 straight away, never 100 Continue
+    stream
+        .write_all(
+            b"POST /v1/classify HTTP/1.1\r\nHost: t\r\n\
+              Expect: 100-continue\r\nContent-Length: 99999\r\n\r\n",
+        )
+        .unwrap();
+    let mut raw = Vec::new();
+    stream.read_to_end(&mut raw).unwrap();
+    let text = String::from_utf8_lossy(&raw);
+    assert!(
+        text.starts_with("HTTP/1.1 413 "),
+        "expected immediate 413, got: {text}"
+    );
+    assert!(!text.contains("100 Continue"), "body was invited: {text}");
+    server.shutdown().unwrap();
+}
+
+#[test]
+fn duplicate_content_length_is_rejected() {
+    let (server, _params, _rt) = start_server(|_| {});
+    let mut client = HttpClient::connect(server.addr()).unwrap();
+    // agreeing duplicates are still a smuggling desync vector → 400
+    // (no body bytes follow: the server closes on this error, and
+    // unread bytes would make the close race the response with an RST)
+    client
+        .send_raw(
+            b"POST /v1/classify HTTP/1.1\r\nHost: t\r\n\
+              Content-Length: 4\r\nContent-Length: 4\r\n\r\n",
+        )
+        .unwrap();
+    let resp = client.read_response().unwrap();
+    assert_eq!(resp.status, 400, "{resp:?}");
+    assert_eq!(
+        resp.json().unwrap().path(&["error", "code"]).and_then(|v| v.as_str()),
+        Some("malformed")
+    );
+    server.shutdown().unwrap();
+}
+
+#[test]
 fn fuzzed_bodies_always_get_valid_json_4xx() {
     let (server, _params, rt) = start_server(|_| {});
     let seq = rt.manifest.seq;
