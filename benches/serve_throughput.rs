@@ -4,7 +4,11 @@
 //! serve rows and the PR's ≥2x-at-4-workers acceptance bar — plus an
 //! HTTP-path wave over the `serve::net` front-end (2 pools × 2
 //! workers, loopback keep-alive clients) that bounds the transport tax:
-//! HTTP req/s must stay ≥0.8× the in-process 4-worker figure.
+//! HTTP req/s must stay ≥0.8× the in-process 4-worker figure — and a
+//! mixed-length wave (native lens ~ U[8, seq]) that pins the
+//! continuous-batching win: length-bucketed dispatch must beat the same
+//! content padded to seq by ≥1.5× with ≤15% padded tokens (vs a ≥40%
+//! pad-to-max baseline).
 //!
 //! Each worker is pinned to a single intra-op thread
 //! (`ACCELTRAN_THREADS=1`) so the sweep isolates *pool* scaling: without
@@ -28,23 +32,28 @@ use acceltran::util::cli::env_usize;
 use acceltran::util::json::Json;
 
 /// One measured wave: submit every request, drain, return req/s plus
-/// dispatch accounting.
+/// dispatch accounting (dispatch count, padded-row and padded-token
+/// fractions).
 fn wave(
     rt: &Runtime,
     params: &[f32],
     reqs: &[Vec<i32>],
     workers: usize,
     tau: f32,
-) -> (f64, u64, f64) {
+) -> (f64, u64, f64, f64) {
     let cfg = ServeConfig {
         workers,
         slo: Duration::from_millis(10),
         sim: None,
+        // the bench submits its whole wave up front; lift the admission
+        // bound out of the way so backpressure never skews the timing
+        max_queue: reqs.len().max(1),
+        ..Default::default()
     };
     let pool = ServePool::start(rt, params, &cfg).unwrap();
     let t0 = Instant::now();
     for ids in reqs {
-        pool.submit(ids.clone(), tau);
+        pool.submit(ids.clone(), tau).unwrap();
     }
     let (report, responses) = pool.finish().unwrap();
     let dt = t0.elapsed().as_secs_f64();
@@ -54,6 +63,7 @@ fn wave(
         reqs.len() as f64 / dt,
         report.stats.dispatches,
         report.stats.padded_row_fraction(),
+        report.stats.padded_token_fraction(),
     )
 }
 
@@ -122,12 +132,12 @@ fn main() {
         // median of 3 waves per point; the tiled-GEMM accumulator spans
         // all 3 (tile stats are rate-independent, so aggregating is fine)
         gemm_stats_reset();
-        let mut runs: Vec<(f64, u64, f64)> = (0..3)
+        let mut runs: Vec<(f64, u64, f64, f64)> = (0..3)
             .map(|_| wave(&rt, &params, &reqs, workers, tau))
             .collect();
         let gemm = gemm_stats_snapshot();
         runs.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
-        let (med_rps, dispatches, padded) = runs[1];
+        let (med_rps, dispatches, padded, _) = runs[1];
         println!(
             "{workers} worker(s): {med_rps:>9.1} req/s (median of 3) | \
              {dispatches} dispatches | {:.1}% padded rows | \
@@ -179,6 +189,7 @@ fn main() {
             workers: 2,
             slo: Duration::from_millis(10),
             sim: None,
+            ..Default::default()
         },
         ..NetConfig::default()
     };
@@ -203,6 +214,54 @@ fn main() {
          {http_rps:.1} req/s | loopback HTTP, ratio {http_ratio:.2}x vs in-process 4w |"
     );
 
+    // ---- continuous-batching wave: requests of mixed native length
+    // (lens ~ U[lo, seq]) through the length-bucketed engine vs the
+    // same token content padded to seq (the pre-bucketing behaviour:
+    // `reqs` is exactly that wave).  The engine reports its own
+    // padded-token fraction for the bucketed wave; the pad-to-max
+    // baseline's true fraction is computed here from the known native
+    // lengths (the engine sees full-length rows and reports ~0).
+    println!("\n== mixed-length wave: bucketed vs pad-to-max, 4 workers ==");
+    let lo = 8usize.min(seq);
+    let mut state = 0x9e37_79b9_7f4a_7c15u64;
+    let mixed: Vec<Vec<i32>> = reqs
+        .iter()
+        .map(|ids| {
+            state = state
+                .wrapping_mul(6364136223846793005)
+                .wrapping_add(1442695040888963407);
+            let len = lo + ((state >> 33) as usize) % (seq - lo + 1);
+            ids[..len].to_vec()
+        })
+        .collect();
+    let true_tokens: usize = mixed.iter().map(|r| r.len()).sum();
+    let baseline_padded_frac =
+        1.0 - true_tokens as f64 / (reqs.len() * seq) as f64;
+    wave(&rt, &params, &mixed[..mixed.len().min(64)], 4, tau); // warm-up
+    let mut mixed_runs: Vec<(f64, u64, f64, f64)> =
+        (0..3).map(|_| wave(&rt, &params, &mixed, 4, tau)).collect();
+    mixed_runs.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+    let (mixed_rps, mixed_dispatches, _, mixed_token_frac) = mixed_runs[1];
+    let mixed_speedup = mixed_rps / rps[2];
+    println!(
+        "bucketed:   {mixed_rps:>9.1} req/s (median of 3) | \
+         {mixed_dispatches} dispatches | {:.1}% padded tokens",
+        100.0 * mixed_token_frac
+    );
+    println!(
+        "pad-to-max: {:>9.1} req/s (the 4-worker full-length wave) | \
+         {:.1}% padded tokens (true, from native lens)",
+        rps[2],
+        100.0 * baseline_padded_frac
+    );
+    println!("speedup: {mixed_speedup:.2}x");
+    println!(
+        "| <date> | <commit> | serve_throughput (mixed-len, 4w, {n} req) | \
+         {mixed_rps:.1} req/s | {mixed_speedup:.2}x vs pad-to-max, \
+         {:.1}% padded tokens |",
+        100.0 * mixed_token_frac
+    );
+
     std::fs::create_dir_all("reports").ok();
     std::fs::write(
         "reports/serve_throughput.json",
@@ -214,12 +273,55 @@ fn main() {
             ("speedup_4w", Json::num(speedup_4)),
             ("http_rps", Json::num(http_rps)),
             ("http_ratio_vs_4w", Json::num(http_ratio)),
+            ("mixed_rps", Json::num(mixed_rps)),
+            ("mixed_speedup_vs_pad_to_max", Json::num(mixed_speedup)),
+            (
+                "mixed_padded_token_fraction",
+                Json::num(mixed_token_frac),
+            ),
+            (
+                "baseline_padded_token_fraction",
+                Json::num(baseline_padded_frac),
+            ),
             ("sweep", Json::arr(report)),
         ])
         .to_string_pretty(),
     )
     .unwrap();
     println!("\nwrote reports/serve_throughput.json");
+
+    // perf-trajectory file BENCH_serve.json next to EXPERIMENTS.md —
+    // committed as a structure-only placeholder until the first measured
+    // run on a real host overwrites it in place (same scheme as
+    // BENCH_gemm.json from perf_hotpath)
+    let bench_path = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .join("..")
+        .join("BENCH_serve.json");
+    std::fs::write(
+        &bench_path,
+        Json::obj(vec![
+            ("bench", Json::str("serve_throughput")),
+            ("measured", Json::Bool(true)),
+            ("requests", Json::num(n as f64)),
+            ("cores", Json::num(cores as f64)),
+            ("median_rps_1w", Json::num(rps[0])),
+            ("median_rps_2w", Json::num(rps[1])),
+            ("median_rps_4w", Json::num(rps[2])),
+            ("speedup_4w_vs_1w", Json::num(speedup_4)),
+            ("http_rps", Json::num(http_rps)),
+            ("http_ratio_vs_4w", Json::num(http_ratio)),
+            ("mixed_rps", Json::num(mixed_rps)),
+            ("mixed_speedup_vs_pad_to_max", Json::num(mixed_speedup)),
+            ("mixed_padded_token_fraction", Json::num(mixed_token_frac)),
+            (
+                "baseline_padded_token_fraction",
+                Json::num(baseline_padded_frac),
+            ),
+        ])
+        .to_string_pretty(),
+    )
+    .unwrap();
+    println!("wrote {}", bench_path.display());
 
     // acceptance bar: >=2x request throughput at 4 workers vs 1 on the
     // reference backend.  `available_parallelism` counts LOGICAL cpus,
@@ -253,6 +355,38 @@ fn main() {
         println!(
             "warning: HTTP ratio {http_ratio:.2}x < 0.8x \
              ({cores} logical cpus available)"
+        );
+    }
+
+    // Continuous-batching acceptance bar: serving lens ~ U[8, seq]
+    // through the bucketed engine must beat the same content padded to
+    // seq by >=1.5x, with <=15% padded tokens against a >=40% baseline.
+    // Same arming rule as the other bars (the speedup needs real cores;
+    // the fraction bars are load-independent but asserted together so
+    // one knob downgrades everything).
+    if cores >= 8 && std::env::var_os("ACCELTRAN_BENCH_NO_ASSERT").is_none() {
+        assert!(
+            mixed_speedup >= 1.5,
+            "mixed-length speedup {mixed_speedup:.2}x < 1.5x vs pad-to-max \
+             on a {cores}-logical-cpu host (set ACCELTRAN_BENCH_NO_ASSERT=1 \
+             to downgrade to a warning)"
+        );
+        assert!(
+            mixed_token_frac <= 0.15,
+            "bucketed padded-token fraction {mixed_token_frac:.3} > 0.15"
+        );
+        assert!(
+            baseline_padded_frac >= 0.4,
+            "pad-to-max baseline padded-token fraction \
+             {baseline_padded_frac:.3} < 0.4 — the workload no longer \
+             exercises the padding waste this bench is pinning"
+        );
+    } else if mixed_speedup < 1.5 || mixed_token_frac > 0.15 {
+        println!(
+            "warning: mixed-length wave {mixed_speedup:.2}x / \
+             {:.1}% padded tokens (bars: >=1.5x, <=15%; {cores} logical \
+             cpus available)",
+            100.0 * mixed_token_frac
         );
     }
 }

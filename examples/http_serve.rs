@@ -14,6 +14,11 @@
 //!
 //!   `cargo run --release --example http_serve -- --connect 127.0.0.1:8080`
 //!
+//! `--mixed-len` draws each request's native length ~ U[8, seq] instead
+//! of always seq, exercising the server's length-bucketed continuous
+//! batching (the CI smoke job asserts on the resulting
+//! `padded_token_fraction` and `rejected_429` observables).
+//!
 //! Either way a JSON summary lands at `--out` (default
 //! `reports/http_serve.json`).
 
@@ -49,8 +54,21 @@ fn shape_from_healthz(addr: &str) -> Result<Shape> {
     Ok(Shape { seq, vocab })
 }
 
-fn classify_body(rng: &mut Rng, shape: &Shape, tau: f32) -> Json {
-    let ids: Vec<Json> = (0..shape.seq)
+fn classify_body(
+    rng: &mut Rng,
+    shape: &Shape,
+    tau: f32,
+    mixed_len: bool,
+) -> Json {
+    // mixed-length mode exercises continuous batching: native lengths
+    // ~ U[lo, seq] land in different seq buckets server-side
+    let len = if mixed_len {
+        let lo = 8usize.min(shape.seq);
+        lo + rng.below((shape.seq - lo + 1) as u64) as usize
+    } else {
+        shape.seq
+    };
+    let ids: Vec<Json> = (0..len)
         .map(|_| Json::num(rng.below(shape.vocab as u64) as f64))
         .collect();
     Json::obj(vec![
@@ -67,6 +85,7 @@ fn run_client(
     n: usize,
     seed: u64,
     tau: f32,
+    mixed_len: bool,
 ) -> Result<(u64, u64, Vec<u64>)> {
     let mut rng = Rng::new(seed);
     let mut client = HttpClient::connect(&addr)?;
@@ -74,7 +93,7 @@ fn run_client(
     let mut failed = 0u64;
     let mut lat = Vec::with_capacity(n);
     for _ in 0..n {
-        let body = classify_body(&mut rng, &shape, tau);
+        let body = classify_body(&mut rng, &shape, tau, mixed_len);
         let t0 = Instant::now();
         let (status, resp) = client.post_json("/v1/classify", &body)?;
         lat.push(t0.elapsed().as_micros() as u64);
@@ -105,6 +124,7 @@ fn main() -> Result<()> {
     let total = args.get_usize("requests", 512);
     let conns = args.get_usize("conns", 4).max(1);
     let tau = args.get_f64("tau", 0.04) as f32;
+    let mixed_len = args.has("mixed-len");
     let out = args.get_or("out", "reports/http_serve.json").to_string();
 
     // external mode drives a server someone else owns; hermetic mode
@@ -132,8 +152,10 @@ fn main() -> Result<()> {
     let shape = shape_from_healthz(&addr)?;
     println!(
         "target {addr}: seq={} vocab={} — {total} requests over {conns} \
-         connection(s), tau={tau}",
-        shape.seq, shape.vocab
+         connection(s), tau={tau}{}",
+        shape.seq,
+        shape.vocab,
+        if mixed_len { ", mixed-length" } else { "" }
     );
 
     let per_conn = total.div_ceil(conns);
@@ -144,7 +166,7 @@ fn main() -> Result<()> {
         let shape = Shape { seq: shape.seq, vocab: shape.vocab };
         let n = per_conn.min(total - (per_conn * c).min(total));
         handles.push(std::thread::spawn(move || {
-            run_client(addr, shape, n, 0x9e00 + c as u64, tau)
+            run_client(addr, shape, n, 0x9e00 + c as u64, tau, mixed_len)
         }));
     }
     // scrape /stats while the load is in flight — this is the endpoint
@@ -178,6 +200,26 @@ fn main() -> Result<()> {
             .unwrap_or(0.0);
         println!("mid-flight /stats: {dispatched} rows dispatched");
     }
+    if mixed_len {
+        // surface the continuous-batching observables the smoke job
+        // asserts on
+        if let Ok((_, s)) =
+            HttpClient::connect(&addr).and_then(|mut c| c.get("/stats"))
+        {
+            let frac = s
+                .path(&["merged", "padded_token_fraction"])
+                .and_then(|v| v.as_f64())
+                .unwrap_or(-1.0);
+            let shed = s
+                .path(&["server", "rejected_429"])
+                .and_then(|v| v.as_f64())
+                .unwrap_or(-1.0);
+            println!(
+                "mixed-length: padded_token_fraction {frac:.3}, \
+                 rejected_429 {shed}"
+            );
+        }
+    }
 
     // final /stats from the server's point of view
     let (_, final_stats) =
@@ -188,6 +230,7 @@ fn main() -> Result<()> {
         ("connections", Json::num(conns as f64)),
         ("ok", Json::num(ok as f64)),
         ("failed", Json::num(failed as f64)),
+        ("mixed_len", Json::Bool(mixed_len)),
         ("wall_s", Json::num(wall.as_secs_f64())),
         ("rps", Json::num(rps)),
         (

@@ -2,21 +2,42 @@
 //! serving story behind the paper's Sec. V-E throughput comparison;
 //! [`super::serve`] drives the same policy from a worker pool).
 //!
-//! The runtime backends export fixed batch shapes (1, 8, 32 for the AOT
-//! artifacts; the reference executor accepts the same shapes).  The
-//! batcher drains its queue into the largest shape it can *fill*; only a
-//! sub-8 tail is padded up to a covering shape (padded rows are computed
-//! and discarded), amortizing the per-dispatch overhead exactly like the
-//! serving-side dynamic batching of vLLM-style routers, scaled to this
-//! repo's single-process setting.
+//! **Batch shapes.**  The runtime backends export fixed batch shapes
+//! (1, 8, 32 for the AOT artifacts; the reference executor accepts the
+//! same shapes).  The batcher drains a queue into the largest shape it
+//! can *fill*; only a sub-8 tail is padded up to a covering shape
+//! (padded rows are computed and discarded), amortizing the
+//! per-dispatch overhead exactly like the serving-side dynamic batching
+//! of vLLM-style routers, scaled to this repo's single-process setting.
 //!
-//! Flushing is **deadline-aware**: every request carries an SLO budget,
-//! fixed at submit time as `deadline = enqueued_at + slo`.  A batch
-//! dispatches the moment the largest shape fills, or as soon as the
-//! nearest deadline anywhere in the queue expires — whichever comes
-//! first (fill-or-deadline).  A request older than its SLO budget
-//! therefore forces a flush even under-filled, which is what bounds
-//! tail latency under a trickle of traffic.
+//! **Length buckets.**  Requests carry their *native* token count (any
+//! `1..=manifest.seq`) and are queued per sequence-length bucket
+//! ([`seq_buckets`]: multiples of 8 up to the manifest's seq).  A
+//! dispatch claims rows from exactly one bucket and pads each row only
+//! up to that bucket's seq — never to the manifest maximum — so on
+//! mixed-length traffic the padded-*token* fraction
+//! ([`ServerStats::padded_token_fraction`]) collapses from the
+//! pad-to-max baseline's ~40% to under ~10% (ineffectual MACs the
+//! paper's DynaTran machinery would otherwise have to prune at the
+//! tile level).  The execution contract that makes this safe is
+//! [`crate::runtime::Runtime::classify_padded`]: a row's logits are
+//! bit-identical at any padded width.
+//!
+//! **Flushing** is *deadline-aware*: every request carries an SLO
+//! budget, fixed at submit time as `deadline = enqueued_at + slo`.  A
+//! batch dispatches the moment any bucket fills the largest shape, or
+//! as soon as the nearest deadline anywhere in the queues expires —
+//! whichever comes first (fill-or-deadline).  Until that instant the
+//! deadline-armed bucket keeps accepting late same-bucket arrivals
+//! ("topping off"): the claim happens at dispatch time, so everything
+//! queued in the window rides the flush.  Within a bucket,
+//! `Priority::Interactive` rows are claimed ahead of
+//! `Priority::Batch` rows.
+//!
+//! **Admission control.**  Queues carry a configurable depth bound;
+//! submits beyond it fail fast with [`SubmitError::QueueFull`]
+//! (backpressure the HTTP front-end maps to 429 + `Retry-After`) rather
+//! than letting latency collapse for everyone already queued.
 
 use std::collections::VecDeque;
 use std::sync::mpsc;
@@ -32,17 +53,103 @@ use crate::runtime::Runtime;
 /// same dispatch stream).
 pub(crate) const BATCH_SHAPES: &[usize] = &[32, 8, 1];
 
+/// Default admission bound per engine: submits fail with
+/// [`SubmitError::QueueFull`] once this many requests are pending.
+pub const DEFAULT_MAX_QUEUE: usize = 1024;
+
 /// The largest exported batch shape (a full batch dispatches
 /// immediately, no deadline consulted).
 pub(crate) fn largest_shape() -> usize {
     BATCH_SHAPES[0]
 }
 
+/// Sequence-length buckets for a model whose positional table spans
+/// `max_seq`: multiples of 8 up to (and always including) `max_seq`.
+///
+/// Stride-8 buckets rather than the powers of two a first sketch
+/// suggests: for lengths uniform in `[8, max_seq]` powers of two waste
+/// an expected ~24% of tokens to in-bucket padding (the 2x gaps near
+/// the top dominate), while stride 8 wastes ~9% — which is what lets
+/// the serving engines hold `padded_token_fraction` under the 0.15
+/// acceptance bar.  The bucket count stays small (8 buckets at
+/// seq=64), so per-bucket queue fragmentation is negligible.
+pub fn seq_buckets(max_seq: usize) -> Vec<usize> {
+    assert!(max_seq > 0, "model seq must be positive");
+    let mut out = Vec::new();
+    let mut b = 8;
+    while b < max_seq {
+        out.push(b);
+        b += 8;
+    }
+    out.push(max_seq);
+    out
+}
+
+/// Scheduling class of a request: within a bucket, interactive rows
+/// are claimed ahead of batch rows whenever a flush dispatches fewer
+/// rows than are queued (deadline flushes order interactive first).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, Hash)]
+pub enum Priority {
+    /// Latency-sensitive traffic (the default): claimed first.
+    #[default]
+    Interactive,
+    /// Throughput traffic: claimed once no interactive rows remain in
+    /// the bucket, typically submitted under a laxer SLO.
+    Batch,
+}
+
+impl Priority {
+    /// Parse the wire names used by the HTTP API ("interactive" |
+    /// "batch").
+    pub fn parse(s: &str) -> Option<Priority> {
+        match s {
+            "interactive" => Some(Priority::Interactive),
+            "batch" => Some(Priority::Batch),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Priority::Interactive => "interactive",
+            Priority::Batch => "batch",
+        }
+    }
+}
+
+/// Typed submit rejection — the two ways admission can fail.  Callers
+/// that don't care about the distinction can `?` it into
+/// `anyhow::Error`; the HTTP front-end maps the variants to 400 / 429.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum SubmitError {
+    /// The request's token count is outside `[1, manifest.seq]`.
+    BadLength { got: usize, max_seq: usize },
+    /// Admission control: the engine's queue is at its depth bound;
+    /// retry after some in-flight work drains.
+    QueueFull { pending: usize, bound: usize },
+}
+
+impl std::fmt::Display for SubmitError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SubmitError::BadLength { got, max_seq } => {
+                write!(f, "request has {got} token ids, want between 1 and {max_seq}")
+            }
+            SubmitError::QueueFull { pending, bound } => {
+                write!(f, "queue full ({pending} pending, bound {bound})")
+            }
+        }
+    }
+}
+
+impl std::error::Error for SubmitError {}
+
 /// One classification request.
 #[derive(Clone, Debug)]
 pub struct Request {
     pub id: u64,
-    /// `seq`-length token ids.
+    /// Native-length token ids (`1..=manifest.seq`); padding up to the
+    /// bucket's seq happens only at dispatch, in [`assemble_batch`].
     pub ids: Vec<i32>,
     /// DynaTran threshold for this request's dynamic-inference level.
     pub tau: f32,
@@ -51,6 +158,8 @@ pub struct Request {
     /// passes this instant the batcher dispatches even an under-filled
     /// batch.
     pub deadline: Instant,
+    /// Scheduling class (see [`Priority`]).
+    pub priority: Priority,
     /// Synchronous completion channel: when set, the worker that serves
     /// this request sends the [`Response`] here instead of retaining it
     /// for the end-of-run collection — the per-request delivery path the
@@ -69,26 +178,148 @@ pub struct Response {
     pub batch: usize,
 }
 
+/// Per-length-bucket FIFO queues with two priority classes each — the
+/// queue structure both serving engines share.  Rows are claimed from
+/// exactly one bucket per dispatch, interactive class first, FIFO
+/// within a class.
+pub(crate) struct BucketQueues {
+    seqs: Vec<usize>,
+    interactive: Vec<VecDeque<Request>>,
+    batch: Vec<VecDeque<Request>>,
+}
+
+impl BucketQueues {
+    pub(crate) fn new(max_seq: usize) -> BucketQueues {
+        let seqs = seq_buckets(max_seq);
+        let n = seqs.len();
+        BucketQueues {
+            seqs,
+            interactive: (0..n).map(|_| VecDeque::new()).collect(),
+            batch: (0..n).map(|_| VecDeque::new()).collect(),
+        }
+    }
+
+    /// The bucket seqs, ascending; the last is the manifest's seq.
+    pub(crate) fn seqs(&self) -> &[usize] {
+        &self.seqs
+    }
+
+    /// Index of the smallest bucket covering a `len`-token request.
+    pub(crate) fn bucket_for(&self, len: usize) -> Option<usize> {
+        self.seqs.iter().position(|&b| b >= len)
+    }
+
+    /// Enqueue into the request's covering bucket (length validated at
+    /// submit); returns the bucket index.
+    pub(crate) fn push(&mut self, req: Request) -> usize {
+        let b = self
+            .bucket_for(req.ids.len())
+            .expect("request length validated at submit");
+        match req.priority {
+            Priority::Interactive => self.interactive[b].push_back(req),
+            Priority::Batch => self.batch[b].push_back(req),
+        }
+        b
+    }
+
+    pub(crate) fn len(&self) -> usize {
+        self.interactive.iter().chain(&self.batch).map(|q| q.len()).sum()
+    }
+
+    pub(crate) fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Per-bucket total depth (both classes) — the [`dispatch_shape`]
+    /// input.
+    pub(crate) fn depths(&self) -> Vec<usize> {
+        self.seqs
+            .iter()
+            .enumerate()
+            .map(|(i, _)| self.interactive[i].len() + self.batch[i].len())
+            .collect()
+    }
+
+    /// Minimum deadline over every queued request, with its bucket —
+    /// the minimum over the *whole* structure, not any queue's head:
+    /// claiming is FIFO-per-class, so when a tight-SLO request sits
+    /// behind lax ones, flushing its bucket dispatches the older rows
+    /// and the urgent one rides along (or heads an immediately
+    /// flushable remainder).  Linear scan; queue depths here are at
+    /// most the admission bound.
+    pub(crate) fn nearest_deadline(&self) -> Option<(Instant, usize)> {
+        let mut best: Option<(Instant, usize)> = None;
+        for (i, q) in self.interactive.iter().chain(&self.batch).enumerate() {
+            let bucket = i % self.seqs.len();
+            for r in q {
+                if best.map(|(d, _)| r.deadline < d).unwrap_or(true) {
+                    best = Some((r.deadline, bucket));
+                }
+            }
+        }
+        best
+    }
+
+    /// Claim up to `n` rows from one bucket: interactive first, then
+    /// batch, FIFO within each class.
+    pub(crate) fn claim(&mut self, bucket: usize, n: usize) -> Vec<Request> {
+        let mut out = Vec::with_capacity(n);
+        while out.len() < n {
+            if let Some(r) = self.interactive[bucket].pop_front() {
+                out.push(r);
+            } else if let Some(r) = self.batch[bucket].pop_front() {
+                out.push(r);
+            } else {
+                break;
+            }
+        }
+        out
+    }
+
+}
+
 /// Aggregate serving statistics.
 #[derive(Clone, Debug, Default)]
 pub struct ServerStats {
     pub served: u64,
     pub dispatches: u64,
     pub padded_rows: u64,
-    /// Total rows dispatched (served + padded) — the padded-fraction
+    /// Total rows dispatched (served + padded) — the padded-row-fraction
     /// denominator.
     pub rows_dispatched: u64,
+    /// Total tokens dispatched (`shape * bucket_seq` per dispatch) —
+    /// the padded-token-fraction denominator.
+    pub tokens_dispatched: u64,
+    /// Tokens of those that were padding: in-row tails past each
+    /// request's native length plus every token of the padded tail
+    /// rows.  The token-granular sibling of `padded_rows` — on
+    /// mixed-length traffic this is the number that shows the
+    /// length-bucketing win.
+    pub padded_tokens: u64,
     /// Deepest the queue has ever been (updated on submit).
     pub queue_depth_high_water: u64,
     latencies_us: Vec<u64>,
 }
 
 impl ServerStats {
-    pub fn record(&mut self, latency: Duration, batch_fill: usize, batch: usize) {
+    /// Record one dispatch: `batch_fill` real rows served in a
+    /// `batch`-row batch at the bucket's `bucket_seq`, whose real rows
+    /// carried `true_tokens` native tokens in total.
+    pub fn record(
+        &mut self,
+        latency: Duration,
+        batch_fill: usize,
+        batch: usize,
+        bucket_seq: usize,
+        true_tokens: usize,
+    ) {
         self.served += batch_fill as u64;
         self.dispatches += 1;
         self.padded_rows += (batch - batch_fill) as u64;
         self.rows_dispatched += batch as u64;
+        let tokens = (batch * bucket_seq) as u64;
+        self.tokens_dispatched += tokens;
+        self.padded_tokens += tokens - true_tokens as u64;
         self.latencies_us.push(latency.as_micros() as u64);
     }
 
@@ -99,6 +330,8 @@ impl ServerStats {
         self.dispatches += other.dispatches;
         self.padded_rows += other.padded_rows;
         self.rows_dispatched += other.rows_dispatched;
+        self.tokens_dispatched += other.tokens_dispatched;
+        self.padded_tokens += other.padded_tokens;
         self.queue_depth_high_water =
             self.queue_depth_high_water.max(other.queue_depth_high_water);
         self.latencies_us.extend_from_slice(&other.latencies_us);
@@ -111,6 +344,16 @@ impl ServerStats {
             return 0.0;
         }
         self.padded_rows as f64 / self.rows_dispatched as f64
+    }
+
+    /// Fraction of dispatched *tokens* that were padding — the
+    /// token-granular sibling of [`ServerStats::padded_row_fraction`];
+    /// 0.0 before the first dispatch.
+    pub fn padded_token_fraction(&self) -> f64 {
+        if self.tokens_dispatched == 0 {
+            return 0.0;
+        }
+        self.padded_tokens as f64 / self.tokens_dispatched as f64
     }
 
     /// Latency percentile over *dispatch* latencies, p in `0..=100`.
@@ -134,10 +377,10 @@ impl ServerStats {
     }
 }
 
-/// Flush-time shape choice for a queue of depth `n` (see
-/// [`BatchServer::choose_shape`]): the largest shape that fills
-/// completely when that avoids padding waste, otherwise the smallest
-/// covering shape for the sub-8 tail.
+/// Flush-time shape choice for a bucket of depth `n` (see
+/// [`dispatch_shape`]): the largest shape that fills completely when
+/// that avoids padding waste, otherwise the smallest covering shape for
+/// the sub-8 tail.
 pub(crate) fn flush_shape(n: usize) -> usize {
     let full = BATCH_SHAPES.iter().copied().filter(|&b| b <= n).max().unwrap_or(1);
     if full >= 8 || full == n {
@@ -151,95 +394,136 @@ pub(crate) fn flush_shape(n: usize) -> usize {
         .unwrap_or(BATCH_SHAPES[0])
 }
 
-/// The fill-or-deadline dispatch policy, pure so both the
-/// single-threaded [`BatchServer`] and the worker pool in
-/// [`super::serve`] share it (and so it unit-tests without a clock):
-/// dispatch the largest exported shape the moment it fills; otherwise
-/// dispatch only once the *nearest* deadline anywhere in the queue has
-/// passed (or the queue is force-drained), preferring
-/// completely-filled shapes and padding only the final sub-8 tail.
+/// The fill-or-deadline dispatch policy over length buckets, pure so
+/// both the single-threaded [`BatchServer`] and the worker pool in
+/// [`super::serve`] share it (and so it unit-tests without a clock).
+/// Input is the per-bucket queue depths plus the nearest deadline
+/// anywhere in the queues (with its bucket); output is `(bucket,
+/// shape)` to claim, or `None` to keep waiting.
 ///
-/// `nearest_deadline` must be the minimum over the whole queue, not the
-/// head's: batching is FIFO, so when a tight-SLO request sits behind a
-/// lax one, flushing dispatches the head requests — and the urgent
-/// request rides along (or becomes the head of an immediately
-/// flushable remainder).
+/// Preference order:
+///
+/// 1. A bucket that fills the largest exported shape dispatches
+///    immediately at its *native* length — the deepest such bucket
+///    wins (ties to the shortest seq).  Full native-length batches
+///    never wait on a deadline.
+/// 2. On force-drain, the deepest non-empty bucket flushes at its
+///    padding-minimizing [`flush_shape`].
+/// 3. Once the nearest deadline has passed, *that request's* bucket
+///    flushes — under-filled if need be — which is what bounds tail
+///    latency under a trickle of traffic.  Until that instant the
+///    policy returns `None`, so the deadline-armed bucket keeps
+///    accepting late arrivals that ride the eventual flush (in-flight
+///    topping-off; the claim happens at dispatch time).
 pub(crate) fn dispatch_shape(
-    n: usize,
-    nearest_deadline: Option<Instant>,
+    depths: &[usize],
+    nearest_deadline: Option<(Instant, usize)>,
     now: Instant,
     force: bool,
-) -> Option<usize> {
-    if n == 0 {
-        return None;
+) -> Option<(usize, usize)> {
+    let mut full: Option<usize> = None;
+    for (i, &d) in depths.iter().enumerate() {
+        if d >= largest_shape() && full.map(|f| d > depths[f]).unwrap_or(true) {
+            full = Some(i);
+        }
     }
-    if n >= largest_shape() {
-        return Some(largest_shape());
+    if let Some(b) = full {
+        return Some((b, largest_shape()));
     }
-    if force || nearest_deadline.map(|d| now >= d).unwrap_or(false) {
-        return Some(flush_shape(n));
+    if force {
+        let mut pick: Option<usize> = None;
+        for (i, &d) in depths.iter().enumerate() {
+            if d > 0 && pick.map(|p| d > depths[p]).unwrap_or(true) {
+                pick = Some(i);
+            }
+        }
+        let b = pick?;
+        return Some((b, flush_shape(depths[b])));
+    }
+    if let Some((deadline, b)) = nearest_deadline {
+        if now >= deadline && depths.get(b).copied().unwrap_or(0) > 0 {
+            return Some((b, flush_shape(depths[b])));
+        }
     }
     None
 }
 
-/// Minimum deadline over a request queue (linear scan; queue depths
-/// here are at most a few hundred, and uniform-SLO traffic keeps
-/// deadlines near-sorted anyway).
-pub(crate) fn nearest_deadline(queue: &VecDeque<Request>) -> Option<Instant> {
-    queue.iter().map(|r| r.deadline).min()
-}
-
-/// Assemble a claimed batch for dispatch: concatenate the requests'
-/// token ids row-major, pad the tail with copies of the last request
-/// (computed and discarded), and resolve the batch tau conservatively
-/// (min over the batch = least pruning any member asked for).  Shared
-/// by [`BatchServer`] and the worker pool in [`super::serve`] so the
-/// two engines cannot drift apart on padding or tau policy.  Request
-/// lengths are validated at submit; the debug assert guards the queue
-/// invariant itself.
-pub(crate) fn assemble_batch(reqs: &[Request], shape: usize, seq: usize) -> (Vec<i32>, f32) {
+/// Assemble a claimed single-bucket batch for dispatch: concatenate the
+/// requests' token ids row-major at the bucket's `bucket_seq` width
+/// (each row's tail past its native length is token 0, masked out by
+/// the runtime's length-aware attention), fill the batch tail with
+/// pure-padding rows (a single masked token 0 each — their attention
+/// block is 1x1, the cheapest well-formed row), and resolve the batch
+/// tau conservatively (min over the batch = least pruning any member
+/// asked for).  Returns `(ids, lens, tau)` with `lens[b]` the row's
+/// true token count, ready for
+/// [`crate::runtime::Runtime::classify_padded`].
+///
+/// Shared by [`BatchServer`] and the worker pool in [`super::serve`] so
+/// the two engines cannot drift apart on padding or tau policy.
+/// Request lengths are validated at submit; the debug asserts guard the
+/// queue invariant itself.
+pub(crate) fn assemble_batch(
+    reqs: &[Request],
+    shape: usize,
+    bucket_seq: usize,
+) -> (Vec<i32>, Vec<usize>, f32) {
     debug_assert!(!reqs.is_empty() && reqs.len() <= shape);
     let fill = reqs.len();
-    let mut ids = Vec::with_capacity(shape * seq);
+    let mut ids = Vec::with_capacity(shape * bucket_seq);
+    let mut lens = Vec::with_capacity(shape);
     for r in reqs {
-        debug_assert_eq!(r.ids.len(), seq, "request {} seq mismatch", r.id);
+        debug_assert!(
+            !r.ids.is_empty() && r.ids.len() <= bucket_seq,
+            "request {} has {} ids outside its {bucket_seq}-bucket",
+            r.id,
+            r.ids.len()
+        );
+        lens.push(r.ids.len());
         ids.extend_from_slice(&r.ids);
+        ids.resize(ids.len() + (bucket_seq - r.ids.len()), 0);
     }
     for _ in fill..shape {
-        ids.extend_from_slice(&reqs[fill - 1].ids);
+        lens.push(1);
+        ids.resize(ids.len() + bucket_seq, 0);
     }
     let tau = reqs.iter().map(|r| r.tau).fold(f32::INFINITY, f32::min);
-    (ids, tau)
+    (ids, lens, tau)
 }
 
 /// The batching server.
 pub struct BatchServer {
     runtime: Runtime,
     params: Vec<f32>,
-    queue: VecDeque<Request>,
+    queues: BucketQueues,
     pub stats: ServerStats,
     next_id: u64,
     /// Default SLO budget stamped onto requests at submit time
     /// (`deadline = enqueued_at + max_wait`); [`BatchServer::submit_with_slo`]
     /// overrides per request.
     pub max_wait: Duration,
+    /// Admission bound: submits fail with [`SubmitError::QueueFull`]
+    /// once this many requests are pending.
+    pub max_queue: usize,
 }
 
 impl BatchServer {
     pub fn new(runtime: Runtime, params: Vec<f32>) -> BatchServer {
+        let max_seq = runtime.manifest.seq;
         BatchServer {
             runtime,
             params,
-            queue: VecDeque::new(),
+            queues: BucketQueues::new(max_seq),
             stats: ServerStats::default(),
             next_id: 0,
             max_wait: Duration::from_millis(5),
+            max_queue: DEFAULT_MAX_QUEUE,
         }
     }
 
     /// Enqueue a request under the server's default SLO budget
     /// (`max_wait`); returns its id.
-    pub fn submit(&mut self, ids: Vec<i32>, tau: f32) -> u64 {
+    pub fn submit(&mut self, ids: Vec<i32>, tau: f32) -> Result<u64, SubmitError> {
         let slo = self.max_wait;
         self.submit_with_slo(ids, tau, slo)
     }
@@ -247,47 +531,54 @@ impl BatchServer {
     /// Enqueue a request with an explicit SLO budget: the batcher will
     /// flush an under-filled batch rather than let this request dwell
     /// past `enqueued_at + slo`.
-    ///
-    /// Panics when `ids.len()` disagrees with the runtime's `seq` —
-    /// rejecting the bad request here keeps it from poisoning a whole
-    /// batch at dispatch time.
-    pub fn submit_with_slo(&mut self, ids: Vec<i32>, tau: f32, slo: Duration) -> u64 {
-        let seq = self.runtime.manifest.seq;
-        assert_eq!(
-            ids.len(),
-            seq,
-            "request has {} ids, runtime expects seq={seq}",
-            ids.len()
-        );
+    pub fn submit_with_slo(
+        &mut self,
+        ids: Vec<i32>,
+        tau: f32,
+        slo: Duration,
+    ) -> Result<u64, SubmitError> {
+        self.submit_with_priority(ids, tau, slo, Priority::Interactive)
+    }
+
+    /// Full-control enqueue: explicit SLO budget and scheduling class.
+    /// Rejects (rather than panics on) a token count outside
+    /// `[1, manifest.seq]` or a queue at its admission bound — the
+    /// typed error keeps one bad request from poisoning a whole batch
+    /// at dispatch time and gives the caller a backpressure signal.
+    pub fn submit_with_priority(
+        &mut self,
+        ids: Vec<i32>,
+        tau: f32,
+        slo: Duration,
+        priority: Priority,
+    ) -> Result<u64, SubmitError> {
+        let max_seq = self.runtime.manifest.seq;
+        if ids.is_empty() || ids.len() > max_seq {
+            return Err(SubmitError::BadLength { got: ids.len(), max_seq });
+        }
+        let pending = self.queues.len();
+        if pending >= self.max_queue {
+            return Err(SubmitError::QueueFull { pending, bound: self.max_queue });
+        }
         let id = self.next_id;
         self.next_id += 1;
         let enqueued_at = Instant::now();
-        self.queue.push_back(Request {
+        self.queues.push(Request {
             id,
             ids,
             tau,
             enqueued_at,
             deadline: enqueued_at + slo,
+            priority,
             reply: None,
         });
         self.stats.queue_depth_high_water =
-            self.stats.queue_depth_high_water.max(self.queue.len() as u64);
-        id
+            self.stats.queue_depth_high_water.max(self.queues.len() as u64);
+        Ok(id)
     }
 
     pub fn pending(&self) -> usize {
-        self.queue.len()
-    }
-
-    /// Pick the batch shape for the current queue via the shared
-    /// fill-or-deadline policy ([`dispatch_shape`]).
-    fn choose_shape(&self, force: bool) -> Option<usize> {
-        dispatch_shape(
-            self.queue.len(),
-            nearest_deadline(&self.queue),
-            Instant::now(),
-            force,
-        )
+        self.queues.len()
     }
 
     /// Serve at most one batch; returns the responses (empty if the
@@ -297,15 +588,23 @@ impl BatchServer {
     }
 
     fn step_inner(&mut self, force: bool) -> Result<Vec<Response>> {
-        let Some(batch) = self.choose_shape(force) else {
+        let Some((bucket, shape)) = dispatch_shape(
+            &self.queues.depths(),
+            self.queues.nearest_deadline(),
+            Instant::now(),
+            force,
+        ) else {
             return Ok(Vec::new());
         };
-        let fill = batch.min(self.queue.len());
-        let reqs: Vec<Request> = (0..fill).map(|_| self.queue.pop_front().unwrap()).collect();
-        let seq = self.runtime.manifest.seq;
-        let (ids, tau) = assemble_batch(&reqs, batch, seq);
+        let reqs = self.queues.claim(bucket, shape);
+        let fill = reqs.len();
+        let bucket_seq = self.queues.seqs()[bucket];
+        let true_tokens: usize = reqs.iter().map(|r| r.ids.len()).sum();
+        let (ids, lens, tau) = assemble_batch(&reqs, shape, bucket_seq);
         let t0 = Instant::now();
-        let logits = self.runtime.classify(batch, &self.params, &ids, tau)?;
+        let logits = self
+            .runtime
+            .classify_padded(shape, bucket_seq, &lens, &self.params, &ids, tau)?;
         let elapsed = t0.elapsed();
         let classes = self.runtime.manifest.classes;
         let mut out = Vec::with_capacity(fill);
@@ -314,14 +613,14 @@ impl BatchServer {
                 id: r.id,
                 logits: logits[i * classes..(i + 1) * classes].to_vec(),
                 latency: r.enqueued_at.elapsed(),
-                batch,
+                batch: shape,
             });
         }
-        self.stats.record(elapsed, fill, batch);
+        self.stats.record(elapsed, fill, shape, bucket_seq, true_tokens);
         Ok(out)
     }
 
-    /// Drain the queue completely, flushing regardless of deadlines.
+    /// Drain the queues completely, flushing regardless of deadlines.
     pub fn drain(&mut self) -> Result<Vec<Response>> {
         let mut out = Vec::new();
         while self.pending() > 0 {
@@ -338,24 +637,57 @@ impl BatchServer {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::util::prop;
 
-    // Shape-choice logic is pure; drive `dispatch_shape` directly with a
-    // synthetic clock.
-    fn choose(n: usize, waited: bool) -> Option<usize> {
+    fn mk(id: u64, len: usize, tau: f32, v: i32) -> Request {
+        let now = Instant::now();
+        Request {
+            id,
+            ids: vec![v; len],
+            tau,
+            enqueued_at: now,
+            deadline: now,
+            priority: Priority::Interactive,
+            reply: None,
+        }
+    }
+
+    #[test]
+    fn bucket_geometry_is_stride_8_capped_at_max_seq() {
+        assert_eq!(seq_buckets(64), vec![8, 16, 24, 32, 40, 48, 56, 64]);
+        assert_eq!(seq_buckets(16), vec![8, 16]);
+        assert_eq!(seq_buckets(12), vec![8, 12]);
+        assert_eq!(seq_buckets(8), vec![8]);
+        assert_eq!(seq_buckets(4), vec![4]);
+        let q = BucketQueues::new(64);
+        assert_eq!(q.bucket_for(1), Some(0));
+        assert_eq!(q.bucket_for(8), Some(0));
+        assert_eq!(q.bucket_for(9), Some(1));
+        assert_eq!(q.bucket_for(64), Some(7));
+        assert_eq!(q.bucket_for(65), None);
+    }
+
+    // The policy is pure; drive `dispatch_shape` directly with a
+    // synthetic clock.  `waited` arms an already-expired deadline in
+    // bucket 0.
+    fn choose(n: usize, waited: bool) -> Option<(usize, usize)> {
         let now = Instant::now();
         let deadline = if waited {
-            // oldest request's deadline already passed
             now.checked_sub(Duration::from_millis(1)).unwrap_or(now)
         } else {
             now + Duration::from_secs(60)
         };
-        dispatch_shape(n, (n > 0).then_some(deadline), now, false)
+        dispatch_shape(&[n], (n > 0).then_some((deadline, 0)), now, false)
     }
 
     #[test]
     fn full_batches_dispatch_immediately() {
-        assert_eq!(choose(32, false), Some(32));
-        assert_eq!(choose(40, false), Some(32));
+        assert_eq!(choose(32, false), Some((0, 32)));
+        assert_eq!(choose(40, false), Some((0, 32)));
+        // the deepest full bucket wins; ties go to the shortest seq
+        let now = Instant::now();
+        assert_eq!(dispatch_shape(&[5, 33, 40], None, now, false), Some((2, 32)));
+        assert_eq!(dispatch_shape(&[33, 33], None, now, false), Some((0, 32)));
     }
 
     #[test]
@@ -365,33 +697,40 @@ mod tests {
         assert_eq!(choose(5, false), None);
         assert_eq!(choose(1, false), None);
         // ...and flush preferring completely-filled shapes: an 11-deep
-        // queue dispatches 8 full rows (the 3-tail goes next round), a
-        // sub-8 queue pads up to the smallest covering shape.
-        assert_eq!(choose(5, true), Some(8));
-        assert_eq!(choose(8, true), Some(8));
-        assert_eq!(choose(9, true), Some(8));
-        assert_eq!(choose(11, true), Some(8));
-        assert_eq!(choose(31, true), Some(8));
-        assert_eq!(choose(1, true), Some(1));
+        // bucket dispatches 8 full rows (the 3-tail goes next round), a
+        // sub-8 bucket pads up to the smallest covering shape.
+        assert_eq!(choose(5, true), Some((0, 8)));
+        assert_eq!(choose(8, true), Some((0, 8)));
+        assert_eq!(choose(9, true), Some((0, 8)));
+        assert_eq!(choose(11, true), Some((0, 8)));
+        assert_eq!(choose(31, true), Some((0, 8)));
+        assert_eq!(choose(1, true), Some((0, 1)));
         assert_eq!(choose(0, true), None);
     }
 
     #[test]
-    fn force_flushes_without_a_deadline() {
+    fn force_flushes_the_deepest_bucket() {
         // drain-time semantics: dispatch whatever is queued regardless
-        // of how recently it arrived
+        // of how recently it arrived, deepest bucket first
         let now = Instant::now();
         let far = now + Duration::from_secs(60);
-        assert_eq!(dispatch_shape(5, Some(far), now, true), Some(8));
-        assert_eq!(dispatch_shape(1, Some(far), now, true), Some(1));
-        assert_eq!(dispatch_shape(0, None, now, true), None);
+        assert_eq!(dispatch_shape(&[5], Some((far, 0)), now, true), Some((0, 8)));
+        assert_eq!(dispatch_shape(&[1], Some((far, 0)), now, true), Some((0, 1)));
+        assert_eq!(dispatch_shape(&[2, 9, 4], None, now, true), Some((1, 8)));
+        assert_eq!(dispatch_shape(&[0, 0], None, now, true), None);
     }
 
     #[test]
-    fn deadline_at_now_flushes() {
-        // boundary: `now >= deadline` flushes (not strictly-greater)
+    fn deadline_at_now_flushes_the_deadlines_bucket() {
+        // boundary: `now >= deadline` flushes (not strictly-greater),
+        // and the flush targets the bucket that owns the deadline even
+        // when another bucket is deeper
         let now = Instant::now();
-        assert_eq!(dispatch_shape(3, Some(now), now, false), Some(8));
+        assert_eq!(dispatch_shape(&[3], Some((now, 0)), now, false), Some((0, 8)));
+        assert_eq!(
+            dispatch_shape(&[3, 12], Some((now, 0)), now, false),
+            Some((0, 8))
+        );
     }
 
     #[test]
@@ -419,37 +758,52 @@ mod tests {
     }
 
     #[test]
-    fn assemble_batch_pads_with_last_and_takes_min_tau() {
-        let now = Instant::now();
-        let mk = |id: u64, tau: f32, v: i32| Request {
-            id,
-            ids: vec![v; 4],
-            tau,
-            enqueued_at: now,
-            deadline: now,
-            reply: None,
-        };
-        let reqs = vec![mk(0, 0.05, 1), mk(1, 0.02, 2), mk(2, 0.08, 3)];
-        let (ids, tau) = assemble_batch(&reqs, 8, 4);
+    fn assemble_batch_pads_within_bucket_and_takes_min_tau() {
+        // mixed native lengths in a 4-bucket: rows pad to the bucket's
+        // seq with masked token 0, tail rows are 1-token padding rows
+        let reqs = vec![mk(0, 4, 0.05, 1), mk(1, 2, 0.02, 2), mk(2, 3, 0.08, 3)];
+        let (ids, lens, tau) = assemble_batch(&reqs, 8, 4);
         assert_eq!(ids.len(), 8 * 4);
-        assert_eq!(&ids[..4], &[1; 4]);
-        assert_eq!(&ids[4..8], &[2; 4]);
-        // padded tail rows replicate the last real request
-        assert_eq!(&ids[8..12], &[3; 4]);
-        assert_eq!(&ids[28..32], &[3; 4]);
+        assert_eq!(lens, vec![4, 2, 3, 1, 1, 1, 1, 1]);
+        assert_eq!(&ids[..4], &[1, 1, 1, 1]);
+        assert_eq!(&ids[4..8], &[2, 2, 0, 0]); // in-row tail padded with 0
+        assert_eq!(&ids[8..12], &[3, 3, 3, 0]);
+        assert_eq!(&ids[12..16], &[0; 4]); // pure-padding tail row
+        assert_eq!(&ids[28..32], &[0; 4]);
         // conservative tau: least pruning any member asked for
         assert_eq!(tau, 0.02);
         // exact fill: no padding, same fold
-        let (ids, tau) = assemble_batch(&reqs[..1], 1, 4);
+        let (ids, lens, tau) = assemble_batch(&reqs[..1], 1, 4);
         assert_eq!(ids, vec![1; 4]);
+        assert_eq!(lens, vec![4]);
         assert_eq!(tau, 0.05);
+    }
+
+    #[test]
+    fn claim_orders_interactive_before_batch_fifo_within_class() {
+        let mut q = BucketQueues::new(16);
+        let mut with_pri = |id, pri| {
+            let mut r = mk(id, 8, 0.0, id as i32);
+            r.priority = pri;
+            r
+        };
+        q.push(with_pri(0, Priority::Batch));
+        q.push(with_pri(1, Priority::Interactive));
+        q.push(with_pri(2, Priority::Batch));
+        q.push(with_pri(3, Priority::Interactive));
+        assert_eq!(q.depths(), vec![4, 0]);
+        let claimed = q.claim(0, 3);
+        let order: Vec<u64> = claimed.iter().map(|r| r.id).collect();
+        assert_eq!(order, vec![1, 3, 0], "interactive first, FIFO within");
+        assert_eq!(q.claim(0, 8).len(), 1);
+        assert!(q.is_empty());
     }
 
     #[test]
     fn stats_percentiles() {
         let mut s = ServerStats::default();
         for us in [100u64, 200, 300, 400, 1000] {
-            s.record(Duration::from_micros(us), 8, 8);
+            s.record(Duration::from_micros(us), 8, 8, 4, 32);
         }
         assert_eq!(s.latency_percentile(0.0), Duration::from_micros(100));
         assert_eq!(s.latency_percentile(50.0), Duration::from_micros(300));
@@ -457,36 +811,203 @@ mod tests {
         assert_eq!(s.served, 40);
         assert_eq!(s.padded_rows, 0);
         assert_eq!(s.padded_row_fraction(), 0.0);
+        assert_eq!(s.padded_token_fraction(), 0.0);
     }
 
     #[test]
-    fn stats_track_padding_and_rows() {
+    fn stats_track_padding_rows_and_tokens() {
         let mut s = ServerStats::default();
-        s.record(Duration::from_micros(50), 8, 8); // full
-        s.record(Duration::from_micros(50), 3, 8); // tail: 5 padded
+        // full 8-batch in a 16-bucket, every row native-length
+        s.record(Duration::from_micros(50), 8, 8, 16, 8 * 16);
+        // 3-fill tail in an 8-bucket: rows carried 6+7+8 real tokens
+        s.record(Duration::from_micros(50), 3, 8, 8, 21);
         assert_eq!(s.served, 11);
         assert_eq!(s.dispatches, 2);
         assert_eq!(s.padded_rows, 5);
         assert_eq!(s.rows_dispatched, 16);
+        assert_eq!(s.tokens_dispatched, 128 + 64);
+        assert_eq!(s.padded_tokens, 64 - 21);
         assert!((s.padded_row_fraction() - 5.0 / 16.0).abs() < 1e-12);
+        assert!((s.padded_token_fraction() - 43.0 / 192.0).abs() < 1e-12);
     }
 
     #[test]
     fn stats_merge_sums_counters_and_maxes_high_water() {
         let mut a = ServerStats::default();
-        a.record(Duration::from_micros(100), 8, 8);
+        a.record(Duration::from_micros(100), 8, 8, 4, 32);
         a.queue_depth_high_water = 12;
         let mut b = ServerStats::default();
-        b.record(Duration::from_micros(300), 3, 8);
-        b.record(Duration::from_micros(500), 8, 8);
+        b.record(Duration::from_micros(300), 3, 8, 4, 12);
+        b.record(Duration::from_micros(500), 8, 8, 4, 32);
         b.queue_depth_high_water = 7;
         a.merge(&b);
         assert_eq!(a.served, 19);
         assert_eq!(a.dispatches, 3);
         assert_eq!(a.padded_rows, 5);
         assert_eq!(a.rows_dispatched, 24);
+        assert_eq!(a.tokens_dispatched, 96);
+        assert_eq!(a.padded_tokens, 20);
         assert_eq!(a.queue_depth_high_water, 12);
         assert_eq!(a.latency_percentile(100.0), Duration::from_micros(500));
         assert_eq!(a.mean_latency(), Duration::from_micros(300));
+    }
+
+    #[test]
+    fn submit_rejects_bad_lengths_and_full_queues_with_typed_errors() {
+        let rt = Runtime::reference_for(
+            &crate::model::TransformerConfig {
+                name: "micro".into(),
+                hidden: 8,
+                layers: 1,
+                heads: 2,
+                ff: 16,
+                vocab: 12,
+                seq: 4,
+            },
+            2,
+        )
+        .unwrap();
+        let params = crate::runtime::ParamStore::init(&rt.manifest, 0).params;
+        let mut srv = BatchServer::new(rt, params);
+        srv.max_queue = 2;
+        assert_eq!(
+            srv.submit(vec![], 0.0),
+            Err(SubmitError::BadLength { got: 0, max_seq: 4 })
+        );
+        assert_eq!(
+            srv.submit(vec![0; 5], 0.0),
+            Err(SubmitError::BadLength { got: 5, max_seq: 4 })
+        );
+        // a shorter-than-seq request is now legal...
+        assert!(srv.submit(vec![0, 1], 0.0).is_ok());
+        assert!(srv.submit(vec![0, 1, 2, 3], 0.0).is_ok());
+        // ...and the third submit hits the admission bound
+        assert_eq!(
+            srv.submit(vec![0], 0.0),
+            Err(SubmitError::QueueFull { pending: 2, bound: 2 })
+        );
+        // errors render usefully through anyhow
+        let e: anyhow::Error = SubmitError::QueueFull { pending: 2, bound: 2 }.into();
+        assert!(e.to_string().contains("queue full"));
+        // draining frees capacity and serves both accepted requests
+        let served = srv.drain().unwrap();
+        assert_eq!(served.len(), 2);
+        assert!(srv.submit(vec![0], 0.0).is_ok());
+    }
+
+    #[test]
+    fn mixed_length_drain_serves_every_request_with_low_token_padding() {
+        let rt = Runtime::reference_for(
+            &crate::model::TransformerConfig {
+                name: "micro-serve".into(),
+                hidden: 8,
+                layers: 1,
+                heads: 2,
+                ff: 16,
+                vocab: 12,
+                seq: 16,
+            },
+            2,
+        )
+        .unwrap();
+        let params = crate::runtime::ParamStore::init(&rt.manifest, 0).params;
+        let mut srv = BatchServer::new(rt, params);
+        let mut want = Vec::new();
+        for i in 0..40usize {
+            let len = 1 + (i % 16);
+            let ids: Vec<i32> = (0..len).map(|j| ((i + j) % 12) as i32).collect();
+            want.push(srv.submit(ids, 0.0).unwrap());
+        }
+        let got = srv.drain().unwrap();
+        assert_eq!(got.len(), 40);
+        let mut ids: Vec<u64> = got.iter().map(|r| r.id).collect();
+        ids.sort_unstable();
+        assert_eq!(ids, want);
+        // bucketed dispatch pads far fewer tokens than pad-to-max
+        // would (which for this wave would be ~1 - mean(len)/16 = 47%)
+        assert!(
+            srv.stats.padded_token_fraction() < 0.45,
+            "padded token fraction {}",
+            srv.stats.padded_token_fraction()
+        );
+        assert!(srv.stats.tokens_dispatched > 0);
+    }
+
+    // For any claimed single-bucket batch, assembling at the bucket's
+    // seq never pads more tokens (absolutely or fractionally) than the
+    // old pad-to-max rule would for the *same* dispatch; summed over
+    // any dispatch stream, the bucketed engine's padded_token_fraction
+    // therefore never exceeds the pad-to-max baseline's.
+    #[test]
+    fn prop_bucketing_never_increases_padded_token_fraction() {
+        let max_seq = 64;
+        let buckets = seq_buckets(max_seq);
+        prop::check(0xACC8_0001, prop::cases(128), |g| {
+            let bi = g.usize_in(0, buckets.len() - 1);
+            let lo = if bi == 0 { 1 } else { buckets[bi - 1] + 1 };
+            let hi = buckets[bi];
+            let n = g.usize_in(1, 32);
+            let reqs: Vec<Request> = (0..n)
+                .map(|i| mk(i as u64, g.usize_in(lo, hi), 0.0, 1))
+                .collect();
+            let shape = flush_shape(n);
+            let claimed = &reqs[..shape.min(n)];
+            let true_tokens: usize = claimed.iter().map(|r| r.ids.len()).sum();
+            let (bids, blens, _) = assemble_batch(claimed, shape, buckets[bi]);
+            let (mids, _, _) = assemble_batch(claimed, shape, max_seq);
+            assert_eq!(bids.len(), shape * buckets[bi]);
+            assert_eq!(blens.len(), shape);
+            let padded_bucket = bids.len() - true_tokens;
+            let padded_max = mids.len() - true_tokens;
+            assert!(
+                padded_bucket <= padded_max,
+                "bucketed {padded_bucket} > pad-to-max {padded_max}"
+            );
+            let frac_bucket = padded_bucket as f64 / bids.len() as f64;
+            let frac_max = padded_max as f64 / mids.len() as f64;
+            assert!(
+                frac_bucket <= frac_max + 1e-12,
+                "bucketed fraction {frac_bucket} > pad-to-max {frac_max}"
+            );
+        });
+    }
+
+    // Topping-off window: while a forming batch's deadline is armed and
+    // no bucket has filled, the policy must keep returning `None` —
+    // late same-bucket arrivals join the queue and are claimed at the
+    // dispatch instant — and at the first check at-or-after the
+    // deadline it must flush that bucket with everything that
+    // accumulated in the window.  Dispatch never happens early.
+    #[test]
+    fn prop_topping_off_never_violates_an_armed_deadline() {
+        prop::check(0xACC8_0002, prop::cases(128), |g| {
+            let nb = g.usize_in(1, 8);
+            let bucket = g.usize_in(0, nb - 1);
+            let mut depths: Vec<usize> = (0..nb).map(|_| g.usize_in(0, 7)).collect();
+            if depths[bucket] == 0 {
+                depths[bucket] = 1;
+            }
+            let base = Instant::now();
+            let deadline = base + Duration::from_millis(20);
+            let mut t = base;
+            for _ in 0..g.usize_in(0, 6) {
+                // a late same-bucket arrival strictly inside the window
+                t = (t + Duration::from_micros(g.usize_in(1, 2000) as u64))
+                    .min(deadline - Duration::from_nanos(1));
+                if depths[bucket] < 31 {
+                    depths[bucket] += 1;
+                }
+                assert_eq!(
+                    dispatch_shape(&depths, Some((deadline, bucket)), t, false),
+                    None,
+                    "dispatched before the armed deadline"
+                );
+            }
+            // the dispatch instant claims everything that arrived
+            assert_eq!(
+                dispatch_shape(&depths, Some((deadline, bucket)), deadline, false),
+                Some((bucket, flush_shape(depths[bucket])))
+            );
+        });
     }
 }

@@ -4,9 +4,12 @@
 //! timing model (the AccelTran simulator) together.
 //!
 //! * [`batcher`] — request router + dynamic batcher: incoming classify
-//!   requests are queued, grouped to the nearest exported batch shape
-//!   (b1 / b8 / b32, padding with replicas), flushed on fill-or-deadline,
-//!   and answered with per-request logits and latency accounting.
+//!   requests are queued per sequence-length bucket, grouped to the
+//!   nearest exported batch shape (b1 / b8 / b32), padded only within
+//!   their bucket, flushed on fill-or-deadline (interactive priority
+//!   first, bounded-queue admission control), and answered with
+//!   per-request logits plus row- and token-granular padding
+//!   accounting.
 //! * [`serve`] — the concurrent serving engine: N worker threads (one
 //!   forked backend each) drain the shared queue under the same
 //!   batching policy, stream per-request latencies into allocation-free
@@ -29,7 +32,10 @@ pub mod eval;
 pub mod serve;
 pub mod trainer;
 
-pub use batcher::{BatchServer, Request, Response, ServerStats};
+pub use batcher::{
+    seq_buckets, BatchServer, Priority, Request, Response, ServerStats,
+    SubmitError, DEFAULT_MAX_QUEUE,
+};
 pub use capture::{capture_trace, measured_trace, measured_trace_with};
 pub use eval::{evaluate_accuracy, sweep_dynatran, sweep_topk, EvalReport};
 pub use serve::{

@@ -78,12 +78,14 @@ fn print_usage() {
            dataflow  [--m 64 --k 64 --n 64 --lanes 4]\n\
            train     [--steps 200 --lr 1e-3 --examples 4096 --save path]\n\
            serve     [--requests 256 --tau 0.04 --workers 4 --slo-ms 25]\n\
+                     [--batch-slo-ms 100 --max-queue 1024]\n\
                      [--params path --report reports/serve_report.json]\n\
                      [--sim-in-loop --preset edge --model bert-tiny\n\
                       --sim-seq 128 --sim-trace reports/sparsity_trace.json]\n\
                      [--listen 127.0.0.1:8080 --pools 2 --max-batch 32\n\
                       --read-timeout-ms 2000 --max-body-kb 1024\n\
-                      --addr-file path]  (HTTP mode; drain via SIGTERM)\n\
+                      --addr-file path]  (HTTP mode; drain via SIGTERM;\n\
+                      queue-full submits get 429 + Retry-After)\n\
            eval      [--taus 0,0.02,0.05 --examples 512 --params path]\n\
            trace     [--tau 0.04 --examples 512 --params path]\n\
                      [--out reports/sparsity_trace.json --no-sim]\n\
@@ -371,10 +373,27 @@ fn cmd_serve(args: &Args) -> Result<()> {
     // the reported req/s) must measure serving, not dataset generation
     let task = SentimentTask::new(vocab, seq, 7);
     let ds = task.dataset(n, 3);
-    let cfg = ServeConfig { workers, slo, sim };
+    let cfg = ServeConfig {
+        workers,
+        slo,
+        sim,
+        batch_slo: Duration::from_millis(args.get_u64("batch-slo-ms", 100)),
+        max_queue: args
+            .get_usize("max-queue", coordinator::DEFAULT_MAX_QUEUE),
+    };
     let pool = ServePool::start(&rt, &params, &cfg)?;
     for ex in &ds.examples {
-        pool.submit(ex.ids.clone(), tau);
+        // offline driver: on backpressure, wait for the pool to drain a
+        // little instead of shedding (the HTTP front-end answers 429)
+        loop {
+            match pool.submit(ex.ids.clone(), tau) {
+                Ok(_) => break,
+                Err(coordinator::SubmitError::QueueFull { .. }) => {
+                    std::thread::sleep(Duration::from_millis(1));
+                }
+                Err(e) => return Err(e.into()),
+            }
+        }
     }
     let (report, _responses) = pool.finish()?;
     report.print_summary();
@@ -408,7 +427,16 @@ fn cmd_serve_net(args: &Args) -> Result<()> {
     let cfg = NetConfig {
         listen: args.get_or("listen", "127.0.0.1:8080").to_string(),
         pools,
-        serve: ServeConfig { workers, slo, sim: None },
+        serve: ServeConfig {
+            workers,
+            slo,
+            sim: None,
+            batch_slo: Duration::from_millis(
+                args.get_u64("batch-slo-ms", 100),
+            ),
+            max_queue: args
+                .get_usize("max-queue", coordinator::DEFAULT_MAX_QUEUE),
+        },
         limits,
         default_tau: args.get_f64("tau", 0.04) as f32,
         max_batch: args.get_usize("max-batch", 32),

@@ -53,6 +53,35 @@ pub trait ExecBackend: Send {
         tau: f32,
     ) -> Result<Vec<f32>>;
 
+    /// Classification logits for a length-bucketed batch: `ids` is
+    /// row-major `[batch * seq]` for any `1 <= seq <= manifest.seq`, and
+    /// `lens[b]` is row `b`'s true token count (`1 <= len <= seq`; the
+    /// tail of the row is padding the attention mask must ignore).
+    ///
+    /// Contract: row `b`'s logits are bit-identical to classifying its
+    /// first `lens[b]` tokens alone (pinned by
+    /// `rust/tests/varlen_conformance.rs`).  The default covers backends
+    /// without a masked path: uniform full-length batches delegate to
+    /// [`ExecBackend::classify`] (identical by the contract), ragged
+    /// ones are refused.
+    fn classify_padded(
+        &mut self,
+        batch: usize,
+        seq: usize,
+        lens: &[usize],
+        params: &[f32],
+        ids: &[i32],
+        tau: f32,
+    ) -> Result<Vec<f32>> {
+        if lens.len() == batch && lens.iter().all(|&l| l == seq) {
+            return self.classify(batch, params, ids, tau);
+        }
+        bail!(
+            "backend '{}' does not support ragged (length-masked) batches",
+            self.name()
+        )
+    }
+
     /// Classification logits under SpAtten-style top-k attention pruning
     /// at `keep_frac` (batch inferred from `ids.len()`).
     fn classify_topk(

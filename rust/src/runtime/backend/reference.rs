@@ -144,7 +144,17 @@ impl ReferenceBackend {
         &params[off..off + len]
     }
 
-    fn check_inputs(&self, params: &[f32], ids: &[i32], batch: usize) -> Result<()> {
+    /// Validate a `(batch, seq)` request: any `1 <= seq <= manifest.seq`
+    /// is legal (the positional table is sliced), and per-row true
+    /// lengths, when given, must satisfy `1 <= len <= seq`.
+    fn check_inputs(
+        &self,
+        params: &[f32],
+        ids: &[i32],
+        batch: usize,
+        seq: usize,
+        lens: Option<&[usize]>,
+    ) -> Result<()> {
         if params.len() != self.param_count {
             bail!(
                 "params buffer has {} f32s, manifest layout wants {}",
@@ -152,8 +162,21 @@ impl ReferenceBackend {
                 self.param_count
             );
         }
-        if batch == 0 || ids.len() != batch * self.shape.seq {
-            bail!("ids length {} != batch {batch} * seq {}", ids.len(), self.shape.seq);
+        if seq == 0 || seq > self.shape.seq {
+            bail!("seq {seq} outside [1, {}]", self.shape.seq);
+        }
+        if batch == 0 || ids.len() != batch * seq {
+            bail!("ids length {} != batch {batch} * seq {seq}", ids.len());
+        }
+        if let Some(lens) = lens {
+            if lens.len() != batch {
+                bail!("lens has {} entries for batch {batch}", lens.len());
+            }
+            for &l in lens {
+                if l == 0 || l > seq {
+                    bail!("row length {l} outside [1, {seq}]");
+                }
+            }
         }
         for &id in ids {
             if id < 0 || id as usize >= self.shape.vocab {
@@ -163,8 +186,31 @@ impl ReferenceBackend {
         Ok(())
     }
 
-    /// Run the encoder stack; returns the `(batch * seq, hidden)` hidden
-    /// states.  When `stats` is set, the zero-fraction of every pruned
+    /// Derive `seq` from a `(batch, ids)` pair: the row width is
+    /// `ids.len() / batch`, and any width up to the manifest's `seq` is
+    /// accepted (variable-length requests run at their native length).
+    fn derive_seq(&self, ids: &[i32], batch: usize) -> Result<usize> {
+        if batch == 0 || ids.len() % batch != 0 {
+            bail!("ids length {} is not a multiple of batch {batch}", ids.len());
+        }
+        Ok(ids.len() / batch)
+    }
+
+    /// Run the encoder stack at row width `seq` (any `1..=manifest.seq`;
+    /// the positional table is sliced) with per-row true lengths `lens`;
+    /// returns the `(batch * seq, hidden)` hidden states.
+    ///
+    /// Attention is masked per row: scores, softmax, and context for
+    /// batch row `b` span only its first `lens[b]` positions, so a
+    /// row's logits are bit-identical whether it runs at `seq = len` or
+    /// padded wider (every other op is row- or element-wise, and the
+    /// tiled GEMM accumulates each output element in a fixed k-order
+    /// regardless of the batch dimension — pinned by
+    /// `tests/gemm_oracle.rs`).  Padding positions never reach a real
+    /// row: their context stays exactly 0.0 and their residual garbage
+    /// is confined to their own rows.
+    ///
+    /// When `stats` is set, the zero-fraction of every pruned
     /// activation matrix is recorded as a labelled [`HookRecord`]
     /// (layer + hook identity — the measured-sparsity trace cells),
     /// matching `model.py::activation_sparsity` hook-for-hook.
@@ -175,12 +221,28 @@ impl ReferenceBackend {
         params: &[f32],
         ids: &[i32],
         batch: usize,
+        seq: usize,
+        lens: &[usize],
         mode: Prune,
         mut stats: Option<&mut Vec<HookRecord>>,
     ) -> Vec<f32> {
-        let Shape { seq, hidden: h, layers, heads: nh, head_dim: hd, ff, .. } = self.shape;
+        let Shape { hidden: h, layers, heads: nh, head_dim: hd, ff, .. } = self.shape;
         let bs = batch * seq;
         let scale = 1.0 / (hd as f32).sqrt();
+
+        // Ragged score-buffer layout: one `lens[b] x lens[b]` block per
+        // `(batch row, head)`, b-major then head-major.  When every row
+        // runs at the full width this is byte-identical to the old
+        // `(batch * heads * seq, seq)` matrix, so the fixed-length path
+        // (and its pruning-hook statistics) is unchanged.
+        let mut blk_off = Vec::with_capacity(batch * nh);
+        let mut att_elems = 0usize;
+        for &l in lens {
+            for _ in 0..nh {
+                blk_off.push(att_elems);
+                att_elems += l * l;
+            }
+        }
 
         // M-OP-0: word + position embeddings.
         let word = self.p(params, "embed.word");
@@ -212,36 +274,48 @@ impl ReferenceBackend {
             t::add_bias(&mut v, self.p(params, &name("attn.bv")));
             prune_hook(&mut v, mode, layer, ActHook::V, &mut stats);
 
-            // C-OP-4: attention scores, all heads folded into one matrix
-            // so the pruning hook sees (batch * heads * seq, seq) like the
-            // Python model.
-            let mut att = vec![0.0f32; batch * nh * seq * seq];
+            // C-OP-4: attention scores, all heads folded into one ragged
+            // buffer so the pruning hook sees every real score (and, at
+            // uniform lengths, exactly the (batch * heads * seq, seq)
+            // matrix the Python model prunes).
+            let mut att = vec![0.0f32; att_elems];
             for b in 0..batch {
+                let l = lens[b];
                 for head in 0..nh {
-                    let qh = gather_head(&q, b, head, seq, h, hd);
-                    let kh = gather_head(&k, b, head, seq, h, hd);
-                    let mut a = t::matmul_nt(&qh, &kh, seq, hd, seq);
+                    let qh = gather_head(&q, b, head, l, seq, h, hd);
+                    let kh = gather_head(&k, b, head, l, seq, h, hd);
+                    let mut a = t::matmul_nt(&qh, &kh, l, hd, l);
                     for val in a.iter_mut() {
                         *val *= scale;
                     }
-                    let blk = (b * nh + head) * seq * seq;
-                    att[blk..blk + seq * seq].copy_from_slice(&a);
+                    let blk = blk_off[b * nh + head];
+                    att[blk..blk + l * l].copy_from_slice(&a);
                 }
             }
             match mode {
-                Prune::TopK(keep_frac) => topk_rows_quantile(&mut att, seq, keep_frac),
+                Prune::TopK(keep_frac) => {
+                    for b in 0..batch {
+                        let l = lens[b];
+                        for head in 0..nh {
+                            let blk = blk_off[b * nh + head];
+                            topk_rows_quantile(&mut att[blk..blk + l * l], l, keep_frac);
+                        }
+                    }
+                }
                 _ => prune_hook(&mut att, mode, layer, ActHook::Scores, &mut stats),
             }
 
-            // C-OP-5..6: softmax + probabilities x values.
+            // C-OP-5..6: softmax + probabilities x values.  Padding
+            // positions get no context at all (pcat rows stay 0.0).
             let mut pcat = vec![0.0f32; bs * h];
             for b in 0..batch {
+                let l = lens[b];
                 for head in 0..nh {
-                    let blk = (b * nh + head) * seq * seq;
-                    t::softmax_rows(&mut att[blk..blk + seq * seq], seq);
-                    let vh = gather_head(&v, b, head, seq, h, hd);
-                    let o = t::matmul(&att[blk..blk + seq * seq], &vh, seq, seq, hd);
-                    scatter_head(&mut pcat, &o, b, head, seq, h, hd);
+                    let blk = blk_off[b * nh + head];
+                    t::softmax_rows(&mut att[blk..blk + l * l], l);
+                    let vh = gather_head(&v, b, head, l, seq, h, hd);
+                    let o = t::matmul(&att[blk..blk + l * l], &vh, l, l, hd);
+                    scatter_head(&mut pcat, &o, b, head, l, seq, h, hd);
                 }
             }
             prune_hook(&mut pcat, mode, layer, ActHook::Context, &mut stats);
@@ -312,11 +386,13 @@ impl ReferenceBackend {
         params: &[f32],
         ids: &[i32],
         batch: usize,
+        seq: usize,
+        lens: &[usize],
         mode: Prune,
         stats: Option<&mut Vec<HookRecord>>,
     ) -> Vec<f32> {
-        let Shape { seq, hidden: h, classes, .. } = self.shape;
-        let hidden = self.encode(params, ids, batch, mode, stats);
+        let Shape { hidden: h, classes, .. } = self.shape;
+        let hidden = self.encode(params, ids, batch, seq, lens, mode, stats);
         let mut pooled = vec![0.0f32; batch * h];
         for b in 0..batch {
             pooled[b * h..b * h + h].copy_from_slice(&hidden[b * seq * h..b * seq * h + h]);
@@ -393,16 +469,16 @@ impl ReferenceBackend {
             let mut pcat = vec![0.0f32; bs * h];
             for b in 0..batch {
                 for head in 0..nh {
-                    let qh = gather_head(&q, b, head, seq, h, hd);
-                    let kh = gather_head(&k, b, head, seq, h, hd);
+                    let qh = gather_head(&q, b, head, seq, seq, h, hd);
+                    let kh = gather_head(&k, b, head, seq, seq, h, hd);
                     let mut a = t::matmul_nt(&qh, &kh, seq, hd, seq);
                     for val in a.iter_mut() {
                         *val *= scale;
                     }
                     t::softmax_rows(&mut a, seq);
-                    let vh = gather_head(&v, b, head, seq, h, hd);
+                    let vh = gather_head(&v, b, head, seq, seq, h, hd);
                     let o = t::matmul(&a, &vh, seq, seq, hd);
-                    scatter_head(&mut pcat, &o, b, head, seq, h, hd);
+                    scatter_head(&mut pcat, &o, b, head, seq, seq, h, hd);
                     let blk = (b * nh + head) * seq * seq;
                     probs[blk..blk + seq * seq].copy_from_slice(&a);
                 }
@@ -584,12 +660,12 @@ impl ReferenceBackend {
             let mut dv = vec![0.0f32; bs * h];
             for b in 0..batch {
                 for head in 0..nh {
-                    let do_h = gather_head(&dpcat, b, head, seq, h, hd);
+                    let do_h = gather_head(&dpcat, b, head, seq, seq, h, hd);
                     let blk = (b * nh + head) * seq * seq;
                     let p_blk = &c.probs[blk..blk + seq * seq];
-                    let qh = gather_head(&c.q, b, head, seq, h, hd);
-                    let kh = gather_head(&c.k, b, head, seq, h, hd);
-                    let vh = gather_head(&c.v, b, head, seq, h, hd);
+                    let qh = gather_head(&c.q, b, head, seq, seq, h, hd);
+                    let kh = gather_head(&c.k, b, head, seq, seq, h, hd);
+                    let vh = gather_head(&c.v, b, head, seq, seq, h, hd);
                     let dp = t::matmul_nt(&do_h, &vh, seq, hd, seq);
                     let dvh = t::matmul_tn(p_blk, &do_h, seq, seq, hd);
                     let mut da = t::softmax_backward_rows(p_blk, &dp, seq);
@@ -598,9 +674,9 @@ impl ReferenceBackend {
                     }
                     let dqh = t::matmul(&da, &kh, seq, seq, hd);
                     let dkh = t::matmul_tn(&da, &qh, seq, seq, hd);
-                    scatter_head_add(&mut dq, &dqh, b, head, seq, h, hd);
-                    scatter_head_add(&mut dk, &dkh, b, head, seq, h, hd);
-                    scatter_head_add(&mut dv, &dvh, b, head, seq, h, hd);
+                    scatter_head_add(&mut dq, &dqh, b, head, seq, seq, h, hd);
+                    scatter_head_add(&mut dk, &dkh, b, head, seq, seq, h, hd);
+                    scatter_head_add(&mut dv, &dvh, b, head, seq, seq, h, hd);
                 }
             }
 
@@ -658,8 +734,23 @@ impl ExecBackend for ReferenceBackend {
         ids: &[i32],
         tau: f32,
     ) -> Result<Vec<f32>> {
-        self.check_inputs(params, ids, batch)?;
-        Ok(self.classify_mode(params, ids, batch, Prune::DynaTran(tau), None))
+        let seq = self.derive_seq(ids, batch)?;
+        self.check_inputs(params, ids, batch, seq, None)?;
+        let lens = vec![seq; batch];
+        Ok(self.classify_mode(params, ids, batch, seq, &lens, Prune::DynaTran(tau), None))
+    }
+
+    fn classify_padded(
+        &mut self,
+        batch: usize,
+        seq: usize,
+        lens: &[usize],
+        params: &[f32],
+        ids: &[i32],
+        tau: f32,
+    ) -> Result<Vec<f32>> {
+        self.check_inputs(params, ids, batch, seq, Some(lens))?;
+        Ok(self.classify_mode(params, ids, batch, seq, lens, Prune::DynaTran(tau), None))
     }
 
     fn classify_topk(&mut self, params: &[f32], ids: &[i32], keep_frac: f32) -> Result<Vec<f32>> {
@@ -668,8 +759,9 @@ impl ExecBackend for ReferenceBackend {
             bail!("ids length {} is not a multiple of seq {seq}", ids.len());
         }
         let batch = ids.len() / seq;
-        self.check_inputs(params, ids, batch)?;
-        Ok(self.classify_mode(params, ids, batch, Prune::TopK(keep_frac), None))
+        self.check_inputs(params, ids, batch, seq, None)?;
+        let lens = vec![seq; batch];
+        Ok(self.classify_mode(params, ids, batch, seq, &lens, Prune::TopK(keep_frac), None))
     }
 
     fn classify_traced(
@@ -679,12 +771,16 @@ impl ExecBackend for ReferenceBackend {
         ids: &[i32],
         tau: f32,
     ) -> Result<(Vec<f32>, Vec<HookRecord>)> {
-        self.check_inputs(params, ids, batch)?;
+        let seq = self.derive_seq(ids, batch)?;
+        self.check_inputs(params, ids, batch, seq, None)?;
+        let lens = vec![seq; batch];
         let mut records = Vec::new();
         let logits = self.classify_mode(
             params,
             ids,
             batch,
+            seq,
+            &lens,
             Prune::DynaTran(tau),
             Some(&mut records),
         );
@@ -697,9 +793,10 @@ impl ExecBackend for ReferenceBackend {
             bail!("ids length {} is not a multiple of seq {seq}", ids.len());
         }
         let batch = ids.len() / seq;
-        self.check_inputs(params, ids, batch)?;
+        self.check_inputs(params, ids, batch, seq, None)?;
+        let lens = vec![seq; batch];
         let mut stats = Vec::new();
-        self.encode(params, ids, batch, Prune::DynaTran(tau), Some(&mut stats));
+        self.encode(params, ids, batch, seq, &lens, Prune::DynaTran(tau), Some(&mut stats));
         if stats.is_empty() {
             return Ok(0.0);
         }
@@ -719,7 +816,9 @@ impl ExecBackend for ReferenceBackend {
         lr: f32,
     ) -> Result<f32> {
         let batch = labels.len();
-        self.check_inputs(params, ids, batch)?;
+        // training always runs at the manifest's full seq (the AOT
+        // train_step artifacts export exactly that shape)
+        self.check_inputs(params, ids, batch, self.shape.seq, None)?;
         if m.len() != params.len() || v.len() != params.len() {
             bail!("optimizer state length mismatch");
         }
@@ -806,29 +905,41 @@ fn topk_rows_quantile(x: &mut [f32], n: usize, keep_frac: f32) {
     }
 }
 
-/// Copy head `head` of batch row `b` out of a `(batch * seq, hidden)`
-/// matrix into a contiguous `(seq, head_dim)` block.
-fn gather_head(src: &[f32], b: usize, head: usize, seq: usize, h: usize, hd: usize) -> Vec<f32> {
-    let mut out = vec![0.0f32; seq * hd];
-    for s in 0..seq {
+/// Copy the first `len` positions of head `head`, batch row `b`, out of
+/// a `(batch * seq, hidden)` matrix into a contiguous `(len, head_dim)`
+/// block.  `len` is the attended row length; `seq` is the storage
+/// stride (`len == seq` for fixed-length rows).
+fn gather_head(
+    src: &[f32],
+    b: usize,
+    head: usize,
+    len: usize,
+    seq: usize,
+    h: usize,
+    hd: usize,
+) -> Vec<f32> {
+    let mut out = vec![0.0f32; len * hd];
+    for s in 0..len {
         let from = (b * seq + s) * h + head * hd;
         out[s * hd..s * hd + hd].copy_from_slice(&src[from..from + hd]);
     }
     out
 }
 
-/// Write a contiguous `(seq, head_dim)` block back into head `head` of
-/// batch row `b` of a `(batch * seq, hidden)` matrix.
+/// Write a contiguous `(len, head_dim)` block back into the first `len`
+/// positions of head `head`, batch row `b`, of a `(batch * seq, hidden)`
+/// matrix.
 fn scatter_head(
     dst: &mut [f32],
     blk: &[f32],
     b: usize,
     head: usize,
+    len: usize,
     seq: usize,
     h: usize,
     hd: usize,
 ) {
-    for s in 0..seq {
+    for s in 0..len {
         let to = (b * seq + s) * h + head * hd;
         dst[to..to + hd].copy_from_slice(&blk[s * hd..s * hd + hd]);
     }
@@ -840,11 +951,12 @@ fn scatter_head_add(
     blk: &[f32],
     b: usize,
     head: usize,
+    len: usize,
     seq: usize,
     h: usize,
     hd: usize,
 ) {
-    for s in 0..seq {
+    for s in 0..len {
         let to = (b * seq + s) * h + head * hd;
         for (d, &v) in dst[to..to + hd].iter_mut().zip(&blk[s * hd..s * hd + hd]) {
             *d += v;

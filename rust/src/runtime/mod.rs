@@ -113,8 +113,10 @@ impl Runtime {
     // ---- the five typed entry points -------------------------------
 
     /// Classification logits for a batch at DynaTran threshold `tau`.
-    /// `ids` is row-major `[batch * seq]`; logits come back
-    /// `[batch * classes]`.
+    /// `ids` is row-major `[batch * seq]` for any row width
+    /// `1 <= seq <= manifest.seq` (the width is derived as
+    /// `ids.len() / batch`; shorter requests run at their native
+    /// length); logits come back `[batch * classes]`.
     pub fn classify(
         &mut self,
         batch: usize,
@@ -123,6 +125,26 @@ impl Runtime {
         tau: f32,
     ) -> Result<Vec<f32>> {
         self.backend.classify(batch, params, ids, tau)
+    }
+
+    /// Classification logits for a length-bucketed batch: rows are
+    /// stored `[batch * seq]` with row `b`'s true token count in
+    /// `lens[b]` (`1 <= len <= seq <= manifest.seq`; the row tail past
+    /// `len` is padding the attention mask ignores).  Row `b`'s logits
+    /// are bit-identical to classifying its first `lens[b]` tokens alone
+    /// — the dynamic batcher relies on this to pad only within a length
+    /// bucket (pinned by `rust/tests/varlen_conformance.rs`).
+    #[allow(clippy::too_many_arguments)]
+    pub fn classify_padded(
+        &mut self,
+        batch: usize,
+        seq: usize,
+        lens: &[usize],
+        params: &[f32],
+        ids: &[i32],
+        tau: f32,
+    ) -> Result<Vec<f32>> {
+        self.backend.classify_padded(batch, seq, lens, params, ids, tau)
     }
 
     /// Classification logits plus the forward pass's per-activation

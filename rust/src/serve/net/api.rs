@@ -14,11 +14,14 @@
 //!               {"ids": [...]}]}             // pool so they co-batch
 //! ```
 //!
-//! `tau` (the DynaTran activation-pruning threshold) is optional and
-//! per-item; `ids` must be exactly the served model's sequence length
-//! with every id in `[0, vocab)` — shape errors caught here would
-//! otherwise panic a worker thread deep in the embedding gather.
+//! `tau` (the DynaTran activation-pruning threshold) and `priority`
+//! (`"interactive"` | `"batch"`) are optional and per-item; `ids` may
+//! carry any *native* length `1..=seq` (the engine buckets and pads it
+//! — requests are no longer forced to the manifest's full sequence
+//! length) with every id in `[0, vocab)` — shape errors caught here
+//! would otherwise reach a worker thread deep in the embedding gather.
 
+use crate::coordinator::Priority;
 use crate::util::json::Json;
 
 /// A structured request failure: HTTP status, stable machine-readable
@@ -61,14 +64,16 @@ impl std::fmt::Display for ApiError {
 
 impl std::error::Error for ApiError {}
 
-/// One validated classify item: a full-length token-id row plus its
-/// pruning threshold.
+/// One validated classify item: a native-length token-id row plus its
+/// pruning threshold and scheduling class.
 #[derive(Debug, Clone, PartialEq)]
 pub struct ClassifyItem {
-    /// Token ids, exactly `seq` long, each in `[0, vocab)`.
+    /// Token ids, `1..=seq` long, each in `[0, vocab)`.
     pub ids: Vec<i32>,
     /// DynaTran pruning threshold in `[0, 1]`.
     pub tau: f32,
+    /// Scheduling class (defaults to interactive).
+    pub priority: Priority,
 }
 
 /// A validated classify request body.
@@ -99,7 +104,8 @@ impl ClassifyRequest {
 /// Model-shape context the decoder validates against.
 #[derive(Debug, Clone, Copy)]
 pub struct ModelShape {
-    /// Required length of every `ids` array.
+    /// Maximum length of an `ids` array (any native length `1..=seq`
+    /// is accepted and served in its length bucket).
     pub seq: usize,
     /// Exclusive upper bound on token ids.
     pub vocab: usize,
@@ -115,7 +121,7 @@ fn item_from(
         ApiError::bad_request("bad_type", format!("{at} must be an object"))
     })?;
     for key in map.keys() {
-        if key != "ids" && key != "tau" {
+        if key != "ids" && key != "tau" && key != "priority" {
             return Err(ApiError::bad_request(
                 "unknown_field",
                 format!("{at} has unknown field '{key}'"),
@@ -128,12 +134,12 @@ fn item_from(
     let arr = ids_json.as_arr().ok_or_else(|| {
         ApiError::bad_request("bad_type", format!("{at}.ids must be an array"))
     })?;
-    if arr.len() != shape.seq {
+    if arr.is_empty() || arr.len() > shape.seq {
         return Err(ApiError::bad_request(
             "bad_shape",
             format!(
-                "{at}.ids must have exactly {} token ids (the served \
-                 model's sequence length), got {}",
+                "{at}.ids must have between 1 and {} token ids (the served \
+                 model's maximum sequence length), got {}",
                 shape.seq,
                 arr.len()
             ),
@@ -176,7 +182,27 @@ fn item_from(
             t as f32
         }
     };
-    Ok(ClassifyItem { ids, tau })
+    let priority = match obj.get("priority") {
+        None => Priority::Interactive,
+        Some(v) => {
+            let s = v.as_str().ok_or_else(|| {
+                ApiError::bad_request(
+                    "bad_type",
+                    format!("{at}.priority must be a string"),
+                )
+            })?;
+            Priority::parse(s).ok_or_else(|| {
+                ApiError::bad_request(
+                    "bad_priority",
+                    format!(
+                        "{at}.priority must be 'interactive' or 'batch', \
+                         got '{s}'"
+                    ),
+                )
+            })?
+        }
+    };
+    Ok(ClassifyItem { ids, tau, priority })
 }
 
 /// Decode and validate a classify body against the served model shape.
@@ -304,10 +330,44 @@ mod tests {
 
     #[test]
     fn wrong_length_is_bad_shape() {
-        let e = decode(r#"{"ids": [1, 2, 3]}"#).unwrap_err();
+        // new rule: any native length 1..=seq is legal; empty and
+        // over-long arrays are not
+        let e = decode(r#"{"ids": []}"#).unwrap_err();
         assert_eq!((e.status, e.code), (400, "bad_shape"));
         let e = decode(r#"{"ids": [1, 2, 3, 4, 5]}"#).unwrap_err();
         assert_eq!(e.code, "bad_shape");
+    }
+
+    #[test]
+    fn shorter_than_seq_is_accepted_at_native_length() {
+        let got = decode(r#"{"ids": [7]}"#).unwrap();
+        match got {
+            ClassifyRequest::Single(item) => {
+                assert_eq!(item.ids, vec![7]);
+                assert_eq!(item.priority, Priority::Interactive);
+            }
+            other => panic!("expected Single, got {other:?}"),
+        }
+        let got = decode(r#"{"ids": [1, 2, 3]}"#).unwrap();
+        match got {
+            ClassifyRequest::Single(item) => assert_eq!(item.ids, vec![1, 2, 3]),
+            other => panic!("expected Single, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn priority_field_parses_and_rejects_junk() {
+        let got = decode(r#"{"ids": [1, 2], "priority": "batch"}"#).unwrap();
+        match got {
+            ClassifyRequest::Single(item) => {
+                assert_eq!(item.priority, Priority::Batch);
+            }
+            other => panic!("expected Single, got {other:?}"),
+        }
+        let e = decode(r#"{"ids": [1, 2], "priority": "urgent"}"#).unwrap_err();
+        assert_eq!((e.status, e.code), (400, "bad_priority"));
+        let e = decode(r#"{"ids": [1, 2], "priority": 3}"#).unwrap_err();
+        assert_eq!(e.code, "bad_type");
     }
 
     #[test]

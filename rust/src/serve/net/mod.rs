@@ -3,11 +3,15 @@
 //! anyhow-only dependency policy holds) exposing
 //!
 //! * `POST /v1/classify` — single or batched token-id classification
-//!   with typed validation errors (4xx JSON bodies; a malformed or
-//!   hostile body never reaches a pool),
+//!   (rows may be any length `1..=seq`; an optional `"priority"` of
+//!   `"interactive"` or `"batch"` picks the SLO class) with typed
+//!   validation errors (4xx JSON bodies; a malformed or hostile body
+//!   never reaches a pool) and bounded-queue admission control (429 +
+//!   `Retry-After` when a pool is at its depth bound),
 //! * `GET /stats` — live serving state: per-pool and merged latency
-//!   histogram percentiles, queue high-water, padded-row fraction, and
-//!   the process-wide block-sparse GEMM effectual-tile/MAC counters,
+//!   histogram percentiles, queue high-water, per-bucket depths,
+//!   padded-row and padded-token fractions, 429 shed count, and the
+//!   process-wide block-sparse GEMM effectual-tile/MAC counters,
 //! * `GET /healthz` — liveness plus the model shape a client needs to
 //!   build valid requests.
 //!

@@ -13,7 +13,9 @@
 //! rows go to the same pool, so the pool's deadline batcher can
 //! co-schedule them into one dispatch.
 
-use crate::coordinator::{PoolSnapshot, Response, ServeReport, ServePool};
+use crate::coordinator::{
+    PoolSnapshot, Priority, Response, ServeReport, ServePool, SubmitError,
+};
 use anyhow::Result;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc;
@@ -78,8 +80,8 @@ impl Router {
         self.pools.is_empty()
     }
 
-    /// Sequence length every request row must have (identical across
-    /// shards: they are clones of one runtime).
+    /// Maximum sequence length a request row may carry (identical
+    /// across shards: they are clones of one runtime).
     pub fn seq(&self) -> usize {
         self.pools[0].seq()
     }
@@ -103,32 +105,35 @@ impl Router {
     }
 
     /// Place one request: pick a shard and enqueue with a reply
-    /// channel.  Returns `(shard, request_id)`.
+    /// channel.  Returns `(shard, request_id)`, or the shard's
+    /// [`SubmitError`] (bad length / queue at its admission bound) —
+    /// the server layer maps `QueueFull` to 429.
     pub fn submit(
         &self,
         ids: Vec<i32>,
         tau: f32,
+        priority: Priority,
         reply: mpsc::Sender<Response>,
-    ) -> (usize, u64) {
+    ) -> Result<(usize, u64), SubmitError> {
         let shard = self.pick();
-        let id = self.pools[shard].submit_with_reply(ids, tau, reply);
-        (shard, id)
+        let id =
+            self.pools[shard].submit_with_reply_priority(ids, tau, priority, reply)?;
+        Ok((shard, id))
     }
 
     /// Place a multi-row request on ONE shard so the rows can share a
-    /// dispatch.  Returns the shard and the per-row request ids.
+    /// dispatch.  Admission is all-or-nothing on that shard
+    /// ([`ServePool::submit_batch_with_reply`]): a near-full queue
+    /// rejects the whole batch rather than accepting a prefix.  Returns
+    /// the shard and the per-row request ids.
     pub fn submit_batch(
         &self,
-        rows: Vec<(Vec<i32>, f32)>,
+        rows: Vec<(Vec<i32>, f32, Priority)>,
         reply: mpsc::Sender<Response>,
-    ) -> (usize, Vec<u64>) {
+    ) -> Result<(usize, Vec<u64>), SubmitError> {
         let shard = self.pick();
-        let pool = &self.pools[shard];
-        let ids = rows
-            .into_iter()
-            .map(|(ids, tau)| pool.submit_with_reply(ids, tau, reply.clone()))
-            .collect();
-        (shard, ids)
+        let ids = self.pools[shard].submit_batch_with_reply(rows, &reply)?;
+        Ok((shard, ids))
     }
 
     /// Live snapshot of every shard, in shard order.

@@ -40,7 +40,9 @@ use super::api::{self, ApiError, ClassifyRequest, ModelShape};
 use super::http::{self, HttpHead, Limits, RecvError};
 use super::router::Router;
 use super::stats::{stats_json, NetCounters};
-use crate::coordinator::{Response, ServeConfig, ServeReport, ServePool};
+use crate::coordinator::{
+    Priority, Response, ServeConfig, ServeReport, ServePool, SubmitError,
+};
 use crate::runtime::Runtime;
 use crate::util::json::Json;
 use anyhow::{anyhow, Context, Result};
@@ -149,6 +151,9 @@ pub struct NetReport {
     pub ok: u64,
     /// 4xx responses.
     pub client_errors: u64,
+    /// 429 admission-control rejections (also counted in
+    /// `client_errors`).
+    pub rejected_429: u64,
     /// 5xx responses other than drain rejections.
     pub server_errors: u64,
     /// 503s sent while draining.
@@ -177,6 +182,7 @@ impl NetReport {
                     ("http_requests", Json::num(self.http_requests as f64)),
                     ("ok", Json::num(self.ok as f64)),
                     ("client_errors", Json::num(self.client_errors as f64)),
+                    ("rejected_429", Json::num(self.rejected_429 as f64)),
                     ("server_errors", Json::num(self.server_errors as f64)),
                     (
                         "drained_rejects",
@@ -206,14 +212,15 @@ impl NetReport {
     /// One-screen summary to stdout.
     pub fn print_summary(&self) {
         println!(
-            "net: {} up {:.1}s — {} conns, {} http reqs ({} ok / {} 4xx / \
-             {} 5xx / {} drain-rejected / {} timeouts)",
+            "net: {} up {:.1}s — {} conns, {} http reqs ({} ok / {} 4xx \
+             [{} shed] / {} 5xx / {} drain-rejected / {} timeouts)",
             self.listen,
             self.uptime.as_secs_f64(),
             self.connections,
             self.http_requests,
             self.ok,
             self.client_errors,
+            self.rejected_429,
             self.server_errors,
             self.drained_rejects,
             self.timeouts,
@@ -345,7 +352,8 @@ impl NetServer {
             load(&c.ok),
             load(&c.client_errors),
         );
-        let (server_errors, drained_rejects, timeouts) = (
+        let (rejected_429, server_errors, drained_rejects, timeouts) = (
+            load(&c.rejected_429),
             load(&c.server_errors),
             load(&c.drained_rejects),
             load(&c.timeouts),
@@ -359,6 +367,7 @@ impl NetServer {
             http_requests,
             ok,
             client_errors,
+            rejected_429,
             server_errors,
             drained_rejects,
             timeouts,
@@ -557,6 +566,8 @@ fn recv_error_response(
 }
 
 /// Serialize and send one JSON response, recording the outcome class.
+/// Admission-control rejections (429) carry `Retry-After: 1` so
+/// well-behaved clients back off instead of hot-looping.
 fn write_json(
     writer: &mut impl std::io::Write,
     ctx: &Ctx,
@@ -566,10 +577,14 @@ fn write_json(
 ) -> bool {
     ctx.counters.record_status(status);
     let text = body.to_string_compact();
-    http::write_response(
+    let retry = [("Retry-After", String::from("1"))];
+    let extra: &[(&str, String)] =
+        if status == 429 { &retry } else { &[] };
+    http::write_response_with(
         writer,
         status,
         "application/json",
+        extra,
         text.as_bytes(),
         keep,
     )
@@ -667,6 +682,30 @@ fn response_json(r: &Response, shard: usize) -> Json {
     ])
 }
 
+/// Map a pool admission failure to its HTTP shape.  `BadLength` is
+/// defensive — the API layer validates lengths before submit — but
+/// `QueueFull` is the normal load-shedding path: 429 plus a
+/// `Retry-After` header (added by `write_json`).
+fn submit_error(e: SubmitError) -> ApiError {
+    match e {
+        SubmitError::BadLength { got, max_seq } => ApiError {
+            status: 400,
+            code: "bad_shape",
+            message: format!(
+                "request has {got} token ids, want between 1 and {max_seq}"
+            ),
+        },
+        SubmitError::QueueFull { pending, bound } => ApiError {
+            status: 429,
+            code: "queue_full",
+            message: format!(
+                "pool queue at its admission bound ({pending} pending, \
+                 bound {bound}); retry after the Retry-After interval"
+            ),
+        },
+    }
+}
+
 /// Decode, validate, route to a pool shard, and wait for the replies.
 fn classify(ctx: &Ctx, body: &[u8]) -> Result<Json, ApiError> {
     let shape =
@@ -683,16 +722,22 @@ fn classify(ctx: &Ctx, body: &[u8]) -> Result<Json, ApiError> {
     match req {
         ClassifyRequest::Single(item) => {
             let (tx, rx) = mpsc::channel();
-            let (shard, _id) = ctx.router.submit(item.ids, item.tau, tx);
+            let (shard, _id) = ctx
+                .router
+                .submit(item.ids, item.tau, item.priority, tx)
+                .map_err(submit_error)?;
             let resp = rx.recv_timeout(REPLY_WAIT).map_err(|_| wedged())?;
             Ok(response_json(&resp, shard))
         }
         ClassifyRequest::Batch(items) => {
             let n = items.len();
-            let rows: Vec<(Vec<i32>, f32)> =
-                items.into_iter().map(|i| (i.ids, i.tau)).collect();
+            let rows: Vec<(Vec<i32>, f32, Priority)> = items
+                .into_iter()
+                .map(|i| (i.ids, i.tau, i.priority))
+                .collect();
             let (tx, rx) = mpsc::channel();
-            let (shard, ids) = ctx.router.submit_batch(rows, tx);
+            let (shard, ids) =
+                ctx.router.submit_batch(rows, tx).map_err(submit_error)?;
             let mut by_id: Vec<Option<Response>> = (0..n).map(|_| None).collect();
             for _ in 0..n {
                 let resp = rx.recv_timeout(REPLY_WAIT).map_err(|_| wedged())?;

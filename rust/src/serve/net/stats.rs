@@ -23,8 +23,13 @@ pub struct NetCounters {
     pub http_requests: AtomicU64,
     /// 2xx responses.
     pub ok: AtomicU64,
-    /// 4xx responses (validation, routing, size limits).
+    /// 4xx responses (validation, routing, size limits, backpressure).
     pub client_errors: AtomicU64,
+    /// 429s specifically: admission-control rejections (a pool queue at
+    /// its depth bound).  Also counted in `client_errors`; broken out
+    /// because load-shedding is an operational signal, not a client
+    /// bug.
+    pub rejected_429: AtomicU64,
     /// 5xx responses other than drain rejections.
     pub server_errors: AtomicU64,
     /// 503s sent because the server was draining.
@@ -36,6 +41,9 @@ pub struct NetCounters {
 impl NetCounters {
     /// Bump the outcome-class counter for a response status.
     pub fn record_status(&self, status: u16) {
+        if status == 429 {
+            self.rejected_429.fetch_add(1, Ordering::Relaxed);
+        }
         let c = match status {
             200..=299 => &self.ok,
             400..=499 => &self.client_errors,
@@ -52,6 +60,7 @@ impl NetCounters {
             ("http_requests", get(&self.http_requests)),
             ("ok", get(&self.ok)),
             ("client_errors", get(&self.client_errors)),
+            ("rejected_429", get(&self.rejected_429)),
             ("server_errors", get(&self.server_errors)),
             ("drained_rejects", get(&self.drained_rejects)),
             ("timeouts", get(&self.timeouts)),
@@ -95,6 +104,8 @@ pub fn stats_json(
     let mut deadline_misses = 0u64;
     let mut rows = 0u64;
     let mut padded = 0u64;
+    let mut tokens = 0u64;
+    let mut padded_tokens = 0u64;
     let mut high_water = 0u64;
     for p in pools {
         queue_h.merge(&p.queue_latency);
@@ -106,10 +117,14 @@ pub fn stats_json(
         deadline_misses += p.deadline_misses;
         rows += p.stats.rows_dispatched;
         padded += p.stats.padded_rows;
+        tokens += p.stats.tokens_dispatched;
+        padded_tokens += p.stats.padded_tokens;
         high_water = high_water.max(p.stats.queue_depth_high_water);
     }
     let padded_frac =
         if rows == 0 { 0.0 } else { padded as f64 / rows as f64 };
+    let padded_token_frac =
+        if tokens == 0 { 0.0 } else { padded_tokens as f64 / tokens as f64 };
     let gemm = gemm_stats_snapshot();
     Json::obj(vec![
         ("state", Json::str(state)),
@@ -130,6 +145,9 @@ pub fn stats_json(
                 ("rows_dispatched", Json::num(rows as f64)),
                 ("padded_rows", Json::num(padded as f64)),
                 ("padded_row_fraction", Json::num(padded_frac)),
+                ("tokens_dispatched", Json::num(tokens as f64)),
+                ("padded_tokens", Json::num(padded_tokens as f64)),
+                ("padded_token_fraction", Json::num(padded_token_frac)),
                 (
                     "queue_depth_high_water",
                     Json::num(high_water as f64),
@@ -178,9 +196,12 @@ mod tests {
         c.record_status(201);
         c.record_status(400);
         c.record_status(413);
+        c.record_status(429);
         c.record_status(500);
         assert_eq!(c.ok.load(Ordering::Relaxed), 2);
-        assert_eq!(c.client_errors.load(Ordering::Relaxed), 2);
+        // 429 lands in client_errors AND the dedicated shed counter
+        assert_eq!(c.client_errors.load(Ordering::Relaxed), 3);
+        assert_eq!(c.rejected_429.load(Ordering::Relaxed), 1);
         assert_eq!(c.server_errors.load(Ordering::Relaxed), 1);
     }
 
@@ -210,6 +231,15 @@ mod tests {
         assert_eq!(
             j.path(&["merged", "padded_row_fraction"])
                 .and_then(|v| v.as_f64()),
+            Some(0.0)
+        );
+        assert_eq!(
+            j.path(&["merged", "padded_token_fraction"])
+                .and_then(|v| v.as_f64()),
+            Some(0.0)
+        );
+        assert_eq!(
+            j.path(&["server", "rejected_429"]).and_then(|v| v.as_f64()),
             Some(0.0)
         );
         // must serialize and re-parse cleanly (non-finite would break)

@@ -44,7 +44,7 @@ fn batch_server_submit_step_drain_roundtrip() {
     let ds = task.dataset(50, 1);
     let mut ids: Vec<u64> = Vec::new();
     for ex in &ds.examples {
-        ids.push(server.submit(ex.ids.clone(), 0.02));
+        ids.push(server.submit(ex.ids.clone(), 0.02).unwrap());
     }
     let responses = server.drain().unwrap();
     assert_eq!(responses.len(), 50);
@@ -69,7 +69,7 @@ fn drain_pads_only_the_sub_batch_tail() {
     let params = ParamStore::init(&rt.manifest, 0).params;
     let mut server = BatchServer::new(rt, params);
     for i in 0..11 {
-        server.submit(vec![(i % 4) as i32; seq], 0.0);
+        server.submit(vec![(i % 4) as i32; seq], 0.0).unwrap();
     }
     let responses = server.drain().unwrap();
     assert_eq!(responses.len(), 11);
@@ -96,7 +96,7 @@ fn batch_server_deadline_flushes_underfilled_batch() {
     // generous SLO so the immediate step below rarely races the deadline
     server.max_wait = Duration::from_millis(150);
     for i in 0..3 {
-        server.submit(vec![(i % 4) as i32; seq], 0.0);
+        server.submit(vec![(i % 4) as i32; seq], 0.0).unwrap();
     }
     let early = server.step().unwrap();
     let flushed = if early.is_empty() {
@@ -126,8 +126,10 @@ fn batch_server_per_request_slo_overrides_default() {
     let params = ParamStore::init(&rt.manifest, 0).params;
     let mut server = BatchServer::new(rt, params);
     server.max_wait = Duration::from_secs(3600); // default: effectively never
-    server.submit_with_slo(vec![1i32; seq], 0.0, Duration::from_millis(2));
-    server.submit(vec![2i32; seq], 0.0);
+    server
+        .submit_with_slo(vec![1i32; seq], 0.0, Duration::from_millis(2))
+        .unwrap();
+    server.submit(vec![2i32; seq], 0.0).unwrap();
     std::thread::sleep(Duration::from_millis(6));
     let out = server.step().unwrap();
     assert_eq!(out.len(), 2, "urgent head request must flush the queue");
@@ -143,8 +145,10 @@ fn urgent_request_behind_lax_head_still_flushes() {
     let params = ParamStore::init(&rt.manifest, 0).params;
     let mut server = BatchServer::new(rt, params);
     server.max_wait = Duration::from_secs(3600);
-    server.submit(vec![2i32; seq], 0.0); // lax, at the head
-    server.submit_with_slo(vec![1i32; seq], 0.0, Duration::from_millis(2));
+    server.submit(vec![2i32; seq], 0.0).unwrap(); // lax, at the head
+    server
+        .submit_with_slo(vec![1i32; seq], 0.0, Duration::from_millis(2))
+        .unwrap();
     std::thread::sleep(Duration::from_millis(6));
     let out = server.step().unwrap();
     assert_eq!(
@@ -167,13 +171,14 @@ fn serve_pool_matches_batch_server_accounting() {
         workers: 2,
         slo: Duration::from_millis(5),
         sim: None,
+        ..Default::default()
     };
     let pool = ServePool::start(&rt, &params, &cfg).unwrap();
     let task = SentimentTask::new(vocab, seq, 3);
     let ds = task.dataset(50, 1);
     let mut ids: Vec<u64> = Vec::new();
     for ex in &ds.examples {
-        ids.push(pool.submit(ex.ids.clone(), 0.02));
+        ids.push(pool.submit(ex.ids.clone(), 0.02).unwrap());
     }
     let (report, responses) = pool.finish().unwrap();
     assert_eq!(responses.len(), 50);
@@ -316,7 +321,7 @@ fn pjrt_batch_server_serves_all_requests() {
     let task = SentimentTask::new(vocab, seq, 3);
     let ds = task.dataset(50, 1);
     for ex in &ds.examples {
-        server.submit(ex.ids.clone(), 0.02);
+        server.submit(ex.ids.clone(), 0.02).unwrap();
     }
     let responses = server.drain().unwrap();
     assert_eq!(responses.len(), 50);

@@ -185,9 +185,13 @@ fn routing_and_validation_status_codes() {
     let resp = client.request("POST", "/stats", Some(b"{}")).unwrap();
     assert_eq!(resp.status, 405);
 
-    // validation 400s surface the api codes
+    // validation 400s surface the api codes.  The length rule is
+    // `1 <= len <= seq` — shorter-than-seq is LEGAL now (continuous
+    // batching runs it at its native length), so only empty and
+    // over-seq rows are bad_shape.
     let cases: Vec<(Json, &str)> = vec![
-        (ids_body(&vec![1; seq - 1], 0.0), "bad_shape"),
+        (ids_body(&[], 0.0), "bad_shape"),
+        (ids_body(&vec![1; seq + 1], 0.0), "bad_shape"),
         (ids_body(&vec![999; seq], 0.0), "bad_token_id"),
         (ids_body(&vec![1; seq], 7.0), "bad_tau"),
         (Json::obj(vec![("wrong", Json::num(1.0))]), "missing_field"),
@@ -212,10 +216,67 @@ fn routing_and_validation_status_codes() {
     let (status, _) =
         client.post_json("/v1/classify", &ids_body(&vec![1; seq], 0.0)).unwrap();
     assert_eq!(status, 200);
+    // ...and so does one shorter than seq, at its native length
+    let (status, resp) = client
+        .post_json("/v1/classify", &ids_body(&vec![1; seq - 1], 0.0))
+        .unwrap();
+    assert_eq!(status, 200, "{resp:?}");
+    assert!(resp.get("logits").is_some());
 
     let report = server.shutdown().unwrap();
-    assert_eq!(report.requests_served(), 1, "only the one valid request");
-    assert!(report.client_errors >= 6);
+    assert_eq!(report.requests_served(), 2, "the two valid requests");
+    assert!(report.client_errors >= 7);
+}
+
+#[test]
+fn queue_full_maps_to_429_with_retry_after() {
+    // max_queue = 0 makes every admission fail deterministically —
+    // the HTTP layer must answer 429 with code "queue_full", count it
+    // in rejected_429, and attach a Retry-After header
+    let (server, _params, rt) = start_server(|c| {
+        c.serve.max_queue = 0;
+    });
+    let seq = rt.manifest.seq;
+    let mut client = HttpClient::connect(server.addr()).unwrap();
+    let body = ids_body(&vec![1; seq], 0.0).to_string_compact();
+    let resp = client
+        .request("POST", "/v1/classify", Some(body.as_bytes()))
+        .unwrap();
+    assert_eq!(resp.status, 429, "{resp:?}");
+    assert_eq!(
+        resp.json()
+            .unwrap()
+            .path(&["error", "code"])
+            .and_then(|v| v.as_str()),
+        Some("queue_full")
+    );
+    assert_eq!(
+        resp.headers
+            .iter()
+            .find(|(n, _)| n == "retry-after")
+            .map(|(_, v)| v.as_str()),
+        Some("1"),
+        "429 must carry Retry-After: {:?}",
+        resp.headers
+    );
+    // batch bodies shed atomically too
+    let rows: Vec<Json> =
+        (0..2).map(|_| ids_body(&vec![1; seq], 0.0)).collect();
+    let batch = Json::obj(vec![("requests", Json::arr(rows))]);
+    let (status, resp) = client.post_json("/v1/classify", &batch).unwrap();
+    assert_eq!(status, 429, "{resp:?}");
+    // the connection survives load shedding (it is not an error close)
+    let (status, _) = client.get("/healthz").unwrap();
+    assert_eq!(status, 200);
+    // the shed counter is visible both live and in the final report
+    let (_, stats) = client.get("/stats").unwrap();
+    assert_eq!(
+        stats.path(&["server", "rejected_429"]).and_then(|v| v.as_f64()),
+        Some(2.0)
+    );
+    let report = server.shutdown().unwrap();
+    assert_eq!(report.rejected_429, 2);
+    assert_eq!(report.requests_served(), 0);
 }
 
 #[test]
@@ -411,12 +472,17 @@ fn drain_under_load_loses_no_accepted_request() {
 
     // clients hammer single-row classifies until the server goes away;
     // each counts its 200s (anything else — 503 draining, transport
-    // errors once the listener closes — ends the loop)
+    // errors once the listener closes — ends the loop).  Each client
+    // uses a different native length so the drain also exercises the
+    // length-bucketed queues: accepted requests parked in DIFFERENT
+    // seq buckets must all still be flushed.
     let mut clients = Vec::new();
     for c in 0..4u64 {
         let stop = Arc::clone(&stop);
         clients.push(std::thread::spawn(move || -> u64 {
-            let ids: Vec<i32> = (0..seq as i32).map(|i| (i + c as i32) % 64).collect();
+            let len = seq - 3 * c as usize; // 16, 13, 10, 7 at seq=16
+            let ids: Vec<i32> =
+                (0..len as i32).map(|i| (i + c as i32) % 64).collect();
             let body = {
                 let arr: Vec<String> =
                     ids.iter().map(|i| i.to_string()).collect();

@@ -1,0 +1,182 @@
+//! Tier-1 conformance: variable-length execution is *bit-exact*.
+//!
+//! The continuous-batching engine pads a length-L request only to its
+//! seq bucket, which is sound only if padding cannot perturb the math.
+//! The reference backend guarantees it structurally — attention is
+//! computed per row over exactly `lens[b]` positions (gather → L×L
+//! scores/softmax/context → scatter), and every other op is row-wise —
+//! so a length-L row's logits must be IDENTICAL (`assert_eq!` on the
+//! f32 bits, not approximately) whether it runs:
+//!
+//! * solo at `seq = L` (`Runtime::classify` derives the width),
+//! * padded to any bucket width `L <= W <= manifest.seq`
+//!   (`Runtime::classify_padded`), alone or sharing the batch with rows
+//!   of other lengths.
+//!
+//! If a refactor ever breaks this, batching stops being semantically
+//! transparent — a request's answer would depend on queue timing (which
+//! bucket/batch it rode in), which is a serving-correctness bug, not a
+//! tolerance issue.  Hence exact equality.
+
+use acceltran::model::TransformerConfig;
+use acceltran::runtime::{ParamStore, Runtime};
+
+/// Tiny encoder (h=32, 1 layer, 2 heads, seq=16) so debug-mode `cargo
+/// test` stays fast; same shape as the coordinator integration suite.
+fn tiny_runtime() -> Runtime {
+    let model = TransformerConfig {
+        name: "varlen-test".into(),
+        hidden: 32,
+        layers: 1,
+        heads: 2,
+        ff: 64,
+        vocab: 64,
+        seq: 16,
+    };
+    Runtime::reference_for(&model, 2).unwrap()
+}
+
+/// Deterministic token row: `len` ids in `[1, vocab)` (0 is reserved as
+/// the padding token, so real content avoiding it makes accidental
+/// "padding matched content" aliasing impossible).
+fn row(len: usize, vocab: usize, seed: usize) -> Vec<i32> {
+    (0..len)
+        .map(|i| (1 + (seed * 31 + i * 7) % (vocab - 1)) as i32)
+        .collect()
+}
+
+/// Pad `ids` with token 0 to `width`.
+fn pad_to(ids: &[i32], width: usize) -> Vec<i32> {
+    let mut out = ids.to_vec();
+    out.resize(width, 0);
+    out
+}
+
+#[test]
+fn solo_request_is_bit_identical_at_native_bucket_and_max_width() {
+    let mut rt = tiny_runtime();
+    let vocab = rt.manifest.vocab;
+    let seq = rt.manifest.seq;
+    let classes = rt.manifest.classes;
+    let params = ParamStore::init(&rt.manifest, 0).params;
+    for &tau in &[0.0f32, 0.04] {
+        for &len in &[1usize, 3, 7, 8, 11, 15, 16] {
+            let ids = row(len, vocab, len);
+            let solo = rt.classify(1, &params, &ids, tau).unwrap();
+            assert_eq!(solo.len(), classes);
+            // every legal padded width, including no-padding (W = len)
+            // and the full manifest width
+            for width in len..=seq {
+                let padded = rt
+                    .classify_padded(
+                        1,
+                        width,
+                        &[len],
+                        &params,
+                        &pad_to(&ids, width),
+                        tau,
+                    )
+                    .unwrap();
+                assert_eq!(
+                    solo, padded,
+                    "len {len} at width {width} (tau {tau}) drifted from \
+                     its solo run"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn mixed_length_batch_rows_match_their_solo_runs() {
+    let mut rt = tiny_runtime();
+    let vocab = rt.manifest.vocab;
+    let seq = rt.manifest.seq;
+    let classes = rt.manifest.classes;
+    let params = ParamStore::init(&rt.manifest, 0).params;
+    let tau = 0.04f32;
+    let lens = [3usize, 7, 12, 16, 1, 16, 9, 5];
+    let rows: Vec<Vec<i32>> =
+        lens.iter().enumerate().map(|(i, &l)| row(l, vocab, i)).collect();
+    let mut flat = Vec::with_capacity(lens.len() * seq);
+    for r in &rows {
+        flat.extend_from_slice(&pad_to(r, seq));
+    }
+    let batched = rt
+        .classify_padded(lens.len(), seq, &lens, &params, &flat, tau)
+        .unwrap();
+    assert_eq!(batched.len(), lens.len() * classes);
+    for (b, r) in rows.iter().enumerate() {
+        let solo = rt.classify(1, &params, r, tau).unwrap();
+        assert_eq!(
+            &batched[b * classes..(b + 1) * classes],
+            solo.as_slice(),
+            "row {b} (len {}) depends on its batch-mates",
+            lens[b]
+        );
+    }
+}
+
+#[test]
+fn batch_mates_cannot_perturb_a_row() {
+    // same row, three different batch compositions — identical logits
+    let mut rt = tiny_runtime();
+    let vocab = rt.manifest.vocab;
+    let params = ParamStore::init(&rt.manifest, 0).params;
+    let tau = 0.02f32;
+    let probe = row(6, vocab, 99);
+    let width = 8; // the bucket a len-6 request lands in
+    let extract = |logits: &[f32], b: usize, classes: usize| {
+        logits[b * classes..(b + 1) * classes].to_vec()
+    };
+    let classes = rt.manifest.classes;
+    // alone at bucket width
+    let alone = rt
+        .classify_padded(1, width, &[6], &params, &pad_to(&probe, width), tau)
+        .unwrap();
+    // with a shorter and a longer batch-mate
+    let mates = [row(2, vocab, 7), probe.clone(), row(8, vocab, 13)];
+    let lens = [2usize, 6, 8];
+    let mut flat = Vec::new();
+    for m in &mates {
+        flat.extend_from_slice(&pad_to(m, width));
+    }
+    let mixed = rt
+        .classify_padded(3, width, &lens, &params, &flat, tau)
+        .unwrap();
+    assert_eq!(extract(&mixed, 1, classes), alone);
+    // and behind pure-padding tail rows (what assemble_batch emits for
+    // an under-filled shape): a padding row is len-1, all token 0
+    let lens = [6usize, 1, 1];
+    let mut flat = pad_to(&probe, width);
+    flat.extend(vec![0i32; width]);
+    flat.extend(vec![0i32; width]);
+    let tailed = rt
+        .classify_padded(3, width, &lens, &params, &flat, tau)
+        .unwrap();
+    assert_eq!(extract(&tailed, 0, classes), alone);
+}
+
+#[test]
+fn uniform_full_length_padded_entry_matches_classify_exactly() {
+    // the fixed-seq path through classify_padded must be the SAME
+    // computation as classify — not merely close — so the serving
+    // engine's switch to the padded entry point cannot shift any
+    // previously-pinned logits
+    let mut rt = tiny_runtime();
+    let vocab = rt.manifest.vocab;
+    let seq = rt.manifest.seq;
+    let params = ParamStore::init(&rt.manifest, 0).params;
+    for &batch in &[1usize, 3, 8] {
+        let mut flat = Vec::with_capacity(batch * seq);
+        for b in 0..batch {
+            flat.extend_from_slice(&row(seq, vocab, b));
+        }
+        let lens = vec![seq; batch];
+        let via_classify = rt.classify(batch, &params, &flat, 0.04).unwrap();
+        let via_padded = rt
+            .classify_padded(batch, seq, &lens, &params, &flat, 0.04)
+            .unwrap();
+        assert_eq!(via_classify, via_padded, "batch {batch}");
+    }
+}
