@@ -1,13 +1,20 @@
 //! Fig. 16: compute + memory stalls as a function of #PEs and net buffer
 //! size (4:8:1 act:weight:mask split), for BERT-Tiny on the Edge
-//! template, with the paper's chosen point called out.
+//! template — now a thin driver over the parallel `sim::dse` sweep,
+//! with the paper's chosen point called out against the computed
+//! Pareto frontier.
+//!
+//! Prefers the measured sparsity trace at `reports/sparsity_trace.json`
+//! (the PR-4 capture; run `acceltran trace` first) and falls back to
+//! the assumed uniform profile so the bench still runs standalone.
 //!
 //! Run with: `cargo bench --bench fig16_stalls_dse`
 
 use acceltran::model::TransformerConfig;
-use acceltran::sim::engine::{simulate, SparsityProfile};
+use acceltran::sim::engine::{SparsityProfile, SparsitySource};
 use acceltran::sim::scheduler::Policy;
-use acceltran::sim::AcceleratorConfig;
+use acceltran::sim::{dse, AcceleratorConfig};
+use acceltran::trace::SparsityTrace;
 use acceltran::util::json::Json;
 use acceltran::util::table::{eng, Table};
 
@@ -15,60 +22,98 @@ fn main() {
     println!("== Fig. 16: stalls vs hardware resources ==\n");
     let model = TransformerConfig::bert_tiny();
     let seq = 512;
-    let sp = SparsityProfile::paper_default();
+
+    let trace_path = "reports/sparsity_trace.json";
+    let source = match SparsityTrace::load(trace_path) {
+        Ok(t) => {
+            println!("sparsity: measured trace {trace_path}");
+            SparsitySource::Trace(t)
+        }
+        Err(_) => {
+            println!("sparsity: uniform assumed profile (no trace at {trace_path})");
+            SparsitySource::Uniform(SparsityProfile::paper_default())
+        }
+    };
+
+    let mut space = dse::DseSpace::around(AcceleratorConfig::edge());
+    space.pes = vec![32, 64, 128, 256];
+    space.buffers_mb = vec![10, 13, 16];
+    let report = dse::sweep(
+        &space,
+        &model,
+        seq,
+        Policy::Staggered,
+        &source,
+        &dse::SweepOptions { threads: 0, progress: false },
+    );
+
     let mut t = Table::new([
         "PEs",
         "net buffer MB",
         "compute stalls",
         "memory stalls",
         "cycles",
+        "frontier",
     ]);
-    let mut report = Vec::new();
-    let mut grid: Vec<(usize, usize, u64, u64)> = Vec::new();
-    for &pes in &[32usize, 64, 128, 256] {
-        for &buf_mb in &[10usize, 13, 16] {
-            let mut cfg = AcceleratorConfig::edge();
-            cfg.pes = pes;
-            let unit = (buf_mb << 20) / 13;
-            cfg.act_buffer_bytes = 4 * unit;
-            cfg.weight_buffer_bytes = 8 * unit;
-            cfg.mask_buffer_bytes = unit;
-            let r = simulate(&cfg, &model, seq, Policy::Staggered, sp);
-            t.row([
-                pes.to_string(),
-                buf_mb.to_string(),
-                eng(r.stalls.compute_total() as f64),
-                eng(r.stalls.memory_total() as f64),
-                eng(r.total_cycles as f64),
-            ]);
-            report.push(Json::obj(vec![
-                ("pes", Json::num(pes as f64)),
-                ("buffer_mb", Json::num(buf_mb as f64)),
-                ("compute_stalls", Json::num(r.stalls.compute_total() as f64)),
-                ("memory_stalls", Json::num(r.stalls.memory_total() as f64)),
-                ("cycles", Json::num(r.total_cycles as f64)),
-            ]));
-            grid.push((pes, buf_mb, r.stalls.compute_total(), r.stalls.memory_total()));
-        }
+    let mut rows = Vec::new();
+    for p in &report.points {
+        t.row([
+            p.pes.to_string(),
+            p.buffer_mb.to_string(),
+            eng(p.result.stalls.compute_total() as f64),
+            eng(p.result.stalls.memory_total() as f64),
+            eng(p.result.total_cycles as f64),
+            (if report.frontier.contains(p.index) { "*" } else { "" }).to_string(),
+        ]);
+        rows.push(Json::obj(vec![
+            ("pes", Json::num(p.pes as f64)),
+            ("buffer_mb", Json::num(p.buffer_mb as f64)),
+            (
+                "compute_stalls",
+                Json::num(p.result.stalls.compute_total() as f64),
+            ),
+            (
+                "memory_stalls",
+                Json::num(p.result.stalls.memory_total() as f64),
+            ),
+            ("cycles", Json::num(p.result.total_cycles as f64)),
+            ("sparsity_source", Json::str(report.sparsity_source.clone())),
+            ("on_frontier", Json::Bool(report.frontier.contains(p.index))),
+        ]));
     }
     t.print();
+
     // shape check: fewest PEs has the most compute stalls at every buffer
     for &buf in &[10usize, 13, 16] {
-        let at = |p: usize| grid.iter().find(|g| g.0 == p && g.1 == buf).unwrap().2;
+        let at = |pes: usize| {
+            report
+                .points
+                .iter()
+                .find(|p| p.pes == pes && p.buffer_mb == buf)
+                .unwrap()
+                .result
+                .stalls
+                .compute_total()
+        };
         assert!(
             at(32) >= at(256),
             "compute stalls must not increase with PEs (buf {buf}MB)"
         );
     }
+
+    let knee = report.knee_point().expect("non-empty sweep has a knee");
     println!(
-        "\nChosen point (paper Sec. V-C): 64 PEs / 13 MB — a knee point\n\
-         balancing stalls against area/power; see examples/design_space.rs\n\
-         for the automated chosen-point logic."
+        "\nPareto frontier: {} of {} points; knee {} — the paper selects\n\
+         64 PEs / 13 MB (Sec. V-C) by the same stalls-vs-area/power\n\
+         trade-off; `acceltran dse` sweeps the full dataflow grid too.",
+        report.frontier.indices.len(),
+        report.points.len(),
+        knee.config_name
     );
     std::fs::create_dir_all("reports").ok();
     std::fs::write(
         "reports/fig16_stalls.json",
-        Json::arr(report).to_string_pretty(),
+        Json::arr(rows).to_string_pretty(),
     )
     .unwrap();
     println!("wrote reports/fig16_stalls.json");

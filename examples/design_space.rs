@@ -1,68 +1,106 @@
 //! Design-space exploration scenario (paper Sec. V-C / Fig. 16): sweep
-//! PE count x net buffer size for BERT-Tiny on the Edge template, print
-//! the stall surface, and recommend the paper's chosen point.
+//! PE count x net buffer size x a dataflow pair for BERT-Tiny on the
+//! Edge template through the parallel `sim::dse` sweep, print the
+//! stall/objective surface, and report the Pareto frontier + knee point
+//! next to the paper's chosen configuration.
+//!
+//! Prefers the measured sparsity trace at `reports/sparsity_trace.json`
+//! (run `acceltran trace` to capture one); falls back to the assumed
+//! uniform profile otherwise.  `acceltran dse` is the scriptable
+//! version of this scenario.
 //!
 //! Run with: `cargo run --release --example design_space`
 
 use acceltran::model::TransformerConfig;
-use acceltran::sim::engine::{simulate, SparsityProfile};
+use acceltran::sim::dataflow::Dataflow;
+use acceltran::sim::engine::{SparsityProfile, SparsitySource};
 use acceltran::sim::scheduler::Policy;
-use acceltran::sim::AcceleratorConfig;
+use acceltran::sim::{dse, AcceleratorConfig};
+use acceltran::trace::SparsityTrace;
 use acceltran::util::table::{eng, Table};
 
 fn main() {
     let model = TransformerConfig::bert_tiny();
     let seq = 128;
-    let sp = SparsityProfile::paper_default();
-    let pes_grid = [32usize, 64, 128, 256];
-    let buf_grid = [10usize, 13, 16];
+
+    let trace_path = "reports/sparsity_trace.json";
+    let source = match SparsityTrace::load(trace_path) {
+        Ok(t) => {
+            println!("sparsity: measured trace {trace_path}");
+            SparsitySource::Trace(t)
+        }
+        Err(_) => {
+            println!(
+                "sparsity: uniform assumed profile (no trace at {trace_path}; \
+                 run `acceltran trace` to capture one)"
+            );
+            SparsitySource::Uniform(SparsityProfile::paper_default())
+        }
+    };
+
+    let mut space = dse::DseSpace::around(AcceleratorConfig::edge());
+    space.pes = vec![32, 64, 128, 256];
+    space.buffers_mb = vec![10, 13, 16];
+    // The paper's pick plus the worst-reuse order from Fig. 15, so the
+    // energy axis shows the dataflow term too.
+    space.dataflows = vec![
+        Dataflow::parse("bijk").unwrap(),
+        Dataflow::parse("kjib").unwrap(),
+    ];
+
+    println!(
+        "sweeping {} design points of {} on {} @ seq {seq}\n",
+        space.len(),
+        space.base.name,
+        model.name
+    );
+    let report = dse::sweep(
+        &space,
+        &model,
+        seq,
+        Policy::Staggered,
+        &source,
+        &dse::SweepOptions { threads: 0, progress: true },
+    );
 
     let mut t = Table::new([
         "PEs",
-        "buffer MB",
-        "compute stalls",
-        "memory stalls",
+        "buf MB",
+        "dataflow",
         "cycles",
-        "area-proxy (PEs x MB)",
+        "seq/s",
+        "mJ/seq",
+        "mm^2",
+        "frontier",
     ]);
-    let mut results = Vec::new();
-    for &pes in &pes_grid {
-        for &buf in &buf_grid {
-            let mut cfg = AcceleratorConfig::edge();
-            cfg.pes = pes;
-            // the paper's 4:8:1 activation:weight:mask split (Sec. V-C)
-            let unit = (buf << 20) / 13;
-            cfg.act_buffer_bytes = 4 * unit;
-            cfg.weight_buffer_bytes = 8 * unit;
-            cfg.mask_buffer_bytes = unit;
-            let r = simulate(&cfg, &model, seq, Policy::Staggered, sp);
-            t.row([
-                pes.to_string(),
-                buf.to_string(),
-                eng(r.stalls.compute_total() as f64),
-                eng(r.stalls.memory_total() as f64),
-                eng(r.total_cycles as f64),
-                (pes * buf).to_string(),
-            ]);
-            results.push((pes, buf, r));
-        }
+    for p in &report.points {
+        t.row([
+            p.pes.to_string(),
+            p.buffer_mb.to_string(),
+            p.dataflow.clone(),
+            eng(p.result.total_cycles as f64),
+            eng(p.throughput_seq_s),
+            format!("{:.3}", p.energy_mj_per_seq),
+            format!("{:.1}", p.area_mm2),
+            (if report.frontier.contains(p.index) { "*" } else { "" }).to_string(),
+        ]);
     }
     t.print();
 
-    // Chosen-point logic: smallest (PEs x buffer) whose cycle count is
-    // within 10% of the best observed — the Fig. 16 trade-off argument.
-    let best_cycles = results.iter().map(|(_, _, r)| r.total_cycles).min().unwrap();
-    let chosen = results
-        .iter()
-        .filter(|(_, _, r)| r.total_cycles as f64 <= best_cycles as f64 * 1.1)
-        .min_by_key(|(pes, buf, _)| pes * buf)
-        .unwrap();
+    let knee = report.knee_point().expect("non-empty sweep has a knee");
     println!(
-        "\nchosen point: {} PEs, {} MB net buffer (cycles {} vs best {}) — \
-         the paper selects 64 PEs / 13 MB by the same trade-off",
-        chosen.0,
-        chosen.1,
-        eng(chosen.2.total_cycles as f64),
-        eng(best_cycles as f64)
+        "\nPareto frontier: {} of {} points; knee point {} \
+         ({} seq/s, {:.3} mJ/seq, {:.1} mm^2)",
+        report.frontier.indices.len(),
+        report.points.len(),
+        knee.config_name,
+        eng(knee.throughput_seq_s),
+        knee.energy_mj_per_seq,
+        knee.area_mm2
+    );
+    println!(
+        "the paper selects 64 PEs / 13 MB / bijk by the same trade-off \
+         (Sec. V-C); `acceltran dse` writes the full report to \
+         reports/dse_frontier.json"
     );
 }

@@ -6,6 +6,9 @@
 //!   config    show an accelerator preset (Table II) + Table III summary
 //!   simulate  cycle-accurate simulation of a model on a design point
 //!   sweep     design-space exploration (Fig. 16 stall surface)
+//!   dse       parallel trace-driven design-space exploration: PE ×
+//!             buffer × dataflow grid reduced to a throughput/energy/
+//!             area Pareto frontier (`sim::dse`, Sec. V-C)
 //!   dataflow  compare the 24 dataflows on a matmul (Fig. 15)
 //!   train     train the synthetic-sentiment model through the runtime
 //!   serve     concurrent serving over a worker pool with deadline-aware
@@ -32,7 +35,7 @@ use acceltran::serve::net::{
 use acceltran::sim::engine::{simulate, SparsityProfile};
 use acceltran::sim::scheduler::Policy;
 use acceltran::sim::tech::AreaBreakdown;
-use acceltran::sim::{dataflow, tiling, AcceleratorConfig, SparsitySource};
+use acceltran::sim::{dataflow, dse, tiling, AcceleratorConfig, SparsitySource};
 use acceltran::util::cli::Args;
 use acceltran::util::table::{eng, Table};
 use anyhow::{anyhow, Result};
@@ -45,6 +48,7 @@ fn main() {
         Some("config") => cmd_config(&args),
         Some("simulate") => cmd_simulate(&args),
         Some("sweep") => cmd_sweep(&args),
+        Some("dse") => cmd_dse(&args),
         Some("dataflow") => cmd_dataflow(&args),
         Some("train") => cmd_train(&args),
         Some("serve") => cmd_serve(&args),
@@ -75,6 +79,11 @@ fn print_usage() {
                      [--act-sparsity 0.5 --weight-sparsity 0.5]\n\
                      [--no-dynatran --no-sparsity-modules --policy equal]\n\
            sweep     --model bert-tiny [--seq 128]\n\
+           dse       [--trace reports/sparsity_trace.json]\n\
+                     [--pes 32,64,128,256 --buffers 10,13,16]\n\
+                     [--dataflows all|bijk,bikj,... --tiles 16x16,8x32]\n\
+                     [--preset edge --model bert-tiny --seq 128]\n\
+                     [--threads N --out reports/dse_frontier.json]\n\
            dataflow  [--m 64 --k 64 --n 64 --lanes 4]\n\
            train     [--steps 200 --lr 1e-3 --examples 4096 --save path]\n\
            serve     [--requests 256 --tau 0.04 --workers 4 --slo-ms 25]\n\
@@ -259,6 +268,149 @@ fn cmd_sweep(args: &Args) -> Result<()> {
         }
     }
     t.print();
+    Ok(())
+}
+
+fn parse_usize_list(s: &str, flag: &str) -> Result<Vec<usize>> {
+    s.split(',')
+        .map(str::trim)
+        .filter(|t| !t.is_empty())
+        .map(|t| {
+            t.parse::<usize>()
+                .map_err(|_| anyhow!("--{flag}: bad number '{t}'"))
+        })
+        .collect()
+}
+
+/// `dse`: the parallel trace-driven design-space exploration (Sec. V-C)
+/// — expands a PE × buffer × dataflow (× tiling) grid around a preset,
+/// sweeps it on worker threads against a measured sparsity trace (or
+/// the uniform assumed profile when no capture exists), and reduces to
+/// a throughput/energy/area Pareto frontier with a knee-point pick.
+fn cmd_dse(args: &Args) -> Result<()> {
+    let base = preset_from(args)?;
+    let model = model_from(args)?;
+    let seq = args.get_usize("seq", 128);
+    let policy = if args.get_or("policy", "staggered") == "equal" {
+        Policy::EqualPriority
+    } else {
+        Policy::Staggered
+    };
+
+    let mut space = dse::DseSpace::around(base);
+    space.pes = parse_usize_list(args.get_or("pes", "32,64,128,256"), "pes")?;
+    space.buffers_mb =
+        parse_usize_list(args.get_or("buffers", "10,13,16"), "buffers")?;
+    let dfs = args.get_or("dataflows", "all");
+    space.dataflows = if dfs == "all" {
+        dataflow::Dataflow::all()
+    } else {
+        dfs.split(',')
+            .map(str::trim)
+            .filter(|t| !t.is_empty())
+            .map(|t| {
+                dataflow::Dataflow::parse(t)
+                    .ok_or_else(|| anyhow!("--dataflows: bad dataflow '{t}'"))
+            })
+            .collect::<Result<Vec<_>>>()?
+    };
+    if let Some(tiles) = args.get("tiles") {
+        space.tiles = tiles
+            .split(',')
+            .map(str::trim)
+            .filter(|t| !t.is_empty())
+            .map(|t| {
+                let (i, j) = t
+                    .split_once('x')
+                    .ok_or_else(|| anyhow!("--tiles: expected IxJ, got '{t}'"))?;
+                Ok((
+                    i.parse().map_err(|_| anyhow!("--tiles: bad tile '{t}'"))?,
+                    j.parse().map_err(|_| anyhow!("--tiles: bad tile '{t}'"))?,
+                ))
+            })
+            .collect::<Result<Vec<_>>>()?;
+    }
+
+    // Sparsity source: prefer a measured PR-4 capture.  A trace that
+    // exists but fails to load is an error (the user thinks they are
+    // sweeping on measured sparsity); only a *missing* file falls back.
+    let trace_path = args.get_or("trace", "reports/sparsity_trace.json");
+    let source = match acceltran::trace::SparsityTrace::load(trace_path) {
+        Ok(t) => {
+            println!("dse: measured trace {trace_path}");
+            SparsitySource::Trace(t)
+        }
+        Err(e) if std::path::Path::new(trace_path).exists() => {
+            return Err(e.context(format!("loading trace {trace_path}")));
+        }
+        Err(_) => {
+            println!(
+                "dse: uniform fallback profile (no trace at {trace_path}; \
+                 run `acceltran trace` to capture one)"
+            );
+            SparsitySource::Uniform(SparsityProfile::paper_default())
+        }
+    };
+
+    let opts = dse::SweepOptions {
+        threads: args.get_usize("threads", 0),
+        progress: true,
+    };
+    println!(
+        "dse: sweeping {} points ({} PEs x {} buffers x {} dataflows x {} tiles) \
+         of {} on {} @ seq {seq}",
+        space.len(),
+        space.pes.len(),
+        space.buffers_mb.len(),
+        space.dataflows.len(),
+        space.tiles.len(),
+        space.base.name,
+        model.name,
+    );
+    let report = dse::sweep(&space, &model, seq, policy, &source, &opts);
+
+    let mut t = Table::new([
+        "frontier point",
+        "PEs",
+        "buf MB",
+        "dataflow",
+        "seq/s",
+        "mJ/seq",
+        "mm^2",
+    ]);
+    for p in report.frontier_points() {
+        let marker = if report.frontier.knee == Some(p.index) {
+            format!("{} <- knee", p.config_name)
+        } else {
+            p.config_name.clone()
+        };
+        t.row([
+            marker,
+            p.pes.to_string(),
+            p.buffer_mb.to_string(),
+            p.dataflow.clone(),
+            eng(p.throughput_seq_s),
+            format!("{:.3}", p.energy_mj_per_seq),
+            format!("{:.1}", p.area_mm2),
+        ]);
+    }
+    t.print();
+    if let Some(knee) = report.knee_point() {
+        println!(
+            "knee point: {} ({} seq/s, {:.3} mJ/seq, {:.1} mm^2)",
+            knee.config_name,
+            eng(knee.throughput_seq_s),
+            knee.energy_mj_per_seq,
+            knee.area_mm2
+        );
+    }
+    let out = args.get_or("out", "reports/dse_frontier.json");
+    report.save(out)?;
+    println!(
+        "wrote {out} ({} points, {} on the frontier)",
+        report.points.len(),
+        report.frontier.indices.len()
+    );
     Ok(())
 }
 

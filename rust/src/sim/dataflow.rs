@@ -53,6 +53,21 @@ impl Dataflow {
         out
     }
 
+    /// Compact 4-letter name ("bijk") — the inverse of [`Dataflow::parse`],
+    /// used by the DSE report and the `dse --dataflows` CLI flag
+    /// (`Display` prints the bracketed loop-nest form instead).
+    pub fn compact_name(&self) -> String {
+        self.0
+            .iter()
+            .map(|a| match a {
+                Axis::B => 'b',
+                Axis::I => 'i',
+                Axis::J => 'j',
+                Axis::K => 'k',
+            })
+            .collect()
+    }
+
     /// Parse "bijk"-style names.
     pub fn parse(s: &str) -> Option<Dataflow> {
         let mut axes = [Axis::B; 4];
@@ -234,6 +249,15 @@ mod tests {
     use super::*;
     use crate::sim::tiling::tile_matmul;
     use crate::util::prop;
+
+    #[test]
+    fn compact_name_round_trips_all_24() {
+        for df in Dataflow::all() {
+            let name = df.compact_name();
+            assert_eq!(Dataflow::parse(&name), Some(df), "round-trip of {name}");
+        }
+        assert_eq!(Dataflow::BIJK.compact_name(), "bijk");
+    }
 
     #[test]
     fn there_are_24_dataflows() {

@@ -1,0 +1,830 @@
+//! Design-space exploration over accelerator configurations (Sec. V-C,
+//! Fig. 16).
+//!
+//! The paper picks its Edge and Server configurations by sweeping PE
+//! counts, buffer sizes, and dataflows against stall/energy surfaces.
+//! This module makes that sweep a first-class subsystem: a [`DseSpace`]
+//! (PE grid × buffer grid × dataflows × optional tiling knobs) expands
+//! into concrete [`DseConfig`] points, a work-stealing parallel
+//! [`sweep`] evaluates each point on a forked sim engine under a shared
+//! [`SparsitySource`] (measured trace or assumed profile), and the
+//! results reduce into a [`ParetoFrontier`] over three objectives —
+//! throughput (maximize), energy per sequence (minimize), and an area
+//! proxy (minimize) — with a scalarized knee-point recommendation.
+//!
+//! # Determinism
+//!
+//! The sweep is embarrassingly parallel but **bit-deterministic**: each
+//! point's simulation is single-threaded and IEEE-deterministic, every
+//! worker writes its `SimResult` into the slot owned by the point's
+//! expansion index, and the report serializer walks points in index
+//! order — so the emitted JSON is byte-identical whether the sweep ran
+//! on 1 worker or 16.  Anything scheduling-dependent (wall time, cache
+//! hit counts) is deliberately kept *out* of the report and surfaced on
+//! stderr only.  `rust/tests/determinism.rs` pins this contract.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+use anyhow::{Context, Result};
+
+use crate::model::{OpGraph, TransformerConfig};
+use crate::sim::config::AcceleratorConfig;
+use crate::sim::dataflow::Dataflow;
+use crate::sim::engine::{Engine, SimResult, SparsitySource};
+use crate::sim::scheduler::Policy;
+use crate::sim::tech::AreaBreakdown;
+use crate::util::json::Json;
+
+// ---------------------------------------------------------------------------
+// Objectives + Pareto dominance
+// ---------------------------------------------------------------------------
+
+/// The three objectives a design point is judged on.
+///
+/// `throughput` is maximized; `energy` and `area` are minimized.  All
+/// three are finite for any simulated point (the engine never emits
+/// NaN), but [`dominates`] is written to be safe under NaN anyway: a
+/// NaN comparison is `false`, so a NaN point neither dominates nor is
+/// reported dominated — it just sits off the frontier.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Objectives {
+    /// Sequences per second (higher is better).
+    pub throughput: f64,
+    /// Millijoules per sequence (lower is better).
+    pub energy: f64,
+    /// Area proxy in mm² (lower is better).
+    pub area: f64,
+}
+
+/// Strict Pareto dominance: `a` dominates `b` iff `a` is at least as
+/// good on every objective and strictly better on at least one.
+///
+/// This is a strict partial order — irreflexive (no strict improvement
+/// over oneself), antisymmetric (mutual weak improvement forbids any
+/// strict one), and transitive (≥ composes and strictness propagates).
+/// `rust/tests/dse_pareto.rs` checks these laws on random triples.
+pub fn dominates(a: &Objectives, b: &Objectives) -> bool {
+    let weak = a.throughput >= b.throughput && a.energy <= b.energy && a.area <= b.area;
+    let strict = a.throughput > b.throughput || a.energy < b.energy || a.area < b.area;
+    weak && strict
+}
+
+/// How far past the frontier a point sits: the largest relative
+/// improvement any dominating point achieves over it on any single
+/// objective.  `0.0` for non-dominated points.
+///
+/// This is the "documented epsilon" net for the paper's Edge/Server
+/// presets: cost-model tweaks may let a neighbour (e.g. the same PE
+/// count with a slightly smaller buffer) weakly dominate a preset, but
+/// the preset must stay within [`FRONTIER_EPSILON`] of the surface.
+pub fn frontier_gap(objs: &[Objectives], idx: usize) -> f64 {
+    let p = &objs[idx];
+    let mut gap: f64 = 0.0;
+    for q in objs {
+        if !dominates(q, p) {
+            continue;
+        }
+        let rel = |better: f64, worse: f64| {
+            if worse.abs() > 0.0 {
+                ((worse - better) / worse).max(0.0)
+            } else {
+                0.0
+            }
+        };
+        // Throughput is maximized: improvement is (q - p) / q.
+        let t = if q.throughput > 0.0 {
+            ((q.throughput - p.throughput) / q.throughput).max(0.0)
+        } else {
+            0.0
+        };
+        let e = rel(q.energy, p.energy);
+        let a = rel(q.area, p.area);
+        gap = gap.max(t.max(e).max(a));
+    }
+    gap
+}
+
+/// Maximum relative distance from the frontier tolerated for the
+/// paper's preset configurations in their sanity sweeps (see the unit
+/// tests below and DESIGN.md "Design-space exploration").  The known
+/// worst case is Edge (64 PE, 13 MB) being weakly dominated by the
+/// same PE count at 10 MB — identical cycles, ~9 % less buffer area.
+pub const FRONTIER_EPSILON: f64 = 0.15;
+
+/// The non-dominated subset of a sweep, plus a knee-point pick.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ParetoFrontier {
+    /// Indices (into the swept point list) of non-dominated points, in
+    /// ascending index order.
+    pub indices: Vec<usize>,
+    /// The scalarized recommendation: the frontier point closest (in
+    /// squared normalized objective space) to the ideal point.  `None`
+    /// only for an empty sweep.
+    pub knee: Option<usize>,
+}
+
+impl ParetoFrontier {
+    /// O(n²) dominance filter + knee-point scalarization.
+    ///
+    /// Knee metric: normalize each objective to `[0, 1]` by the min/max
+    /// over the *full* sweep (not just the frontier, so the scale is
+    /// ordering-independent), then take the squared Euclidean distance
+    /// to the ideal corner (max throughput, min energy, min area).
+    /// `sqrt` is monotonic so it is skipped.  Ties break to the lowest
+    /// point index, which keeps the knee deterministic under duplicate
+    /// objective vectors.
+    pub fn compute(objs: &[Objectives]) -> ParetoFrontier {
+        let indices: Vec<usize> = (0..objs.len())
+            .filter(|&i| !objs.iter().any(|q| dominates(q, &objs[i])))
+            .collect();
+
+        let mut t = (f64::INFINITY, f64::NEG_INFINITY);
+        let mut e = (f64::INFINITY, f64::NEG_INFINITY);
+        let mut a = (f64::INFINITY, f64::NEG_INFINITY);
+        for o in objs {
+            t = (t.0.min(o.throughput), t.1.max(o.throughput));
+            e = (e.0.min(o.energy), e.1.max(o.energy));
+            a = (a.0.min(o.area), a.1.max(o.area));
+        }
+        // A degenerate axis (all points equal) contributes 0 distance.
+        let norm = |v: f64, (lo, hi): (f64, f64)| {
+            if hi > lo {
+                (v - lo) / (hi - lo)
+            } else {
+                0.0
+            }
+        };
+
+        let mut knee = None;
+        let mut best = f64::INFINITY;
+        for &i in &indices {
+            let o = &objs[i];
+            let dt = 1.0 - norm(o.throughput, t);
+            let de = norm(o.energy, e);
+            let da = norm(o.area, a);
+            let d2 = dt * dt + de * de + da * da;
+            if d2 < best {
+                best = d2;
+                knee = Some(i);
+            }
+        }
+        ParetoFrontier { indices, knee }
+    }
+
+    pub fn contains(&self, idx: usize) -> bool {
+        self.indices.binary_search(&idx).is_ok()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Design space
+// ---------------------------------------------------------------------------
+
+/// The grid of knobs swept by [`sweep`].
+///
+/// Every combination of `pes × buffers_mb × dataflows × tiles` becomes
+/// one [`DseConfig`], derived from `base` (which supplies everything
+/// not swept: memory kind, clock, batch, MAC geometry, DynaTran
+/// settings).  Buffer capacity is a single net-MB knob split in the
+/// paper's 4:8:1 activation:weight:mask ratio, so the Edge preset
+/// (4 + 8 + 1 MB) is *exactly* the 13 MB point and Server
+/// (32 + 64 + 8 MB) exactly the 104 MB point of their families.
+#[derive(Clone, Debug)]
+pub struct DseSpace {
+    pub base: AcceleratorConfig,
+    pub pes: Vec<usize>,
+    pub buffers_mb: Vec<usize>,
+    pub dataflows: Vec<Dataflow>,
+    /// `(tile_i, tile_j)` output-tile shapes; `tile_b`/`tile_k` stay at
+    /// the base config's values (the MAC-lane depth fixes `tile_k`).
+    pub tiles: Vec<(usize, usize)>,
+}
+
+impl DseSpace {
+    /// A space around `base` with the base's own dataflow and tiling:
+    /// the caller grows `pes`/`buffers_mb`/`dataflows` from here.
+    pub fn around(base: AcceleratorConfig) -> DseSpace {
+        let pes = vec![base.pes];
+        let buffers_mb = vec![DseSpace::net_buffer_mb(&base)];
+        let dataflows = vec![base.dataflow];
+        let tiles = vec![(base.tile_i, base.tile_j)];
+        DseSpace { base, pes, buffers_mb, dataflows, tiles }
+    }
+
+    /// Net on-chip buffer capacity of a config, in whole MB (rounded).
+    pub fn net_buffer_mb(cfg: &AcceleratorConfig) -> usize {
+        let bytes = cfg.act_buffer_bytes + cfg.weight_buffer_bytes + cfg.mask_buffer_bytes;
+        (bytes + (1 << 19)) >> 20
+    }
+
+    /// Number of points `expand` will produce.
+    pub fn len(&self) -> usize {
+        self.pes.len() * self.buffers_mb.len() * self.dataflows.len() * self.tiles.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Expand the grids into concrete configs.
+    ///
+    /// Nesting order is fixed (`pes` outermost, then `buffers_mb`, then
+    /// `dataflows`, then `tiles`) and the position in this order *is*
+    /// the point index — the determinism contract and the golden pin
+    /// both lean on it, so changing it is a breaking change.
+    pub fn expand(&self) -> Vec<DseConfig> {
+        let mut out = Vec::with_capacity(self.len());
+        for &pes in &self.pes {
+            for &buf_mb in &self.buffers_mb {
+                for &df in &self.dataflows {
+                    for &(ti, tj) in &self.tiles {
+                        let mut cfg = self.base.clone();
+                        cfg.pes = pes;
+                        // 4:8:1 act:weight:mask split of the net MB.
+                        let unit = (buf_mb << 20) / 13;
+                        cfg.act_buffer_bytes = 4 * unit;
+                        cfg.weight_buffer_bytes = 8 * unit;
+                        cfg.mask_buffer_bytes = unit;
+                        cfg.dataflow = df;
+                        cfg.tile_i = ti;
+                        cfg.tile_j = tj;
+                        cfg.name = format!(
+                            "{}-p{}-b{}-{}-t{}x{}",
+                            self.base.name,
+                            pes,
+                            buf_mb,
+                            df.compact_name(),
+                            ti,
+                            tj
+                        );
+                        let index = out.len();
+                        out.push(DseConfig {
+                            index,
+                            pes,
+                            buffer_mb: buf_mb,
+                            tile_i: ti,
+                            tile_j: tj,
+                            cfg,
+                        });
+                    }
+                }
+            }
+        }
+        out
+    }
+}
+
+/// One expanded point of a [`DseSpace`].
+#[derive(Clone, Debug)]
+pub struct DseConfig {
+    /// Position in the expansion order (stable across runs).
+    pub index: usize,
+    pub pes: usize,
+    pub buffer_mb: usize,
+    pub tile_i: usize,
+    pub tile_j: usize,
+    pub cfg: AcceleratorConfig,
+}
+
+/// Hardware-shape cache key: exactly the swept fields that determine a
+/// `SimResult` once the workload (model, seq, policy, source) and the
+/// base config's unswept fields are fixed for the whole sweep.  Grids
+/// with repeated entries (or tiling knobs that collapse to the same
+/// shape) hit the cache instead of re-simulating.
+#[derive(Clone, PartialEq, Eq, Hash)]
+struct SimKey {
+    pes: usize,
+    act: usize,
+    weight: usize,
+    mask: usize,
+    dataflow: Dataflow,
+    tile_i: usize,
+    tile_j: usize,
+}
+
+impl SimKey {
+    fn of(c: &DseConfig) -> SimKey {
+        SimKey {
+            pes: c.cfg.pes,
+            act: c.cfg.act_buffer_bytes,
+            weight: c.cfg.weight_buffer_bytes,
+            mask: c.cfg.mask_buffer_bytes,
+            dataflow: c.cfg.dataflow,
+            tile_i: c.cfg.tile_i,
+            tile_j: c.cfg.tile_j,
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Sweep
+// ---------------------------------------------------------------------------
+
+/// Knobs for [`sweep`].
+#[derive(Clone, Copy, Debug)]
+pub struct SweepOptions {
+    /// Worker threads; `0` resolves `ACCELTRAN_THREADS`, then
+    /// `available_parallelism()` capped at 8.  Tests force 1 vs 4 here
+    /// (not via the env var — parallel test binaries would race on it).
+    pub threads: usize,
+    /// Emit progress lines on stderr.
+    pub progress: bool,
+}
+
+impl Default for SweepOptions {
+    fn default() -> Self {
+        SweepOptions { threads: 0, progress: false }
+    }
+}
+
+fn resolve_threads(opts: &SweepOptions, points: usize) -> usize {
+    let n = if opts.threads > 0 {
+        opts.threads
+    } else {
+        crate::util::cli::env_usize("ACCELTRAN_THREADS", 0)
+    };
+    let n = if n > 0 {
+        n
+    } else {
+        std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1).min(8)
+    };
+    n.clamp(1, points.max(1))
+}
+
+/// One evaluated design point: identity, objectives, and the full
+/// engine result for drill-down.
+#[derive(Clone, Debug)]
+pub struct DsePoint {
+    pub index: usize,
+    pub config_name: String,
+    pub pes: usize,
+    pub buffer_mb: usize,
+    pub dataflow: String,
+    pub tile_i: usize,
+    pub tile_j: usize,
+    pub throughput_seq_s: f64,
+    pub energy_mj_per_seq: f64,
+    pub area_mm2: f64,
+    pub result: SimResult,
+}
+
+impl DsePoint {
+    pub fn objectives(&self) -> Objectives {
+        Objectives {
+            throughput: self.throughput_seq_s,
+            energy: self.energy_mj_per_seq,
+            area: self.area_mm2,
+        }
+    }
+
+    fn to_json(&self, on_frontier: bool) -> Json {
+        Json::obj(vec![
+            ("index", Json::num(self.index as f64)),
+            ("config", Json::str(self.config_name.clone())),
+            ("pes", Json::num(self.pes as f64)),
+            ("buffer_mb", Json::num(self.buffer_mb as f64)),
+            ("dataflow", Json::str(self.dataflow.clone())),
+            ("tile_i", Json::num(self.tile_i as f64)),
+            ("tile_j", Json::num(self.tile_j as f64)),
+            ("total_cycles", Json::num(self.result.total_cycles as f64)),
+            ("throughput_seq_s", Json::num(self.throughput_seq_s)),
+            ("energy_mj_per_seq", Json::num(self.energy_mj_per_seq)),
+            ("area_mm2", Json::num(self.area_mm2)),
+            (
+                "compute_stalls",
+                Json::num(self.result.stalls.compute_total() as f64),
+            ),
+            (
+                "memory_stalls",
+                Json::num(self.result.stalls.memory_total() as f64),
+            ),
+            ("mac_utilization", Json::num(self.result.mac_utilization)),
+            ("on_frontier", Json::Bool(on_frontier)),
+        ])
+    }
+}
+
+/// The full outcome of a sweep.
+#[derive(Clone, Debug)]
+pub struct DseReport {
+    pub model: String,
+    pub seq: usize,
+    pub batch: usize,
+    pub sparsity_source: String,
+    pub base: String,
+    /// Points in expansion-index order.
+    pub points: Vec<DsePoint>,
+    pub frontier: ParetoFrontier,
+    /// Sweep-level cache statistic.  Scheduling-dependent (workers race
+    /// to first-compute a shape), so it is *excluded* from [`to_json`]
+    /// — including it would break the byte-identical-across-worker-
+    /// counts determinism contract.
+    pub cache_hits: usize,
+}
+
+impl DseReport {
+    pub fn frontier_points(&self) -> impl Iterator<Item = &DsePoint> {
+        self.frontier.indices.iter().map(move |&i| &self.points[i])
+    }
+
+    pub fn knee_point(&self) -> Option<&DsePoint> {
+        self.frontier.knee.map(|i| &self.points[i])
+    }
+
+    /// Deterministic serialization: points in index order, frontier as
+    /// an index list, object keys sorted by the writer.  No timings, no
+    /// thread counts, no cache statistics (see [`DseReport::cache_hits`]).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("model", Json::str(self.model.clone())),
+            ("seq", Json::num(self.seq as f64)),
+            ("batch", Json::num(self.batch as f64)),
+            ("sparsity_source", Json::str(self.sparsity_source.clone())),
+            ("base", Json::str(self.base.clone())),
+            (
+                "points",
+                Json::arr(
+                    self.points
+                        .iter()
+                        .map(|p| p.to_json(self.frontier.contains(p.index))),
+                ),
+            ),
+            (
+                "frontier",
+                Json::arr(self.frontier.indices.iter().map(|&i| Json::num(i as f64))),
+            ),
+            (
+                "knee",
+                match self.frontier.knee {
+                    Some(i) => Json::num(i as f64),
+                    None => Json::Null,
+                },
+            ),
+        ])
+    }
+
+    pub fn save(&self, path: impl AsRef<std::path::Path>) -> Result<()> {
+        let path = path.as_ref();
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir).ok();
+        }
+        std::fs::write(path, self.to_json().to_string_pretty())
+            .with_context(|| format!("writing DSE report to {}", path.display()))
+    }
+}
+
+/// Evaluate every point of `space` on the cycle-accurate engine and
+/// reduce to a Pareto frontier.
+///
+/// Work-stealing: scoped workers pull point indices from a shared
+/// atomic counter, so a straggler config (say 512 PEs on BERT-Base)
+/// does not serialize the tail the way static chunking would.  Each
+/// worker forks the engine on the shared op graph (built once — batch
+/// and sequence length are sweep-wide constants) and writes its result
+/// into the slot owned by the point's index; a shape-keyed cache
+/// de-duplicates repeated hardware shapes.  See the module docs for
+/// why this is bit-deterministic regardless of worker count.
+pub fn sweep(
+    space: &DseSpace,
+    model: &TransformerConfig,
+    seq: usize,
+    policy: Policy,
+    source: &SparsitySource,
+    opts: &SweepOptions,
+) -> DseReport {
+    let configs = space.expand();
+    let total = configs.len();
+    let mut report = DseReport {
+        model: model.name.clone(),
+        seq,
+        batch: space.base.batch,
+        sparsity_source: source.name().to_string(),
+        base: space.base.name.clone(),
+        points: Vec::with_capacity(total),
+        frontier: ParetoFrontier { indices: Vec::new(), knee: None },
+        cache_hits: 0,
+    };
+    if total == 0 {
+        return report;
+    }
+
+    let graph = OpGraph::build(model, space.base.batch, seq);
+    let threads = resolve_threads(opts, total);
+    let next = AtomicUsize::new(0);
+    let done = AtomicUsize::new(0);
+    let results: Mutex<Vec<Option<SimResult>>> = Mutex::new(vec![None; total]);
+    let cache: Mutex<HashMap<SimKey, SimResult>> = Mutex::new(HashMap::new());
+    let cache_hits = AtomicUsize::new(0);
+    let stride = (total / 10).max(1);
+
+    std::thread::scope(|s| {
+        for _ in 0..threads {
+            s.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= total {
+                    break;
+                }
+                let point = &configs[i];
+                let key = SimKey::of(point);
+                let cached = cache.lock().unwrap().get(&key).cloned();
+                let mut result = match cached {
+                    Some(hit) => {
+                        cache_hits.fetch_add(1, Ordering::Relaxed);
+                        hit
+                    }
+                    None => {
+                        let r = Engine::with_source(point.cfg.clone(), &graph, policy, source)
+                            .run();
+                        // Two workers may race to first-simulate a
+                        // shape; both compute the identical result, so
+                        // last-write-wins is harmless.
+                        cache.lock().unwrap().insert(key, r.clone());
+                        r
+                    }
+                };
+                // The cache is keyed on hardware shape only; stamp the
+                // point's own name so drill-down stays unambiguous.
+                result.config_name = point.cfg.name.clone();
+                results.lock().unwrap()[i] = Some(result);
+                let n = done.fetch_add(1, Ordering::Relaxed) + 1;
+                if opts.progress && (n % stride == 0 || n == total) {
+                    eprintln!("dse: {n}/{total} points simulated");
+                }
+            });
+        }
+    });
+
+    let results = results.into_inner().unwrap();
+    for (cfgp, slot) in configs.iter().zip(results) {
+        let result = slot.expect("worker left a sweep slot empty");
+        let area = AreaBreakdown::compute(&cfgp.cfg).total_mm2();
+        report.points.push(DsePoint {
+            index: cfgp.index,
+            config_name: cfgp.cfg.name.clone(),
+            pes: cfgp.pes,
+            buffer_mb: cfgp.buffer_mb,
+            dataflow: cfgp.cfg.dataflow.compact_name(),
+            tile_i: cfgp.tile_i,
+            tile_j: cfgp.tile_j,
+            throughput_seq_s: result.throughput_seq_s(&cfgp.cfg),
+            energy_mj_per_seq: result.energy_mj_per_seq(),
+            area_mm2: area,
+            result,
+        });
+    }
+    let objs: Vec<Objectives> = report.points.iter().map(DsePoint::objectives).collect();
+    report.frontier = ParetoFrontier::compute(&objs);
+    report.cache_hits = cache_hits.load(Ordering::Relaxed);
+    if opts.progress {
+        eprintln!(
+            "dse: frontier {} / {} points ({} cache hits, {} workers)",
+            report.frontier.indices.len(),
+            total,
+            report.cache_hits,
+            threads
+        );
+    }
+    report
+}
+
+// ---------------------------------------------------------------------------
+// Tests
+// ---------------------------------------------------------------------------
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::engine::SparsityProfile;
+
+    fn o(t: f64, e: f64, a: f64) -> Objectives {
+        Objectives { throughput: t, energy: e, area: a }
+    }
+
+    #[test]
+    fn dominance_basics() {
+        let better = o(10.0, 1.0, 5.0);
+        let worse = o(8.0, 2.0, 6.0);
+        assert!(dominates(&better, &worse));
+        assert!(!dominates(&worse, &better));
+        // Irreflexive: equal on all axes → no strict improvement.
+        assert!(!dominates(&better, &better));
+        // Trade-off: neither dominates.
+        let fast_big = o(10.0, 1.0, 9.0);
+        let slow_small = o(5.0, 1.0, 2.0);
+        assert!(!dominates(&fast_big, &slow_small));
+        assert!(!dominates(&slow_small, &fast_big));
+        // Weak dominance with one strict axis still dominates.
+        let same_speed_smaller = o(10.0, 1.0, 4.0);
+        assert!(dominates(&same_speed_smaller, &better));
+    }
+
+    #[test]
+    fn frontier_of_handcrafted_points() {
+        let objs = vec![
+            o(10.0, 1.0, 5.0), // frontier (fastest)
+            o(8.0, 2.0, 6.0),  // dominated by 0
+            o(5.0, 0.5, 5.0),  // frontier (least energy)
+            o(4.0, 0.6, 4.0),  // frontier (smallest)
+            o(4.0, 0.7, 4.5),  // dominated by 3
+        ];
+        let f = ParetoFrontier::compute(&objs);
+        assert_eq!(f.indices, vec![0, 2, 3]);
+        assert!(f.knee.is_some());
+        assert!(f.contains(f.knee.unwrap()));
+        for &i in &f.indices {
+            assert_eq!(frontier_gap(&objs, i), 0.0);
+        }
+        assert!(frontier_gap(&objs, 1) > 0.0);
+    }
+
+    #[test]
+    fn knee_prefers_balanced_point() {
+        // One extreme on each axis plus a balanced point near the ideal
+        // corner: the knee must pick the balanced one.
+        let objs = vec![
+            o(10.0, 10.0, 10.0), // fastest, but worst energy/area
+            o(1.0, 1.0, 1.0),    // cheapest, but slowest
+            o(9.0, 2.0, 2.0),    // balanced
+        ];
+        let f = ParetoFrontier::compute(&objs);
+        assert_eq!(f.indices, vec![0, 1, 2]);
+        assert_eq!(f.knee, Some(2));
+    }
+
+    #[test]
+    fn empty_sweep_is_empty_frontier() {
+        let f = ParetoFrontier::compute(&[]);
+        assert!(f.indices.is_empty());
+        assert_eq!(f.knee, None);
+
+        let mut space = DseSpace::around(AcceleratorConfig::edge());
+        space.pes.clear();
+        let report = sweep(
+            &space,
+            &TransformerConfig::bert_tiny(),
+            64,
+            Policy::Staggered,
+            &SparsitySource::Uniform(SparsityProfile::paper_default()),
+            &SweepOptions::default(),
+        );
+        assert!(report.points.is_empty());
+        assert!(report.frontier.indices.is_empty());
+    }
+
+    #[test]
+    fn expand_is_deterministic_cross_product() {
+        let mut space = DseSpace::around(AcceleratorConfig::edge());
+        space.pes = vec![32, 64];
+        space.buffers_mb = vec![10, 13];
+        space.dataflows = vec![Dataflow::parse("bijk").unwrap(), Dataflow::parse("kjib").unwrap()];
+        let pts = space.expand();
+        assert_eq!(pts.len(), 8);
+        for (i, p) in pts.iter().enumerate() {
+            assert_eq!(p.index, i);
+        }
+        // pes outermost, then buffers, then dataflows.
+        assert_eq!((pts[0].pes, pts[0].buffer_mb), (32, 10));
+        assert_eq!((pts[3].pes, pts[3].buffer_mb), (32, 13));
+        assert_eq!((pts[4].pes, pts[4].buffer_mb), (64, 10));
+        assert_eq!(pts[0].cfg.name, "acceltran-edge-p32-b10-bijk-t16x16");
+        // Repeated expansion is identical.
+        let again = space.expand();
+        for (a, b) in pts.iter().zip(&again) {
+            assert_eq!(a.cfg.name, b.cfg.name);
+        }
+    }
+
+    #[test]
+    fn expanded_edge_point_is_the_preset() {
+        // The 13 MB knob splits 4:8:1 into exactly the paper's Edge
+        // buffers, so the preset is a *member* of its family sweep.
+        let edge = AcceleratorConfig::edge();
+        let space = DseSpace::around(edge.clone());
+        let pts = space.expand();
+        assert_eq!(pts.len(), 1);
+        let c = &pts[0].cfg;
+        assert_eq!(c.pes, edge.pes);
+        assert_eq!(c.act_buffer_bytes, edge.act_buffer_bytes);
+        assert_eq!(c.weight_buffer_bytes, edge.weight_buffer_bytes);
+        assert_eq!(c.mask_buffer_bytes, edge.mask_buffer_bytes);
+        assert_eq!(c.dataflow, edge.dataflow);
+        // Same for Server's 104 MB = 32 + 64 + 8.
+        let server = AcceleratorConfig::server();
+        assert_eq!(DseSpace::net_buffer_mb(&server), 104);
+        let spts = DseSpace::around(server.clone()).expand();
+        assert_eq!(spts[0].cfg.act_buffer_bytes, server.act_buffer_bytes);
+        assert_eq!(spts[0].cfg.weight_buffer_bytes, server.weight_buffer_bytes);
+        assert_eq!(spts[0].cfg.mask_buffer_bytes, server.mask_buffer_bytes);
+    }
+
+    #[test]
+    fn sweep_caches_repeated_shapes() {
+        let mut space = DseSpace::around(AcceleratorConfig::edge());
+        space.pes = vec![16, 16]; // duplicate grid entry → same shape
+        let report = sweep(
+            &space,
+            &TransformerConfig::bert_tiny(),
+            32,
+            Policy::Staggered,
+            &SparsitySource::Uniform(SparsityProfile::paper_default()),
+            &SweepOptions { threads: 1, progress: false },
+        );
+        assert_eq!(report.points.len(), 2);
+        assert_eq!(report.cache_hits, 1);
+        assert_eq!(
+            report.points[0].result.total_cycles,
+            report.points[1].result.total_cycles
+        );
+        // Identical shapes ⇒ one is redundant, so the frontier keeps
+        // only the first (the duplicate neither dominates nor is
+        // dominated — equal vectors — so both actually stay).
+        assert_eq!(
+            report.points[0].objectives(),
+            report.points[1].objectives()
+        );
+    }
+
+    #[test]
+    fn sweep_report_json_shape() {
+        let mut space = DseSpace::around(AcceleratorConfig::edge());
+        space.pes = vec![16, 32];
+        let report = sweep(
+            &space,
+            &TransformerConfig::bert_tiny(),
+            32,
+            Policy::Staggered,
+            &SparsitySource::Uniform(SparsityProfile::paper_default()),
+            &SweepOptions { threads: 2, progress: false },
+        );
+        let json = report.to_json();
+        let parsed = Json::parse(&json.to_string_pretty()).expect("report JSON parses");
+        assert_eq!(parsed.get("points").unwrap().as_arr().unwrap().len(), 2);
+        assert!(!parsed.get("frontier").unwrap().as_arr().unwrap().is_empty());
+        assert_eq!(parsed.get("sparsity_source").unwrap().as_str(), Some("uniform"));
+        // Report must not leak scheduling-dependent fields.
+        assert!(parsed.get("cache_hits").is_none());
+        assert!(parsed.get("threads").is_none());
+    }
+
+    /// Sec. V-C sanity: the paper's Edge config must sit on (or within
+    /// [`FRONTIER_EPSILON`] of) the frontier of a sweep around it.
+    /// This is a regression net for cost-model edits: a change that
+    /// pushes Edge off its own family's frontier by >15 % has broken
+    /// the stall/energy balance the paper's Fig. 16 selection rests on.
+    #[test]
+    fn edge_preset_is_near_its_family_frontier() {
+        let mut space = DseSpace::around(AcceleratorConfig::edge());
+        space.pes = vec![32, 64, 128];
+        space.buffers_mb = vec![10, 13, 16];
+        let report = sweep(
+            &space,
+            &TransformerConfig::bert_tiny(),
+            128,
+            Policy::Staggered,
+            &SparsitySource::Uniform(SparsityProfile::paper_default()),
+            &SweepOptions { threads: 0, progress: false },
+        );
+        let idx = report
+            .points
+            .iter()
+            .position(|p| p.pes == 64 && p.buffer_mb == 13)
+            .expect("edge preset point present in its own sweep");
+        let objs: Vec<Objectives> = report.points.iter().map(DsePoint::objectives).collect();
+        let gap = frontier_gap(&objs, idx);
+        assert!(
+            gap <= FRONTIER_EPSILON,
+            "Edge preset drifted {gap:.3} past its family frontier (epsilon {FRONTIER_EPSILON})"
+        );
+    }
+
+    /// Server counterpart, at the paper's Server workload scale (batch
+    /// 32 keeps the sweep compute-bound, which is exactly why the paper
+    /// sizes Server at 512 PEs — at small batch the weight stream
+    /// dominates and fewer PEs would look equivalent).
+    #[test]
+    fn server_preset_is_near_its_family_frontier() {
+        let mut space = DseSpace::around(AcceleratorConfig::server());
+        space.pes = vec![128, 512];
+        let report = sweep(
+            &space,
+            &TransformerConfig::bert_base(),
+            64,
+            Policy::Staggered,
+            &SparsitySource::Uniform(SparsityProfile::paper_default()),
+            &SweepOptions { threads: 0, progress: false },
+        );
+        let idx = report
+            .points
+            .iter()
+            .position(|p| p.pes == 512)
+            .expect("server preset point present in its own sweep");
+        let objs: Vec<Objectives> = report.points.iter().map(DsePoint::objectives).collect();
+        let gap = frontier_gap(&objs, idx);
+        assert!(
+            gap <= FRONTIER_EPSILON,
+            "Server preset drifted {gap:.3} past its family frontier (epsilon {FRONTIER_EPSILON})"
+        );
+    }
+}

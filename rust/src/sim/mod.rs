@@ -16,6 +16,7 @@ pub mod baselines;
 pub mod buffer;
 pub mod config;
 pub mod dataflow;
+pub mod dse;
 pub mod dynatran;
 pub mod engine;
 pub mod memory;
@@ -28,6 +29,10 @@ pub mod tech;
 pub mod tiling;
 
 pub use config::{AcceleratorConfig, MemoryKind};
+pub use dse::{
+    dominates, frontier_gap, sweep, DsePoint, DseReport, DseSpace, Objectives,
+    ParetoFrontier, SweepOptions,
+};
 pub use engine::{
     simulate, simulate_with, Engine, SimResult, SparsityProfile, SparsitySource,
 };

@@ -13,6 +13,8 @@ use acceltran::runtime::tensor::{
     matmul_ex_threads, matmul_nt_ex_threads, matmul_scalar, matmul_tn_ex_threads,
 };
 use acceltran::runtime::{ParamStore, Runtime};
+use acceltran::sim::dataflow::Dataflow;
+use acceltran::sim::dse::{sweep, DseSpace, SweepOptions};
 use acceltran::sim::engine::simulate_with;
 use acceltran::sim::scheduler::Policy;
 use acceltran::sim::{AcceleratorConfig, SimResult, SparsitySource};
@@ -138,6 +140,64 @@ fn trace_driven_simulation_is_deterministic() {
     let b = simulate_with(&cfg, &model, 16, Policy::Staggered, &source);
     assert_eq!(a.sparsity_source, "trace");
     assert_results_identical(&a, &b);
+}
+
+/// The DSE sweep is the first multi-threaded consumer of the sim
+/// engine; its contract is that worker count is *unobservable* in the
+/// output: 1 vs 4 forced workers (forced via `SweepOptions.threads`,
+/// not the `ACCELTRAN_THREADS` env var — parallel test binaries would
+/// race on the process environment) must produce byte-identical report
+/// JSON and bit-identical per-point `SimResult`s, across reruns.
+#[test]
+fn dse_sweep_is_bitwise_thread_count_invariant() {
+    let trace = capture_once();
+    let source = SparsitySource::Trace(trace);
+    let model = tiny_model();
+    let mut space = DseSpace::around(AcceleratorConfig::edge());
+    space.pes = vec![8, 16, 32];
+    space.buffers_mb = vec![3, 13];
+    space.dataflows = vec![
+        Dataflow::parse("bijk").unwrap(),
+        Dataflow::parse("kjib").unwrap(),
+    ];
+
+    let run = |threads: usize| {
+        sweep(
+            &space,
+            &model,
+            16,
+            Policy::Staggered,
+            &source,
+            &SweepOptions { threads, progress: false },
+        )
+    };
+    let serial = run(1);
+    let parallel = run(4);
+    let rerun = run(4);
+
+    assert_eq!(serial.points.len(), 12);
+    for (a, b) in serial.points.iter().zip(&parallel.points) {
+        assert_eq!(a.index, b.index);
+        assert_eq!(a.config_name, b.config_name);
+        assert_results_identical(&a.result, &b.result);
+        for (x, y) in [
+            (a.throughput_seq_s, b.throughput_seq_s),
+            (a.energy_mj_per_seq, b.energy_mj_per_seq),
+            (a.area_mm2, b.area_mm2),
+        ] {
+            assert_eq!(x.to_bits(), y.to_bits(), "{x} vs {y}");
+        }
+    }
+    assert_eq!(serial.frontier, parallel.frontier);
+
+    // The serialized report (what `acceltran dse` writes to
+    // reports/dse_frontier.json) is byte-identical 1w vs 4w and across
+    // 4w reruns — nothing scheduling-dependent may leak into it.
+    let ja = serial.to_json().to_string_pretty();
+    let jb = parallel.to_json().to_string_pretty();
+    let jc = rerun.to_json().to_string_pretty();
+    assert_eq!(ja.as_bytes(), jb.as_bytes(), "report bytes: 1 vs 4 workers");
+    assert_eq!(jb.as_bytes(), jc.as_bytes(), "report bytes: rerun vs rerun");
 }
 
 #[test]

@@ -1,0 +1,164 @@
+//! Golden regression pin for the DSE reduction: a fixed small design
+//! space swept on the *committed* capture-trace fixture must keep
+//! producing the exact same frontier point set (and knee, and per-point
+//! cycle counts).  A cost-model or dominance change that re-shapes the
+//! Fig. 16 surface now fails tier-1 here instead of silently moving the
+//! recommended design point.
+//!
+//! Self-seeding like `sim_golden.rs`: the pin lives at
+//! `rust/tests/goldens/dse_golden.json`; on the first run in a fresh
+//! tree (file absent) it is seeded from the current model and the test
+//! passes with a loud note — commit the file to arm the pin.  Delete it
+//! and rerun to rebaseline after an intentional perf-model change.
+//! The input trace is `rust/tests/goldens/dse_trace.json`, a committed
+//! fixture in the PR-4 capture format (same values as `sim_golden.rs`'s
+//! hand-written trace, so the two pins guard the same surface from two
+//! directions).
+
+use std::path::PathBuf;
+
+use acceltran::model::TransformerConfig;
+use acceltran::sim::dataflow::Dataflow;
+use acceltran::sim::dse::{sweep, DseReport, DseSpace, SweepOptions};
+use acceltran::sim::scheduler::Policy;
+use acceltran::sim::{AcceleratorConfig, SparsitySource};
+use acceltran::trace::SparsityTrace;
+use acceltran::util::json::Json;
+
+fn goldens_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("tests/goldens")
+}
+
+fn golden_model() -> TransformerConfig {
+    TransformerConfig {
+        name: "golden-tiny".into(),
+        hidden: 32,
+        layers: 2,
+        heads: 2,
+        ff: 64,
+        vocab: 1000,
+        seq: 64,
+    }
+}
+
+/// The fixed space: shrunken-Edge family, two buffer sizes, the paper's
+/// dataflow plus the worst-reuse one — 12 points, all stall classes
+/// exercised, fast enough for tier-1.
+fn golden_space() -> DseSpace {
+    let mut space = DseSpace::around(AcceleratorConfig::edge());
+    space.pes = vec![8, 16, 32];
+    space.buffers_mb = vec![3, 6];
+    space.dataflows = vec![
+        Dataflow::parse("bijk").unwrap(),
+        Dataflow::parse("kjib").unwrap(),
+    ];
+    space
+}
+
+fn run_golden() -> DseReport {
+    let trace = SparsityTrace::load(goldens_dir().join("dse_trace.json"))
+        .expect("committed trace fixture loads");
+    sweep(
+        &golden_space(),
+        &golden_model(),
+        64,
+        Policy::Staggered,
+        &SparsitySource::Trace(trace),
+        &SweepOptions { threads: 0, progress: false },
+    )
+}
+
+/// What gets pinned: the frontier index set, the knee, and per-point
+/// integer cycles (floats in the full report are covered to 1e-9 via
+/// energy below; cycles are exact-u64 compared).
+fn report_to_golden_json(r: &DseReport) -> Json {
+    Json::obj(vec![
+        (
+            "frontier",
+            Json::arr(r.frontier.indices.iter().map(|&i| Json::num(i as f64))),
+        ),
+        (
+            "knee",
+            match r.frontier.knee {
+                Some(i) => Json::num(i as f64),
+                None => Json::Null,
+            },
+        ),
+        (
+            "configs",
+            Json::arr(r.points.iter().map(|p| Json::str(p.config_name.clone()))),
+        ),
+        (
+            "cycles",
+            Json::arr(
+                r.points
+                    .iter()
+                    .map(|p| Json::num(p.result.total_cycles as f64)),
+            ),
+        ),
+        (
+            "energy_mj_per_seq",
+            Json::arr(r.points.iter().map(|p| Json::num(p.energy_mj_per_seq))),
+        ),
+    ])
+}
+
+#[test]
+fn dse_frontier_matches_pinned_golden() {
+    let r = run_golden();
+    // Non-trivial preconditions, checked even before a golden exists.
+    assert_eq!(r.points.len(), 12);
+    assert!(!r.frontier.indices.is_empty());
+    assert!(r.points.iter().all(|p| p.result.total_cycles > 1000));
+    assert_eq!(r.sparsity_source, "trace");
+
+    let current = report_to_golden_json(&r);
+    let path = goldens_dir().join("dse_golden.json");
+    let Ok(text) = std::fs::read_to_string(&path) else {
+        std::fs::create_dir_all(path.parent().unwrap()).unwrap();
+        std::fs::write(&path, current.to_string_pretty()).unwrap();
+        eprintln!(
+            "dse_golden: seeded {} — commit it to pin the DSE surface",
+            path.display()
+        );
+        return;
+    };
+    let golden = Json::parse(&text).expect("golden file parses");
+
+    // Exact comparisons: frontier set, knee, config naming, cycles.
+    for key in ["frontier", "configs", "cycles"] {
+        let want = golden.get(key).expect(key);
+        let got = current.get(key).unwrap();
+        assert_eq!(
+            got, want,
+            "DSE drift on '{key}' (delete {} to rebaseline after an \
+             intentional perf-model change)",
+            path.display()
+        );
+    }
+    assert_eq!(
+        current.get("knee"),
+        golden.get("knee"),
+        "DSE knee moved (delete {} to rebaseline)",
+        path.display()
+    );
+
+    // Energy to relative tolerance (still IEEE-deterministic, but the
+    // looser compare keeps the message readable on drift).
+    let want = golden
+        .get("energy_mj_per_seq")
+        .and_then(Json::as_arr)
+        .expect("energy_mj_per_seq");
+    let got = current.get("energy_mj_per_seq").and_then(Json::as_arr).unwrap();
+    assert_eq!(got.len(), want.len());
+    for (i, (g, w)) in got.iter().zip(want).enumerate() {
+        let (g, w) = (g.as_f64().unwrap(), w.as_f64().unwrap());
+        let tol = 1e-9 * w.abs().max(1e-12);
+        assert!(
+            (g - w).abs() <= tol,
+            "DSE energy drift at point {i}: {g} vs pinned {w} (delete {} \
+             to rebaseline)",
+            path.display()
+        );
+    }
+}

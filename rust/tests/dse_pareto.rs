@@ -1,0 +1,190 @@
+//! Property tests for the DSE Pareto-frontier reduction (`sim::dse`).
+//!
+//! The frontier is the load-bearing output of the design-space sweep —
+//! a wrong dominance filter silently recommends the wrong hardware — so
+//! its laws are pinned on random objective sets (with deliberate ties
+//! and duplicates, the edge cases of *weak* dominance):
+//!
+//! 1. the frontier is a sorted, de-duplicated subset of the sweep;
+//! 2. no frontier point dominates another frontier point;
+//! 3. every dominated point is dominated by some *frontier* point
+//!    (maximal-element chasing — needs transitivity + acyclicity);
+//! 4. the frontier (as a set of objective vectors) is invariant to
+//!    input ordering, and so is the knee point;
+//! 5. dominance is irreflexive, antisymmetric, and transitive on
+//!    random triples — the strict-partial-order laws that make the
+//!    chain argument in (3) terminate.
+//!
+//! `ACCELTRAN_PROPTEST_CASES` scales the case counts (CI runs 256).
+
+use acceltran::model::TransformerConfig;
+use acceltran::sim::dse::{
+    dominates, frontier_gap, sweep, DsePoint, DseSpace, Objectives,
+    ParetoFrontier, SweepOptions,
+};
+use acceltran::sim::engine::{SparsityProfile, SparsitySource};
+use acceltran::sim::scheduler::Policy;
+use acceltran::sim::AcceleratorConfig;
+use acceltran::util::prop::{self, Gen};
+
+/// Random non-negative objectives; quantized about half the time so
+/// equal coordinates (the weak-dominance edge) actually occur.
+fn rand_obj(g: &mut Gen) -> Objectives {
+    let v = |g: &mut Gen| {
+        if g.bool() {
+            g.usize_in(0, 4) as f64
+        } else {
+            g.f32_in(0.0, 10.0) as f64
+        }
+    };
+    Objectives { throughput: v(g), energy: v(g), area: v(g) }
+}
+
+fn rand_objs(g: &mut Gen, n: usize) -> Vec<Objectives> {
+    (0..n).map(|_| rand_obj(g)).collect()
+}
+
+fn obj_bits(o: &Objectives) -> (u64, u64, u64) {
+    (o.throughput.to_bits(), o.energy.to_bits(), o.area.to_bits())
+}
+
+#[test]
+fn frontier_is_sorted_subset_of_sweep() {
+    prop::check(0xd5e_0001, prop::cases(64), |g| {
+        let objs = rand_objs(g, g.usize_in(0, 40));
+        let f = ParetoFrontier::compute(&objs);
+        assert!(f.indices.windows(2).all(|w| w[0] < w[1]), "sorted + unique");
+        assert!(f.indices.iter().all(|&i| i < objs.len()), "in range");
+        match f.knee {
+            Some(k) => assert!(f.contains(k), "knee sits on the frontier"),
+            None => assert!(f.indices.is_empty(), "knee only absent when empty"),
+        }
+        if !objs.is_empty() {
+            assert!(!f.indices.is_empty(), "non-empty sweep keeps a maximal point");
+        }
+    });
+}
+
+#[test]
+fn no_frontier_point_dominates_another() {
+    prop::check(0xd5e_0002, prop::cases(64), |g| {
+        let objs = rand_objs(g, g.usize_in(0, 40));
+        let f = ParetoFrontier::compute(&objs);
+        for &i in &f.indices {
+            for &j in &f.indices {
+                assert!(
+                    !dominates(&objs[i], &objs[j]),
+                    "frontier point {i} dominates frontier point {j}"
+                );
+            }
+        }
+    });
+}
+
+#[test]
+fn every_dominated_point_is_dominated_by_the_frontier() {
+    prop::check(0xd5e_0003, prop::cases(64), |g| {
+        let objs = rand_objs(g, g.usize_in(0, 40));
+        let f = ParetoFrontier::compute(&objs);
+        for (i, o) in objs.iter().enumerate() {
+            if f.contains(i) {
+                assert_eq!(frontier_gap(&objs, i), 0.0, "frontier point {i} has no gap");
+                continue;
+            }
+            assert!(
+                f.indices.iter().any(|&j| dominates(&objs[j], o)),
+                "off-frontier point {i} must be dominated by a frontier point"
+            );
+            assert!(
+                frontier_gap(&objs, i) > 0.0,
+                "dominated point {i} must have a positive frontier gap"
+            );
+        }
+    });
+}
+
+#[test]
+fn frontier_is_invariant_to_input_ordering() {
+    prop::check(0xd5e_0004, prop::cases(64), |g| {
+        let objs = rand_objs(g, g.usize_in(1, 30));
+        // Fisher-Yates permutation of the point list.
+        let mut perm: Vec<usize> = (0..objs.len()).collect();
+        for i in (1..perm.len()).rev() {
+            perm.swap(i, g.usize_in(0, i));
+        }
+        let shuffled: Vec<Objectives> = perm.iter().map(|&i| objs[i]).collect();
+
+        let f = ParetoFrontier::compute(&objs);
+        let fs = ParetoFrontier::compute(&shuffled);
+
+        // Compare as multisets of objective vectors — indices shift
+        // with the permutation, the selected *points* must not.
+        let mut a: Vec<_> = f.indices.iter().map(|&i| obj_bits(&objs[i])).collect();
+        let mut b: Vec<_> = fs.indices.iter().map(|&i| obj_bits(&shuffled[i])).collect();
+        a.sort_unstable();
+        b.sort_unstable();
+        assert_eq!(a, b, "frontier set changed under permutation");
+
+        // The knee may tie-break to a different duplicate of the same
+        // vector, but the vector itself is ordering-independent.
+        let knee_a = f.knee.map(|i| obj_bits(&objs[i]));
+        let knee_b = fs.knee.map(|i| obj_bits(&shuffled[i]));
+        assert_eq!(knee_a, knee_b, "knee objective vector changed under permutation");
+    });
+}
+
+#[test]
+fn dominance_is_a_strict_partial_order() {
+    prop::check(0xd5e_0005, prop::cases(256), |g| {
+        let a = rand_obj(g);
+        let b = rand_obj(g);
+        let c = rand_obj(g);
+        // Irreflexive.
+        assert!(!dominates(&a, &a), "irreflexivity");
+        // Antisymmetric (asymmetric, for strict orders).
+        assert!(
+            !(dominates(&a, &b) && dominates(&b, &a)),
+            "antisymmetry: {a:?} <> {b:?}"
+        );
+        // Transitive.
+        if dominates(&a, &b) && dominates(&b, &c) {
+            assert!(dominates(&a, &c), "transitivity: {a:?} > {b:?} > {c:?}");
+        }
+    });
+}
+
+/// The laws above on synthetic objectives, once on real engine output:
+/// a small Edge-family sweep's report must satisfy the same frontier
+/// invariants end-to-end (this is the shape `reports/dse_frontier.json`
+/// is asserted against in CI).
+#[test]
+fn real_sweep_report_satisfies_frontier_invariants() {
+    let mut space = DseSpace::around(AcceleratorConfig::edge());
+    space.pes = vec![8, 16, 32];
+    space.buffers_mb = vec![3, 13];
+    let report = sweep(
+        &space,
+        &TransformerConfig::bert_tiny(),
+        64,
+        Policy::Staggered,
+        &SparsitySource::Uniform(SparsityProfile::paper_default()),
+        &SweepOptions { threads: 0, progress: false },
+    );
+    assert_eq!(report.points.len(), 6);
+    let objs: Vec<Objectives> = report.points.iter().map(DsePoint::objectives).collect();
+    let f = &report.frontier;
+    assert!(!f.indices.is_empty());
+    for &i in &f.indices {
+        for &j in &f.indices {
+            assert!(!dominates(&objs[i], &objs[j]));
+        }
+    }
+    for i in 0..objs.len() {
+        if !f.contains(i) {
+            assert!(f.indices.iter().any(|&j| dominates(&objs[j], &objs[i])));
+        }
+    }
+    // Recomputing from the report's own objectives reproduces the
+    // frontier the sweep reduced to.
+    assert_eq!(ParetoFrontier::compute(&objs), *f);
+}
