@@ -19,9 +19,17 @@
 //! batching (the CI smoke job asserts on the resulting
 //! `padded_token_fraction` and `rejected_429` observables).
 //!
+//! `--span-frac F` sends that fraction of requests to `/v1/span`
+//! instead of `/v1/classify` — a mixed two-task workload against a
+//! multi-model server.  Shapes come per task from the `/healthz`
+//! `models` array; the summary carries per-task `ok` counts (the CI
+//! smoke job asserts both are positive).  In hermetic mode a span
+//! model is registered alongside the classify one.
+//!
 //! Either way a JSON summary lands at `--out` (default
 //! `reports/http_serve.json`).
 
+use acceltran::coordinator::{ModelEntry, TaskKind};
 use acceltran::runtime::{ParamStore, Runtime};
 use acceltran::serve::net::{HttpClient, NetConfig, NetServer};
 use acceltran::util::cli::Args;
@@ -31,27 +39,64 @@ use anyhow::{anyhow, Context, Result};
 use std::time::Instant;
 
 /// Model shape a generator needs to build valid requests.
+#[derive(Clone)]
 struct Shape {
     seq: usize,
     vocab: usize,
 }
 
-fn shape_from_healthz(addr: &str) -> Result<Shape> {
+/// Per-task shapes discovered from `/healthz`: the first registered
+/// model of each task (mirroring the server's default routing).
+struct TaskShapes {
+    classify: Option<Shape>,
+    span: Option<Shape>,
+}
+
+fn shapes_from_healthz(addr: &str) -> Result<TaskShapes> {
     let mut c = HttpClient::connect(addr)
         .with_context(|| format!("connecting to {addr}"))?;
     let (status, body) = c.get("/healthz").context("GET /healthz")?;
     if status != 200 {
         return Err(anyhow!("/healthz returned {status}"));
     }
-    let seq = body
-        .path(&["model", "seq"])
-        .and_then(|v| v.as_usize())
-        .ok_or_else(|| anyhow!("/healthz missing model.seq"))?;
-    let vocab = body
-        .path(&["model", "vocab"])
-        .and_then(|v| v.as_usize())
-        .ok_or_else(|| anyhow!("/healthz missing model.vocab"))?;
-    Ok(Shape { seq, vocab })
+    let mut shapes = TaskShapes { classify: None, span: None };
+    if let Some(models) = body.get("models").and_then(|m| m.as_arr()) {
+        for m in models {
+            let shape = Shape {
+                seq: m
+                    .get("seq")
+                    .and_then(|v| v.as_usize())
+                    .ok_or_else(|| anyhow!("/healthz model missing seq"))?,
+                vocab: m
+                    .get("vocab")
+                    .and_then(|v| v.as_usize())
+                    .ok_or_else(|| anyhow!("/healthz model missing vocab"))?,
+            };
+            match m.get("task").and_then(|v| v.as_str()) {
+                Some("classify") if shapes.classify.is_none() => {
+                    shapes.classify = Some(shape);
+                }
+                Some("span") if shapes.span.is_none() => {
+                    shapes.span = Some(shape);
+                }
+                _ => {}
+            }
+        }
+    }
+    if shapes.classify.is_none() {
+        // pre-multi-model servers: the top-level "model" object is the
+        // (classify) model
+        let seq = body
+            .path(&["model", "seq"])
+            .and_then(|v| v.as_usize())
+            .ok_or_else(|| anyhow!("/healthz missing model.seq"))?;
+        let vocab = body
+            .path(&["model", "vocab"])
+            .and_then(|v| v.as_usize())
+            .ok_or_else(|| anyhow!("/healthz missing model.vocab"))?;
+        shapes.classify = Some(Shape { seq, vocab });
+    }
+    Ok(shapes)
 }
 
 fn classify_body(
@@ -77,38 +122,62 @@ fn classify_body(
     ])
 }
 
-/// One client connection's worth of load; returns (ok, failed,
-/// per-request latencies in us).
+/// Per-task `(ok, failed)` tallies from one or more clients.
+#[derive(Default, Clone, Copy)]
+struct TaskTally {
+    ok: u64,
+    failed: u64,
+}
+
+/// One client connection's worth of load; returns per-task tallies and
+/// per-request latencies in us.  Each request rolls `span_frac` to pick
+/// its endpoint (span requests need a span shape, enforced by the
+/// caller).
 fn run_client(
     addr: String,
-    shape: Shape,
+    classify: Shape,
+    span: Option<Shape>,
     n: usize,
     seed: u64,
     tau: f32,
     mixed_len: bool,
-) -> Result<(u64, u64, Vec<u64>)> {
+    span_frac: f64,
+) -> Result<(TaskTally, TaskTally, Vec<u64>)> {
     let mut rng = Rng::new(seed);
     let mut client = HttpClient::connect(&addr)?;
-    let mut ok = 0u64;
-    let mut failed = 0u64;
+    let mut clf = TaskTally::default();
+    let mut spn = TaskTally::default();
     let mut lat = Vec::with_capacity(n);
+    let span_permille = (span_frac.clamp(0.0, 1.0) * 1000.0) as u64;
     for _ in 0..n {
-        let body = classify_body(&mut rng, &shape, tau, mixed_len);
+        let is_span =
+            span.is_some() && rng.below(1000) < span_permille;
+        let (path, shape) = if is_span {
+            ("/v1/span", span.as_ref().unwrap())
+        } else {
+            ("/v1/classify", &classify)
+        };
+        let body = classify_body(&mut rng, shape, tau, mixed_len);
         let t0 = Instant::now();
-        let (status, resp) = client.post_json("/v1/classify", &body)?;
+        let (status, resp) = client.post_json(path, &body)?;
         lat.push(t0.elapsed().as_micros() as u64);
         let has_logits = resp
             .get("logits")
             .and_then(|l| l.as_arr())
             .map(|a| !a.is_empty())
             .unwrap_or(false);
-        if status == 200 && has_logits {
-            ok += 1;
+        // span answers additionally carry the decoded argmax positions
+        let well_formed = has_logits
+            && (!is_span
+                || (resp.get("start").is_some() && resp.get("end").is_some()));
+        let tally = if is_span { &mut spn } else { &mut clf };
+        if status == 200 && well_formed {
+            tally.ok += 1;
         } else {
-            failed += 1;
+            tally.failed += 1;
         }
     }
-    Ok((ok, failed, lat))
+    Ok((clf, spn, lat))
 }
 
 fn percentile(sorted: &[u64], p: f64) -> u64 {
@@ -125,6 +194,7 @@ fn main() -> Result<()> {
     let conns = args.get_usize("conns", 4).max(1);
     let tau = args.get_f64("tau", 0.04) as f32;
     let mixed_len = args.has("mixed-len");
+    let span_frac = args.get_f64("span-frac", 0.0);
     let out = args.get_or("out", "reports/http_serve.json").to_string();
 
     // external mode drives a server someone else owns; hermetic mode
@@ -138,7 +208,31 @@ fn main() -> Result<()> {
                 pools: args.get_usize("pools", 2),
                 ..NetConfig::default()
             };
-            let server = NetServer::start(&rt, &params, &cfg)?;
+            let server = if span_frac > 0.0 {
+                // mixed workload: register a span model (its own
+                // checkpoint over the same encoder shape) alongside
+                // the classify one
+                let span_params = ParamStore::init(&rt.manifest, 1).params;
+                let entries = vec![
+                    ModelEntry {
+                        name: "classify".into(),
+                        task: TaskKind::Classify,
+                        runtime: rt.fork()?,
+                        params,
+                        sim: None,
+                    },
+                    ModelEntry {
+                        name: "span".into(),
+                        task: TaskKind::Span,
+                        runtime: rt.fork()?,
+                        params: span_params,
+                        sim: None,
+                    },
+                ];
+                NetServer::start_multi(entries, &cfg)?
+            } else {
+                NetServer::start(&rt, &params, &cfg)?
+            };
             println!(
                 "hermetic server on http://{} ({} pools, '{}' backend)",
                 server.addr(),
@@ -149,13 +243,27 @@ fn main() -> Result<()> {
         }
     };
 
-    let shape = shape_from_healthz(&addr)?;
+    let shapes = shapes_from_healthz(&addr)?;
+    let shape = shapes
+        .classify
+        .clone()
+        .ok_or_else(|| anyhow!("no classify model served"))?;
+    if span_frac > 0.0 && shapes.span.is_none() {
+        return Err(anyhow!(
+            "--span-frac {span_frac} but the server registers no span model"
+        ));
+    }
     println!(
         "target {addr}: seq={} vocab={} — {total} requests over {conns} \
-         connection(s), tau={tau}{}",
+         connection(s), tau={tau}{}{}",
         shape.seq,
         shape.vocab,
-        if mixed_len { ", mixed-length" } else { "" }
+        if mixed_len { ", mixed-length" } else { "" },
+        if span_frac > 0.0 {
+            format!(", span fraction {span_frac}")
+        } else {
+            String::new()
+        }
     );
 
     let per_conn = total.div_ceil(conns);
@@ -163,10 +271,20 @@ fn main() -> Result<()> {
     let mut handles = Vec::new();
     for c in 0..conns {
         let addr = addr.clone();
-        let shape = Shape { seq: shape.seq, vocab: shape.vocab };
+        let shape = shape.clone();
+        let span_shape = shapes.span.clone();
         let n = per_conn.min(total - (per_conn * c).min(total));
         handles.push(std::thread::spawn(move || {
-            run_client(addr, shape, n, 0x9e00 + c as u64, tau, mixed_len)
+            run_client(
+                addr,
+                shape,
+                span_shape,
+                n,
+                0x9e00 + c as u64,
+                tau,
+                mixed_len,
+                span_frac,
+            )
         }));
     }
     // scrape /stats while the load is in flight — this is the endpoint
@@ -174,15 +292,19 @@ fn main() -> Result<()> {
     let mid_stats = HttpClient::connect(&addr)
         .and_then(|mut c| c.get("/stats"))
         .ok();
-    let mut ok = 0u64;
-    let mut failed = 0u64;
+    let mut clf = TaskTally::default();
+    let mut spn = TaskTally::default();
     let mut lat: Vec<u64> = Vec::new();
     for h in handles {
-        let (o, f, l) = h.join().map_err(|_| anyhow!("client panicked"))??;
-        ok += o;
-        failed += f;
+        let (c, s, l) = h.join().map_err(|_| anyhow!("client panicked"))??;
+        clf.ok += c.ok;
+        clf.failed += c.failed;
+        spn.ok += s.ok;
+        spn.failed += s.failed;
         lat.extend(l);
     }
+    let ok = clf.ok + spn.ok;
+    let failed = clf.failed + spn.failed;
     let wall = t0.elapsed();
     lat.sort_unstable();
     let rps = ok as f64 / wall.as_secs_f64();
@@ -193,6 +315,12 @@ fn main() -> Result<()> {
         percentile(&lat, 50.0),
         percentile(&lat, 99.0),
     );
+    if span_frac > 0.0 {
+        println!(
+            "  classify: {} ok / {} failed — span: {} ok / {} failed",
+            clf.ok, clf.failed, spn.ok, spn.failed
+        );
+    }
     if let Some((_, stats)) = &mid_stats {
         let dispatched = stats
             .path(&["merged", "rows_dispatched"])
@@ -230,7 +358,27 @@ fn main() -> Result<()> {
         ("connections", Json::num(conns as f64)),
         ("ok", Json::num(ok as f64)),
         ("failed", Json::num(failed as f64)),
+        (
+            "tasks",
+            Json::obj(vec![
+                (
+                    "classify",
+                    Json::obj(vec![
+                        ("ok", Json::num(clf.ok as f64)),
+                        ("failed", Json::num(clf.failed as f64)),
+                    ]),
+                ),
+                (
+                    "span",
+                    Json::obj(vec![
+                        ("ok", Json::num(spn.ok as f64)),
+                        ("failed", Json::num(spn.failed as f64)),
+                    ]),
+                ),
+            ]),
+        ),
         ("mixed_len", Json::Bool(mixed_len)),
+        ("span_frac", Json::num(span_frac)),
         ("wall_s", Json::num(wall.as_secs_f64())),
         ("rps", Json::num(rps)),
         (

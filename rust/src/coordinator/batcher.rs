@@ -421,31 +421,73 @@ pub(crate) fn dispatch_shape(
     now: Instant,
     force: bool,
 ) -> Option<(usize, usize)> {
-    let mut full: Option<usize> = None;
-    for (i, &d) in depths.iter().enumerate() {
-        if d >= largest_shape() && full.map(|f| d > depths[f]).unwrap_or(true) {
-            full = Some(i);
-        }
-    }
-    if let Some(b) = full {
-        return Some((b, largest_shape()));
-    }
-    if force {
-        let mut pick: Option<usize> = None;
-        for (i, &d) in depths.iter().enumerate() {
-            if d > 0 && pick.map(|p| d > depths[p]).unwrap_or(true) {
-                pick = Some(i);
+    dispatch_multi(&[depths], &[nearest_deadline], now, force).map(|(_, b, s)| (b, s))
+}
+
+/// Multi-model generalization of [`dispatch_shape`]: one dispatch
+/// decision over *several* models' bucket queues (`depths[m][b]`,
+/// `deadlines[m]` = model `m`'s nearest deadline with its bucket).
+/// Returns `(model, bucket, shape)` — a batch always claims from
+/// exactly one model's one bucket, so a dispatched batch can never mix
+/// checkpoints (the no-mixed-model invariant holds by construction).
+///
+/// Preference order mirrors the single-model policy:
+///
+/// 1. Any `(model, bucket)` that fills the largest exported shape
+///    dispatches immediately — the deepest wins (ties to the
+///    first-registered model, then the shortest seq).
+/// 2. On force-drain, the deepest non-empty `(model, bucket)` flushes
+///    at its padding-minimizing [`flush_shape`].
+/// 3. Among *expired* deadlines, the earliest one wins its bucket's
+///    flush.  Only rule 1's full batches ever preempt a deadline, so
+///    one model's trickle of partial batches can never delay another
+///    model's armed deadline — the isolation property the multi-model
+///    property suite pins.
+pub(crate) fn dispatch_multi(
+    depths: &[&[usize]],
+    deadlines: &[Option<(Instant, usize)>],
+    now: Instant,
+    force: bool,
+) -> Option<(usize, usize, usize)> {
+    debug_assert_eq!(depths.len(), deadlines.len());
+    let mut full: Option<(usize, usize)> = None;
+    for (m, md) in depths.iter().enumerate() {
+        for (b, &d) in md.iter().enumerate() {
+            if d >= largest_shape()
+                && full.map(|(fm, fb)| d > depths[fm][fb]).unwrap_or(true)
+            {
+                full = Some((m, b));
             }
         }
-        let b = pick?;
-        return Some((b, flush_shape(depths[b])));
     }
-    if let Some((deadline, b)) = nearest_deadline {
-        if now >= deadline && depths.get(b).copied().unwrap_or(0) > 0 {
-            return Some((b, flush_shape(depths[b])));
+    if let Some((m, b)) = full {
+        return Some((m, b, largest_shape()));
+    }
+    if force {
+        let mut pick: Option<(usize, usize)> = None;
+        for (m, md) in depths.iter().enumerate() {
+            for (b, &d) in md.iter().enumerate() {
+                if d > 0 && pick.map(|(pm, pb)| d > depths[pm][pb]).unwrap_or(true) {
+                    pick = Some((m, b));
+                }
+            }
+        }
+        let (m, b) = pick?;
+        return Some((m, b, flush_shape(depths[m][b])));
+    }
+    let mut expired: Option<(Instant, usize, usize)> = None;
+    for (m, dl) in deadlines.iter().enumerate() {
+        if let Some((deadline, b)) = *dl {
+            if now >= deadline
+                && depths[m].get(b).copied().unwrap_or(0) > 0
+                && expired.map(|(d, _, _)| deadline < d).unwrap_or(true)
+            {
+                expired = Some((deadline, m, b));
+            }
         }
     }
-    None
+    let (_, m, b) = expired?;
+    Some((m, b, flush_shape(depths[m][b])))
 }
 
 /// Assemble a claimed single-bucket batch for dispatch: concatenate the
@@ -1008,6 +1050,143 @@ mod tests {
                 dispatch_shape(&depths, Some((deadline, bucket)), deadline, false),
                 Some((bucket, flush_shape(depths[bucket])))
             );
+        });
+    }
+
+    // Multi-model drain: every dispatched batch claims from exactly one
+    // model's queues (requests are tagged with their model's index as
+    // the token value), every submitted request is eventually served,
+    // and no claim ever exceeds the dispatched shape.
+    #[test]
+    fn prop_multi_model_drain_never_mixes_models() {
+        prop::check(0xACC8_0003, prop::cases(64), |g| {
+            let nm = g.usize_in(2, 3);
+            let mut queues: Vec<BucketQueues> =
+                (0..nm).map(|_| BucketQueues::new(16)).collect();
+            let mut submitted = vec![0usize; nm];
+            let mut next_id = 0u64;
+            for m in 0..nm {
+                for _ in 0..g.usize_in(1, 40) {
+                    let len = g.usize_in(1, 16);
+                    queues[m].push(mk(next_id, len, 0.0, m as i32));
+                    next_id += 1;
+                    submitted[m] += 1;
+                }
+            }
+            let mut served = vec![0usize; nm];
+            let now = Instant::now();
+            loop {
+                let depth_vecs: Vec<Vec<usize>> =
+                    queues.iter().map(|q| q.depths()).collect();
+                let depth_refs: Vec<&[usize]> =
+                    depth_vecs.iter().map(|d| d.as_slice()).collect();
+                let deadlines: Vec<Option<(Instant, usize)>> =
+                    queues.iter().map(|q| q.nearest_deadline()).collect();
+                let Some((m, b, shape)) =
+                    dispatch_multi(&depth_refs, &deadlines, now, true)
+                else {
+                    break;
+                };
+                let claimed = queues[m].claim(b, shape);
+                assert!(!claimed.is_empty() && claimed.len() <= shape);
+                for r in &claimed {
+                    assert_eq!(
+                        r.ids[0], m as i32,
+                        "batch for model {m} claimed a model-{} request",
+                        r.ids[0]
+                    );
+                }
+                served[m] += claimed.len();
+            }
+            assert_eq!(served, submitted, "drain lost or duplicated requests");
+            assert!(queues.iter().all(|q| q.is_empty()));
+        });
+    }
+
+    // Per-model padding: with per-model bucket queues, each model's
+    // assembled batches never pad more tokens (absolutely or
+    // fractionally) than padding that model's same dispatch to the
+    // manifest max would — bucketing's guarantee survives sharding the
+    // queues by model.
+    #[test]
+    fn prop_multi_model_padding_no_worse_than_pad_to_max_per_model() {
+        let max_seq = 64;
+        let buckets = seq_buckets(max_seq);
+        prop::check(0xACC8_0004, prop::cases(64), |g| {
+            for m in 0..g.usize_in(2, 3) {
+                let bi = g.usize_in(0, buckets.len() - 1);
+                let lo = if bi == 0 { 1 } else { buckets[bi - 1] + 1 };
+                let n = g.usize_in(1, 32);
+                let reqs: Vec<Request> = (0..n)
+                    .map(|i| mk(i as u64, g.usize_in(lo, buckets[bi]), 0.0, m as i32))
+                    .collect();
+                let shape = flush_shape(n);
+                let claimed = &reqs[..shape.min(n)];
+                let true_tokens: usize = claimed.iter().map(|r| r.ids.len()).sum();
+                let (bids, _, _) = assemble_batch(claimed, shape, buckets[bi]);
+                let (mids, _, _) = assemble_batch(claimed, shape, max_seq);
+                let padded_bucket = bids.len() - true_tokens;
+                let padded_max = mids.len() - true_tokens;
+                assert!(padded_bucket <= padded_max, "model {m}");
+                assert!(
+                    padded_bucket as f64 / bids.len() as f64
+                        <= padded_max as f64 / mids.len() as f64 + 1e-12,
+                    "model {m}"
+                );
+            }
+        });
+    }
+
+    // Deadline isolation: when a model's armed deadline has expired and
+    // no (model, bucket) anywhere fills the largest shape, the dispatch
+    // goes to the model owning the *earliest* expired deadline — another
+    // model's partial queues, however deep, can never delay it.  Before
+    // any deadline expires the policy keeps waiting.
+    #[test]
+    fn prop_expired_deadline_is_isolated_from_other_models_queues() {
+        prop::check(0xACC8_0005, prop::cases(128), |g| {
+            let nb = g.usize_in(1, 4);
+            let base = Instant::now();
+            // model 0: an expired deadline in a random bucket
+            let b0 = g.usize_in(0, nb - 1);
+            let mut d0: Vec<usize> = (0..nb).map(|_| g.usize_in(0, 31)).collect();
+            if d0[b0] == 0 {
+                d0[b0] = 1;
+            }
+            let expired0 =
+                base.checked_sub(Duration::from_millis(5)).unwrap_or(base);
+            // model 1: deep-but-partial queues; its deadline is either
+            // unexpired or expired strictly later than model 0's
+            let d1: Vec<usize> = (0..nb).map(|_| g.usize_in(0, 31)).collect();
+            let b1 = g.usize_in(0, nb - 1);
+            let dl1 = if g.bool() {
+                base + Duration::from_secs(60)
+            } else {
+                expired0 + Duration::from_millis(1)
+            };
+            let now = base;
+            let got = dispatch_multi(
+                &[&d0, &d1],
+                &[Some((expired0, b0)), Some((dl1, b1))],
+                now,
+                false,
+            );
+            assert_eq!(
+                got,
+                Some((0, b0, flush_shape(d0[b0]))),
+                "model 0's expired deadline was delayed (d1 = {d1:?})"
+            );
+            // before expiry nothing dispatches, however deep model 1 is
+            let early = dispatch_multi(
+                &[&d0, &d1],
+                &[
+                    Some((now + Duration::from_secs(60), b0)),
+                    Some((now + Duration::from_secs(60), b1)),
+                ],
+                now,
+                false,
+            );
+            assert_eq!(early, None);
         });
     }
 }

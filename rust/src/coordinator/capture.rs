@@ -25,6 +25,7 @@ use std::path::Path;
 use anyhow::Result;
 
 use crate::nlp::sentiment::SentimentTask;
+use crate::nlp::span::{span_f1, SpanDataset};
 use crate::nlp::Dataset;
 use crate::runtime::{Manifest, Runtime};
 use crate::trace::{require_records, SparsityTrace, TraceBuilder, WeightRho};
@@ -146,6 +147,81 @@ pub fn capture_trace(
     ))
 }
 
+/// [`capture_trace`] for the span task: capture sparsity over a span
+/// eval set at `tau`, with mean token-overlap F1 riding along in
+/// `eval_accuracy` (the Fig. 14(b) metric).
+///
+/// The traced hooks all live in the *encoder* — embeddings through the
+/// last FFN — which classify and span share exactly (the heads differ
+/// only after the final hidden states), so the records come from
+/// `classify_traced` over the span eval ids; the span head runs
+/// separately on the same batches for the F1 score.
+pub fn capture_trace_span(
+    rt: &mut Runtime,
+    params: &[f32],
+    ds: &SpanDataset,
+    tau: f32,
+    max_examples: usize,
+) -> Result<SparsityTrace> {
+    let seq = ds.seq;
+    let n = ds.examples.len().min(max_examples.max(1));
+    let mut builder = TraceBuilder::new(rt.manifest.layers);
+    let mut f1_sum = 0.0f64;
+    let mut scored = 0usize;
+    let batch = 32usize;
+    let mut i = 0usize;
+    while i < n {
+        let fill = batch.min(n - i);
+        let mut ids = Vec::with_capacity(fill * seq);
+        for b in 0..fill {
+            ids.extend_from_slice(&ds.examples[i + b].ids);
+        }
+        let (_, records) = rt.classify_traced(fill, params, &ids, tau)?;
+        require_records(&records, rt.backend_name())?;
+        builder.add_all(&records);
+        let logits = rt.span_logits(fill, params, &ids, tau)?;
+        for b in 0..fill {
+            let row = &logits[b * seq * 2..(b + 1) * seq * 2];
+            let (mut s_best, mut e_best) = (0usize, 0usize);
+            let (mut smax, mut emax) = (f32::NEG_INFINITY, f32::NEG_INFINITY);
+            for p in 0..seq {
+                if row[p * 2] > smax {
+                    smax = row[p * 2];
+                    s_best = p;
+                }
+                if row[p * 2 + 1] > emax {
+                    emax = row[p * 2 + 1];
+                    e_best = p;
+                }
+            }
+            let ex = &ds.examples[i + b];
+            f1_sum += span_f1((s_best, e_best), (ex.start, ex.end));
+            scored += 1;
+        }
+        i += fill;
+    }
+
+    let probe = 8.min(n);
+    let mut probe_ids = Vec::with_capacity(probe * seq);
+    for b in 0..probe {
+        probe_ids.extend_from_slice(&ds.examples[b].ids);
+    }
+    let (_, probe_records) = rt.classify_traced(probe, params, &probe_ids, 0.0)?;
+    let mut inherent_builder = TraceBuilder::new(rt.manifest.layers);
+    inherent_builder.add_all(&probe_records);
+
+    let weight = measure_weight_rho(&rt.manifest, params);
+    Ok(builder.finish(
+        rt.manifest.model_name.clone(),
+        rt.backend_name(),
+        tau as f64,
+        scored,
+        f1_sum / scored.max(1) as f64,
+        inherent_builder.mean(),
+        weight,
+    ))
+}
+
 /// Capture at `tau` over *the* shared eval set — the seed-7 sentiment
 /// task, dataset variant 2, the same set every accuracy bench sweeps.
 /// This is the single place that eval-set contract lives; the benches,
@@ -232,6 +308,31 @@ mod tests {
         assert!(hi.mean_act_rho() > lo.mean_act_rho());
         // inherent probe is tau-independent: same value both captures
         assert_eq!(lo.inherent_act_rho, hi.inherent_act_rho);
+    }
+
+    #[test]
+    fn span_capture_aggregates_and_scores_f1() {
+        // SpanTask needs vocab > 64 for its marker tokens
+        let model = TransformerConfig {
+            name: "tiny-span-test".into(),
+            hidden: 32,
+            layers: 2,
+            heads: 2,
+            ff: 64,
+            vocab: 128,
+            seq: 16,
+        };
+        let mut rt = Runtime::reference_for(&model, 2).unwrap();
+        let params = ParamStore::init(&rt.manifest, 0).params;
+        let task =
+            crate::nlp::span::SpanTask::new(rt.manifest.vocab, rt.manifest.seq);
+        let ds = task.dataset(12, 1);
+        let t = capture_trace_span(&mut rt, &params, &ds, 0.05, 12).unwrap();
+        assert_eq!(t.layers.len(), 2);
+        assert_eq!(t.examples, 12);
+        // eval_accuracy carries mean span F1 here
+        assert!((0.0..=1.0).contains(&t.eval_accuracy));
+        assert!(t.mean_act_rho() > 0.0, "{t:?}");
     }
 
     #[test]

@@ -4,7 +4,7 @@
 
 use anyhow::Result;
 
-use crate::nlp::span::f1_score;
+use crate::nlp::span::{f1_score, span_f1, SpanDataset};
 use crate::nlp::Dataset;
 use crate::pruning::profile::Curve;
 use crate::runtime::Runtime;
@@ -117,6 +117,97 @@ fn evaluate_inner(
     })
 }
 
+/// Decode one row's position-major `(start, end)` logit pairs: argmax
+/// start and argmax end independently (the standard extractive decode).
+/// An inverted pair (`end < start`) scores as "no answer" in
+/// [`span_f1`], so no clamping happens here.
+fn span_prediction(row: &[f32], seq: usize) -> (usize, usize) {
+    let mut best = (0usize, 0usize);
+    let (mut smax, mut emax) = (f32::NEG_INFINITY, f32::NEG_INFINITY);
+    for p in 0..seq {
+        let s = row[p * 2];
+        let e = row[p * 2 + 1];
+        if s > smax {
+            smax = s;
+            best.0 = p;
+        }
+        if e > emax {
+            emax = e;
+            best.1 = p;
+        }
+    }
+    best
+}
+
+/// Evaluate the span task on `ds` at DynaTran threshold `tau`:
+/// `accuracy` is exact-match, `f1` is mean token-overlap [`span_f1`]
+/// (the Fig. 14(b) metric; both-no-answer rows score 1.0).
+pub fn evaluate_span(
+    rt: &mut Runtime,
+    params: &[f32],
+    ds: &SpanDataset,
+    tau: f32,
+    max_examples: usize,
+) -> Result<EvalReport> {
+    let seq = ds.seq;
+    let n = ds.examples.len().min(max_examples.max(1));
+    let mut exact = 0usize;
+    let mut f1_sum = 0.0f64;
+    let mut scored = 0usize;
+    let batch = 32usize;
+    let mut i = 0usize;
+    while i < n {
+        let fill = batch.min(n - i);
+        let mut ids = Vec::with_capacity(batch * seq);
+        for b in 0..batch {
+            let ex = &ds.examples[(i + b.min(fill - 1)).min(n - 1)];
+            ids.extend_from_slice(&ex.ids);
+        }
+        let logits = rt.span_logits(batch, params, &ids, tau)?;
+        for b in 0..fill {
+            let row = &logits[b * seq * 2..(b + 1) * seq * 2];
+            let pred = span_prediction(row, seq);
+            let ex = &ds.examples[i + b];
+            let gold = (ex.start, ex.end);
+            if pred == gold {
+                exact += 1;
+            }
+            f1_sum += span_f1(pred, gold);
+            scored += 1;
+        }
+        i += fill;
+    }
+    // activation sparsity probe on the first 8 examples
+    let mut probe_ids = Vec::with_capacity(8 * seq);
+    for b in 0..8 {
+        probe_ids.extend_from_slice(&ds.examples[b % n].ids);
+    }
+    let rho = rt.activation_sparsity(params, &probe_ids, tau)? as f64;
+    Ok(EvalReport {
+        accuracy: exact as f64 / scored as f64,
+        f1: f1_sum / scored as f64,
+        activation_sparsity: rho,
+        examples: scored,
+    })
+}
+
+/// Sweep DynaTran thresholds on the span task — the Fig. 14(b)
+/// F1-vs-sparsity curve (`y` is F1, not accuracy).
+pub fn sweep_dynatran_span(
+    rt: &mut Runtime,
+    params: &[f32],
+    ds: &SpanDataset,
+    taus: &[f32],
+    max_examples: usize,
+) -> Result<Curve> {
+    let mut curve = Curve::new("dynatran-span");
+    for &tau in taus {
+        let r = evaluate_span(rt, params, ds, tau, max_examples)?;
+        curve.push(tau as f64, r.activation_sparsity, r.f1);
+    }
+    Ok(curve)
+}
+
 /// Sweep DynaTran thresholds, producing a Fig. 11(a)/12 curve.
 pub fn sweep_dynatran(
     rt: &mut Runtime,
@@ -184,5 +275,15 @@ mod tests {
     #[test]
     fn predictions_handle_single_class_rows() {
         assert_eq!(predictions(&[1.0, 2.0], 1), vec![0, 0]);
+    }
+
+    #[test]
+    fn span_prediction_decodes_independent_argmaxes() {
+        // seq 3: start logits [0.1, 2.0, -1.0], end logits [0.0, 0.5, 3.0]
+        let row = [0.1f32, 0.0, 2.0, 0.5, -1.0, 3.0];
+        assert_eq!(span_prediction(&row, 3), (1, 2));
+        // inverted pairs are passed through (span_f1 treats them as empty)
+        let row = [0.1f32, 3.0, 2.0, 0.5, -1.0, 0.0];
+        assert_eq!(span_prediction(&row, 3), (1, 0));
     }
 }

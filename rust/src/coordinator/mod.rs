@@ -15,7 +15,10 @@
 //!   batching policy, stream per-request latencies into allocation-free
 //!   histograms, and — in sim-in-the-loop mode — cost every dispatched
 //!   batch on the cycle-accurate engine as well (the AccelTran-Server
-//!   vs Energon serving comparison of Sec. V-E).
+//!   vs Energon serving comparison of Sec. V-E).  Pools can host
+//!   several named `(checkpoint, task)` models at once — classify and
+//!   span runtimes side by side — with per-model queues (a batch never
+//!   mixes checkpoints), accounting, and sim costing.
 //! * [`eval`] — evaluation loops over `nlp` datasets: accuracy / F1 /
 //!   activation-sparsity sweeps across DynaTran tau and top-k keep
 //!   fractions (the Figs. 11/12/14 drivers).
@@ -36,10 +39,16 @@ pub use batcher::{
     seq_buckets, BatchServer, Priority, Request, Response, ServerStats,
     SubmitError, DEFAULT_MAX_QUEUE,
 };
-pub use capture::{capture_trace, measured_trace, measured_trace_with};
-pub use eval::{evaluate_accuracy, sweep_dynatran, sweep_topk, EvalReport};
-pub use serve::{
-    LatencyHistogram, PoolSnapshot, ServeConfig, ServePool, ServeReport,
-    ShapeModel, SimInLoop,
+pub use capture::{
+    capture_trace, capture_trace_span, measured_trace, measured_trace_with,
 };
-pub use trainer::{train, TrainLog};
+pub use eval::{
+    evaluate_accuracy, evaluate_span, sweep_dynatran, sweep_dynatran_span,
+    sweep_topk, EvalReport,
+};
+pub use serve::{
+    LatencyHistogram, ModelEntry, ModelInfo, ModelReport, ModelSnapshot,
+    PoolSnapshot, ServeConfig, ServePool, ServeReport, ShapeModel, SimInLoop,
+    TaskKind,
+};
+pub use trainer::{ensure_trained, ensure_trained_span, train, train_span, TrainLog};

@@ -51,6 +51,19 @@
 //! (measured queueing + simulated compute) side by side — the serving
 //! analogue of the trace-driven Figs. 17-20 pipeline.  Shapes repeat, so
 //! the simulation runs once per distinct batch shape and is cached.
+//!
+//! **Multi-model serving** ([`ServePool::start_multi`]): the pool can
+//! host several named `(checkpoint, task)` runtimes at once
+//! ([`ModelEntry`]).  Each model keeps its *own* length-bucketed
+//! queues, so a dispatched batch is always claimed from exactly one
+//! model's one bucket — a batch never mixes checkpoints — while the
+//! worker threads stay shared: any worker serves whichever model the
+//! dispatch policy ([`super::batcher`]'s `dispatch_multi`) picks next.
+//! Only full batches preempt deadlines, and expired deadlines are
+//! served earliest-first across models, so one model's half-filled
+//! queues can never delay another model's armed SLO.  Accounting,
+//! sim-in-the-loop costing and the `/stats` snapshot all stay per
+//! model ([`ModelSnapshot`], [`ModelReport`]).
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -61,7 +74,7 @@ use std::time::{Duration, Instant};
 use anyhow::{anyhow, Context, Result};
 
 use crate::coordinator::batcher::{
-    assemble_batch, dispatch_shape, BucketQueues, Priority, Request, Response,
+    assemble_batch, dispatch_multi, BucketQueues, Priority, Request, Response,
     ServerStats, SubmitError, DEFAULT_MAX_QUEUE,
 };
 use crate::model::TransformerConfig;
@@ -337,6 +350,64 @@ impl SimCache {
 // The worker pool
 // ---------------------------------------------------------------------------
 
+/// Which task a registered model serves — selects the backend entry
+/// point a dispatched batch executes
+/// ([`Runtime::classify_padded`] vs [`Runtime::span_logits_padded`])
+/// and the response logit layout.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TaskKind {
+    /// Sequence classification: responses carry `classes` logits.
+    Classify,
+    /// Extractive span: a length-`l` request's response carries `2 * l`
+    /// logits — its native-length start logits, then its end logits.
+    Span,
+}
+
+impl TaskKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            TaskKind::Classify => "classify",
+            TaskKind::Span => "span",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<TaskKind> {
+        match s {
+            "classify" => Some(TaskKind::Classify),
+            "span" => Some(TaskKind::Span),
+            _ => None,
+        }
+    }
+}
+
+/// One model registered with [`ServePool::start_multi`]: a named
+/// `(checkpoint, task)` pair served from its own length-bucketed queues
+/// by the shared worker threads.
+pub struct ModelEntry {
+    /// Routing key (unique within a pool; the HTTP front-end resolves
+    /// request model names against it).
+    pub name: String,
+    pub task: TaskKind,
+    /// Prototype runtime; each worker forks its own sibling.
+    pub runtime: Runtime,
+    /// The model's checkpoint (read-only, shared across workers behind
+    /// one `Arc`).
+    pub params: Vec<f32>,
+    /// Optional per-model sim-in-the-loop costing.
+    pub sim: Option<SimInLoop>,
+}
+
+/// Static description of a registered model ([`ServePool::models`]).
+#[derive(Clone, Debug)]
+pub struct ModelInfo {
+    pub name: String,
+    pub task: TaskKind,
+    /// Maximum token count a request for this model may carry.
+    pub seq: usize,
+    pub vocab: usize,
+    pub classes: usize,
+}
+
 /// Serving-engine knobs.
 #[derive(Clone, Debug)]
 pub struct ServeConfig {
@@ -379,9 +450,22 @@ impl Default for ServeConfig {
 const HOUSEKEEPING: Duration = Duration::from_millis(20);
 
 struct QueueState {
-    queues: BucketQueues,
+    /// One set of length buckets per registered model (index-aligned
+    /// with [`ServePool::models`]); a claim always drains exactly one
+    /// model's one bucket.
+    queues: Vec<BucketQueues>,
     closed: bool,
-    high_water: u64,
+    /// High-water mark of the *total* pending count (the shared
+    /// admission bound's view).
+    high_water_total: u64,
+    /// Per-model pending high-water marks.
+    high_water: Vec<u64>,
+}
+
+impl QueueState {
+    fn pending(&self) -> usize {
+        self.queues.iter().map(|q| q.len()).sum()
+    }
 }
 
 /// Accounting every worker folds into after each dispatched batch (one
@@ -402,7 +486,8 @@ struct Shared {
     state: Mutex<QueueState>,
     work: Condvar,
     completed: AtomicU64,
-    live: Mutex<LiveAccounting>,
+    /// One accounting slot per model (index-aligned with the queues).
+    live: Mutex<Vec<LiveAccounting>>,
 }
 
 /// The concurrent serving engine: start it over a prototype runtime,
@@ -415,60 +500,113 @@ pub struct ServePool {
     slo: Duration,
     batch_slo: Duration,
     max_queue: usize,
-    /// Maximum token count per request (the manifest's `seq`), checked
-    /// at submit so a malformed request cannot poison a worker's batch.
-    seq: usize,
-    vocab: usize,
-    classes: usize,
+    /// Registered models, in registration order (queue/accounting
+    /// indices refer into this).
+    models: Vec<ModelInfo>,
     started: Instant,
     backend: String,
-    sim: Option<Arc<SimCache>>,
+    sims: Vec<Option<Arc<SimCache>>>,
 }
 
 impl ServePool {
     /// Spawn `cfg.workers` worker threads, each over
     /// [`Runtime::fork`]`(proto)`; the (read-only) `params` buffer is
-    /// shared across workers behind one [`Arc`].
+    /// shared across workers behind one [`Arc`].  Single-model wrapper
+    /// of [`ServePool::start_multi`]: the model registers under the
+    /// name `"default"` with the classify task and `cfg.sim`.
     pub fn start(proto: &Runtime, params: &[f32], cfg: &ServeConfig) -> Result<ServePool> {
+        let entry = ModelEntry {
+            name: "default".into(),
+            task: TaskKind::Classify,
+            runtime: proto.fork().context("forking backend for the serve pool")?,
+            params: params.to_vec(),
+            sim: cfg.sim.clone(),
+        };
+        ServePool::start_multi(vec![entry], cfg)
+    }
+
+    /// Spawn the pool over several named `(checkpoint, task)` models.
+    /// Every worker thread forks a runtime for *every* model, so any
+    /// worker can serve whichever model the dispatch policy picks;
+    /// each model gets its own length-bucketed queues (a dispatched
+    /// batch never mixes models) and its own accounting/sim sections.
+    pub fn start_multi(entries: Vec<ModelEntry>, cfg: &ServeConfig) -> Result<ServePool> {
+        anyhow::ensure!(!entries.is_empty(), "serve pool needs at least one model");
+        for (i, e) in entries.iter().enumerate() {
+            anyhow::ensure!(
+                !entries[..i].iter().any(|p| p.name == e.name),
+                "duplicate serve model name '{}'",
+                e.name
+            );
+        }
         let n_workers = cfg.workers.max(1);
-        let params: Arc<Vec<f32>> = Arc::new(params.to_vec());
+        let n_models = entries.len();
+        let infos: Vec<ModelInfo> = entries
+            .iter()
+            .map(|e| ModelInfo {
+                name: e.name.clone(),
+                task: e.task,
+                seq: e.runtime.manifest.seq,
+                vocab: e.runtime.manifest.vocab,
+                classes: e.runtime.manifest.classes,
+            })
+            .collect();
+        let backend = entries[0].runtime.backend_name().to_string();
         let shared = Arc::new(Shared {
             state: Mutex::new(QueueState {
-                queues: BucketQueues::new(proto.manifest.seq),
+                queues: entries
+                    .iter()
+                    .map(|e| BucketQueues::new(e.runtime.manifest.seq))
+                    .collect(),
                 closed: false,
-                high_water: 0,
+                high_water_total: 0,
+                high_water: vec![0; n_models],
             }),
             work: Condvar::new(),
             completed: AtomicU64::new(0),
-            live: Mutex::new(LiveAccounting::default()),
+            live: Mutex::new((0..n_models).map(|_| LiveAccounting::default()).collect()),
         });
-        let sim = cfg.sim.clone().map(|spec| {
-            Arc::new(SimCache { spec, shapes: Mutex::new(HashMap::new()) })
-        });
-        // Pre-warm the modeled-cost cache for every batch shape at the
-        // full-length bucket BEFORE any worker starts: a cache miss runs
-        // the full cycle-accurate engine (far longer than an SLO), and
-        // on the serving path that stall would leak into the queue
-        // latencies of every request waiting behind the dispatch.
+        // Pre-warm each model's modeled-cost cache for every batch shape
+        // at the full-length bucket BEFORE any worker starts: a cache
+        // miss runs the full cycle-accurate engine (far longer than an
+        // SLO), and on the serving path that stall would leak into the
+        // queue latencies of every request waiting behind the dispatch.
         // Warming here keeps the uniform full-length serving path
         // lookup-only; shorter buckets (mixed-length traffic) fall back
         // to on-miss simulation, each shape exactly once.
-        if let Some(cache) = &sim {
-            for &shape in crate::coordinator::batcher::BATCH_SHAPES {
-                cache.model_for(cache.spec.seq, shape);
+        let mut sims: Vec<Option<Arc<SimCache>>> = Vec::with_capacity(n_models);
+        for e in &entries {
+            let cache = e.sim.clone().map(|spec| {
+                Arc::new(SimCache { spec, shapes: Mutex::new(HashMap::new()) })
+            });
+            if let Some(cache) = &cache {
+                for &shape in crate::coordinator::batcher::BATCH_SHAPES {
+                    cache.model_for(cache.spec.seq, shape);
+                }
             }
+            sims.push(cache);
         }
+        let protos: Vec<(Runtime, Arc<Vec<f32>>, TaskKind)> = entries
+            .into_iter()
+            .map(|e| (e.runtime, Arc::new(e.params), e.task))
+            .collect();
         let mut workers = Vec::with_capacity(n_workers);
         for w in 0..n_workers {
-            let rt = proto
-                .fork()
-                .with_context(|| format!("forking backend for serve worker {w}"))?;
-            let params = Arc::clone(&params);
+            let mut wmodels = Vec::with_capacity(n_models);
+            for (m, (proto, params, task)) in protos.iter().enumerate() {
+                wmodels.push(WorkerModel {
+                    rt: proto.fork().with_context(|| {
+                        format!("forking model {m} for serve worker {w}")
+                    })?,
+                    params: Arc::clone(params),
+                    sim: sims[m].clone(),
+                    task: *task,
+                });
+            }
             let shared = Arc::clone(&shared);
-            let sim = sim.clone();
             let handle = std::thread::Builder::new()
                 .name(format!("serve-worker-{w}"))
-                .spawn(move || worker_loop(rt, params, shared, sim))
+                .spawn(move || worker_loop(wmodels, shared))
                 .with_context(|| format!("spawning serve worker {w}"))?;
             workers.push(handle);
         }
@@ -479,37 +617,49 @@ impl ServePool {
             slo: cfg.slo,
             batch_slo: cfg.batch_slo,
             max_queue: cfg.max_queue.max(1),
-            seq: proto.manifest.seq,
-            vocab: proto.manifest.vocab,
-            classes: proto.manifest.classes,
+            models: infos,
             started: Instant::now(),
-            backend: proto.backend_name().to_string(),
-            sim,
+            backend,
+            sims,
         })
     }
 
-    /// Maximum token count a request may carry (the manifest's `seq`;
-    /// any native length `1..=seq` is accepted and served in its
-    /// length bucket).
+    /// Maximum token count a request for the *first* model may carry
+    /// (its manifest's `seq`; any native length `1..=seq` is accepted
+    /// and served in its length bucket).  Multi-model callers use
+    /// [`ServePool::models`].
     pub fn seq(&self) -> usize {
-        self.seq
+        self.models[0].seq
     }
 
-    /// Vocabulary size of the served model (valid token ids are
+    /// Vocabulary size of the first served model (valid token ids are
     /// `0..vocab`).
     pub fn vocab(&self) -> usize {
-        self.vocab
+        self.models[0].vocab
     }
 
-    /// Logit count per request (`Response::logits.len()`).
+    /// Logit count per classify request on the first model
+    /// (`Response::logits.len()`).
     pub fn classes(&self) -> usize {
-        self.classes
+        self.models[0].classes
     }
 
-    /// Enqueue a request under the pool's default SLO and interactive
-    /// priority; returns its id.  Thread-safe: any number of submitters
-    /// may run against the pool.  Errors (never panics) on a token
-    /// count outside `1..=seq` or a queue at its admission bound.
+    /// Registered models, in registration order; the index of an entry
+    /// is the `model` argument the `submit_model_*` family takes.
+    pub fn models(&self) -> &[ModelInfo] {
+        &self.models
+    }
+
+    /// Resolve a model name to its index.
+    pub fn find_model(&self, name: &str) -> Option<usize> {
+        self.models.iter().position(|m| m.name == name)
+    }
+
+    /// Enqueue a request for the first model under the pool's default
+    /// SLO and interactive priority; returns its id.  Thread-safe: any
+    /// number of submitters may run against the pool.  Errors (never
+    /// panics) on a token count outside `1..=seq` or a queue at its
+    /// admission bound.
     pub fn submit(&self, ids: Vec<i32>, tau: f32) -> Result<u64, SubmitError> {
         self.submit_with_slo(ids, tau, self.slo)
     }
@@ -521,7 +671,7 @@ impl ServePool {
         tau: f32,
         slo: Duration,
     ) -> Result<u64, SubmitError> {
-        self.enqueue(ids, tau, slo, Priority::Interactive, None)
+        self.enqueue(0, ids, tau, slo, Priority::Interactive, None)
     }
 
     /// Enqueue under a scheduling class: [`Priority::Batch`] requests
@@ -533,7 +683,19 @@ impl ServePool {
         tau: f32,
         priority: Priority,
     ) -> Result<u64, SubmitError> {
-        self.enqueue(ids, tau, self.slo_for(priority), priority, None)
+        self.enqueue(0, ids, tau, self.slo_for(priority), priority, None)
+    }
+
+    /// [`ServePool::submit_with_priority`] against an explicit
+    /// registered model (index into [`ServePool::models`]).
+    pub fn submit_model_with_priority(
+        &self,
+        model: usize,
+        ids: Vec<i32>,
+        tau: f32,
+        priority: Priority,
+    ) -> Result<u64, SubmitError> {
+        self.enqueue(model, ids, tau, self.slo_for(priority), priority, None)
     }
 
     /// Enqueue under the default SLO with a per-request completion
@@ -549,7 +711,7 @@ impl ServePool {
         tau: f32,
         reply: mpsc::Sender<Response>,
     ) -> Result<u64, SubmitError> {
-        self.enqueue(ids, tau, self.slo, Priority::Interactive, Some(reply))
+        self.enqueue(0, ids, tau, self.slo, Priority::Interactive, Some(reply))
     }
 
     /// [`ServePool::submit_with_reply`] with an explicit scheduling
@@ -561,7 +723,20 @@ impl ServePool {
         priority: Priority,
         reply: mpsc::Sender<Response>,
     ) -> Result<u64, SubmitError> {
-        self.enqueue(ids, tau, self.slo_for(priority), priority, Some(reply))
+        self.enqueue(0, ids, tau, self.slo_for(priority), priority, Some(reply))
+    }
+
+    /// [`ServePool::submit_with_reply_priority`] against an explicit
+    /// registered model — the multi-model HTTP path.
+    pub fn submit_model_with_reply_priority(
+        &self,
+        model: usize,
+        ids: Vec<i32>,
+        tau: f32,
+        priority: Priority,
+        reply: mpsc::Sender<Response>,
+    ) -> Result<u64, SubmitError> {
+        self.enqueue(model, ids, tau, self.slo_for(priority), priority, Some(reply))
     }
 
     /// Atomically enqueue a multi-request submission (the HTTP batch
@@ -574,9 +749,22 @@ impl ServePool {
         rows: Vec<(Vec<i32>, f32, Priority)>,
         reply: &mpsc::Sender<Response>,
     ) -> Result<Vec<u64>, SubmitError> {
+        self.submit_batch_model_with_reply(0, rows, reply)
+    }
+
+    /// [`ServePool::submit_batch_with_reply`] against an explicit
+    /// registered model.  All rows route to the same model (a batch
+    /// submission cannot span checkpoints).
+    pub fn submit_batch_model_with_reply(
+        &self,
+        model: usize,
+        rows: Vec<(Vec<i32>, f32, Priority)>,
+        reply: &mpsc::Sender<Response>,
+    ) -> Result<Vec<u64>, SubmitError> {
+        let max_seq = self.models[model].seq;
         for (ids, _, _) in &rows {
-            if ids.is_empty() || ids.len() > self.seq {
-                return Err(SubmitError::BadLength { got: ids.len(), max_seq: self.seq });
+            if ids.is_empty() || ids.len() > max_seq {
+                return Err(SubmitError::BadLength { got: ids.len(), max_seq });
             }
         }
         let enqueued_at = Instant::now();
@@ -587,13 +775,13 @@ impl ServePool {
                 // drained pools reject like a full queue: retry elsewhere
                 return Err(SubmitError::QueueFull { pending: 0, bound: 0 });
             }
-            let pending = st.queues.len();
+            let pending = st.pending();
             if pending + rows.len() > self.max_queue {
                 return Err(SubmitError::QueueFull { pending, bound: self.max_queue });
             }
             for (ids, tau, priority) in rows {
                 let id = self.next_id.fetch_add(1, Ordering::Relaxed);
-                st.queues.push(Request {
+                st.queues[model].push(Request {
                     id,
                     ids,
                     tau,
@@ -604,7 +792,9 @@ impl ServePool {
                 });
                 out.push(id);
             }
-            st.high_water = st.high_water.max(st.queues.len() as u64);
+            st.high_water[model] =
+                st.high_water[model].max(st.queues[model].len() as u64);
+            st.high_water_total = st.high_water_total.max(st.pending() as u64);
         }
         self.shared.work.notify_all();
         Ok(out)
@@ -619,24 +809,27 @@ impl ServePool {
 
     fn enqueue(
         &self,
+        model: usize,
         ids: Vec<i32>,
         tau: f32,
         slo: Duration,
         priority: Priority,
         reply: Option<mpsc::Sender<Response>>,
     ) -> Result<u64, SubmitError> {
-        if ids.is_empty() || ids.len() > self.seq {
-            return Err(SubmitError::BadLength { got: ids.len(), max_seq: self.seq });
+        assert!(model < self.models.len(), "model index {model} out of range");
+        let max_seq = self.models[model].seq;
+        if ids.is_empty() || ids.len() > max_seq {
+            return Err(SubmitError::BadLength { got: ids.len(), max_seq });
         }
         let enqueued_at = Instant::now();
         let id = {
             let mut st = self.shared.state.lock().unwrap();
-            let pending = st.queues.len();
+            let pending = st.pending();
             if pending >= self.max_queue {
                 return Err(SubmitError::QueueFull { pending, bound: self.max_queue });
             }
             let id = self.next_id.fetch_add(1, Ordering::Relaxed);
-            st.queues.push(Request {
+            st.queues[model].push(Request {
                 id,
                 ids,
                 tau,
@@ -645,7 +838,9 @@ impl ServePool {
                 priority,
                 reply,
             });
-            st.high_water = st.high_water.max(st.queues.len() as u64);
+            st.high_water[model] =
+                st.high_water[model].max(st.queues[model].len() as u64);
+            st.high_water_total = st.high_water_total.max((pending + 1) as u64);
             id
         };
         self.shared.work.notify_one();
@@ -657,9 +852,15 @@ impl ServePool {
         self.shared.completed.load(Ordering::Relaxed)
     }
 
-    /// Requests currently queued (excludes batches in flight).
+    /// Requests currently queued across all models (excludes batches in
+    /// flight).
     pub fn pending(&self) -> usize {
-        self.shared.state.lock().unwrap().queues.len()
+        self.shared.state.lock().unwrap().pending()
+    }
+
+    /// Requests currently queued for one model.
+    pub fn pending_model(&self, model: usize) -> usize {
+        self.shared.state.lock().unwrap().queues[model].len()
     }
 
     /// Admission bound this pool enforces (`ServeConfig::max_queue`).
@@ -670,34 +871,72 @@ impl ServePool {
     /// Live accounting snapshot — current stats and latency histograms
     /// without closing the pool (the `/stats` endpoint's data source).
     /// Cheap relative to a dispatch: two short lock acquisitions and a
-    /// fixed-size histogram copy per call.
+    /// fixed-size histogram copy per call.  The top-level fields merge
+    /// across models; `models` carries the per-model sections.
     pub fn snapshot(&self) -> PoolSnapshot {
-        let (pending, high_water, bucket_depths) = {
+        let (per_pending, per_depths, high_water_total, per_high) = {
             let st = self.shared.state.lock().unwrap();
-            let depths: Vec<(usize, usize)> = st
+            let per_pending: Vec<usize> = st.queues.iter().map(|q| q.len()).collect();
+            let per_depths: Vec<Vec<(usize, usize)>> = st
                 .queues
-                .seqs()
                 .iter()
-                .copied()
-                .zip(st.queues.depths())
+                .map(|q| q.seqs().iter().copied().zip(q.depths()).collect())
                 .collect();
-            (st.queues.len(), st.high_water, depths)
+            (per_pending, per_depths, st.high_water_total, st.high_water.clone())
         };
         let live = self.shared.live.lock().unwrap();
-        let mut stats = live.stats.clone();
-        stats.queue_depth_high_water = high_water;
+        let mut merged = LiveAccounting::default();
+        for la in live.iter() {
+            merged.stats.merge(&la.stats);
+            merged.queue_h.merge(&la.queue_h);
+            merged.compute_h.merge(&la.compute_h);
+            merged.total_h.merge(&la.total_h);
+            merged.deadline_misses += la.deadline_misses;
+        }
+        merged.stats.queue_depth_high_water = high_water_total;
+        // merged bucket view: depths summed per bucket seq across models
+        let mut by_seq: std::collections::BTreeMap<usize, usize> =
+            std::collections::BTreeMap::new();
+        for depths in &per_depths {
+            for &(seq, d) in depths {
+                *by_seq.entry(seq).or_insert(0) += d;
+            }
+        }
+        let models: Vec<ModelSnapshot> = self
+            .models
+            .iter()
+            .enumerate()
+            .map(|(m, info)| {
+                let la = &live[m];
+                let mut stats = la.stats.clone();
+                stats.queue_depth_high_water = per_high[m];
+                ModelSnapshot {
+                    name: info.name.clone(),
+                    task: info.task,
+                    seq: info.seq,
+                    classes: info.classes,
+                    pending: per_pending[m],
+                    bucket_depths: per_depths[m].clone(),
+                    served: la.stats.served,
+                    deadline_misses: la.deadline_misses,
+                    stats,
+                    total_latency: la.total_h.clone(),
+                }
+            })
+            .collect();
         PoolSnapshot {
             backend: self.backend.clone(),
             workers: self.workers.len(),
             submitted: self.next_id.load(Ordering::Relaxed),
             completed: self.shared.completed.load(Ordering::Relaxed),
-            pending,
-            bucket_depths,
-            deadline_misses: live.deadline_misses,
-            queue_latency: live.queue_h.clone(),
-            compute_latency: live.compute_h.clone(),
-            total_latency: live.total_h.clone(),
-            stats,
+            pending: per_pending.iter().sum(),
+            bucket_depths: by_seq.into_iter().collect(),
+            deadline_misses: merged.deadline_misses,
+            queue_latency: merged.queue_h,
+            compute_latency: merged.compute_h,
+            total_latency: merged.total_h,
+            stats: merged.stats,
+            models,
             uptime: self.started.elapsed(),
         }
     }
@@ -729,19 +968,59 @@ impl ServePool {
             return Err(e.context("serve worker failed"));
         }
         let wall = self.started.elapsed();
-        let mut merged =
+        let live_vec: Vec<LiveAccounting> =
             std::mem::take(&mut *self.shared.live.lock().unwrap());
-        merged.stats.queue_depth_high_water =
-            self.shared.state.lock().unwrap().high_water;
-        let (modeled_latency, modeled_shapes, sim_config) = match &self.sim {
-            Some(cache) => {
-                let mut shapes: Vec<ShapeModel> =
-                    cache.shapes.lock().unwrap().values().copied().collect();
-                shapes.sort_by_key(|m| (m.seq, m.batch));
-                (Some(merged.modeled_h), shapes, Some(cache.describe()))
-            }
-            None => (None, Vec::new(), None),
+        let (high_water_total, per_high) = {
+            let st = self.shared.state.lock().unwrap();
+            (st.high_water_total, st.high_water.clone())
         };
+        let mut merged = LiveAccounting::default();
+        for la in &live_vec {
+            merged.stats.merge(&la.stats);
+            merged.queue_h.merge(&la.queue_h);
+            merged.compute_h.merge(&la.compute_h);
+            merged.total_h.merge(&la.total_h);
+            merged.modeled_h.merge(&la.modeled_h);
+            merged.deadline_misses += la.deadline_misses;
+        }
+        merged.stats.queue_depth_high_water = high_water_total;
+        let any_sim = self.sims.iter().any(|s| s.is_some());
+        let mut modeled_shapes: Vec<ShapeModel> = Vec::new();
+        let mut descs: Vec<String> = Vec::new();
+        for cache in self.sims.iter().flatten() {
+            modeled_shapes.extend(cache.shapes.lock().unwrap().values().copied());
+            let d = cache.describe();
+            if !descs.contains(&d) {
+                descs.push(d);
+            }
+        }
+        modeled_shapes.sort_by_key(|m| (m.seq, m.batch));
+        let (modeled_latency, sim_config) = if any_sim {
+            (Some(merged.modeled_h), Some(descs.join("; ")))
+        } else {
+            (None, None)
+        };
+        let models: Vec<ModelReport> = self
+            .models
+            .iter()
+            .enumerate()
+            .map(|(m, info)| {
+                let la = &live_vec[m];
+                let mut stats = la.stats.clone();
+                stats.queue_depth_high_water = per_high[m];
+                ModelReport {
+                    name: info.name.clone(),
+                    task: info.task,
+                    requests: la.stats.served,
+                    deadline_misses: la.deadline_misses,
+                    stats,
+                    total_latency: la.total_h.clone(),
+                    modeled_latency: self.sims[m]
+                        .as_ref()
+                        .map(|_| la.modeled_h.clone()),
+                }
+            })
+            .collect();
         let report = ServeReport {
             backend: self.backend,
             workers: n_workers,
@@ -757,6 +1036,7 @@ impl ServePool {
             modeled_latency,
             modeled_shapes,
             sim_config,
+            models,
         };
         Ok((report, responses))
     }
@@ -790,8 +1070,69 @@ pub struct PoolSnapshot {
     pub compute_latency: LatencyHistogram,
     /// Submit-to-response latency histogram.
     pub total_latency: LatencyHistogram,
+    /// Per-model sections (one per registered model, in registration
+    /// order); a single-model pool has exactly one.
+    pub models: Vec<ModelSnapshot>,
     /// Time since [`ServePool::start`].
     pub uptime: Duration,
+}
+
+/// One model's slice of a [`PoolSnapshot`].
+#[derive(Clone, Debug)]
+pub struct ModelSnapshot {
+    pub name: String,
+    pub task: TaskKind,
+    pub seq: usize,
+    pub classes: usize,
+    /// Requests currently queued for this model.
+    pub pending: usize,
+    /// This model's per-length-bucket queue depths as
+    /// `(bucket_seq, depth)`, ascending by seq.
+    pub bucket_depths: Vec<(usize, usize)>,
+    /// Requests served from this model's queues so far.
+    pub served: u64,
+    pub deadline_misses: u64,
+    /// Dispatch accounting for this model only (high-water is the
+    /// model's own pending peak).
+    pub stats: ServerStats,
+    /// Submit-to-response latency histogram for this model's requests.
+    pub total_latency: LatencyHistogram,
+}
+
+impl ModelSnapshot {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("name", Json::str(self.name.clone())),
+            ("task", Json::str(self.task.name())),
+            ("seq", Json::num(self.seq as f64)),
+            ("classes", Json::num(self.classes as f64)),
+            ("pending", Json::num(self.pending as f64)),
+            ("served", Json::num(self.served as f64)),
+            ("deadline_misses", Json::num(self.deadline_misses as f64)),
+            ("dispatches", Json::num(self.stats.dispatches as f64)),
+            (
+                "padded_token_fraction",
+                Json::num(self.stats.padded_token_fraction()),
+            ),
+            (
+                "queue_depth_high_water",
+                Json::num(self.stats.queue_depth_high_water as f64),
+            ),
+            (
+                "buckets",
+                Json::arr(self.bucket_depths.iter().map(|&(seq, depth)| {
+                    Json::obj(vec![
+                        ("seq", Json::num(seq as f64)),
+                        ("depth", Json::num(depth as f64)),
+                    ])
+                })),
+            ),
+            (
+                "latency_us",
+                Json::obj(vec![("total", self.total_latency.to_json())]),
+            ),
+        ])
+    }
 }
 
 impl PoolSnapshot {
@@ -843,50 +1184,68 @@ impl PoolSnapshot {
                     ("total", self.total_latency.to_json()),
                 ]),
             ),
+            (
+                "models",
+                Json::arr(self.models.iter().map(|m| m.to_json())),
+            ),
         ])
     }
 }
 
-fn worker_loop(
-    mut rt: Runtime,
+/// One model's per-worker execution state: a forked runtime, the shared
+/// checkpoint, the task selecting the entry point, and the model's
+/// modeled-cost cache.
+struct WorkerModel {
+    rt: Runtime,
     params: Arc<Vec<f32>>,
-    shared: Arc<Shared>,
     sim: Option<Arc<SimCache>>,
+    task: TaskKind,
+}
+
+fn worker_loop(
+    mut models: Vec<WorkerModel>,
+    shared: Arc<Shared>,
 ) -> Result<Vec<Response>> {
-    let max_seq = rt.manifest.seq;
-    let classes = rt.manifest.classes;
     let mut retained: Vec<Response> = Vec::new();
     loop {
         // ---- claim a batch under the queue lock ------------------------
         // The claim happens at the dispatch instant, not when the policy
         // first armed a deadline: every same-bucket request that arrived
         // during the wait below is still in the queues here and rides
-        // the flush (in-flight topping-off).
+        // the flush (in-flight topping-off).  The dispatch decision
+        // spans every model's queues, but the claim drains exactly one
+        // model's one bucket — a batch never mixes checkpoints.
         let picked = {
             let mut st = shared.state.lock().unwrap();
             loop {
                 let now = Instant::now();
-                let nearest = st.queues.nearest_deadline();
-                let choice =
-                    dispatch_shape(&st.queues.depths(), nearest, now, st.closed);
-                if let Some((bucket, shape)) = choice {
-                    let bucket_seq = st.queues.seqs()[bucket];
-                    let reqs = st.queues.claim(bucket, shape);
-                    if !st.queues.is_empty() {
+                let depth_vecs: Vec<Vec<usize>> =
+                    st.queues.iter().map(|q| q.depths()).collect();
+                let depth_refs: Vec<&[usize]> =
+                    depth_vecs.iter().map(|v| v.as_slice()).collect();
+                let deadlines: Vec<Option<(Instant, usize)>> =
+                    st.queues.iter().map(|q| q.nearest_deadline()).collect();
+                let choice = dispatch_multi(&depth_refs, &deadlines, now, st.closed);
+                if let Some((model, bucket, shape)) = choice {
+                    let bucket_seq = st.queues[model].seqs()[bucket];
+                    let reqs = st.queues[model].claim(bucket, shape);
+                    if st.queues.iter().any(|q| !q.is_empty()) {
                         // more work remains: wake a sibling
                         shared.work.notify_one();
                     }
-                    break Some((bucket_seq, shape, reqs));
+                    break Some((model, bucket_seq, shape, reqs));
                 }
-                if st.closed && st.queues.is_empty() {
+                if st.closed && st.queues.iter().all(|q| q.is_empty()) {
                     break None;
                 }
-                // park until the nearest queued deadline — submits (which
-                // can only bring the nearest deadline *earlier*) notify
-                // the condvar, so no shorter polling tick is needed; an
-                // empty queue just re-checks every HOUSEKEEPING interval
+                // park until the nearest queued deadline across models —
+                // submits (which can only bring the nearest deadline
+                // *earlier*) notify the condvar, so no shorter polling
+                // tick is needed; an empty queue just re-checks every
+                // HOUSEKEEPING interval
+                let nearest = deadlines.iter().flatten().map(|&(d, _)| d).min();
                 let wait = match nearest {
-                    Some((d, _)) => d
+                    Some(d) => d
                         .saturating_duration_since(now)
                         .max(Duration::from_micros(50)),
                     None => HOUSEKEEPING,
@@ -895,40 +1254,55 @@ fn worker_loop(
                 st = guard;
             }
         };
-        let Some((bucket_seq, shape, reqs)) = picked else {
+        let Some((model, bucket_seq, shape, reqs)) = picked else {
             return Ok(retained);
         };
 
         // ---- execute off-lock ------------------------------------------
+        let wm = &mut models[model];
+        let max_seq = wm.rt.manifest.seq;
+        let classes = wm.rt.manifest.classes;
         let dequeued = Instant::now();
         let fill = reqs.len();
         let true_tokens: usize = reqs.iter().map(|r| r.ids.len()).sum();
         let (ids, lens, tau) = assemble_batch(&reqs, shape, bucket_seq);
         let t0 = Instant::now();
-        let logits = rt.classify_padded(
-            shape,
-            bucket_seq,
-            &lens,
-            params.as_slice(),
-            &ids,
-            tau,
-        )?;
+        let logits = match wm.task {
+            TaskKind::Classify => wm.rt.classify_padded(
+                shape,
+                bucket_seq,
+                &lens,
+                wm.params.as_slice(),
+                &ids,
+                tau,
+            )?,
+            TaskKind::Span => wm.rt.span_logits_padded(
+                shape,
+                bucket_seq,
+                &lens,
+                wm.params.as_slice(),
+                &ids,
+                tau,
+            )?,
+        };
         let compute = t0.elapsed();
         // stamp completion BEFORE the modeled-cost lookup: a cache miss
         // runs the cycle-accurate simulation, and that modeling overhead
         // must not leak into the host-measured latencies or SLO misses
         let done = Instant::now();
-        let modeled = sim
+        let modeled = wm
+            .sim
             .as_ref()
             .map(|cache| cache.model_for(cache.sim_seq(bucket_seq, max_seq), shape));
 
         // ---- account ---------------------------------------------------
-        // fold this batch into the shared live accounting under one
-        // short lock (O(batch) histogram records), then deliver/retain
-        // responses off-lock
+        // fold this batch into the model's slot of the shared live
+        // accounting under one short lock (O(batch) histogram records),
+        // then deliver/retain responses off-lock
         let compute_us = compute.as_micros() as u64;
         {
             let mut live = shared.live.lock().unwrap();
+            let live = &mut live[model];
             live.stats.record(compute, fill, shape, bucket_seq, true_tokens);
             for r in &reqs {
                 let queue_us = dequeued
@@ -955,9 +1329,30 @@ fn worker_loop(
         shared.completed.fetch_add(fill as u64, Ordering::Relaxed);
         for (i, r) in reqs.into_iter().enumerate() {
             let total = done.saturating_duration_since(r.enqueued_at);
+            let out = match wm.task {
+                TaskKind::Classify => {
+                    logits[i * classes..(i + 1) * classes].to_vec()
+                }
+                TaskKind::Span => {
+                    // row i is position-major (start, end) pairs at the
+                    // bucket width; the response carries the split-half
+                    // native-length layout
+                    // [start_0..start_{l-1}, end_0..end_{l-1}]
+                    let l = r.ids.len();
+                    let row = &logits[i * bucket_seq * 2..(i + 1) * bucket_seq * 2];
+                    let mut out = Vec::with_capacity(2 * l);
+                    for p in 0..l {
+                        out.push(row[p * 2]);
+                    }
+                    for p in 0..l {
+                        out.push(row[p * 2 + 1]);
+                    }
+                    out
+                }
+            };
             let resp = Response {
                 id: r.id,
-                logits: logits[i * classes..(i + 1) * classes].to_vec(),
+                logits: out,
                 latency: total,
                 batch: shape,
             };
@@ -1007,8 +1402,59 @@ pub struct ServeReport {
     /// One cycle-accurate run per dispatchable batch shape (pre-warmed
     /// at pool start).
     pub modeled_shapes: Vec<ShapeModel>,
-    /// Human-readable sim-in-the-loop operating point.
+    /// Human-readable sim-in-the-loop operating point (multi-model
+    /// pools join each model's, `; `-separated).
     pub sim_config: Option<String>,
+    /// Per-model report sections, in registration order (a single-model
+    /// pool has exactly one; its numbers equal the merged top level).
+    pub models: Vec<ModelReport>,
+}
+
+/// One model's slice of a [`ServeReport`].
+#[derive(Clone, Debug)]
+pub struct ModelReport {
+    pub name: String,
+    pub task: TaskKind,
+    /// Requests served from this model's queues.
+    pub requests: u64,
+    pub deadline_misses: u64,
+    /// Dispatch accounting for this model only (high-water is the
+    /// model's own pending peak).
+    pub stats: ServerStats,
+    /// Submit-to-response latency histogram for this model's requests.
+    pub total_latency: LatencyHistogram,
+    /// Modeled-accelerator latency histogram; `None` when the model was
+    /// registered without [`SimInLoop`].
+    pub modeled_latency: Option<LatencyHistogram>,
+}
+
+impl ModelReport {
+    pub fn to_json(&self) -> Json {
+        let mut latency = vec![("total", self.total_latency.to_json())];
+        if let Some(m) = &self.modeled_latency {
+            latency.push(("modeled", m.to_json()));
+        }
+        Json::obj(vec![
+            ("name", Json::str(self.name.clone())),
+            ("task", Json::str(self.task.name())),
+            ("requests", Json::num(self.requests as f64)),
+            ("deadline_misses", Json::num(self.deadline_misses as f64)),
+            ("dispatches", Json::num(self.stats.dispatches as f64)),
+            (
+                "padded_row_fraction",
+                Json::num(self.stats.padded_row_fraction()),
+            ),
+            (
+                "padded_token_fraction",
+                Json::num(self.stats.padded_token_fraction()),
+            ),
+            (
+                "queue_depth_high_water",
+                Json::num(self.stats.queue_depth_high_water as f64),
+            ),
+            ("latency_us", Json::obj(latency)),
+        ])
+    }
 }
 
 impl ServeReport {
@@ -1055,6 +1501,10 @@ impl ServeReport {
                 Json::num(self.stats.queue_depth_high_water as f64),
             ),
             ("latency_us", Json::obj(latency)),
+            (
+                "models",
+                Json::arr(self.models.iter().map(|m| m.to_json())),
+            ),
         ];
         if let Some(cfg) = &self.sim_config {
             obj.push(("sim_config", Json::str(cfg.clone())));
@@ -1126,6 +1576,21 @@ impl ServeReport {
         line("total latency", &self.total_latency);
         if let Some(m) = &self.modeled_latency {
             line("modeled latency", m);
+        }
+        if self.models.len() > 1 {
+            for m in &self.models {
+                println!(
+                    "  model '{}' [{}]: {} served, {} dispatch(es), \
+                     {} SLO miss(es), p50 {} us, p99 {} us",
+                    m.name,
+                    m.task.name(),
+                    m.requests,
+                    m.stats.dispatches,
+                    m.deadline_misses,
+                    m.total_latency.percentile_us(50.0),
+                    m.total_latency.percentile_us(99.0),
+                );
+            }
         }
         if let Some(cfg) = &self.sim_config {
             println!("  sim-in-the-loop: {cfg}");
@@ -1568,5 +2033,153 @@ mod tests {
         let (report, responses) = pool.finish().unwrap();
         assert_eq!(report.requests, 6);
         assert_eq!(responses.len(), 6);
+    }
+
+    #[test]
+    fn single_model_report_carries_one_matching_section() {
+        let rt = micro_runtime();
+        let params = ParamStore::init(&rt.manifest, 0).params;
+        let cfg = ServeConfig {
+            workers: 1,
+            slo: Duration::from_millis(2),
+            sim: None,
+            ..Default::default()
+        };
+        let pool = ServePool::start(&rt, &params, &cfg).unwrap();
+        assert_eq!(pool.models().len(), 1);
+        assert_eq!(pool.models()[0].name, "default");
+        assert_eq!(pool.models()[0].task, TaskKind::Classify);
+        assert_eq!(pool.find_model("default"), Some(0));
+        assert_eq!(pool.find_model("nope"), None);
+        for r in micro_requests(&rt, 10) {
+            pool.submit(r, 0.01).unwrap();
+        }
+        let (report, _) = pool.finish().unwrap();
+        assert_eq!(report.models.len(), 1);
+        let section = &report.models[0];
+        assert_eq!(section.requests, report.requests);
+        assert_eq!(section.stats.dispatches, report.stats.dispatches);
+        assert_eq!(section.total_latency.count(), report.total_latency.count());
+        // the JSON report always carries the models array
+        let j = report.to_json();
+        assert!(j.get("models").is_some());
+    }
+
+    #[test]
+    fn multi_model_pool_serves_both_tasks_with_per_model_sections() {
+        // classify and span models sharing one pool: interleaved
+        // variable-length traffic, every response bit-identical to a
+        // solo native-length run on its own checkpoint, and the report
+        // splitting cleanly into per-model sections
+        let mut rt_c = micro_runtime();
+        let mut rt_s = micro_runtime();
+        let params_c = ParamStore::init(&rt_c.manifest, 0).params;
+        let params_s = ParamStore::init(&rt_s.manifest, 3).params;
+        let cfg = ServeConfig {
+            workers: 2,
+            slo: Duration::from_millis(2),
+            sim: None,
+            ..Default::default()
+        };
+        let pool = ServePool::start_multi(
+            vec![
+                ModelEntry {
+                    name: "classify".into(),
+                    task: TaskKind::Classify,
+                    runtime: rt_c.fork().unwrap(),
+                    params: params_c.clone(),
+                    sim: None,
+                },
+                ModelEntry {
+                    name: "span".into(),
+                    task: TaskKind::Span,
+                    runtime: rt_s.fork().unwrap(),
+                    params: params_s.clone(),
+                    sim: None,
+                },
+            ],
+            &cfg,
+        )
+        .unwrap();
+        assert_eq!(pool.find_model("classify"), Some(0));
+        assert_eq!(pool.find_model("span"), Some(1));
+        let snap = pool.snapshot();
+        assert_eq!(snap.models.len(), 2);
+        assert_eq!(snap.models[1].task, TaskKind::Span);
+        assert!(snap.to_json().get("models").is_some());
+        let vocab = rt_c.manifest.vocab as i32;
+        let reqs: Vec<Vec<i32>> = (0..24usize)
+            .map(|i| {
+                let len = 1 + (i * 5) % 16;
+                (0..len).map(|j| ((i * 7 + j * 3) as i32) % vocab).collect()
+            })
+            .collect();
+        let mut owners = Vec::new();
+        for (i, r) in reqs.iter().enumerate() {
+            let m = i % 2;
+            let id = pool
+                .submit_model_with_priority(m, r.clone(), 0.02, Priority::Interactive)
+                .unwrap();
+            owners.push((id, m, i));
+        }
+        let (report, responses) = pool.finish().unwrap();
+        assert_eq!(report.requests, 24);
+        assert_eq!(report.models.len(), 2);
+        assert_eq!(report.models[0].name, "classify");
+        assert_eq!(report.models[1].name, "span");
+        assert_eq!(report.models[0].requests, 12);
+        assert_eq!(report.models[1].requests, 12);
+        assert_eq!(report.models[1].task, TaskKind::Span);
+        let served: u64 = report.models.iter().map(|m| m.stats.served).sum();
+        assert_eq!(served, report.stats.served);
+        for (id, m, i) in owners {
+            let resp = responses.iter().find(|r| r.id == id).unwrap();
+            let ids = &reqs[i];
+            let l = ids.len();
+            if m == 0 {
+                let solo = rt_c.classify(1, &params_c, ids, 0.02).unwrap();
+                assert_eq!(resp.logits, solo, "classify request {i} drifted");
+            } else {
+                assert_eq!(resp.logits.len(), 2 * l, "span request {i} logit count");
+                let solo = rt_s.span_logits(1, &params_s, ids, 0.02).unwrap();
+                for p in 0..l {
+                    assert_eq!(
+                        resp.logits[p],
+                        solo[p * 2],
+                        "span request {i} start logit {p}"
+                    );
+                    assert_eq!(
+                        resp.logits[l + p],
+                        solo[p * 2 + 1],
+                        "span request {i} end logit {p}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn multi_model_rejects_duplicate_names_and_validates_per_model_seq() {
+        let rt = micro_runtime();
+        let params = ParamStore::init(&rt.manifest, 0).params;
+        let cfg = ServeConfig { workers: 1, sim: None, ..Default::default() };
+        let mk = |name: &str| ModelEntry {
+            name: name.into(),
+            task: TaskKind::Classify,
+            runtime: rt.fork().unwrap(),
+            params: params.clone(),
+            sim: None,
+        };
+        assert!(ServePool::start_multi(vec![mk("a"), mk("a")], &cfg).is_err());
+        assert!(ServePool::start_multi(vec![], &cfg).is_err());
+        let pool = ServePool::start_multi(vec![mk("a"), mk("b")], &cfg).unwrap();
+        // per-model length validation (both models are seq=16 here)
+        assert_eq!(
+            pool.submit_model_with_priority(1, vec![0; 17], 0.0, Priority::Interactive),
+            Err(SubmitError::BadLength { got: 17, max_seq: 16 })
+        );
+        let (report, _) = pool.finish().unwrap();
+        assert_eq!(report.requests, 0);
+        assert_eq!(report.models.len(), 2);
     }
 }

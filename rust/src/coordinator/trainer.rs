@@ -10,6 +10,7 @@
 
 use anyhow::Result;
 
+use crate::nlp::span::SpanDataset;
 use crate::nlp::Dataset;
 use crate::runtime::{ParamStore, Runtime};
 
@@ -84,6 +85,60 @@ pub fn train(
     Ok(log)
 }
 
+/// Span-task counterpart of [`train`]: streams `(ids, starts, ends)`
+/// batches through the backend's `span_train_step`, evaluating
+/// token-overlap F1 on `val` every `eval_every` steps.  F1 checkpoints
+/// land in `TrainLog::val_accuracy` — the field holds whichever scalar
+/// metric the task validates with.
+#[allow(clippy::too_many_arguments)]
+pub fn train_span(
+    rt: &mut Runtime,
+    store: &mut ParamStore,
+    train_ds: &SpanDataset,
+    val_ds: Option<&SpanDataset>,
+    steps: usize,
+    lr: f32,
+    eval_every: usize,
+    verbose: bool,
+) -> Result<TrainLog> {
+    let batch = 32usize;
+    let batches = train_ds.batches(batch);
+    assert!(!batches.is_empty());
+    let mut log = TrainLog::default();
+    for step in 0..steps {
+        let (ids, starts, ends) = &batches[step % batches.len()];
+        let loss = rt.span_train_step(
+            &mut store.params,
+            &mut store.m,
+            &mut store.v,
+            store.step,
+            ids,
+            starts,
+            ends,
+            lr,
+        )?;
+        store.step += 1.0;
+        log.losses.push(loss);
+        if verbose && (step % 20 == 0 || step + 1 == steps) {
+            println!("  step {step:>4}  span loss {loss:.4}");
+        }
+        if eval_every > 0 && val_ds.is_some() && (step + 1) % eval_every == 0 {
+            let r = super::eval::evaluate_span(
+                rt,
+                &store.params,
+                val_ds.unwrap(),
+                0.0,
+                256,
+            )?;
+            if verbose {
+                println!("  step {:>4}  val span F1 {:.4}", step + 1, r.f1);
+            }
+            log.val_accuracy.push((step + 1, r.f1));
+        }
+    }
+    Ok(log)
+}
+
 /// Train-once cache: load trained params from `path` if present,
 /// otherwise train `steps` on a fresh synthetic-sentiment corpus and
 /// save.  The Figs. 11/12/14 bench harnesses share one trained model
@@ -135,6 +190,58 @@ pub fn ensure_trained(
         );
     }
     train(rt, &mut store, &train_ds, None, steps, 1e-3, 0, verbose)?;
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir).ok();
+    }
+    store.save(path)?;
+    std::fs::write(&meta_path, &meta).ok();
+    Ok(store)
+}
+
+/// [`ensure_trained`] for the span task (the Fig. 14(b) fine-tune):
+/// same caching and `ACCELTRAN_TRAIN_STEPS` override, training on a
+/// fresh synthetic span corpus through `span_train_step`.  The meta
+/// sidecar carries a `task=span` tag, so a classify checkpoint at the
+/// same path is never mistaken for a span one.
+pub fn ensure_trained_span(
+    rt: &mut Runtime,
+    path: &std::path::Path,
+    steps: usize,
+    verbose: bool,
+) -> Result<ParamStore> {
+    let steps = std::env::var("ACCELTRAN_TRAIN_STEPS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(steps);
+    let meta_path = path.with_extension("bin.meta");
+    let meta = format!("task=span steps={steps} backend={}", rt.backend_name());
+    if path.exists() {
+        let cached_meta = std::fs::read_to_string(&meta_path).unwrap_or_default();
+        if cached_meta.trim() == meta {
+            if let Ok(store) = ParamStore::from_file(&rt.manifest, path) {
+                if verbose {
+                    println!("loaded cached trained span params from {path:?} ({meta})");
+                }
+                return Ok(store);
+            }
+        } else if verbose {
+            println!(
+                "retraining span: cached checkpoint was '{}', want '{meta}'",
+                cached_meta.trim()
+            );
+        }
+    }
+    let task = crate::nlp::span::SpanTask::new(rt.manifest.vocab, rt.manifest.seq);
+    let train_ds = task.dataset(4096, 1);
+    let mut store = ParamStore::init(&rt.manifest, 0);
+    if verbose {
+        println!(
+            "training span head {} steps on the {} backend...",
+            steps,
+            rt.backend_name()
+        );
+    }
+    train_span(rt, &mut store, &train_ds, None, steps, 1e-3, 0, verbose)?;
     if let Some(dir) = path.parent() {
         std::fs::create_dir_all(dir).ok();
     }

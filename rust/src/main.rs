@@ -10,14 +10,19 @@
 //!             buffer × dataflow grid reduced to a throughput/energy/
 //!             area Pareto frontier (`sim::dse`, Sec. V-C)
 //!   dataflow  compare the 24 dataflows on a matmul (Fig. 15)
-//!   train     train the synthetic-sentiment model through the runtime
+//!   train     train the synthetic model through the runtime
+//!             (--task classify|span; span is the Fig. 14(b) fine-tune)
 //!   serve     concurrent serving over a worker pool with deadline-aware
 //!             batching (optionally sim-in-the-loop costed); with
 //!             --listen, an HTTP/JSON front-end over sharded pools with
-//!             graceful drain and a live /stats endpoint
-//!   eval      accuracy/sparsity sweep (Figs. 11/12)
+//!             graceful drain and a live /stats endpoint; with
+//!             --span-params, a second span model rides alongside the
+//!             classifier (multi-model: /v1/classify + /v1/span)
+//!   eval      accuracy/sparsity sweep (Figs. 11/12; --task span gives
+//!             the Fig. 14(b) F1-vs-sparsity sweep)
 //!   trace     capture a measured sparsity trace and run the simulator
-//!             on it (the trace-driven Figs. 17-20 pipeline)
+//!             on it (the trace-driven Figs. 17-20 pipeline; --task span
+//!             captures over the span eval set)
 //!
 //! The functional subcommands (train/serve/eval) run on the pure-Rust
 //! reference backend out of the box; set `ACCELTRAN_BACKEND=pjrt` (with
@@ -25,9 +30,12 @@
 
 use std::time::Duration;
 
-use acceltran::coordinator::{self, ServeConfig, ServePool, SimInLoop};
+use acceltran::coordinator::{
+    self, ModelEntry, ServeConfig, ServePool, SimInLoop, TaskKind,
+};
 use acceltran::model::{memreq::MemReq, OpGraph, TransformerConfig};
 use acceltran::nlp::sentiment::SentimentTask;
+use acceltran::nlp::span::SpanTask;
 use acceltran::runtime::{ParamStore, Runtime};
 use acceltran::serve::net::{
     install_drain_signals, Limits, NetConfig, NetServer,
@@ -85,8 +93,10 @@ fn print_usage() {
                      [--preset edge --model bert-tiny --seq 128]\n\
                      [--threads N --out reports/dse_frontier.json]\n\
            dataflow  [--m 64 --k 64 --n 64 --lanes 4]\n\
-           train     [--steps 200 --lr 1e-3 --examples 4096 --save path]\n\
-           serve     [--requests 256 --tau 0.04 --workers 4 --slo-ms 25]\n\
+           train     [--task classify|span --steps 200 --lr 1e-3]\n\
+                     [--examples 4096 --save path]\n\
+           serve     [--task classify|span --requests 256 --tau 0.04]\n\
+                     [--workers 4 --slo-ms 25]\n\
                      [--batch-slo-ms 100 --max-queue 1024]\n\
                      [--params path --report reports/serve_report.json]\n\
                      [--sim-in-loop --preset edge --model bert-tiny\n\
@@ -95,8 +105,12 @@ fn print_usage() {
                       --read-timeout-ms 2000 --max-body-kb 1024\n\
                       --addr-file path]  (HTTP mode; drain via SIGTERM;\n\
                       queue-full submits get 429 + Retry-After)\n\
-           eval      [--taus 0,0.02,0.05 --examples 512 --params path]\n\
-           trace     [--tau 0.04 --examples 512 --params path]\n\
+                     [--span-params path]  (HTTP mode: also serve a span\n\
+                      model as 'span' next to 'classify' — /v1/span)\n\
+           eval      [--task classify|span --taus 0,0.02,0.05]\n\
+                     [--examples 512 --params path]\n\
+           trace     [--task classify|span --tau 0.04 --examples 512]\n\
+                     [--params path]\n\
                      [--out reports/sparsity_trace.json --no-sim]\n\
                      [--preset edge --model bert-tiny --seq 128]\n\
          \n\
@@ -439,29 +453,53 @@ fn cmd_dataflow(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Parse the `--task` flag shared by train/serve/eval/trace.
+fn task_from(args: &Args) -> Result<TaskKind> {
+    let name = args.get_or("task", "classify");
+    TaskKind::parse(name)
+        .ok_or_else(|| anyhow!("unknown task '{name}' (classify|span)"))
+}
+
 fn cmd_train(args: &Args) -> Result<()> {
     let mut rt = Runtime::load_default()?;
     let vocab = rt.manifest.vocab;
     let seq = rt.manifest.seq;
+    let task_kind = task_from(args)?;
     let steps = args.get_usize("steps", 200);
     let lr = args.get_f64("lr", 1e-3) as f32;
     let n = args.get_usize("examples", 4096);
-    let task = SentimentTask::new(vocab, seq, args.get_u64("task-seed", 7));
-    let train_ds = task.dataset(n, 1);
-    let val_ds = task.dataset(512, 2);
     let mut store = ParamStore::init(&rt.manifest, args.get_u64("seed", 0));
     println!(
-        "training {} ({} params) on synthetic sentiment: {} examples, {} steps \
+        "training {} ({} params) on synthetic {}: {} examples, {} steps \
          ['{}' backend]",
         rt.manifest.model_name,
         rt.manifest.param_count,
+        task_kind.name(),
         n,
         steps,
         rt.backend_name()
     );
-    let log = coordinator::train(
-        &mut rt, &mut store, &train_ds, Some(&val_ds), steps, lr, 50, true,
-    )?;
+    let log = match task_kind {
+        TaskKind::Classify => {
+            let task =
+                SentimentTask::new(vocab, seq, args.get_u64("task-seed", 7));
+            let train_ds = task.dataset(n, 1);
+            let val_ds = task.dataset(512, 2);
+            coordinator::train(
+                &mut rt, &mut store, &train_ds, Some(&val_ds), steps, lr, 50,
+                true,
+            )?
+        }
+        TaskKind::Span => {
+            let task = SpanTask::new(vocab, seq);
+            let train_ds = task.dataset(n, 1);
+            let val_ds = task.dataset(512, 2);
+            coordinator::train_span(
+                &mut rt, &mut store, &train_ds, Some(&val_ds), steps, lr, 50,
+                true,
+            )?
+        }
+    };
     let (head, tail) = log.head_tail_means(10);
     println!("loss: first-10 mean {head:.4} -> last-10 mean {tail:.4}");
     if let Some(path) = args.get("save") {
@@ -516,15 +554,25 @@ fn cmd_serve(args: &Args) -> Result<()> {
     } else {
         None
     };
+    let task_kind = task_from(args)?;
     println!(
-        "serving {n} requests on {workers} worker(s), slo {slo:?}, tau {tau} \
-         ['{}' backend]",
+        "serving {n} {} requests on {workers} worker(s), slo {slo:?}, \
+         tau {tau} ['{}' backend]",
+        task_kind.name(),
         rt.backend_name()
     );
     // synthesize the request wave before the pool starts: wall time (and
     // the reported req/s) must measure serving, not dataset generation
-    let task = SentimentTask::new(vocab, seq, 7);
-    let ds = task.dataset(n, 3);
+    let request_rows: Vec<Vec<i32>> = match task_kind {
+        TaskKind::Classify => {
+            let task = SentimentTask::new(vocab, seq, 7);
+            task.dataset(n, 3).examples.into_iter().map(|e| e.ids).collect()
+        }
+        TaskKind::Span => {
+            let task = SpanTask::new(vocab, seq);
+            task.dataset(n, 3).examples.into_iter().map(|e| e.ids).collect()
+        }
+    };
     let cfg = ServeConfig {
         workers,
         slo,
@@ -533,12 +581,24 @@ fn cmd_serve(args: &Args) -> Result<()> {
         max_queue: args
             .get_usize("max-queue", coordinator::DEFAULT_MAX_QUEUE),
     };
-    let pool = ServePool::start(&rt, &params, &cfg)?;
-    for ex in &ds.examples {
+    let pool = match task_kind {
+        TaskKind::Classify => ServePool::start(&rt, &params, &cfg)?,
+        TaskKind::Span => ServePool::start_multi(
+            vec![ModelEntry {
+                name: "span".to_string(),
+                task: TaskKind::Span,
+                runtime: rt.fork()?,
+                params,
+                sim: cfg.sim.clone(),
+            }],
+            &cfg,
+        )?,
+    };
+    for ids in &request_rows {
         // offline driver: on backpressure, wait for the pool to drain a
         // little instead of shedding (the HTTP front-end answers 429)
         loop {
-            match pool.submit(ex.ids.clone(), tau) {
+            match pool.submit(ids.clone(), tau) {
                 Ok(_) => break,
                 Err(coordinator::SubmitError::QueueFull { .. }) => {
                     std::thread::sleep(Duration::from_millis(1));
@@ -595,7 +655,33 @@ fn cmd_serve_net(args: &Args) -> Result<()> {
         drain_on_signal: true,
     };
     install_drain_signals();
-    let server = NetServer::start(&rt, &params, &cfg)?;
+    // --span-params registers a second model: the server becomes
+    // multi-model, serving "classify" and "span" side by side (the
+    // batcher never mixes them in one dispatch)
+    let server = match args.get("span-params") {
+        Some(sp) => {
+            let span_params = ParamStore::from_file(&rt.manifest, sp)?.params;
+            let entries = vec![
+                ModelEntry {
+                    name: "classify".to_string(),
+                    task: TaskKind::Classify,
+                    runtime: rt.fork()?,
+                    params,
+                    sim: None,
+                },
+                ModelEntry {
+                    name: "span".to_string(),
+                    task: TaskKind::Span,
+                    runtime: rt.fork()?,
+                    params: span_params,
+                    sim: None,
+                },
+            ];
+            println!("multi-model: classify + span ({sp})");
+            NetServer::start_multi(entries, &cfg)?
+        }
+        None => NetServer::start(&rt, &params, &cfg)?,
+    };
     println!(
         "listening on http://{} — {pools} pool(s) x {workers} worker(s), \
          slo {slo:?} ['{}' backend]",
@@ -629,11 +715,18 @@ fn cmd_trace(args: &Args) -> Result<()> {
         "examples",
         acceltran::util::cli::env_usize("ACCELTRAN_EVAL_EXAMPLES", 512),
     );
-    let store = match args.get("params") {
-        Some(p) => ParamStore::from_file(&rt.manifest, p)?,
-        None => coordinator::trainer::ensure_trained(
+    let task_kind = task_from(args)?;
+    let store = match (args.get("params"), task_kind) {
+        (Some(p), _) => ParamStore::from_file(&rt.manifest, p)?,
+        (None, TaskKind::Classify) => coordinator::trainer::ensure_trained(
             &mut rt,
             std::path::Path::new("reports/trained_params.bin"),
+            args.get_usize("steps", 200),
+            true,
+        )?,
+        (None, TaskKind::Span) => coordinator::trainer::ensure_trained_span(
+            &mut rt,
+            std::path::Path::new("reports/trained_span_params.bin"),
             args.get_usize("steps", 200),
             true,
         )?,
@@ -642,15 +735,33 @@ fn cmd_trace(args: &Args) -> Result<()> {
     // tiled-GEMM accumulator to the capture so the block-sparsity line
     // below describes exactly this run
     acceltran::runtime::tensor::gemm_stats_reset();
-    let trace = coordinator::measured_trace_with(&mut rt, &store, tau, examples)?;
+    let trace = match task_kind {
+        TaskKind::Classify => {
+            coordinator::measured_trace_with(&mut rt, &store, tau, examples)?
+        }
+        TaskKind::Span => {
+            // the span counterpart of the shared eval-set contract:
+            // dataset variant 2 of the synthetic span task
+            let task = SpanTask::new(rt.manifest.vocab, rt.manifest.seq);
+            let ds = task.dataset(examples, 2);
+            coordinator::capture_trace_span(
+                &mut rt,
+                &store.params,
+                &ds,
+                tau,
+                examples,
+            )?
+        }
+    };
     let gemm = acceltran::runtime::tensor::gemm_stats_snapshot();
 
     println!(
         "\ncaptured over {} examples at tau={tau}: mean act sparsity {:.3}, \
-         inherent {:.3}, accuracy {:.4}",
+         inherent {:.3}, {} {:.4}",
         trace.examples,
         trace.mean_act_rho(),
         trace.inherent_act_rho,
+        if task_kind == TaskKind::Span { "span F1" } else { "accuracy" },
         trace.eval_accuracy
     );
     println!(
@@ -723,10 +834,29 @@ fn cmd_eval(args: &Args) -> Result<()> {
             ParamStore::init(&rt.manifest, 0).params
         }
     };
-    let task = SentimentTask::new(vocab, seq, 7);
-    let ds = task.dataset(examples, 2);
-    let curve = coordinator::sweep_dynatran(&mut rt, &params, &ds, &taus, examples)?;
-    let mut t = Table::new(["tau", "act sparsity", "accuracy"]);
+    let (curve, metric) = match task_from(args)? {
+        TaskKind::Classify => {
+            let task = SentimentTask::new(vocab, seq, 7);
+            let ds = task.dataset(examples, 2);
+            (
+                coordinator::sweep_dynatran(
+                    &mut rt, &params, &ds, &taus, examples,
+                )?,
+                "accuracy",
+            )
+        }
+        TaskKind::Span => {
+            let task = SpanTask::new(vocab, seq);
+            let ds = task.dataset(examples, 2);
+            (
+                coordinator::sweep_dynatran_span(
+                    &mut rt, &params, &ds, &taus, examples,
+                )?,
+                "span F1",
+            )
+        }
+    };
+    let mut t = Table::new(["tau", "act sparsity", metric]);
     for p in &curve.points {
         t.row([
             format!("{:.3}", p.knob),

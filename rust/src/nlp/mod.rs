@@ -8,9 +8,11 @@
 //!   plus token interactions make it learnable-but-not-trivial for a
 //!   BERT-Tiny-scale encoder, producing the accuracy-vs-sparsity curve
 //!   shapes of Figs. 11/12/14.
-//! * [`span`] — a SQuAD-like span task reduced to binary "does the
-//!   answer-marker span appear" detection, scored with F1 — enough to
-//!   exercise the second metric column of Fig. 14.
+//! * [`span`] — a SQuAD-v2-like *extractive* span task: answerable
+//!   examples plant a question-named marker at both endpoints of a
+//!   short context span, unanswerable ones label the CLS position, and
+//!   predictions are scored with token-overlap F1 (the Fig. 14(b)
+//!   metric).
 
 pub mod sentiment;
 pub mod span;

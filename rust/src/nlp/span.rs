@@ -1,18 +1,79 @@
-//! SQuAD-v2-like synthetic span task, scored with F1 (Fig. 14(b) axis).
+//! SQuAD-v2-like synthetic *extractive* span task (the Fig. 14(b)
+//! axis).
 //!
-//! Reduced formulation: a "question" token prefix asks about a marker
-//! token; the label is whether a valid answer span (marker followed by a
-//! content token within a window) appears in the "context" portion.
-//! Like SQuAD-v2, a substantial fraction of examples are unanswerable —
-//! so accuracy and F1 diverge and F1 is the meaningful metric.
+//! Positional formulation: every sequence is `[CLS, marker, SEP,
+//! content...]` — the "question" names a marker token, and answerable
+//! examples plant that marker at the answer-span start and again at its
+//! end (spans of 1..=`max_span` context tokens).  The model emits
+//! start/end logits over positions and must point both at the planted
+//! span.  Like SQuAD-v2 a substantial fraction of examples are
+//! unanswerable; those are labelled `(start, end) = (0, 0)` — the CLS
+//! position — exactly the no-answer convention of the original
+//! benchmark, and the reason token-overlap F1 (not exact accuracy) is
+//! the meaningful metric.
+//!
+//! Content tokens are drawn from `[3 + markers, vocab)`, so a marker
+//! can appear in the context only where the task planted it: the task
+//! is solvable by attending from the question marker to its context
+//! occurrences, which a BERT-Tiny-scale encoder learns in a few hundred
+//! AdamW steps.
 
-use super::{Dataset, Example};
 use crate::util::rng::Rng;
 
 pub const CLS: i32 = 0;
 pub const PAD: i32 = 1;
 /// Separator between question and context.
 pub const SEP: i32 = 2;
+
+/// A tokenized span example: token ids plus the inclusive answer span
+/// `[start, end]` in position space.  `(0, 0)` — pointing at CLS — means
+/// "no answer" (SQuAD-v2 convention).
+#[derive(Clone, Debug, PartialEq)]
+pub struct SpanExample {
+    pub ids: Vec<i32>,
+    pub start: usize,
+    pub end: usize,
+}
+
+impl SpanExample {
+    /// Whether the example carries a real answer span.
+    pub fn answerable(&self) -> bool {
+        !(self.start == 0 && self.end == 0)
+    }
+}
+
+/// A span-task dataset split.
+#[derive(Clone, Debug)]
+pub struct SpanDataset {
+    pub examples: Vec<SpanExample>,
+    pub vocab: usize,
+    pub seq: usize,
+}
+
+impl SpanDataset {
+    /// Iterate fixed-size `(ids, starts, ends)` batches; the trailing
+    /// partial batch is padded by wrapping, matching
+    /// [`super::Dataset::batches`].
+    pub fn batches(&self, batch: usize) -> Vec<(Vec<i32>, Vec<i32>, Vec<i32>)> {
+        assert!(batch > 0 && !self.examples.is_empty());
+        let mut out = Vec::new();
+        let mut i = 0;
+        while i < self.examples.len() {
+            let mut ids = Vec::with_capacity(batch * self.seq);
+            let mut starts = Vec::with_capacity(batch);
+            let mut ends = Vec::with_capacity(batch);
+            for b in 0..batch {
+                let ex = &self.examples[(i + b) % self.examples.len()];
+                ids.extend_from_slice(&ex.ids);
+                starts.push(ex.start as i32);
+                ends.push(ex.end as i32);
+            }
+            out.push((ids, starts, ends));
+            i += batch;
+        }
+        out
+    }
+}
 
 #[derive(Clone, Debug)]
 pub struct SpanTask {
@@ -22,51 +83,76 @@ pub struct SpanTask {
     pub markers: usize,
     /// Fraction of answerable examples.
     pub answerable: f64,
+    /// Longest planted span, in tokens (spans are 1..=`max_span`).
+    pub max_span: usize,
 }
 
 impl SpanTask {
     pub fn new(vocab: usize, seq: usize) -> SpanTask {
         assert!(vocab > 64 && seq >= 16);
-        SpanTask { vocab, seq, markers: 16, answerable: 0.55 }
+        SpanTask { vocab, seq, markers: 16, answerable: 0.55, max_span: 3 }
     }
 
-    pub fn sample(&self, rng: &mut Rng) -> Example {
+    pub fn sample(&self, rng: &mut Rng) -> SpanExample {
         let marker = 3 + rng.index(self.markers) as i32;
-        let answerable = rng.chance(self.answerable);
         let mut ids = vec![CLS, marker, SEP];
         let content_start = ids.len();
+        // content can never collide with a marker: its token range
+        // starts above the marker block
         while ids.len() < self.seq {
             let tok = (3 + self.markers) as i32
                 + rng.index(self.vocab - 3 - self.markers) as i32;
             ids.push(tok);
         }
-        if answerable {
-            // plant the marker followed by a content token in the context
-            let pos = content_start + rng.index(self.seq - content_start - 1);
-            ids[pos] = marker;
+        if rng.chance(self.answerable) {
+            let span_len = 1 + rng.index(self.max_span);
+            let start = content_start
+                + rng.index(self.seq - content_start - span_len + 1);
+            let end = start + span_len - 1;
+            // plant the asked-about marker at both span endpoints (the
+            // same cell for a length-1 span)
+            ids[start] = marker;
+            ids[end] = marker;
+            SpanExample { ids, start, end }
         } else {
-            // ensure the marker does NOT appear in the context
-            for t in ids.iter_mut().skip(content_start) {
-                if *t == marker {
-                    *t += 1;
-                }
-            }
+            SpanExample { ids, start: 0, end: 0 }
         }
-        Example { ids, label: answerable as i32 }
     }
 
-    pub fn dataset(&self, n: usize, seed: u64) -> Dataset {
+    pub fn dataset(&self, n: usize, seed: u64) -> SpanDataset {
         let mut rng = Rng::new(seed);
-        Dataset {
+        SpanDataset {
             examples: (0..n).map(|_| self.sample(&mut rng)).collect(),
             vocab: self.vocab,
             seq: self.seq,
-            classes: 2,
         }
     }
 }
 
-/// Binary F1 with class 1 ("answerable") as the positive class.
+/// Token-overlap F1 between a predicted and a gold inclusive span (the
+/// SQuAD metric).  Both-no-answer scores 1.0, a one-sided no-answer 0.0,
+/// and an inverted prediction (`end < start`) counts as empty.
+pub fn span_f1(pred: (usize, usize), gold: (usize, usize)) -> f64 {
+    let no_pred = pred == (0, 0) || pred.1 < pred.0;
+    let no_gold = gold == (0, 0);
+    if no_pred || no_gold {
+        return (no_pred == no_gold) as i32 as f64;
+    }
+    let (ps, pe) = pred;
+    let (gs, ge) = gold;
+    let lo = ps.max(gs);
+    let hi = pe.min(ge);
+    if hi < lo {
+        return 0.0;
+    }
+    let overlap = (hi - lo + 1) as f64;
+    let precision = overlap / (pe - ps + 1) as f64;
+    let recall = overlap / (ge - gs + 1) as f64;
+    2.0 * precision * recall / (precision + recall)
+}
+
+/// Binary F1 with class 1 as the positive class (the classification
+/// tasks' second metric; the span task scores with [`span_f1`]).
 pub fn f1_score(predictions: &[i32], labels: &[i32]) -> f64 {
     assert_eq!(predictions.len(), labels.len());
     let mut tp = 0.0;
@@ -93,14 +179,74 @@ mod tests {
     use super::*;
 
     #[test]
-    fn answerable_examples_contain_marker_in_context() {
+    fn answerable_examples_plant_marker_at_both_endpoints() {
         let t = SpanTask::new(1024, 64);
         let ds = t.dataset(500, 4);
         for ex in &ds.examples {
             let marker = ex.ids[1];
-            let in_context = ex.ids[3..].contains(&marker);
-            assert_eq!(in_context, ex.label == 1);
+            if ex.answerable() {
+                assert!(ex.start >= 3 && ex.end < t.seq);
+                assert!(ex.end >= ex.start);
+                assert!(ex.end - ex.start < t.max_span);
+                assert_eq!(ex.ids[ex.start], marker);
+                assert_eq!(ex.ids[ex.end], marker);
+                // no stray occurrences outside the planted span
+                for (p, &tok) in ex.ids.iter().enumerate().skip(3) {
+                    if tok == marker {
+                        assert!(
+                            (ex.start..=ex.end).contains(&p),
+                            "stray marker at {p}"
+                        );
+                    }
+                }
+            } else {
+                assert_eq!((ex.start, ex.end), (0, 0));
+                assert!(
+                    !ex.ids[3..].contains(&marker),
+                    "unanswerable context contains the marker"
+                );
+            }
         }
+    }
+
+    #[test]
+    fn answerable_fraction_matches() {
+        let t = SpanTask::new(1024, 64);
+        let ds = t.dataset(2000, 5);
+        let frac =
+            ds.examples.iter().filter(|e| e.answerable()).count() as f64
+                / 2000.0;
+        assert!((frac - t.answerable).abs() < 0.05, "frac {frac}");
+    }
+
+    #[test]
+    fn span_batches_wrap() {
+        let t = SpanTask::new(1024, 64);
+        let ds = t.dataset(5, 9);
+        let bs = ds.batches(2);
+        assert_eq!(bs.len(), 3);
+        let (ids, starts, ends) = &bs[2];
+        assert_eq!(ids.len(), 2 * 64);
+        assert_eq!(starts.len(), 2);
+        // wrapped row repeats example 0
+        assert_eq!(&ids[64..], &ds.examples[0].ids[..]);
+        assert_eq!(starts[1], ds.examples[0].start as i32);
+        assert_eq!(ends[1], ds.examples[0].end as i32);
+    }
+
+    #[test]
+    fn span_f1_exact_partial_and_no_answer() {
+        assert_eq!(span_f1((5, 7), (5, 7)), 1.0);
+        assert_eq!(span_f1((0, 0), (0, 0)), 1.0);
+        assert_eq!(span_f1((0, 0), (5, 7)), 0.0);
+        assert_eq!(span_f1((5, 7), (0, 0)), 0.0);
+        assert_eq!(span_f1((4, 9), (10, 12)), 0.0);
+        // inverted prediction counts as empty
+        assert_eq!(span_f1((9, 4), (5, 7)), 0.0);
+        // pred [5,6], gold [6,7]: overlap 1, p=.5, r=.5 -> F1 .5
+        assert!((span_f1((5, 6), (6, 7)) - 0.5).abs() < 1e-12);
+        // pred [5,7], gold [5,5]: overlap 1, p=1/3, r=1 -> F1 .5
+        assert!((span_f1((5, 7), (5, 5)) - 0.5).abs() < 1e-12);
     }
 
     #[test]
@@ -114,14 +260,5 @@ mod tests {
         // 2 TP, 2 FP, 0 FN: precision .5, recall 1 -> F1 = 2/3
         let f1 = f1_score(&[1, 1, 1, 1], &[1, 1, 0, 0]);
         assert!((f1 - 2.0 / 3.0).abs() < 1e-12);
-    }
-
-    #[test]
-    fn answerable_fraction_matches() {
-        let t = SpanTask::new(1024, 64);
-        let ds = t.dataset(2000, 5);
-        let frac = ds.examples.iter().filter(|e| e.label == 1).count() as f64
-            / 2000.0;
-        assert!((frac - t.answerable).abs() < 0.05, "frac {frac}");
     }
 }

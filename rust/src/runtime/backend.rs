@@ -82,6 +82,86 @@ pub trait ExecBackend: Send {
         )
     }
 
+    /// Span-extraction logits: the classification head applied
+    /// *per-position* — for every batch row and position a
+    /// `(start, end)` logit pair, row-major `[batch * seq * 2]`
+    /// (position-major within a row: `[p0_start, p0_end, p1_start,
+    /// ...]`).  Requires `manifest.classes == 2`: the span head reuses
+    /// the `cls.w`/`cls.b` layout, so classify and span checkpoints are
+    /// interchangeable at the `ParamStore` level.  The default refuses,
+    /// for backends without a span path (PJRT's AOT graph pools at CLS).
+    fn span_logits(
+        &mut self,
+        batch: usize,
+        params: &[f32],
+        ids: &[i32],
+        tau: f32,
+    ) -> Result<Vec<f32>> {
+        let _ = (batch, params, ids, tau);
+        bail!("backend '{}' does not support span extraction", self.name())
+    }
+
+    /// Span logits for a length-bucketed batch (the serving path):
+    /// same `ids`/`lens` contract as [`ExecBackend::classify_padded`].
+    /// Row `b`'s logit pairs at positions `0..lens[b]` are bit-identical
+    /// to running its first `lens[b]` tokens alone; pairs past the row's
+    /// true length are unspecified (the caller slices them off).  The
+    /// default covers uniform full-length batches only.
+    fn span_logits_padded(
+        &mut self,
+        batch: usize,
+        seq: usize,
+        lens: &[usize],
+        params: &[f32],
+        ids: &[i32],
+        tau: f32,
+    ) -> Result<Vec<f32>> {
+        if lens.len() == batch && lens.iter().all(|&l| l == seq) {
+            return self.span_logits(batch, params, ids, tau);
+        }
+        bail!(
+            "backend '{}' does not support ragged (length-masked) span batches",
+            self.name()
+        )
+    }
+
+    /// Loss and flat analytic gradients of the span objective: mean over
+    /// rows of `(CE_start + CE_end) / 2`, each a softmax cross-entropy
+    /// over positions (`starts`/`ends` are inclusive position labels,
+    /// `(0, 0)` = no answer).  Gradients come back in `param_specs`
+    /// order, `manifest.param_count` long — the surface the external
+    /// finite-difference conformance check drives.  Default refuses.
+    fn span_loss_grads(
+        &mut self,
+        batch: usize,
+        params: &[f32],
+        ids: &[i32],
+        starts: &[i32],
+        ends: &[i32],
+    ) -> Result<(f32, Vec<f32>)> {
+        let _ = (batch, params, ids, starts, ends);
+        bail!("backend '{}' does not support span training", self.name())
+    }
+
+    /// One AdamW step on the span objective (batch inferred from
+    /// `starts.len()`); same buffer contract as
+    /// [`ExecBackend::train_step`].  Default refuses.
+    #[allow(clippy::too_many_arguments)]
+    fn span_train_step(
+        &mut self,
+        params: &mut [f32],
+        m: &mut [f32],
+        v: &mut [f32],
+        step: f32,
+        ids: &[i32],
+        starts: &[i32],
+        ends: &[i32],
+        lr: f32,
+    ) -> Result<f32> {
+        let _ = (params, m, v, step, ids, starts, ends, lr);
+        bail!("backend '{}' does not support span training", self.name())
+    }
+
     /// Classification logits under SpAtten-style top-k attention pruning
     /// at `keep_frac` (batch inferred from `ids.len()`).
     fn classify_topk(

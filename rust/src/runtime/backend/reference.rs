@@ -402,45 +402,19 @@ impl ReferenceBackend {
         logits
     }
 
-    /// Forward pass with cached intermediates, then analytic backprop of
-    /// the mean cross-entropy loss.  Training always runs unpruned, like
-    /// the `train_step_b32` artifact.  Returns `(loss, grads)` with
-    /// `grads` in flat `param_specs` layout.
-    fn loss_and_grads(
+    /// Unpruned full-width forward with cached intermediates — the
+    /// shared training forward for both the classify and the span head
+    /// (mirrors the Python `PRUNE_NONE` path).  Returns the per-layer
+    /// caches and the final `(batch * seq, hidden)` states.
+    fn forward_caches(
         &self,
         params: &[f32],
         ids: &[i32],
-        labels: &[i32],
         batch: usize,
-    ) -> Result<(f32, Vec<f32>)> {
-        let Shape { seq, hidden: h, layers, heads: nh, head_dim: hd, ff, classes, .. } =
-            self.shape;
+    ) -> (Vec<LayerCache>, Vec<f32>) {
+        let Shape { seq, hidden: h, layers, heads: nh, head_dim: hd, ff, .. } = self.shape;
         let bs = batch * seq;
         let scale = 1.0 / (hd as f32).sqrt();
-        for &l in labels {
-            if l < 0 || l as usize >= classes {
-                bail!("label {l} outside [0, {classes})");
-            }
-        }
-
-        // ---- forward with caches ------------------------------------
-        struct LayerCache {
-            x2: Vec<f32>,
-            q: Vec<f32>,
-            k: Vec<f32>,
-            v: Vec<f32>,
-            /// Post-softmax attention probabilities, (batch*heads*seq, seq).
-            probs: Vec<f32>,
-            pcat: Vec<f32>,
-            norm1: Vec<f32>,
-            istd1: Vec<f32>,
-            x_ln1: Vec<f32>,
-            /// Pre-GeLU feed-forward activations.
-            u: Vec<f32>,
-            f1: Vec<f32>,
-            norm2: Vec<f32>,
-            istd2: Vec<f32>,
-        }
 
         let word = self.p(params, "embed.word");
         let pos = self.p(params, "embed.pos");
@@ -544,7 +518,29 @@ impl ReferenceBackend {
                 istd2,
             });
         }
+        (caches, hidden)
+    }
 
+    /// Forward pass with cached intermediates, then analytic backprop of
+    /// the mean cross-entropy loss at the `[CLS]` position.  Training
+    /// always runs unpruned, like the `train_step_b32` artifact.
+    /// Returns `(loss, grads)` with `grads` in flat `param_specs`
+    /// layout.
+    fn loss_and_grads(
+        &self,
+        params: &[f32],
+        ids: &[i32],
+        labels: &[i32],
+        batch: usize,
+    ) -> Result<(f32, Vec<f32>)> {
+        let Shape { seq, hidden: h, classes, .. } = self.shape;
+        let bs = batch * seq;
+        for &l in labels {
+            if l < 0 || l as usize >= classes {
+                bail!("label {l} outside [0, {classes})");
+            }
+        }
+        let (caches, hidden) = self.forward_caches(params, ids, batch);
         let mut pooled = vec![0.0f32; batch * h];
         for b in 0..batch {
             pooled[b * h..b * h + h].copy_from_slice(&hidden[b * seq * h..b * seq * h + h]);
@@ -572,27 +568,133 @@ impl ReferenceBackend {
 
         // ---- backward -----------------------------------------------
         let mut grads = vec![0.0f32; self.param_count];
-        fn acc(
-            grads: &mut [f32],
-            offsets: &HashMap<String, (usize, usize)>,
-            name: &str,
-            vals: &[f32],
-        ) {
-            let (off, len) = offsets[name];
-            debug_assert_eq!(len, vals.len(), "grad size for {name}");
-            for (g, &v) in grads[off..off + len].iter_mut().zip(vals) {
-                *g += v;
-            }
-        }
-
         let dcls_w = t::matmul_tn(&pooled, &dlogits, batch, h, classes);
         acc(&mut grads, &self.offsets, "cls.w", &dcls_w);
         acc(&mut grads, &self.offsets, "cls.b", &t::col_sums(&dlogits, classes));
         let dpooled = t::matmul_nt(&dlogits, self.p(params, "cls.w"), batch, classes, h);
+        // the classify head reads only the CLS position, so the encoder
+        // gradient is seeded there alone
         let mut dhidden = vec![0.0f32; bs * h];
         for b in 0..batch {
             dhidden[b * seq * h..b * seq * h + h].copy_from_slice(&dpooled[b * h..b * h + h]);
         }
+        self.encoder_backward(params, ids, batch, &caches, dhidden, &mut grads);
+        Ok((loss, grads))
+    }
+
+    /// Span objective: loss + analytic gradients.  Per batch row the
+    /// loss is the mean of two softmax cross-entropies over *positions*
+    /// — a start pointer and an end pointer from the shared per-position
+    /// `cls` head — averaged over the batch.  Unanswerable rows label
+    /// both pointers with position 0 (CLS), the SQuAD-v2 convention
+    /// `nlp::span` datasets use.
+    fn span_loss_and_grads(
+        &self,
+        params: &[f32],
+        ids: &[i32],
+        starts: &[i32],
+        ends: &[i32],
+        batch: usize,
+    ) -> Result<(f32, Vec<f32>)> {
+        let Shape { seq, hidden: h, classes, .. } = self.shape;
+        if classes != 2 {
+            bail!("span head reuses the 2-class cls layout, manifest has {classes} classes");
+        }
+        if starts.len() != batch || ends.len() != batch {
+            bail!(
+                "starts/ends must have one entry per batch row ({} / {} for batch {batch})",
+                starts.len(),
+                ends.len()
+            );
+        }
+        for (&s, &e) in starts.iter().zip(ends) {
+            if s < 0 || e < s || e as usize >= seq {
+                bail!("span ({s}, {e}) outside 0 <= start <= end < {seq}");
+            }
+        }
+        let bs = batch * seq;
+        let (caches, hidden) = self.forward_caches(params, ids, batch);
+        let mut logits = t::matmul(&hidden, self.p(params, "cls.w"), bs, h, 2);
+        t::add_bias(&mut logits, self.p(params, "cls.b"));
+
+        // ---- loss: mean over rows of (CE_start + CE_end) / 2, each a
+        // softmax over the row's positions within one logit column -----
+        let mut loss = 0.0f32;
+        let mut dlogits = vec![0.0f32; bs * 2];
+        let inv = 1.0 / (2.0 * batch as f32);
+        for b in 0..batch {
+            for col in 0..2usize {
+                let target = if col == 0 { starts[b] } else { ends[b] } as usize;
+                let at = |p: usize| logits[(b * seq + p) * 2 + col];
+                let mut max = f32::NEG_INFINITY;
+                for p in 0..seq {
+                    max = max.max(at(p));
+                }
+                let mut sumexp = 0.0f32;
+                for p in 0..seq {
+                    sumexp += (at(p) - max).exp();
+                }
+                let logz = max + sumexp.ln();
+                loss += 0.5 * (logz - at(target));
+                for p in 0..seq {
+                    let mut d = (at(p) - logz).exp();
+                    if p == target {
+                        d -= 1.0;
+                    }
+                    dlogits[(b * seq + p) * 2 + col] = d * inv;
+                }
+            }
+        }
+        loss /= batch as f32;
+
+        // ---- backward: the span head reads EVERY position, so the
+        // encoder gradient is dense over positions (unlike the
+        // CLS-pooled classify head) -----------------------------------
+        let mut grads = vec![0.0f32; self.param_count];
+        let dcls_w = t::matmul_tn(&hidden, &dlogits, bs, h, 2);
+        acc(&mut grads, &self.offsets, "cls.w", &dcls_w);
+        acc(&mut grads, &self.offsets, "cls.b", &t::col_sums(&dlogits, 2));
+        let dhidden = t::matmul_nt(&dlogits, self.p(params, "cls.w"), bs, 2, h);
+        self.encoder_backward(params, ids, batch, &caches, dhidden, &mut grads);
+        Ok((loss, grads))
+    }
+
+    /// Per-position span logits from the shared `cls` head: the
+    /// `(batch * seq, hidden)` encoder output through one `[h, 2]`
+    /// matmul — `(start, end)` pairs, position-major.
+    fn span_mode(
+        &self,
+        params: &[f32],
+        ids: &[i32],
+        batch: usize,
+        seq: usize,
+        lens: &[usize],
+        mode: Prune,
+        stats: Option<&mut Vec<HookRecord>>,
+    ) -> Vec<f32> {
+        let h = self.shape.hidden;
+        let hidden = self.encode(params, ids, batch, seq, lens, mode, stats);
+        let mut logits = t::matmul(&hidden, self.p(params, "cls.w"), batch * seq, h, 2);
+        t::add_bias(&mut logits, self.p(params, "cls.b"));
+        logits
+    }
+
+    /// Backprop a gradient at the final hidden states (`dhidden`,
+    /// `(batch * seq, hidden)`, however the head seeded it) through the
+    /// encoder stack and the embeddings, accumulating parameter
+    /// gradients into `grads`.
+    fn encoder_backward(
+        &self,
+        params: &[f32],
+        ids: &[i32],
+        batch: usize,
+        caches: &[LayerCache],
+        mut dhidden: Vec<f32>,
+        grads: &mut [f32],
+    ) {
+        let Shape { seq, hidden: h, layers, heads: nh, head_dim: hd, ff, .. } = self.shape;
+        let bs = batch * seq;
+        let scale = 1.0 / (hd as f32).sqrt();
 
         for layer in (0..layers).rev() {
             let name = |s: &str| format!("layer{layer}.{s}");
@@ -610,22 +712,22 @@ impl ReferenceBackend {
                 &mut dg2,
                 &mut db2,
             );
-            acc(&mut grads, &self.offsets, &name("ln2.gamma"), &dg2);
-            acc(&mut grads, &self.offsets, &name("ln2.beta"), &db2);
+            acc(grads, &self.offsets, &name("ln2.gamma"), &dg2);
+            acc(grads, &self.offsets, &name("ln2.beta"), &db2);
 
             // FFN backward; dr2 feeds both f2 and the x_ln1 residual.
             let df2 = &dr2;
             let mut dxln1 = dr2.clone();
             let dw2 = t::matmul_tn(&c.f1, df2, bs, ff, h);
-            acc(&mut grads, &self.offsets, &name("ffn.w2"), &dw2);
-            acc(&mut grads, &self.offsets, &name("ffn.b2"), &t::col_sums(df2, h));
+            acc(grads, &self.offsets, &name("ffn.w2"), &dw2);
+            acc(grads, &self.offsets, &name("ffn.b2"), &t::col_sums(df2, h));
             let mut du = t::matmul_nt(df2, self.p(params, &name("ffn.w2")), bs, h, ff);
             for (dv, &uv) in du.iter_mut().zip(&c.u) {
                 *dv *= t::gelu_derivative(uv);
             }
             let dw1 = t::matmul_tn(&c.x_ln1, &du, bs, h, ff);
-            acc(&mut grads, &self.offsets, &name("ffn.w1"), &dw1);
-            acc(&mut grads, &self.offsets, &name("ffn.b1"), &t::col_sums(&du, ff));
+            acc(grads, &self.offsets, &name("ffn.w1"), &dw1);
+            acc(grads, &self.offsets, &name("ffn.b1"), &t::col_sums(&du, ff));
             let dx_ffn = t::matmul_nt(&du, self.p(params, &name("ffn.w1")), bs, ff, h);
             for (a, &b) in dxln1.iter_mut().zip(&dx_ffn) {
                 *a += b;
@@ -643,15 +745,15 @@ impl ReferenceBackend {
                 &mut dg1,
                 &mut db1,
             );
-            acc(&mut grads, &self.offsets, &name("ln1.gamma"), &dg1);
-            acc(&mut grads, &self.offsets, &name("ln1.beta"), &db1);
+            acc(grads, &self.offsets, &name("ln1.gamma"), &dg1);
+            acc(grads, &self.offsets, &name("ln1.beta"), &db1);
 
             // Output projection backward; dr1 feeds mha and the x2 residual.
             let dmha = &dr1;
             let mut dx2 = dr1.clone();
             let dwo = t::matmul_tn(&c.pcat, dmha, bs, h, h);
-            acc(&mut grads, &self.offsets, &name("attn.wo"), &dwo);
-            acc(&mut grads, &self.offsets, &name("attn.bo"), &t::col_sums(dmha, h));
+            acc(grads, &self.offsets, &name("attn.wo"), &dwo);
+            acc(grads, &self.offsets, &name("attn.bo"), &t::col_sums(dmha, h));
             let dpcat = t::matmul_nt(dmha, self.p(params, &name("attn.wo")), bs, h, h);
 
             // Attention backward, head by head.
@@ -682,16 +784,16 @@ impl ReferenceBackend {
 
             // QKV projection backward.
             let dwq = t::matmul_tn(&c.x2, &dq, bs, h, h);
-            acc(&mut grads, &self.offsets, &name("attn.wq"), &dwq);
-            acc(&mut grads, &self.offsets, &name("attn.bq"), &t::col_sums(&dq, h));
+            acc(grads, &self.offsets, &name("attn.wq"), &dwq);
+            acc(grads, &self.offsets, &name("attn.bq"), &t::col_sums(&dq, h));
             let dxq = t::matmul_nt(&dq, self.p(params, &name("attn.wq")), bs, h, h);
             let dwk = t::matmul_tn(&c.x2, &dk, bs, h, h);
-            acc(&mut grads, &self.offsets, &name("attn.wk"), &dwk);
-            acc(&mut grads, &self.offsets, &name("attn.bk"), &t::col_sums(&dk, h));
+            acc(grads, &self.offsets, &name("attn.wk"), &dwk);
+            acc(grads, &self.offsets, &name("attn.bk"), &t::col_sums(&dk, h));
             let dxk = t::matmul_nt(&dk, self.p(params, &name("attn.wk")), bs, h, h);
             let dwv = t::matmul_tn(&c.x2, &dv, bs, h, h);
-            acc(&mut grads, &self.offsets, &name("attn.wv"), &dwv);
-            acc(&mut grads, &self.offsets, &name("attn.bv"), &t::col_sums(&dv, h));
+            acc(grads, &self.offsets, &name("attn.wv"), &dwv);
+            acc(grads, &self.offsets, &name("attn.bv"), &t::col_sums(&dv, h));
             let dxv = t::matmul_nt(&dv, self.p(params, &name("attn.wv")), bs, h, h);
             for i in 0..bs * h {
                 dx2[i] += dxq[i] + dxk[i] + dxv[i];
@@ -710,8 +812,57 @@ impl ReferenceBackend {
                 grads[poff + s * h + j] += d;
             }
         }
+    }
+}
 
-        Ok((loss, grads))
+/// Cached per-layer intermediates of a training forward pass.
+struct LayerCache {
+    x2: Vec<f32>,
+    q: Vec<f32>,
+    k: Vec<f32>,
+    v: Vec<f32>,
+    /// Post-softmax attention probabilities, (batch*heads*seq, seq).
+    probs: Vec<f32>,
+    pcat: Vec<f32>,
+    norm1: Vec<f32>,
+    istd1: Vec<f32>,
+    x_ln1: Vec<f32>,
+    /// Pre-GeLU feed-forward activations.
+    u: Vec<f32>,
+    f1: Vec<f32>,
+    norm2: Vec<f32>,
+    istd2: Vec<f32>,
+}
+
+/// Accumulate a named parameter's gradient block into the flat buffer.
+fn acc(grads: &mut [f32], offsets: &HashMap<String, (usize, usize)>, name: &str, vals: &[f32]) {
+    let (off, len) = offsets[name];
+    debug_assert_eq!(len, vals.len(), "grad size for {name}");
+    for (g, &v) in grads[off..off + len].iter_mut().zip(vals) {
+        *g += v;
+    }
+}
+
+/// One AdamW update over the flat buffers — shared by both heads' train
+/// steps (`step` is the pre-increment counter for bias correction).
+fn adamw_update(
+    params: &mut [f32],
+    m: &mut [f32],
+    v: &mut [f32],
+    grads: &[f32],
+    step: f32,
+    lr: f32,
+) {
+    let tstep = step + 1.0;
+    let bc1 = 1.0 - ADAM_B1.powf(tstep);
+    let bc2 = 1.0 - ADAM_B2.powf(tstep);
+    for i in 0..params.len() {
+        let g = grads[i];
+        m[i] = ADAM_B1 * m[i] + (1.0 - ADAM_B1) * g;
+        v[i] = ADAM_B2 * v[i] + (1.0 - ADAM_B2) * g * g;
+        let mhat = m[i] / bc1;
+        let vhat = v[i] / bc2;
+        params[i] -= lr * mhat / (vhat.sqrt() + ADAM_EPS);
     }
 }
 
@@ -823,17 +974,79 @@ impl ExecBackend for ReferenceBackend {
             bail!("optimizer state length mismatch");
         }
         let (loss, grads) = self.loss_and_grads(params, ids, labels, batch)?;
-        let tstep = step + 1.0;
-        let bc1 = 1.0 - ADAM_B1.powf(tstep);
-        let bc2 = 1.0 - ADAM_B2.powf(tstep);
-        for i in 0..params.len() {
-            let g = grads[i];
-            m[i] = ADAM_B1 * m[i] + (1.0 - ADAM_B1) * g;
-            v[i] = ADAM_B2 * v[i] + (1.0 - ADAM_B2) * g * g;
-            let mhat = m[i] / bc1;
-            let vhat = v[i] / bc2;
-            params[i] -= lr * mhat / (vhat.sqrt() + ADAM_EPS);
+        adamw_update(params, m, v, &grads, step, lr);
+        Ok(loss)
+    }
+
+    fn span_logits(
+        &mut self,
+        batch: usize,
+        params: &[f32],
+        ids: &[i32],
+        tau: f32,
+    ) -> Result<Vec<f32>> {
+        if self.shape.classes != 2 {
+            bail!(
+                "span head reuses the 2-class cls layout, manifest has {} classes",
+                self.shape.classes
+            );
         }
+        let seq = self.derive_seq(ids, batch)?;
+        self.check_inputs(params, ids, batch, seq, None)?;
+        let lens = vec![seq; batch];
+        Ok(self.span_mode(params, ids, batch, seq, &lens, Prune::DynaTran(tau), None))
+    }
+
+    fn span_logits_padded(
+        &mut self,
+        batch: usize,
+        seq: usize,
+        lens: &[usize],
+        params: &[f32],
+        ids: &[i32],
+        tau: f32,
+    ) -> Result<Vec<f32>> {
+        if self.shape.classes != 2 {
+            bail!(
+                "span head reuses the 2-class cls layout, manifest has {} classes",
+                self.shape.classes
+            );
+        }
+        self.check_inputs(params, ids, batch, seq, Some(lens))?;
+        Ok(self.span_mode(params, ids, batch, seq, lens, Prune::DynaTran(tau), None))
+    }
+
+    fn span_loss_grads(
+        &mut self,
+        batch: usize,
+        params: &[f32],
+        ids: &[i32],
+        starts: &[i32],
+        ends: &[i32],
+    ) -> Result<(f32, Vec<f32>)> {
+        // span training runs at the manifest's full seq, like train_step
+        self.check_inputs(params, ids, batch, self.shape.seq, None)?;
+        self.span_loss_and_grads(params, ids, starts, ends, batch)
+    }
+
+    fn span_train_step(
+        &mut self,
+        params: &mut [f32],
+        m: &mut [f32],
+        v: &mut [f32],
+        step: f32,
+        ids: &[i32],
+        starts: &[i32],
+        ends: &[i32],
+        lr: f32,
+    ) -> Result<f32> {
+        let batch = starts.len();
+        self.check_inputs(params, ids, batch, self.shape.seq, None)?;
+        if m.len() != params.len() || v.len() != params.len() {
+            bail!("optimizer state length mismatch");
+        }
+        let (loss, grads) = self.span_loss_and_grads(params, ids, starts, ends, batch)?;
+        adamw_update(params, m, v, &grads, step, lr);
         Ok(loss)
     }
 
@@ -1163,5 +1376,155 @@ mod tests {
         assert!(be.classify(1, &params, &[0, 1, 2, 99], 0.0).is_err());
         // wrong param buffer size
         assert!(be.classify(1, &params[..10], &[0, 1, 2, 3], 0.0).is_err());
+    }
+
+    #[test]
+    fn span_logits_agree_with_classify_at_cls() {
+        // Both heads are the same [h, 2] matmul over hidden states; the
+        // span pair at position 0 must equal the classify logits (the
+        // tiled GEMM accumulates each output element in a fixed k-order
+        // regardless of the row count — tests/gemm_oracle.rs).
+        let manifest = micro_manifest();
+        let mut be = micro_backend();
+        let params = ParamStore::init(&manifest, 1).params;
+        let ids = micro_ids(3, 7);
+        let cls = be.classify(3, &params, &ids, 0.05).unwrap();
+        let span = be.span_logits(3, &params, &ids, 0.05).unwrap();
+        assert_eq!(span.len(), 3 * 4 * 2);
+        assert!(span.iter().all(|v| v.is_finite()));
+        for b in 0..3 {
+            assert_eq!(span[b * 4 * 2], cls[b * 2], "row {b} start@CLS");
+            assert_eq!(span[b * 4 * 2 + 1], cls[b * 2 + 1], "row {b} end@CLS");
+        }
+    }
+
+    #[test]
+    fn span_padded_rows_match_native_length_runs() {
+        // The serving contract: a padded row's logit pairs at its true
+        // positions are bit-identical to running the row alone at its
+        // native length.
+        let manifest = micro_manifest();
+        let mut be = micro_backend();
+        let params = ParamStore::init(&manifest, 2).params;
+        let ids = vec![0, 5, 6, 7, 0, 8, 1, 1];
+        let lens = vec![4usize, 2];
+        let padded = be.span_logits_padded(2, 4, &lens, &params, &ids, 0.0).unwrap();
+        assert_eq!(padded.len(), 2 * 4 * 2);
+        for (b, &l) in lens.iter().enumerate() {
+            let solo = be.span_logits(1, &params, &ids[b * 4..b * 4 + l], 0.0).unwrap();
+            assert_eq!(
+                &padded[b * 4 * 2..b * 4 * 2 + l * 2],
+                &solo[..],
+                "row {b} at len {l}"
+            );
+        }
+    }
+
+    #[test]
+    fn span_analytic_gradients_match_finite_differences() {
+        // Same harness as the classify FD test, over the span objective:
+        // start/end softmax-CE over positions, gradient seeded densely.
+        let manifest = micro_manifest();
+        let mut be = micro_backend();
+        let params = ParamStore::init(&manifest, 8).params;
+        let ids = micro_ids(2, 15);
+        let starts = vec![1, 0];
+        let ends = vec![2, 0];
+        let (loss, grads) = be.span_loss_grads(2, &params, &ids, &starts, &ends).unwrap();
+        assert!(loss.is_finite() && loss > 0.0);
+        assert!(grads.iter().any(|&g| g.abs() > 1e-6), "gradients are all ~zero");
+
+        let eps = 5e-3f32;
+        let mut off = 0usize;
+        for (name, shape, _std) in &manifest.param_specs {
+            let len: usize = shape.iter().product();
+            let idx = off + len / 2;
+            let mut pp = params.clone();
+            pp[idx] += eps;
+            let mut pm = params.clone();
+            pm[idx] -= eps;
+            let lp = be.span_loss_grads(2, &pp, &ids, &starts, &ends).unwrap().0;
+            let lm = be.span_loss_grads(2, &pm, &ids, &starts, &ends).unwrap().0;
+            let fd = (lp - lm) / (2.0 * eps);
+            let got = grads[idx];
+            assert!(
+                (got - fd).abs() <= 1.5e-3 + 0.08 * fd.abs(),
+                "{name}[{idx}]: analytic {got} vs finite-difference {fd}"
+            );
+            off += len;
+        }
+    }
+
+    #[test]
+    fn span_adamw_training_reduces_loss_on_micro_task() {
+        let manifest = micro_manifest();
+        let mut be = micro_backend();
+        let mut store = ParamStore::init(&manifest, 0);
+        let mut rng = Rng::new(17);
+        let batch = 8;
+        let mut losses = Vec::new();
+        for step in 0..40 {
+            // toy span rule: answerable rows plant marker token 3 at
+            // position 3 (start = end = 3), the rest point at CLS
+            let mut ids = Vec::with_capacity(batch * 4);
+            let mut starts = Vec::with_capacity(batch);
+            let mut ends = Vec::with_capacity(batch);
+            for _ in 0..batch {
+                let pos = rng.chance(0.5);
+                ids.push(0);
+                ids.push(3);
+                ids.push(2);
+                ids.push(if pos { 3 } else { 4 + rng.index(8) as i32 });
+                let target = if pos { 3 } else { 0 };
+                starts.push(target);
+                ends.push(target);
+            }
+            let loss = be
+                .span_train_step(
+                    &mut store.params,
+                    &mut store.m,
+                    &mut store.v,
+                    step as f32,
+                    &ids,
+                    &starts,
+                    &ends,
+                    5e-3,
+                )
+                .unwrap();
+            assert!(loss.is_finite(), "step {step} loss {loss}");
+            losses.push(loss);
+        }
+        let head: f32 = losses[..5].iter().sum::<f32>() / 5.0;
+        let tail: f32 = losses[35..].iter().sum::<f32>() / 5.0;
+        assert!(tail < head, "span loss did not decrease: head {head:.4} tail {tail:.4}");
+    }
+
+    #[test]
+    fn span_rejects_bad_labels_and_non_binary_heads() {
+        let manifest = micro_manifest();
+        let mut be = micro_backend();
+        let params = ParamStore::init(&manifest, 1).params;
+        let ids = micro_ids(2, 3);
+        // inverted span
+        assert!(be.span_loss_grads(2, &params, &ids, &[2, 0], &[1, 0]).is_err());
+        // end past the sequence
+        assert!(be.span_loss_grads(2, &params, &ids, &[1, 0], &[4, 0]).is_err());
+        // label-count mismatch
+        assert!(be.span_loss_grads(2, &params, &ids, &[1], &[1]).is_err());
+        // a 3-class head has no span layout to reuse
+        let model = TransformerConfig {
+            name: "micro3".into(),
+            hidden: 8,
+            layers: 1,
+            heads: 2,
+            ff: 16,
+            vocab: 12,
+            seq: 4,
+        };
+        let m3 = Manifest::synthetic(&model, 3);
+        let mut be3 = ReferenceBackend::new(&m3).unwrap();
+        let p3 = ParamStore::init(&m3, 1).params;
+        assert!(be3.span_logits(2, &p3, &ids, 0.0).is_err());
+        assert!(be3.span_loss_grads(2, &p3, &ids, &[1, 0], &[1, 0]).is_err());
     }
 }

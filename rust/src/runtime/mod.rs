@@ -161,6 +161,67 @@ impl Runtime {
         self.backend.classify_traced(batch, params, ids, tau)
     }
 
+    /// Span-extraction logits: `(start, end)` logit pairs per position,
+    /// row-major `[batch * seq * 2]` (see
+    /// [`ExecBackend::span_logits`]).  The span head reuses the `cls`
+    /// parameter layout, so any 2-class checkpoint loads for either
+    /// task.
+    pub fn span_logits(
+        &mut self,
+        batch: usize,
+        params: &[f32],
+        ids: &[i32],
+        tau: f32,
+    ) -> Result<Vec<f32>> {
+        self.backend.span_logits(batch, params, ids, tau)
+    }
+
+    /// Span logits for a length-bucketed batch — the serving path
+    /// (same `lens` contract as [`Runtime::classify_padded`]).
+    #[allow(clippy::too_many_arguments)]
+    pub fn span_logits_padded(
+        &mut self,
+        batch: usize,
+        seq: usize,
+        lens: &[usize],
+        params: &[f32],
+        ids: &[i32],
+        tau: f32,
+    ) -> Result<Vec<f32>> {
+        self.backend.span_logits_padded(batch, seq, lens, params, ids, tau)
+    }
+
+    /// Loss + flat analytic gradients of the span objective (the
+    /// finite-difference conformance surface; see
+    /// [`ExecBackend::span_loss_grads`]).
+    pub fn span_loss_grads(
+        &mut self,
+        batch: usize,
+        params: &[f32],
+        ids: &[i32],
+        starts: &[i32],
+        ends: &[i32],
+    ) -> Result<(f32, Vec<f32>)> {
+        self.backend.span_loss_grads(batch, params, ids, starts, ends)
+    }
+
+    /// One AdamW step on the span objective, in place; returns the loss.
+    #[allow(clippy::too_many_arguments)]
+    pub fn span_train_step(
+        &mut self,
+        params: &mut [f32],
+        m: &mut [f32],
+        v: &mut [f32],
+        step: f32,
+        ids: &[i32],
+        starts: &[i32],
+        ends: &[i32],
+        lr: f32,
+    ) -> Result<f32> {
+        self.backend
+            .span_train_step(params, m, v, step, ids, starts, ends, lr)
+    }
+
     /// Logits under SpAtten-style top-k attention pruning at `keep_frac`.
     pub fn classify_topk(
         &mut self,

@@ -1,4 +1,5 @@
-//! Typed decode + validation of `POST /v1/classify` bodies.
+//! Typed decode + validation of `POST /v1/classify` and `POST
+//! /v1/span` bodies (the two endpoints share one wire shape).
 //!
 //! Every way a request can be wrong maps to a *specific* [`ApiError`]
 //! with a machine-readable `code` and a 4xx status, serialized as
@@ -20,6 +21,15 @@
 //! — requests are no longer forced to the manifest's full sequence
 //! length) with every id in `[0, vocab)` — shape errors caught here
 //! would otherwise reach a worker thread deep in the embedding gather.
+//!
+//! On a multi-model server an optional top-level `"model": "name"`
+//! field routes the request to an explicit registered model.  Because
+//! the shape to validate against depends on the resolved model, the
+//! server decodes in two phases: [`parse_body`] (UTF-8 + JSON + split
+//! out `model`), then [`decode_value`] against the resolved model's
+//! [`ModelShape`].  [`decode_classify`] composes both for
+//! single-model callers and keeps the strict historical contract
+//! (`model` is an unknown field there).
 
 use crate::coordinator::Priority;
 use crate::util::json::Json;
@@ -116,12 +126,17 @@ fn item_from(
     shape: ModelShape,
     default_tau: f32,
     at: &str,
+    top_level: bool,
 ) -> Result<ClassifyItem, ApiError> {
     let map = obj.as_obj().ok_or_else(|| {
         ApiError::bad_request("bad_type", format!("{at} must be an object"))
     })?;
     for key in map.keys() {
-        if key != "ids" && key != "tau" && key != "priority" {
+        // "model" is the routing field [`parse_body`] already consumed;
+        // it is only legal at the top level of the body.
+        if key != "ids" && key != "tau" && key != "priority"
+            && !(top_level && key == "model")
+        {
             return Err(ApiError::bad_request(
                 "unknown_field",
                 format!("{at} has unknown field '{key}'"),
@@ -205,22 +220,43 @@ fn item_from(
     Ok(ClassifyItem { ids, tau, priority })
 }
 
-/// Decode and validate a classify body against the served model shape.
-///
-/// `max_batch` caps `requests` length; exceeding it is 413 (the client
-/// should split the batch), everything else wrong is 400.
-pub fn decode_classify(
-    body: &[u8],
-    shape: ModelShape,
-    default_tau: f32,
-    max_batch: usize,
-) -> Result<ClassifyRequest, ApiError> {
+/// Phase one of the multi-model decode: UTF-8 + JSON + extract the
+/// optional top-level `"model"` routing field (the caller resolves the
+/// name to a registered model, then finishes with [`decode_value`]
+/// against that model's shape).
+pub fn parse_body(body: &[u8]) -> Result<(Json, Option<String>), ApiError> {
     let text = std::str::from_utf8(body).map_err(|_| {
         ApiError::bad_request("bad_encoding", "body is not valid UTF-8")
     })?;
     let root = Json::parse(text).map_err(|e| {
         ApiError::bad_request("bad_json", format!("body is not valid JSON: {e}"))
     })?;
+    let map = root.as_obj().ok_or_else(|| {
+        ApiError::bad_request("bad_type", "body must be a JSON object")
+    })?;
+    let model = match map.get("model") {
+        None => None,
+        Some(v) => Some(
+            v.as_str()
+                .ok_or_else(|| {
+                    ApiError::bad_request("bad_type", "'model' must be a string")
+                })?
+                .to_string(),
+        ),
+    };
+    Ok((root, model))
+}
+
+/// Phase two: validate a parsed body against the resolved model shape.
+///
+/// `max_batch` caps `requests` length; exceeding it is 413 (the client
+/// should split the batch), everything else wrong is 400.
+pub fn decode_value(
+    root: &Json,
+    shape: ModelShape,
+    default_tau: f32,
+    max_batch: usize,
+) -> Result<ClassifyRequest, ApiError> {
     let map = root.as_obj().ok_or_else(|| {
         ApiError::bad_request("bad_type", "body must be a JSON object")
     })?;
@@ -231,12 +267,11 @@ pub fn decode_classify(
             "ambiguous_body",
             "body must have either 'ids' (single) or 'requests' (batch), not both",
         )),
-        (true, false) => {
-            item_from(&root, shape, default_tau, "request").map(ClassifyRequest::Single)
-        }
+        (true, false) => item_from(root, shape, default_tau, "request", true)
+            .map(ClassifyRequest::Single),
         (false, true) => {
             for key in map.keys() {
-                if key != "requests" {
+                if key != "requests" && key != "model" {
                     return Err(ApiError::bad_request(
                         "unknown_field",
                         format!("body has unknown field '{key}'"),
@@ -270,6 +305,7 @@ pub fn decode_classify(
                     shape,
                     default_tau,
                     &format!("requests[{i}]"),
+                    false,
                 )?);
             }
             Ok(ClassifyRequest::Batch(items))
@@ -279,6 +315,25 @@ pub fn decode_classify(
             "body must have 'ids' (single) or 'requests' (batch)",
         )),
     }
+}
+
+/// Decode and validate a classify body against the served model shape —
+/// the strict single-model entry point: a `model` routing field is an
+/// unknown field here, exactly as before multi-model serving existed.
+pub fn decode_classify(
+    body: &[u8],
+    shape: ModelShape,
+    default_tau: f32,
+    max_batch: usize,
+) -> Result<ClassifyRequest, ApiError> {
+    let (root, model) = parse_body(body)?;
+    if model.is_some() {
+        return Err(ApiError::bad_request(
+            "unknown_field",
+            "request has unknown field 'model'",
+        ));
+    }
+    decode_value(&root, shape, default_tau, max_batch)
 }
 
 #[cfg(test)]
@@ -429,6 +484,37 @@ mod tests {
         let body = format!(r#"{{"requests": [{}]}}"#, items.join(","));
         let e = decode(&body).unwrap_err();
         assert_eq!((e.status, e.code), (413, "batch_too_large"));
+    }
+
+    #[test]
+    fn model_field_routes_in_two_phase_but_is_unknown_in_classic_decode() {
+        // two-phase: "model" is split out and the remaining body decodes
+        let (root, model) =
+            parse_body(br#"{"ids": [1, 2], "model": "span-a"}"#).unwrap();
+        assert_eq!(model.as_deref(), Some("span-a"));
+        let got = decode_value(&root, SHAPE, 0.04, 8).unwrap();
+        match got {
+            ClassifyRequest::Single(item) => assert_eq!(item.ids, vec![1, 2]),
+            other => panic!("expected Single, got {other:?}"),
+        }
+        // batch form carries it at top level too
+        let (root, model) = parse_body(
+            br#"{"model": "m0", "requests": [{"ids": [1]}, {"ids": [2, 3]}]}"#,
+        )
+        .unwrap();
+        assert_eq!(model.as_deref(), Some("m0"));
+        assert_eq!(decode_value(&root, SHAPE, 0.04, 8).unwrap().len(), 2);
+        // but never inside a batch item
+        let (root, _) =
+            parse_body(br#"{"requests": [{"ids": [1], "model": "x"}]}"#).unwrap();
+        let e = decode_value(&root, SHAPE, 0.04, 8).unwrap_err();
+        assert_eq!(e.code, "unknown_field");
+        // non-string model is a type error
+        let e = parse_body(br#"{"ids": [1], "model": 3}"#).unwrap_err();
+        assert_eq!((e.status, e.code), (400, "bad_type"));
+        // the classic single-model decoder still rejects it
+        let e = decode(r#"{"ids": [1, 2], "model": "span-a"}"#).unwrap_err();
+        assert_eq!(e.code, "unknown_field");
     }
 
     #[test]

@@ -8,20 +8,31 @@
 //!   validation errors (4xx JSON bodies; a malformed or hostile body
 //!   never reaches a pool) and bounded-queue admission control (429 +
 //!   `Retry-After` when a pool is at its depth bound),
+//! * `POST /v1/span` — extractive span prediction over the same wire
+//!   shape: the response carries split-half `[start..., end...]` logits
+//!   over the row's native length plus the decoded argmax `start` /
+//!   `end` positions,
 //! * `GET /stats` — live serving state: per-pool and merged latency
 //!   histogram percentiles, queue high-water, per-bucket depths,
-//!   padded-row and padded-token fractions, 429 shed count, and the
-//!   process-wide block-sparse GEMM effectual-tile/MAC counters,
-//! * `GET /healthz` — liveness plus the model shape a client needs to
-//!   build valid requests.
+//!   padded-row and padded-token fractions, 429 shed count, per-model
+//!   rollups, and the process-wide block-sparse GEMM
+//!   effectual-tile/MAC counters,
+//! * `GET /healthz` — liveness plus the registered models (name, task,
+//!   shape) a client needs to build valid requests.
+//!
+//! A server hosts one or more named `(checkpoint, task)` models
+//! ([`NetServer::start_multi`]); each request routes to the first model
+//! of its endpoint's task, or to an explicit `"model": "name"` body
+//! field.  Every pool shard hosts the full registry and a dispatched
+//! batch never mixes models.
 //!
 //! Layering, front to back:
 //!
 //! 1. [`http`] — wire protocol: bounded request parsing (header/body
 //!    caps, per-connection read/write timeouts, a wall-clock budget
 //!    per request) and response writing.
-//! 2. [`api`] — typed decode of classify bodies against the served
-//!    model's shape (`seq`, `vocab`), with structured
+//! 2. [`api`] — typed decode of classify/span bodies against the
+//!    resolved model's shape (`seq`, `vocab`), with structured
 //!    [`api::ApiError`]s.
 //! 3. [`router`] — shards accepted requests across N independent
 //!    [`crate::coordinator::ServePool`]s by power-of-two-choices on

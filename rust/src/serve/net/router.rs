@@ -14,7 +14,8 @@
 //! co-schedule them into one dispatch.
 
 use crate::coordinator::{
-    PoolSnapshot, Priority, Response, ServeReport, ServePool, SubmitError,
+    ModelInfo, PoolSnapshot, Priority, Response, ServeReport, ServePool,
+    SubmitError,
 };
 use anyhow::Result;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -96,6 +97,17 @@ impl Router {
         self.pools[0].classes()
     }
 
+    /// Registered models, in registration order (identical across
+    /// shards: every shard hosts the same registry).
+    pub fn models(&self) -> &[ModelInfo] {
+        self.pools[0].models()
+    }
+
+    /// Resolve a model name to its registry index.
+    pub fn find_model(&self, name: &str) -> Option<usize> {
+        self.pools[0].find_model(name)
+    }
+
     /// Pick a shard by power-of-two-choices on current queue depth.
     pub fn pick(&self) -> usize {
         let seed = self.tick.fetch_add(1, Ordering::Relaxed);
@@ -115,9 +127,23 @@ impl Router {
         priority: Priority,
         reply: mpsc::Sender<Response>,
     ) -> Result<(usize, u64), SubmitError> {
+        self.submit_model(0, ids, tau, priority, reply)
+    }
+
+    /// [`Router::submit`] addressed to a specific registered model:
+    /// shard choice is still P2C over total shard depth, but the row
+    /// lands in that model's own queues (a batch never mixes models).
+    pub fn submit_model(
+        &self,
+        model: usize,
+        ids: Vec<i32>,
+        tau: f32,
+        priority: Priority,
+        reply: mpsc::Sender<Response>,
+    ) -> Result<(usize, u64), SubmitError> {
         let shard = self.pick();
-        let id =
-            self.pools[shard].submit_with_reply_priority(ids, tau, priority, reply)?;
+        let id = self.pools[shard]
+            .submit_model_with_reply_priority(model, ids, tau, priority, reply)?;
         Ok((shard, id))
     }
 
@@ -131,8 +157,19 @@ impl Router {
         rows: Vec<(Vec<i32>, f32, Priority)>,
         reply: mpsc::Sender<Response>,
     ) -> Result<(usize, Vec<u64>), SubmitError> {
+        self.submit_batch_model(0, rows, reply)
+    }
+
+    /// [`Router::submit_batch`] addressed to a specific model.
+    pub fn submit_batch_model(
+        &self,
+        model: usize,
+        rows: Vec<(Vec<i32>, f32, Priority)>,
+        reply: mpsc::Sender<Response>,
+    ) -> Result<(usize, Vec<u64>), SubmitError> {
         let shard = self.pick();
-        let ids = self.pools[shard].submit_batch_with_reply(rows, &reply)?;
+        let ids =
+            self.pools[shard].submit_batch_model_with_reply(model, rows, &reply)?;
         Ok((shard, ids))
     }
 

@@ -41,7 +41,8 @@ use super::http::{self, HttpHead, Limits, RecvError};
 use super::router::Router;
 use super::stats::{stats_json, NetCounters};
 use crate::coordinator::{
-    Priority, Response, ServeConfig, ServeReport, ServePool, SubmitError,
+    ModelEntry, Priority, Response, ServeConfig, ServeReport, ServePool,
+    SubmitError, TaskKind,
 };
 use crate::runtime::Runtime;
 use crate::util::json::Json;
@@ -281,14 +282,9 @@ pub struct NetServer {
 
 impl NetServer {
     /// Bind `cfg.listen`, start `cfg.pools` pool shards forked from
-    /// `proto`, and begin accepting.
+    /// `proto`, and begin accepting.  Single-model: the shards host one
+    /// classify model named `"default"`.
     pub fn start(proto: &Runtime, params: &[f32], cfg: &NetConfig) -> Result<NetServer> {
-        let listener = TcpListener::bind(&cfg.listen)
-            .with_context(|| format!("binding {}", cfg.listen))?;
-        let addr = listener.local_addr().context("reading bound address")?;
-        listener
-            .set_nonblocking(true)
-            .context("setting listener non-blocking")?;
         let mut pools = Vec::with_capacity(cfg.pools.max(1));
         for i in 0..cfg.pools.max(1) {
             pools.push(
@@ -296,6 +292,53 @@ impl NetServer {
                     .with_context(|| format!("starting pool shard {i}"))?,
             );
         }
+        Self::start_with_pools(pools, cfg)
+    }
+
+    /// Multi-model start: every shard hosts the same registry of named
+    /// `(checkpoint, task)` models, so `/v1/classify` and `/v1/span`
+    /// route by task (or an explicit `"model"` body field) on any
+    /// shard.  `entries` seeds one shard; the others run fresh forks of
+    /// the same runtimes over their own copies of the parameters.
+    pub fn start_multi(
+        entries: Vec<ModelEntry>,
+        cfg: &NetConfig,
+    ) -> Result<NetServer> {
+        let shards = cfg.pools.max(1);
+        let mut per_shard: Vec<Vec<ModelEntry>> = Vec::with_capacity(shards);
+        for _ in 1..shards {
+            let mut forked = Vec::with_capacity(entries.len());
+            for e in &entries {
+                forked.push(ModelEntry {
+                    name: e.name.clone(),
+                    task: e.task,
+                    runtime: e.runtime.fork()?,
+                    params: e.params.clone(),
+                    sim: e.sim.clone(),
+                });
+            }
+            per_shard.push(forked);
+        }
+        per_shard.push(entries);
+        let mut pools = Vec::with_capacity(shards);
+        for (i, shard_entries) in per_shard.into_iter().enumerate() {
+            pools.push(
+                ServePool::start_multi(shard_entries, &cfg.serve)
+                    .with_context(|| format!("starting pool shard {i}"))?,
+            );
+        }
+        Self::start_with_pools(pools, cfg)
+    }
+
+    /// Shared tail of [`NetServer::start`] / [`NetServer::start_multi`]:
+    /// bind, wrap the shards in a router, spawn the accept loop.
+    fn start_with_pools(pools: Vec<ServePool>, cfg: &NetConfig) -> Result<NetServer> {
+        let listener = TcpListener::bind(&cfg.listen)
+            .with_context(|| format!("binding {}", cfg.listen))?;
+        let addr = listener.local_addr().context("reading bound address")?;
+        listener
+            .set_nonblocking(true)
+            .context("setting listener non-blocking")?;
         let ctx = Arc::new(Ctx {
             router: Router::new(pools),
             counters: NetCounters::default(),
@@ -607,12 +650,25 @@ fn serve_request(
                 ("status", Json::str("ok")),
                 ("state", Json::str(ctx.state_str())),
                 (
+                    // back-compat: the first registered model's shape
                     "model",
                     Json::obj(vec![
                         ("seq", Json::num(ctx.router.seq() as f64)),
                         ("vocab", Json::num(ctx.router.vocab() as f64)),
                         ("classes", Json::num(ctx.router.classes() as f64)),
                     ]),
+                ),
+                (
+                    "models",
+                    Json::arr(ctx.router.models().iter().map(|m| {
+                        Json::obj(vec![
+                            ("name", Json::str(m.name.clone())),
+                            ("task", Json::str(m.task.name())),
+                            ("seq", Json::num(m.seq as f64)),
+                            ("vocab", Json::num(m.vocab as f64)),
+                            ("classes", Json::num(m.classes as f64)),
+                        ])
+                    })),
                 ),
                 ("pools", Json::num(ctx.router.len() as f64)),
             ]),
@@ -629,7 +685,7 @@ fn serve_request(
             ),
             keep,
         ),
-        ("POST", "/v1/classify") => {
+        ("POST", "/v1/classify") | ("POST", "/v1/span") => {
             if ctx.draining.load(Ordering::SeqCst) {
                 ctx.counters.drained_rejects.fetch_add(1, Ordering::Relaxed);
                 let e = ApiError {
@@ -641,14 +697,22 @@ fn serve_request(
                 // re-resolve instead of hammering a dying server
                 (503, e.to_json(), false)
             } else {
-                match classify(ctx, body) {
+                let task = if head.path == "/v1/span" {
+                    TaskKind::Span
+                } else {
+                    TaskKind::Classify
+                };
+                match infer(ctx, body, task) {
                     Ok(doc) => (200, doc, keep),
                     Err(e) => (e.status, e.to_json(), keep),
                 }
             }
         }
         ("POST", "/healthz") | ("POST", "/stats")
-        | ("GET" | "PUT" | "DELETE" | "HEAD" | "PATCH", "/v1/classify") => {
+        | (
+            "GET" | "PUT" | "DELETE" | "HEAD" | "PATCH",
+            "/v1/classify" | "/v1/span",
+        ) => {
             let e = ApiError {
                 status: 405,
                 code: "method_not_allowed",
@@ -682,6 +746,37 @@ fn response_json(r: &Response, shard: usize) -> Json {
     ])
 }
 
+/// Span responses carry the raw split-half logits (`[start_0..start_l,
+/// end_0..end_l]` over the row's native length) plus the decoded
+/// extractive answer: independent argmax `start` / `end` positions
+/// (`end < start` means "no answer", matching the eval decode).
+fn span_response_json(r: &Response, shard: usize) -> Json {
+    let l = r.logits.len() / 2;
+    let argmax = |s: &[f32]| {
+        s.iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .map(|(i, _)| i)
+            .unwrap_or(0)
+    };
+    Json::obj(vec![
+        ("id", Json::num(r.id as f64)),
+        ("pool", Json::num(shard as f64)),
+        ("batch", Json::num(r.batch as f64)),
+        ("latency_us", Json::num(r.latency.as_micros() as f64)),
+        ("start", Json::num(argmax(&r.logits[..l]) as f64)),
+        ("end", Json::num(argmax(&r.logits[l..]) as f64)),
+        ("logits", Json::arr(r.logits.iter().map(|&l| Json::num(l as f64)))),
+    ])
+}
+
+fn task_response_json(task: TaskKind, r: &Response, shard: usize) -> Json {
+    match task {
+        TaskKind::Classify => response_json(r, shard),
+        TaskKind::Span => span_response_json(r, shard),
+    }
+}
+
 /// Map a pool admission failure to its HTTP shape.  `BadLength` is
 /// defensive — the API layer validates lengths before submit — but
 /// `QueueFull` is the normal load-shedding path: 429 plus a
@@ -706,12 +801,55 @@ fn submit_error(e: SubmitError) -> ApiError {
     }
 }
 
-/// Decode, validate, route to a pool shard, and wait for the replies.
-fn classify(ctx: &Ctx, body: &[u8]) -> Result<Json, ApiError> {
-    let shape =
-        ModelShape { seq: ctx.router.seq(), vocab: ctx.router.vocab() };
-    let req =
-        api::decode_classify(body, shape, ctx.default_tau, ctx.max_batch)?;
+/// Resolve which registered model an inference request targets: the
+/// explicit `"model"` body field when present (404 on an unknown name,
+/// 400 when the named model serves the other task), otherwise the
+/// first registered model of the endpoint's task (404 when none is).
+fn resolve_model(
+    ctx: &Ctx,
+    task: TaskKind,
+    name: Option<String>,
+) -> Result<usize, ApiError> {
+    let models = ctx.router.models();
+    match name {
+        Some(name) => {
+            let idx = ctx.router.find_model(&name).ok_or_else(|| ApiError {
+                status: 404,
+                code: "model_not_found",
+                message: format!("no model named '{name}' is registered"),
+            })?;
+            if models[idx].task != task {
+                return Err(ApiError::bad_request(
+                    "task_mismatch",
+                    format!(
+                        "model '{name}' serves the {} task, not {}",
+                        models[idx].task.name(),
+                        task.name()
+                    ),
+                ));
+            }
+            Ok(idx)
+        }
+        None => models
+            .iter()
+            .position(|m| m.task == task)
+            .ok_or_else(|| ApiError {
+                status: 404,
+                code: "no_model_for_task",
+                message: format!("no {} model is registered", task.name()),
+            }),
+    }
+}
+
+/// Decode, validate, route to a pool shard, and wait for the replies —
+/// shared by `/v1/classify` and `/v1/span` (same wire shape; the model
+/// registry and response serializer differ by task).
+fn infer(ctx: &Ctx, body: &[u8], task: TaskKind) -> Result<Json, ApiError> {
+    let (root, name) = api::parse_body(body)?;
+    let model = resolve_model(ctx, task, name)?;
+    let info = &ctx.router.models()[model];
+    let shape = ModelShape { seq: info.seq, vocab: info.vocab };
+    let req = api::decode_value(&root, shape, ctx.default_tau, ctx.max_batch)?;
     let wedged = || ApiError {
         status: 504,
         code: "reply_timeout",
@@ -724,10 +862,10 @@ fn classify(ctx: &Ctx, body: &[u8]) -> Result<Json, ApiError> {
             let (tx, rx) = mpsc::channel();
             let (shard, _id) = ctx
                 .router
-                .submit(item.ids, item.tau, item.priority, tx)
+                .submit_model(model, item.ids, item.tau, item.priority, tx)
                 .map_err(submit_error)?;
             let resp = rx.recv_timeout(REPLY_WAIT).map_err(|_| wedged())?;
-            Ok(response_json(&resp, shard))
+            Ok(task_response_json(task, &resp, shard))
         }
         ClassifyRequest::Batch(items) => {
             let n = items.len();
@@ -736,8 +874,10 @@ fn classify(ctx: &Ctx, body: &[u8]) -> Result<Json, ApiError> {
                 .map(|i| (i.ids, i.tau, i.priority))
                 .collect();
             let (tx, rx) = mpsc::channel();
-            let (shard, ids) =
-                ctx.router.submit_batch(rows, tx).map_err(submit_error)?;
+            let (shard, ids) = ctx
+                .router
+                .submit_batch_model(model, rows, tx)
+                .map_err(submit_error)?;
             let mut by_id: Vec<Option<Response>> = (0..n).map(|_| None).collect();
             for _ in 0..n {
                 let resp = rx.recv_timeout(REPLY_WAIT).map_err(|_| wedged())?;
@@ -748,11 +888,13 @@ fn classify(ctx: &Ctx, body: &[u8]) -> Result<Json, ApiError> {
             let responses: Vec<Json> = by_id
                 .into_iter()
                 .map(|r| {
-                    r.map(|r| response_json(&r, shard)).ok_or_else(|| ApiError {
-                        status: 500,
-                        code: "missing_reply",
-                        message: "a batch row produced no response".into(),
-                    })
+                    r.map(|r| task_response_json(task, &r, shard)).ok_or_else(
+                        || ApiError {
+                            status: 500,
+                            code: "missing_reply",
+                            message: "a batch row produced no response".into(),
+                        },
+                    )
                 })
                 .collect::<Result<_, _>>()?;
             Ok(Json::obj(vec![("responses", Json::arr(responses))]))

@@ -85,9 +85,16 @@ impl NetCounters {
 ///               "padded_row_fraction": ..,
 ///               "queue_depth_high_water": ..,
 ///               "latency_us": { "queue": .., "compute": .., "total": .. } },
+///   "models": [ { "name": .., "task": .., "served": .., "pending": ..,
+///                 "deadline_misses": .., "padded_token_fraction": ..,
+///                 "latency_us": { "total": .. } }, ... ],
 ///   "gemm": { "tiles": .., "effectual_mac_fraction": .., ... }
 /// }
 /// ```
+///
+/// `models` merges each registered model's section across the pool
+/// shards (every shard hosts the same registry), so a scraper can read
+/// per-model health without summing shards itself.
 pub fn stats_json(
     state: &str,
     listen: &str,
@@ -125,6 +132,48 @@ pub fn stats_json(
         if rows == 0 { 0.0 } else { padded as f64 / rows as f64 };
     let padded_token_frac =
         if tokens == 0 { 0.0 } else { padded_tokens as f64 / tokens as f64 };
+    // merged per-model sections: shard 0's registry gives the order;
+    // every shard hosts the same models so index i matches across pools
+    let n_models = pools.first().map(|p| p.models.len()).unwrap_or(0);
+    let mut model_sections = Vec::with_capacity(n_models);
+    for i in 0..n_models {
+        let m0 = &pools[0].models[i];
+        let mut served = 0u64;
+        let mut m_pending = 0usize;
+        let mut misses = 0u64;
+        let mut m_tokens = 0u64;
+        let mut m_padded_tokens = 0u64;
+        let mut m_total = LatencyHistogram::new();
+        for p in pools {
+            if let Some(m) = p.models.get(i) {
+                served += m.served;
+                m_pending += m.pending;
+                misses += m.deadline_misses;
+                m_tokens += m.stats.tokens_dispatched;
+                m_padded_tokens += m.stats.padded_tokens;
+                m_total.merge(&m.total_latency);
+            }
+        }
+        let m_pad_frac = if m_tokens == 0 {
+            0.0
+        } else {
+            m_padded_tokens as f64 / m_tokens as f64
+        };
+        model_sections.push(Json::obj(vec![
+            ("name", Json::str(m0.name.clone())),
+            ("task", Json::str(m0.task.name())),
+            ("seq", Json::num(m0.seq as f64)),
+            ("classes", Json::num(m0.classes as f64)),
+            ("served", Json::num(served as f64)),
+            ("pending", Json::num(m_pending as f64)),
+            ("deadline_misses", Json::num(misses as f64)),
+            ("padded_token_fraction", Json::num(m_pad_frac)),
+            (
+                "latency_us",
+                Json::obj(vec![("total", m_total.to_json())]),
+            ),
+        ]));
+    }
     let gemm = gemm_stats_snapshot();
     Json::obj(vec![
         ("state", Json::str(state)),
@@ -162,6 +211,7 @@ pub fn stats_json(
                 ),
             ]),
         ),
+        ("models", Json::arr(model_sections)),
         (
             "gemm",
             Json::obj(vec![
@@ -245,5 +295,10 @@ mod tests {
         // must serialize and re-parse cleanly (non-finite would break)
         let text = j.to_string_compact();
         assert!(Json::parse(&text).is_ok(), "{text}");
+        // the per-model rollup is always present (empty with no pools)
+        assert!(
+            matches!(j.get("models"), Some(Json::Arr(a)) if a.is_empty()),
+            "{text}"
+        );
     }
 }

@@ -10,8 +10,13 @@
 //!   * hostile bodies (fuzzed) always get valid JSON 4xx answers and
 //!     never kill the server;
 //!   * drain loses nothing: every 200 handed to a client corresponds to
-//!     exactly one pool-served request.
+//!     exactly one pool-served request;
+//!   * multi-model servers route `/v1/classify` and `/v1/span` to their
+//!     own registered models — per-model shape validation, explicit
+//!     `"model"` routing, coherent per-model `/stats` sections, and a
+//!     drain that loses neither task's accepted requests.
 
+use acceltran::coordinator::{ModelEntry, TaskKind};
 use acceltran::model::TransformerConfig;
 use acceltran::runtime::{ParamStore, Runtime};
 use acceltran::serve::net::{HttpClient, NetConfig, NetServer};
@@ -46,10 +51,62 @@ fn start_server(cfg_mut: impl FnOnce(&mut NetConfig)) -> (NetServer, Vec<f32>, R
     (server, params, rt)
 }
 
+/// Two-model registry behind one listener: the tiny classify encoder
+/// plus a deliberately *smaller* span encoder (seq=12, vocab=48), so
+/// per-model shape validation is observable on the wire — a row the
+/// classify model accepts can be a 400 on `/v1/span`.
+fn start_multi_server(
+    cfg_mut: impl FnOnce(&mut NetConfig),
+) -> (NetServer, Runtime, Runtime) {
+    let clf_rt = tiny_runtime();
+    let clf_params = ParamStore::init(&clf_rt.manifest, 0).params;
+    let span_model = TransformerConfig {
+        name: "tiny-net-span".into(),
+        hidden: 32,
+        layers: 1,
+        heads: 2,
+        ff: 64,
+        vocab: 48,
+        seq: 12,
+    };
+    let span_rt = Runtime::reference_for(&span_model, 2).unwrap();
+    let span_params = ParamStore::init(&span_rt.manifest, 1).params;
+    let mut cfg = NetConfig::default();
+    cfg.serve.workers = 2;
+    cfg.serve.slo = std::time::Duration::from_millis(5);
+    cfg_mut(&mut cfg);
+    let entries = vec![
+        ModelEntry {
+            name: "clf".into(),
+            task: TaskKind::Classify,
+            runtime: clf_rt.fork().unwrap(),
+            params: clf_params,
+            sim: None,
+        },
+        ModelEntry {
+            name: "span".into(),
+            task: TaskKind::Span,
+            runtime: span_rt.fork().unwrap(),
+            params: span_params,
+            sim: None,
+        },
+    ];
+    let server = NetServer::start_multi(entries, &cfg).unwrap();
+    (server, clf_rt, span_rt)
+}
+
 fn ids_body(ids: &[i32], tau: f32) -> Json {
     Json::obj(vec![
         ("ids", Json::arr(ids.iter().map(|&i| Json::num(i as f64)))),
         ("tau", Json::num(tau as f64)),
+    ])
+}
+
+fn body_with_model(ids: &[i32], tau: f32, model: &str) -> Json {
+    Json::obj(vec![
+        ("ids", Json::arr(ids.iter().map(|&i| Json::num(i as f64)))),
+        ("tau", Json::num(tau as f64)),
+        ("model", Json::str(model)),
     ])
 }
 
@@ -533,6 +590,464 @@ fn drain_under_load_loses_no_accepted_request() {
     );
     // no request the pools accepted was abandoned either: submitted
     // equals served across shards
+    let submitted: u64 = report.pool_reports.iter().map(|r| r.submitted).sum();
+    assert_eq!(
+        submitted,
+        report.requests_served(),
+        "drain left accepted requests unserved"
+    );
+}
+
+// ---- multi-model serving (classify + span on one listener) ------------
+
+/// Per-model requests served across shards, summed by registry name.
+fn served_for(report: &acceltran::serve::net::NetReport, name: &str) -> u64 {
+    report
+        .pool_reports
+        .iter()
+        .flat_map(|p| &p.models)
+        .filter(|m| m.name == name)
+        .map(|m| m.requests)
+        .sum()
+}
+
+#[test]
+fn mixed_classify_and_span_interleave_on_one_listener() {
+    let (server, clf_rt, span_rt) = start_multi_server(|_| {});
+    let clf_seq = clf_rt.manifest.seq;
+    let span_seq = span_rt.manifest.seq;
+    let mut client = HttpClient::connect(server.addr()).unwrap();
+
+    // /healthz advertises both registered models with their shapes
+    let (status, health) = client.get("/healthz").unwrap();
+    assert_eq!(status, 200);
+    let models = health.get("models").and_then(|m| m.as_arr()).unwrap();
+    assert_eq!(models.len(), 2);
+    assert_eq!(models[0].get("name").and_then(|v| v.as_str()), Some("clf"));
+    assert_eq!(
+        models[0].get("task").and_then(|v| v.as_str()),
+        Some("classify")
+    );
+    assert_eq!(models[1].get("name").and_then(|v| v.as_str()), Some("span"));
+    assert_eq!(models[1].get("task").and_then(|v| v.as_str()), Some("span"));
+    assert_eq!(
+        models[1].get("seq").and_then(|v| v.as_usize()),
+        Some(span_seq)
+    );
+
+    // interleave single classify / span requests on ONE connection, at
+    // varying native lengths, so both tasks share the listener and the
+    // keep-alive session
+    for round in 0..4usize {
+        let ids: Vec<i32> =
+            (0..clf_seq as i32).map(|i| (i + round as i32) % 64).collect();
+        let (status, resp) =
+            client.post_json("/v1/classify", &ids_body(&ids, 0.0)).unwrap();
+        assert_eq!(status, 200, "{resp:?}");
+        assert_eq!(
+            resp.get("logits").and_then(|l| l.as_arr()).map(|l| l.len()),
+            Some(clf_rt.manifest.classes)
+        );
+        assert!(resp.get("start").is_none(), "classify carries no span decode");
+
+        let len = span_seq - round; // 12, 11, 10, 9
+        let ids: Vec<i32> =
+            (0..len as i32).map(|i| (i + round as i32) % 48).collect();
+        let (status, resp) =
+            client.post_json("/v1/span", &ids_body(&ids, 0.0)).unwrap();
+        assert_eq!(status, 200, "{resp:?}");
+        // split-half [start..., end...] logits over the NATIVE length,
+        // and the decoded argmaxes must agree with the halves they
+        // summarize
+        let logits: Vec<f64> = resp
+            .get("logits")
+            .and_then(|l| l.as_arr())
+            .unwrap()
+            .iter()
+            .map(|v| v.as_f64().unwrap())
+            .collect();
+        assert_eq!(logits.len(), 2 * len, "round {round}: {resp:?}");
+        let argmax = |s: &[f64]| {
+            s.iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .map(|(i, _)| i)
+                .unwrap()
+        };
+        assert_eq!(
+            resp.get("start").and_then(|v| v.as_usize()),
+            Some(argmax(&logits[..len]))
+        );
+        assert_eq!(
+            resp.get("end").and_then(|v| v.as_usize()),
+            Some(argmax(&logits[len..]))
+        );
+    }
+
+    // batch bodies route per model too, here with an explicit top-level
+    // "model" name next to "requests"
+    let rows: Vec<Json> = (0..3i32)
+        .map(|r| {
+            let ids: Vec<i32> =
+                (0..span_seq as i32).map(|i| (i * 5 + r) % 48).collect();
+            ids_body(&ids, 0.0)
+        })
+        .collect();
+    let body = Json::obj(vec![
+        ("model", Json::str("span")),
+        ("requests", Json::arr(rows)),
+    ]);
+    let (status, resp) = client.post_json("/v1/span", &body).unwrap();
+    assert_eq!(status, 200, "{resp:?}");
+    let responses = resp.get("responses").and_then(|r| r.as_arr()).unwrap();
+    assert_eq!(responses.len(), 3);
+    for r in responses {
+        assert_eq!(
+            r.get("logits").and_then(|l| l.as_arr()).map(|l| l.len()),
+            Some(2 * span_seq)
+        );
+        assert!(r.get("start").and_then(|v| v.as_usize()).is_some());
+        assert!(r.get("end").and_then(|v| v.as_usize()).is_some());
+    }
+
+    let report = server.shutdown().unwrap();
+    assert_eq!(report.requests_served(), 4 + 4 + 3);
+    // per-model report sections account for every request, by name
+    assert_eq!(served_for(&report, "clf"), 4);
+    assert_eq!(served_for(&report, "span"), 7);
+}
+
+#[test]
+fn span_validation_and_model_routing_status_codes() {
+    let (server, _clf_rt, span_rt) = start_multi_server(|_| {});
+    let span_seq = span_rt.manifest.seq; // 12 (< classify's 16)
+    let mut client = HttpClient::connect(server.addr()).unwrap();
+
+    // per-model shape validation on /v1/span: the span model is the
+    // SMALLER one, so over-long rows and token ids that the classify
+    // model would accept (seq=16, vocab=64) are typed 4xxs here
+    let cases: Vec<(Json, u16, &str)> = vec![
+        (ids_body(&[], 0.0), 400, "bad_shape"),
+        (ids_body(&vec![1; span_seq + 1], 0.0), 400, "bad_shape"),
+        (ids_body(&vec![60; span_seq], 0.0), 400, "bad_token_id"),
+        (ids_body(&vec![1; span_seq], 9.0), 400, "bad_tau"),
+        (Json::obj(vec![("wrong", Json::num(1.0))]), 400, "missing_field"),
+        // model routing errors
+        (
+            body_with_model(&vec![1; span_seq], 0.0, "nope"),
+            404,
+            "model_not_found",
+        ),
+        (
+            body_with_model(&vec![1; span_seq], 0.0, "clf"),
+            400,
+            "task_mismatch",
+        ),
+        // "model" must be a top-level string...
+        (
+            Json::obj(vec![
+                ("ids", Json::arr((0..span_seq).map(|_| Json::num(1.0)))),
+                ("model", Json::num(3.0)),
+            ]),
+            400,
+            "bad_type",
+        ),
+        // ...and is illegal inside a batch item
+        (
+            Json::obj(vec![(
+                "requests",
+                Json::arr(vec![body_with_model(&vec![1; span_seq], 0.0, "span")]),
+            )]),
+            400,
+            "unknown_field",
+        ),
+    ];
+    for (body, want_status, want_code) in cases {
+        let (status, resp) = client.post_json("/v1/span", &body).unwrap();
+        assert_eq!(status, want_status, "{body:?} -> {resp:?}");
+        assert_eq!(
+            resp.path(&["error", "code"]).and_then(|v| v.as_str()),
+            Some(want_code),
+            "{body:?} -> {resp:?}"
+        );
+    }
+
+    // the mismatch is symmetric: a span model named on /v1/classify
+    let (status, resp) = client
+        .post_json(
+            "/v1/classify",
+            &body_with_model(&vec![1; span_seq], 0.0, "span"),
+        )
+        .unwrap();
+    assert_eq!(status, 400, "{resp:?}");
+    assert_eq!(
+        resp.path(&["error", "code"]).and_then(|v| v.as_str()),
+        Some("task_mismatch")
+    );
+
+    // 405 matrix covers the span route
+    let (status, _) = client.get("/v1/span").unwrap();
+    assert_eq!(status, 405);
+
+    // the connection survived every 4xx; both tasks still serve on it
+    let (status, _) = client
+        .post_json("/v1/span", &ids_body(&vec![1; span_seq], 0.0))
+        .unwrap();
+    assert_eq!(status, 200);
+    let (status, _) = client
+        .post_json("/v1/classify", &ids_body(&vec![1; span_seq], 0.0))
+        .unwrap();
+    assert_eq!(status, 200);
+    let report = server.shutdown().unwrap();
+    assert_eq!(report.requests_served(), 2);
+    assert!(report.client_errors >= 10);
+}
+
+#[test]
+fn span_route_on_single_model_server_is_404() {
+    // a classic single-model server registers one classify model; the
+    // span endpoint must answer a typed 404, not a decode error
+    let (server, _params, rt) = start_server(|_| {});
+    let seq = rt.manifest.seq;
+    let mut client = HttpClient::connect(server.addr()).unwrap();
+    let (status, resp) =
+        client.post_json("/v1/span", &ids_body(&vec![1; seq], 0.0)).unwrap();
+    assert_eq!(status, 404, "{resp:?}");
+    assert_eq!(
+        resp.path(&["error", "code"]).and_then(|v| v.as_str()),
+        Some("no_model_for_task")
+    );
+    // classify on the same connection is untouched
+    let (status, _) =
+        client.post_json("/v1/classify", &ids_body(&vec![1; seq], 0.0)).unwrap();
+    assert_eq!(status, 200);
+    server.shutdown().unwrap();
+}
+
+#[test]
+fn fuzzed_span_bodies_always_get_valid_json_4xx() {
+    let (server, _clf_rt, span_rt) = start_multi_server(|_| {});
+    let seq = span_rt.manifest.seq;
+    let addr = server.addr();
+    let n = prop::cases(24);
+    prop::check(0xbad_b0d2, n, |g| {
+        let good_ids: Vec<String> =
+            (0..seq).map(|i| (i % 48).to_string()).collect();
+        let body: String = match g.usize_in(0, 5) {
+            // truncated JSON
+            0 => {
+                let full = format!(r#"{{"ids": [{}]}}"#, good_ids.join(","));
+                let cut = g.usize_in(1, full.len() - 1);
+                full[..cut].to_string()
+            }
+            // wrong-typed ids
+            1 => r#"{"ids": "not an array"}"#.to_string(),
+            // non-string model
+            2 => format!(
+                r#"{{"ids": [{}], "model": 7}}"#,
+                good_ids.join(",")
+            ),
+            // unknown model name
+            3 => format!(
+                r#"{{"ids": [{}], "model": "missing-model"}}"#,
+                good_ids.join(",")
+            ),
+            // wrong-task model
+            4 => format!(
+                r#"{{"ids": [{}], "model": "clf"}}"#,
+                good_ids.join(",")
+            ),
+            // oversized for the span model (though maybe not for clf)
+            _ => {
+                let n_ids = g.usize_in(seq + 1, seq * 8);
+                let ids: Vec<String> =
+                    (0..n_ids).map(|i| (i % 48).to_string()).collect();
+                format!(r#"{{"ids": [{}]}}"#, ids.join(","))
+            }
+        };
+        let mut client = HttpClient::connect(addr).unwrap();
+        let resp = client
+            .request("POST", "/v1/span", Some(body.as_bytes()))
+            .unwrap();
+        assert!(
+            (400..500).contains(&resp.status),
+            "hostile span body {body:?} got status {}",
+            resp.status
+        );
+        let json = resp.json().unwrap_or_else(|e| {
+            panic!("non-JSON error response for {body:?}: {e}")
+        });
+        assert!(
+            json.path(&["error", "code"]).and_then(|v| v.as_str()).is_some(),
+            "error body missing code: {json:?}"
+        );
+    });
+    // both tasks still serve after the barrage
+    let mut client = HttpClient::connect(addr).unwrap();
+    let (status, _) =
+        client.post_json("/v1/span", &ids_body(&vec![1; seq], 0.0)).unwrap();
+    assert_eq!(status, 200);
+    let (status, _) =
+        client.post_json("/v1/classify", &ids_body(&vec![2; seq], 0.0)).unwrap();
+    assert_eq!(status, 200);
+    let report = server.shutdown().unwrap();
+    assert_eq!(report.requests_served(), 2);
+    assert_eq!(report.server_errors, 0, "fuzz must never cause a 5xx");
+}
+
+#[test]
+fn stats_expose_coherent_per_model_sections() {
+    let (server, clf_rt, span_rt) = start_multi_server(|c| c.pools = 2);
+    let clf_seq = clf_rt.manifest.seq;
+    let span_seq = span_rt.manifest.seq;
+    let mut client = HttpClient::connect(server.addr()).unwrap();
+
+    for i in 0..6i32 {
+        let ids: Vec<i32> = (0..clf_seq as i32).map(|j| (j + i) % 64).collect();
+        let (s, _) =
+            client.post_json("/v1/classify", &ids_body(&ids, 0.02)).unwrap();
+        assert_eq!(s, 200);
+    }
+    for i in 0..4usize {
+        // mixed native lengths so the span model's padding accounting
+        // has something to count
+        let ids: Vec<i32> = vec![3; span_seq - i];
+        let (s, _) = client.post_json("/v1/span", &ids_body(&ids, 0.0)).unwrap();
+        assert_eq!(s, 200);
+    }
+
+    let (status, stats) = client.get("/stats").unwrap();
+    assert_eq!(status, 200);
+    let models = stats.get("models").and_then(|m| m.as_arr()).unwrap();
+    assert_eq!(models.len(), 2);
+    let by_name = |name: &str| {
+        models
+            .iter()
+            .find(|m| m.get("name").and_then(|v| v.as_str()) == Some(name))
+            .unwrap_or_else(|| panic!("no '{name}' section in {stats:?}"))
+    };
+    let clf = by_name("clf");
+    let span = by_name("span");
+    assert_eq!(clf.get("task").and_then(|v| v.as_str()), Some("classify"));
+    assert_eq!(span.get("task").and_then(|v| v.as_str()), Some("span"));
+    assert_eq!(clf.get("served").and_then(|v| v.as_f64()), Some(6.0));
+    assert_eq!(span.get("served").and_then(|v| v.as_f64()), Some(4.0));
+    // responses were all delivered, so nothing is still pending
+    assert_eq!(clf.get("pending").and_then(|v| v.as_f64()), Some(0.0));
+    assert_eq!(span.get("pending").and_then(|v| v.as_f64()), Some(0.0));
+    // per-model sections must sum to the merged rollup
+    assert_eq!(
+        stats.path(&["merged", "completed"]).and_then(|v| v.as_f64()),
+        Some(10.0)
+    );
+    for m in [clf, span] {
+        let frac = m
+            .get("padded_token_fraction")
+            .and_then(|v| v.as_f64())
+            .unwrap();
+        assert!((0.0..=1.0).contains(&frac), "{m:?}");
+        assert!(
+            m.path(&["latency_us", "total", "p50_us"])
+                .and_then(|v| v.as_f64())
+                .is_some(),
+            "{m:?}"
+        );
+    }
+
+    server.shutdown().unwrap();
+}
+
+#[test]
+fn drain_under_mixed_load_loses_neither_tasks_requests() {
+    let (server, clf_rt, span_rt) = start_multi_server(|c| c.pools = 2);
+    let clf_seq = clf_rt.manifest.seq;
+    let span_seq = span_rt.manifest.seq;
+    let addr = server.addr();
+    let stop = Arc::new(AtomicBool::new(false));
+
+    // two classify and two span clients hammer the listener until it
+    // drains; each counts its 200s.  Different native lengths per
+    // client exercise each model's own length buckets under drain.
+    let mut clients = Vec::new();
+    for c in 0..4u64 {
+        let stop = Arc::clone(&stop);
+        let span_task = c >= 2;
+        let (path, len, vocab) = if span_task {
+            ("/v1/span", span_seq - 3 * (c as usize - 2), 48) // 12, 9
+        } else {
+            ("/v1/classify", clf_seq - 3 * c as usize, 64) // 16, 13
+        };
+        clients.push(std::thread::spawn(move || -> (bool, u64) {
+            let ids: Vec<i32> =
+                (0..len as i32).map(|i| (i + c as i32) % vocab).collect();
+            let body = {
+                let arr: Vec<String> =
+                    ids.iter().map(|i| i.to_string()).collect();
+                format!(r#"{{"ids": [{}]}}"#, arr.join(","))
+            };
+            let mut oks = 0u64;
+            'outer: while !stop.load(Ordering::SeqCst) {
+                let Ok(mut client) = HttpClient::connect(addr) else {
+                    break;
+                };
+                loop {
+                    match client.request("POST", path, Some(body.as_bytes()))
+                    {
+                        Ok(resp) if resp.status == 200 => oks += 1,
+                        Ok(_) | Err(_) => break, // 503 closes the conn
+                    }
+                    if stop.load(Ordering::SeqCst) {
+                        break 'outer;
+                    }
+                }
+            }
+            (span_task, oks)
+        }));
+    }
+
+    // let load build on BOTH models, then drain mid-flight
+    while server.completed() < 48 {
+        std::thread::sleep(std::time::Duration::from_millis(2));
+    }
+    server.begin_drain();
+    let report = server.shutdown().unwrap();
+    stop.store(true, Ordering::SeqCst);
+    let mut clf_oks = 0u64;
+    let mut span_oks = 0u64;
+    for h in clients {
+        let (span_task, oks) = h.join().unwrap();
+        if span_task {
+            span_oks += oks;
+        } else {
+            clf_oks += oks;
+        }
+    }
+
+    assert!(
+        clf_oks + span_oks >= 48,
+        "load never built up: {clf_oks} classify + {span_oks} span"
+    );
+    assert!(clf_oks > 0, "classify clients never got a 200");
+    assert!(span_oks > 0, "span clients never got a 200");
+    // every 200 a client received was served — globally AND per model
+    assert_eq!(
+        report.ok,
+        clf_oks + span_oks,
+        "client and server 200 counts differ"
+    );
+    assert!(
+        served_for(&report, "clf") >= clf_oks,
+        "classify served {} < {} acknowledged 200s",
+        served_for(&report, "clf"),
+        clf_oks
+    );
+    assert!(
+        served_for(&report, "span") >= span_oks,
+        "span served {} < {} acknowledged 200s",
+        served_for(&report, "span"),
+        span_oks
+    );
+    // nothing the pools accepted was abandoned
     let submitted: u64 = report.pool_reports.iter().map(|r| r.submitted).sum();
     assert_eq!(
         submitted,

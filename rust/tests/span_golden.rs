@@ -1,0 +1,172 @@
+//! Golden regression pin for the span-extraction path end-to-end: a
+//! fixed tiny fine-tune on the synthetic marker task, its held-out
+//! token-overlap F1, the measured-sparsity trace captured from the
+//! trained model, and the cycle-accurate `SimResult` driven by that
+//! trace must all keep reproducing — the Fig. 14(b) pipeline (train →
+//! eval → capture → simulate) pinned in one place.
+//!
+//! Self-seeding like `sim_golden.rs` / `dse_golden.rs`: the pin lives
+//! at `rust/tests/goldens/span_golden.json`; on the first run in a
+//! fresh tree (file absent) it is seeded from the current model and the
+//! test passes with a loud note — commit the file to arm the pin.
+//! Delete it and rerun to rebaseline after an intentional change to
+//! the span head, the trainer, the capture path, or the perf model.
+//!
+//! Unlike the pure-sim goldens, the functional half runs through libm
+//! (`exp`, `tanh`) — the pinned floats are deterministic per platform
+//! (fixed seeds, single-threaded runtime) but a different host's libm
+//! may need a rebaseline; CI runs on one platform.
+
+use std::path::PathBuf;
+
+use acceltran::coordinator::{capture_trace_span, evaluate_span, train_span};
+use acceltran::model::TransformerConfig;
+use acceltran::nlp::span::SpanTask;
+use acceltran::runtime::{ParamStore, Runtime};
+use acceltran::sim::engine::simulate_with;
+use acceltran::sim::scheduler::Policy;
+use acceltran::sim::{AcceleratorConfig, SparsitySource};
+use acceltran::util::json::Json;
+
+fn goldens_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("tests/goldens")
+}
+
+/// SpanTask needs `vocab > 64` for its marker alphabet and `seq >= 16`;
+/// everything else is shrunk for tier-1 speed.
+fn golden_model() -> TransformerConfig {
+    TransformerConfig {
+        name: "golden-span-tiny".into(),
+        hidden: 32,
+        layers: 2,
+        heads: 2,
+        ff: 64,
+        vocab: 128,
+        seq: 16,
+    }
+}
+
+/// Same shrunken-Edge design point as `sim_golden.rs`, so the two pins
+/// differ only in where their sparsity trace comes from.
+fn golden_cfg() -> AcceleratorConfig {
+    let mut cfg = AcceleratorConfig::edge();
+    cfg.pes = 16;
+    cfg.act_buffer_bytes = 1 << 20;
+    cfg.weight_buffer_bytes = 2 << 20;
+    cfg.mask_buffer_bytes = 1 << 18;
+    cfg
+}
+
+const TAU: f32 = 0.1;
+
+fn assert_close(key: &str, got: f64, want: f64, tol: f64, path: &PathBuf) {
+    assert!(
+        (got - want).abs() <= tol,
+        "span-golden drift on '{key}': {got} vs pinned {want} (delete {} \
+         to rebaseline after an intentional change)",
+        path.display()
+    );
+}
+
+#[test]
+fn trained_span_f1_and_trace_driven_sim_match_pinned_golden() {
+    let model = golden_model();
+    // single-threaded runtime: one fixed reduction order per host
+    let mut rt = Runtime::reference_for(&model, 1).unwrap();
+    let task = SpanTask::new(model.vocab, model.seq);
+    let train_ds = task.dataset(192, 1);
+    let val_ds = task.dataset(96, 2);
+    let mut store = ParamStore::init(&rt.manifest, 0);
+    train_span(&mut rt, &mut store, &train_ds, None, 100, 3e-3, 0, false)
+        .unwrap();
+
+    let dense = evaluate_span(&mut rt, &store.params, &val_ds, 0.0, 64).unwrap();
+    let pruned =
+        evaluate_span(&mut rt, &store.params, &val_ds, TAU, 64).unwrap();
+    let trace =
+        capture_trace_span(&mut rt, &store.params, &val_ds, TAU, 64).unwrap();
+    let sim = simulate_with(
+        &golden_cfg(),
+        &model,
+        model.seq,
+        Policy::Staggered,
+        &SparsitySource::Trace(trace.clone()),
+    );
+
+    // Non-trivial preconditions, checked even before a golden exists:
+    // the fine-tune must have learned something, the capture must carry
+    // real sparsity, and the sim must have consumed it.
+    assert!(dense.f1 > 0.3, "span fine-tune learned nothing: {}", dense.f1);
+    assert!(dense.f1 <= 1.0 && pruned.f1 <= 1.0);
+    assert_eq!(trace.examples, 64);
+    assert_eq!(trace.layers.len(), model.layers);
+    assert!((trace.eval_accuracy - pruned.f1).abs() < 1e-9,
+        "capture F1 {} disagrees with evaluate_span {}",
+        trace.eval_accuracy, pruned.f1);
+    assert!(sim.total_cycles > 1000);
+
+    // mean activation density over every (layer, hook) cell — one
+    // scalar summarizing the surface the sim consumed
+    let act_rho_mean: f64 = trace
+        .layers
+        .iter()
+        .map(|l| {
+            (l.input + l.q + l.k + l.v + l.scores + l.context + l.proj_out
+                + l.ffn_in + l.gelu + l.ffn_out)
+                / 10.0
+        })
+        .sum::<f64>()
+        / trace.layers.len() as f64;
+    assert!((0.0..1.0).contains(&act_rho_mean), "rho {act_rho_mean}");
+
+    let current = Json::obj(vec![
+        ("f1_dense", Json::num(dense.f1)),
+        ("f1_pruned", Json::num(pruned.f1)),
+        ("act_rho_mean", Json::num(act_rho_mean)),
+        ("act_sparsity_pruned", Json::num(pruned.activation_sparsity)),
+        ("total_cycles", Json::num(sim.total_cycles as f64)),
+        ("mac_pj", Json::num(sim.energy.mac_pj)),
+        ("memory_pj", Json::num(sim.energy.memory_pj)),
+    ]);
+    let path = goldens_dir().join("span_golden.json");
+    let Ok(text) = std::fs::read_to_string(&path) else {
+        std::fs::create_dir_all(path.parent().unwrap()).unwrap();
+        std::fs::write(&path, current.to_string_pretty()).unwrap();
+        eprintln!(
+            "span_golden: seeded {} — commit it to pin the span pipeline",
+            path.display()
+        );
+        return;
+    };
+    let golden = Json::parse(&text).expect("golden file parses");
+    let want = |key: &str| -> f64 {
+        golden
+            .get(key)
+            .and_then(|v| v.as_f64())
+            .unwrap_or_else(|| panic!("golden missing '{key}'"))
+    };
+
+    // F1 and sparsity to a tight absolute tolerance: a real regression
+    // moves F1 by at least one flipped example (~1/96), far above it
+    assert_close("f1_dense", dense.f1, want("f1_dense"), 1e-6, &path);
+    assert_close("f1_pruned", pruned.f1, want("f1_pruned"), 1e-6, &path);
+    assert_close("act_rho_mean", act_rho_mean, want("act_rho_mean"), 1e-6, &path);
+    assert_close(
+        "act_sparsity_pruned",
+        pruned.activation_sparsity,
+        want("act_sparsity_pruned"),
+        1e-6,
+        &path,
+    );
+    // the trace-driven sim: cycles exact, energy to relative tolerance
+    assert_eq!(
+        sim.total_cycles as f64,
+        want("total_cycles"),
+        "trace-driven cycle count moved (delete {} to rebaseline)",
+        path.display()
+    );
+    for (key, got) in [("mac_pj", sim.energy.mac_pj), ("memory_pj", sim.energy.memory_pj)] {
+        let w = want(key);
+        assert_close(key, got, w, 1e-9 * w.abs().max(1e-12), &path);
+    }
+}
